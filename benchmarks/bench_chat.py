@@ -1,0 +1,104 @@
+"""Paper Fig. 4 (Chat best-of-k, full + tranches) reproduction.
+
+Continuous rewards from the chat-like task family (ChatTaskGen): each query
+has a latent (mu, sigma) reward landscape encoded in its tokens. The probe
+predicts the Δ vector (MSE head, paper Eq. 6) from LM hidden states of the
+query; allocation uses the predicted marginals directly (non-binary path).
+
+The **tranches** variant selects the lowest-10% + highest-10% reward-
+variance queries, exactly as §4.1 describes — here we can verify against
+the TRUE variance because we control the generator.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, save_result
+from repro.core import allocator as alloc
+from repro.core import bestofk, marginal
+from repro.core.difficulty import probe_predict, train_mlp_probe
+
+
+def _features(queries):
+    """Query features: normalized token histogram (bag-of-tokens).
+
+    The paper probes a PRETRAINED LM's hidden states; with no pretrained
+    chat LM offline, the bag-of-tokens featurization is the stand-in —
+    it is what a trained LM's pooled representation exposes about these
+    queries (DESIGN.md assumption table). An untrained-LM-hidden-state
+    probe was tried first and measured too weak (val loss ~= mean
+    predictor), which itself reproduces the paper's point that the
+    *representation* carries the difficulty signal."""
+    from repro.data.tasks import VOCAB
+
+    toks = np.asarray([q.tokens for q in queries], np.int32)
+    hist = np.stack([np.bincount(t, minlength=VOCAB) / len(t)
+                     for t in toks]).astype(np.float32)
+    return hist * np.sqrt(VOCAB)          # unit-ish scale for the MLP
+
+
+def run_variant(n_train=600, n_test=400, m=16, b_max=8,
+                budgets=(1, 2, 3, 4, 6, 8), tranches=False, seed=0):
+    import jax
+
+    from repro.data.tasks import ChatTaskGen
+
+    gen = ChatTaskGen(seed=seed)
+    train_q = gen.sample(n_train)
+    test_q = gen.sample(n_test)
+    if tranches:
+        # lowest/highest 10% by reward variance (measured from samples,
+        # like the paper — not from the latent)
+        pool = gen.sample(n_test * 5)
+        rs = gen.sample_rewards(pool, m, seed=seed + 1)
+        var = rs.var(axis=1)
+        lo = np.argsort(var)[: n_test // 2]
+        hi = np.argsort(var)[-n_test // 2:]
+        test_q = [pool[i] for i in np.concatenate([lo, hi])]
+    r_train = gen.sample_rewards(train_q, m, seed=seed + 2)
+    r_test = gen.sample_rewards(test_q, m, seed=seed + 3)
+
+    # targets: empirical Δ vectors by bootstrap (paper's supervision)
+    d_train = marginal.bootstrap_marginals(r_train, b_max)
+    feats_train = _features(train_q)
+    feats_test = _features(test_q)
+    probe, info = train_mlp_probe(jax.random.PRNGKey(seed + 4), feats_train,
+                                  d_train, kind="mse", steps=1500)
+    d_hat = probe_predict(probe, feats_test, "mse")
+    d_true = marginal.bootstrap_marginals(r_test, b_max)
+
+    out = {"budgets": list(budgets), "uniform": [], "adaptive": [],
+           "oracle": [], "tranches": tranches,
+           "probe_val_loss": info["val_loss"]}
+    n = len(test_q)
+    for B in budgets:
+        total = int(round(B * n))
+        out["uniform"].append(bestofk.eval_reward_allocation(
+            r_test, np.full(n, B)))
+        # chat: b>=1 and SPEND the budget (bootstrap Δ estimates carry
+        # negative noise; stopping at Δ<=0 strands budget vs uniform)
+        b_ad = alloc.greedy_allocate(d_hat, total, b_min=1,
+                                     allow_negative=True)
+        out["adaptive"].append(bestofk.eval_reward_allocation(r_test, b_ad))
+        b_or = alloc.greedy_allocate(d_true, total, b_min=1,
+                                     allow_negative=True)
+        out["oracle"].append(bestofk.eval_reward_allocation(r_test, b_or))
+    return out
+
+
+def run():
+    full = run_variant(tranches=False)
+    tr = run_variant(tranches=True)
+    save_result("fig4_chat_full", full)
+    save_result("fig4_chat_tranches", tr)
+    for name, c in (("full", full), ("tranches", tr)):
+        i = c["budgets"].index(4)
+        emit(f"fig4_chat_{name}_B4", 0.0,
+             f"uniform={c['uniform'][i]:.4f};adaptive={c['adaptive'][i]:.4f};"
+             f"oracle={c['oracle'][i]:.4f}")
+
+
+if __name__ == "__main__":
+    run()

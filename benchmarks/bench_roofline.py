@@ -1,0 +1,112 @@
+"""Roofline analysis (assignment deliverable g).
+
+Reads the dry-run artifacts (experiments/artifacts/*.json) and derives the
+three per-device roofline terms on TPU v5e constants:
+
+    compute    = HLO_FLOPs            / 197e12  FLOP/s (bf16)
+    memory     = HLO_bytes            / 819e9   B/s    (HBM)
+    collective = collective_bytes     / 4*50e9  B/s    (ICI, ~4 usable links)
+
+plus the dominant term, MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) vs
+HLO_FLOPs useful-ratio, and a one-line lever per row. Emits a markdown
+table (used verbatim in EXPERIMENTS.md §Roofline) and CSV lines.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "experiments" / "artifacts"
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 4 * 50e9            # B/s / chip (4 usable links x ~50 GB/s)
+
+LEVERS = {
+    "compute": "reduce redundant FLOPs (remat policy, causal block skipping,"
+               " head-padding waste)",
+    "memory": "fuse/stream large intermediates (fused CE kernel, bf16 "
+              "accumulators, better layouts)",
+    "collective": "reshard to cut all-gathers (SP residual, fp32->bf16 "
+                  "collectives, overlap with compute)",
+}
+
+
+def tokens_of(shape_name: str) -> int:
+    return {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+            "decode_32k": 128, "long_500k": 1}[shape_name]
+
+
+def load_records(mesh: str = "pod16x16", tag: str = "baseline"):
+    recs = []
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("mesh") != mesh or not r.get("ok"):
+            continue
+        if r.get("tag", "baseline") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_row(r: dict) -> dict:
+    ana = r["hlo_analysis"]
+    n_dev = r["n_devices"]
+    t_c = ana["flops"] / PEAK_FLOPS
+    t_m = ana["bytes"] / HBM_BW
+    t_i = ana["collective_bytes_total"] / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_i}
+    dom = max(terms, key=terms.get)
+    # MODEL_FLOPS: useful model flops for this step, per device
+    toks = tokens_of(r["shape"])
+    n_act = r["n_active_params"]
+    mult = {"train": 6, "prefill": 2, "decode": 2}[r["kind"]]
+    model_flops = mult * n_act * toks / n_dev
+    useful = model_flops / max(ana["flops"], 1.0)
+    return {
+        "arch": r["arch"], "shape": r["shape"], "kind": r["kind"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_i,
+        "dominant": dom, "model_flops": model_flops,
+        "useful_ratio": useful,
+        "hlo_flops": ana["flops"], "hlo_bytes": ana["bytes"],
+        "coll_bytes": ana["collective_bytes_total"],
+        "temp_gib": r["memory"]["temp_bytes"] / 2**30,
+        "lever": LEVERS[dom],
+    }
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful 6ND/HLO | temp GiB |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for w in rows:
+        lines.append(
+            f"| {w['arch']} | {w['shape']} | {w['compute_s']:.3e} "
+            f"| {w['memory_s']:.3e} | {w['collective_s']:.3e} "
+            f"| **{w['dominant']}** | {w['useful_ratio']:.2f} "
+            f"| {w['temp_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+def run(mesh: str = "pod16x16"):
+    recs = load_records(mesh)
+    rows = [roofline_row(r) for r in recs]
+    rows.sort(key=lambda w: (w["arch"], w["shape"]))
+    out = Path(__file__).resolve().parents[1] / "experiments" / "results"
+    out.mkdir(parents=True, exist_ok=True)
+    with open(out / f"roofline_{mesh}.json", "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    with open(out / f"roofline_{mesh}.md", "w") as f:
+        f.write(markdown_table(rows) + "\n")
+    for w in rows:
+        print(f"roofline_{w['arch']}_{w['shape']},0.0,"
+              f"dom={w['dominant']};c={w['compute_s']:.2e};"
+              f"m={w['memory_s']:.2e};i={w['collective_s']:.2e};"
+              f"useful={w['useful_ratio']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,132 @@
+"""Paper Fig. 5 (routing) reproduction.
+
+Two (weak, strong) pairs, as in §4.2:
+
+* **Model size**: gemma-weak-tiny (2L/128) vs gemma-strong-tiny (6L/320),
+  both trained in-framework on the arithmetic suite for different step
+  counts — a real capability gap.
+* **VAS-like**: the same weak model, where the strong "decoder" is
+  best-of-4 with verifier reranking (decode-time search at ~4x cost —
+  the value-augmented-sampling analogue in our substrate).
+
+The preference predictor Δ̂ ≈ p(p^S ≻ p^W | x) (Eq. 8) is an MLP probe on
+the WEAK model's hidden states (paper: "we train using the hidden states of
+p^W ... p^S does not even have to be called at all").
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import CACHE, emit, save_result
+from repro.core import marginal, routing
+from repro.core.difficulty import probe_predict, train_mlp_probe
+
+
+def _train_pair(seed=0):
+    import jax
+
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    from repro.launch import train as train_mod
+
+    out = {}
+    for name, steps in (("gemma-weak-tiny", 120), ("gemma-strong-tiny", 500)):
+        ck = CACHE / f"router_{name}"
+        params, model = train_mod.main([
+            "--arch", name, "--steps",
+            "0" if ck.with_suffix(".npz").exists() else str(steps),
+            "--batch", "32", "--seq", "64", "--seed", str(seed),
+            "--log-every", "200"])
+        if ck.with_suffix(".npz").exists():
+            params = load_checkpoint(str(ck), jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params))
+        else:
+            CACHE.mkdir(parents=True, exist_ok=True)
+            save_checkpoint(str(ck), params)
+        out[name] = (params, model)
+    return out
+
+
+def _success_pool(engine, problems, prompts, m, seed):
+    res = engine.generate(prompts, n_samples=m, seed=seed)
+    succ = np.zeros((len(problems), m))
+    for i, q in enumerate(problems):
+        for j in range(m):
+            succ[i, j] = q.check(list(res.tokens[i * m + j]))
+    return succ, res.probe_hidden
+
+
+def run_setting(setting: str, n_train=256, n_test=256, m=8, seed=0):
+    import jax
+
+    from repro.data.tasks import ArithTaskGen
+    from repro.serving import ServingEngine
+
+    pair = _train_pair(seed)
+    wk_params, wk_model = pair["gemma-weak-tiny"]
+    st_params, st_model = pair["gemma-strong-tiny"]
+    weak = ServingEngine(wk_model, wk_params, max_new=8, temperature=1.0)
+    if setting == "model_size":
+        strong = ServingEngine(st_model, st_params, max_new=8,
+                               temperature=1.0)
+        strong_m, cost_s = m, 3.0
+    else:  # vas-like: weak base model + search (best-of-4 + verifier)
+        strong = ServingEngine(wk_model, wk_params, max_new=8,
+                               temperature=1.0)
+        strong_m, cost_s = 4 * m, 4.0
+
+    gen = ArithTaskGen(max_digits=4, seed=seed + 21)
+    prompts_of = lambda ps: np.asarray(
+        [[0] * (12 - len(r)) + r for r in (p.prompt_tokens() for p in ps)],
+        np.int32)
+    tag = f"routing_{setting}_{n_train}_{n_test}_{m}_{seed}"
+    f = CACHE / (tag + ".npz")
+    if f.exists():
+        d = np.load(f)
+        sw_tr, ss_tr, fw_tr = d["sw_tr"], d["ss_tr"], d["fw_tr"]
+        sw_te, ss_te, fw_te = d["sw_te"], d["ss_te"], d["fw_te"]
+    else:
+        tr, te = gen.sample(n_train), gen.sample(n_test)
+        ptr, pte = prompts_of(tr), prompts_of(te)
+        sw_tr, fw_tr = _success_pool(weak, tr, ptr, m, seed + 1)
+        sw_te, fw_te = _success_pool(weak, te, pte, m, seed + 2)
+        ss_tr, _ = _success_pool(strong, tr, ptr, strong_m, seed + 3)
+        ss_te, _ = _success_pool(strong, te, pte, strong_m, seed + 4)
+        if setting != "model_size":
+            # best-of-4 search: group every 4 samples into one "decode"
+            ss_tr = ss_tr.reshape(n_train, m, 4).max(-1)
+            ss_te = ss_te.reshape(n_test, m, 4).max(-1)
+        np.savez(f, sw_tr=sw_tr, ss_tr=ss_tr, fw_tr=fw_tr,
+                 sw_te=sw_te, ss_te=ss_te, fw_te=fw_te)
+
+    # Eq. 11 Monte-Carlo preference targets on the training pool
+    pref_tr = marginal.preference_prob(ss_tr, sw_tr, sigma_scale=4.0)
+    probe, info = train_mlp_probe(jax.random.PRNGKey(seed + 5), fw_tr,
+                                  pref_tr, kind="pref", steps=1500)
+    pref_hat = probe_predict(probe, fw_te, "pref")
+    fracs = [0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0]
+    curves = routing.routing_curves(sw_te, ss_te, pref_hat, fracs)
+    curves["setting"] = setting
+    curves["probe_val_loss"] = info["val_loss"]
+    curves["cost_strong"] = cost_s
+    # strong-matching fraction: smallest f whose adaptive reward >= strong
+    strong_reward = curves["adaptive"][-1]
+    match = next((f for f, r in zip(fracs, curves["adaptive"])
+                  if r >= strong_reward - 0.005), 1.0)
+    curves["strong_match_frac"] = match
+    return curves
+
+
+def run():
+    for setting in ("model_size", "vas"):
+        c = run_setting(setting)
+        save_result(f"fig5_routing_{setting}", c)
+        i = c["frac"].index(0.5)
+        emit(f"fig5_routing_{setting}_f50", 0.0,
+             f"adaptive={c['adaptive'][i]:.3f};random={c['random'][i]:.3f};"
+             f"oracle={c['oracle'][i]:.3f};weak={c['adaptive'][0]:.3f};"
+             f"strong={c['adaptive'][-1]:.3f};"
+             f"match_frac={c['strong_match_frac']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

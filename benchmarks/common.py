@@ -1,0 +1,112 @@
+"""Benchmark utilities: timing + CSV emission + cached tiny-LM training."""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Callable, Optional
+
+import numpy as np
+
+CACHE = Path(__file__).resolve().parents[1] / "experiments" / "cache"
+RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "results"
+
+
+def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_result(name: str, obj) -> None:
+    import json
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    with open(RESULTS / f"{name}.json", "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+
+
+# ---------------------------------------------------------------------------
+# shared experiment fixture: trained tiny LM + labeled query pools
+# ---------------------------------------------------------------------------
+
+_FIXTURE = {}
+
+
+def get_arith_fixture(*, train_steps: int = 400, n_train: int = 256,
+                      n_test: int = 256, m_samples: int = 24,
+                      seed: int = 0, force: bool = False):
+    """Train (or load cached) mathstral-tiny on the arithmetic suite; label
+    train/test query pools with empirical λ via sampling; return everything
+    the paper's experiments need."""
+    key = ("arith", train_steps, n_train, n_test, m_samples, seed)
+    if key in _FIXTURE and not force:
+        return _FIXTURE[key]
+
+    import jax
+
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    from repro.data.tasks import ArithTaskGen
+    from repro.launch import train as train_mod
+    from repro.serving import ServingEngine
+
+    CACHE.mkdir(parents=True, exist_ok=True)
+    tag = f"arith_s{train_steps}_n{n_train}_{n_test}_m{m_samples}_{seed}"
+    ck = CACHE / tag
+
+    params, model = train_mod.main([
+        "--arch", "mathstral-tiny", "--steps",
+        "0" if (ck.with_suffix(".npz")).exists() else str(train_steps),
+        "--batch", "32", "--seq", "64", "--seed", str(seed),
+        "--log-every", "100"])
+    if (ck.with_suffix(".npz")).exists():
+        params = load_checkpoint(str(ck), jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params))
+    else:
+        save_checkpoint(str(ck), params, step=train_steps)
+
+    gen = ArithTaskGen(max_digits=6, seed=seed + 1)
+    engine = ServingEngine(model, params, max_new=8, temperature=1.0)
+
+    def prompts_of(problems, width=16):
+        rows = [p.prompt_tokens() for p in problems]
+        return np.asarray([[0] * (width - len(r)) + r for r in rows],
+                          np.int32)
+
+    def label(problems, prompts, seed):
+        npz = CACHE / f"{tag}_lam{len(problems)}_{seed}.npz"
+        if npz.exists():
+            d = np.load(npz)
+            return d["succ"], d["feats"]
+        res = engine.generate(prompts, n_samples=m_samples, seed=seed)
+        succ = np.zeros((len(problems), m_samples))
+        for i, q in enumerate(problems):
+            for j in range(m_samples):
+                succ[i, j] = q.check(list(res.tokens[i * m_samples + j]))
+        feats = res.probe_hidden
+        np.savez(npz, succ=succ, feats=feats)
+        return succ, feats
+
+    train_q = gen.sample(n_train)
+    test_q = gen.sample(n_test)
+    train_p, test_p = prompts_of(train_q), prompts_of(test_q)
+    train_succ, train_feats = label(train_q, train_p, seed + 10)
+    test_succ, test_feats = label(test_q, test_p, seed + 11)
+
+    fix = dict(model=model, params=params, engine=engine,
+               train_q=train_q, test_q=test_q,
+               train_prompts=train_p, test_prompts=test_p,
+               train_succ=train_succ, test_succ=test_succ,
+               train_feats=train_feats, test_feats=test_feats,
+               prompts_of=prompts_of, gen=gen)
+    _FIXTURE[key] = fix
+    return fix

@@ -1,0 +1,45 @@
+"""Benchmark driver: one section per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV lines (assignment format). The
+paper-repro benches train tiny in-framework models on first run and cache
+them under experiments/cache/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_allocation, bench_allocator,
+                            bench_bestofk, bench_chat, bench_predictor,
+                            bench_roofline, bench_routing)
+
+    sections = [
+        ("allocator", bench_allocator.run),
+        ("fig3_bestofk", bench_bestofk.run),
+        ("fig4_chat", bench_chat.run),
+        ("fig5_routing", bench_routing.run),
+        ("table1_predictor", bench_predictor.run),
+        ("fig6_allocation", bench_allocation.run),
+        ("roofline", bench_roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in sections:
+        t0 = time.time()
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((name, str(e)[:200]))
+        print(f"# {name} done in {time.time()-t0:.1f}s")
+    if failures:
+        print("# FAILURES:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Lower + compile ONE (arch x shape x mesh) combination and print its
+memory/cost/roofline summary — the smallest entry point into deliverables
+(e) and (g).
+
+Run:  PYTHONPATH=src python examples/dryrun_one.py [arch] [shape]
+"""
+import sys
+
+from repro.launch.dryrun import run_one
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "qwen2-0.5b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "decode_32k"
+    rec = run_one(arch, shape, multi_pod=False, tag="example")
+    ana = rec["hlo_analysis"]
+    print(f"\n{arch} x {shape} on 16x16:")
+    print(f"  per-device HLO FLOPs      {ana['flops']:.3e}")
+    print(f"  per-device HLO bytes      {ana['bytes']:.3e}")
+    print(f"  per-device collective B   {ana['collective_bytes_total']:.3e}")
+    print(f"  compile temp              "
+          f"{rec['memory']['temp_bytes']/2**30:.2f} GiB")

@@ -1,0 +1,13 @@
+"""End-to-end driver (deliverable b): train a small LM, train its
+difficulty probe, and SERVE batched requests through the adaptive
+best-of-k scheduler — the paper's full loop, with an adaptive-vs-uniform
+comparison printed at the end.
+
+Run:  PYTHONPATH=src python examples/serve_adaptive.py
+(~10 min on this CPU container; tune --train-steps down for a faster demo)
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--train-steps", "300", "--n-train-queries", "160",
+          "--n-queries", "64", "--budget", "4"])

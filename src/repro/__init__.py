@@ -1,0 +1,3 @@
+"""repro: production-grade JAX reproduction of "Learning How Hard to Think:
+Input-Adaptive Allocation of LM Computation" (Damani et al., ICLR 2025)."""
+__version__ = "0.1.0"

@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    latest_checkpoint,
+    load_checkpoint,
+    load_meta,
+    save_checkpoint,
+)

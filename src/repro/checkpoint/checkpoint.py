@@ -1,0 +1,84 @@
+"""Sharding-aware npz checkpointing (orbax is not installed offline).
+
+Pytrees are flattened to path-keyed arrays; metadata (step, config, tree
+structure) rides in a JSON sidecar. On restore under a mesh, arrays are
+placed with `jax.device_put(x, sharding)` leaf-wise.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = jax.tree.flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
+            # npz can't roundtrip ml_dtypes (bf16 etc.): store as fp32
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save_checkpoint(path: str, tree, *, step: int = 0,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    arrays = _flatten(tree)
+    np.savez(str(path) + ".npz", **arrays)
+    treedef = jax.tree.structure(tree)
+    meta = {"step": step, "treedef": str(treedef),
+            "keys": sorted(arrays), "extra": extra or {}}
+    with open(str(path) + ".json", "w") as f:
+        json.dump(meta, f, indent=1)
+    return str(path)
+
+
+def load_checkpoint(path: str, like, *, shardings=None):
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). If shardings (same-structure pytree) is given,
+    leaves are device_put with them."""
+    data = np.load(str(path) + ".npz")
+    flat_like = jax.tree.flatten_with_path(like)
+    leaves = []
+    for path_k, leaf in flat_like[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_k)
+        arr = data[key]
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            import jax.numpy as jnp
+            arr = np.asarray(jnp.asarray(arr).astype(leaf.dtype))
+        leaves.append(arr)
+    tree = jax.tree.unflatten(jax.tree.structure(like), leaves)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree
+
+
+def load_meta(path: str) -> Dict[str, Any]:
+    with open(str(path) + ".json") as f:
+        return json.load(f)
+
+
+def latest_checkpoint(ckpt_dir: str, prefix: str = "ckpt_"):
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = []
+    for f in d.glob(prefix + "*.json"):
+        m = re.match(prefix + r"(\d+)", f.stem)
+        if m:
+            steps.append(int(m.group(1)))
+    if not steps:
+        return None
+    return str(d / f"{prefix}{max(steps)}")

@@ -1,0 +1,13 @@
+from repro.configs.base import (  # noqa: F401
+    EncoderConfig,
+    INPUT_SHAPES,
+    InputShape,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SHAPES_BY_NAME,
+    SSMConfig,
+    TrainConfig,
+    XLSTMConfig,
+)
+from repro.configs.registry import ARCHS, STANDINS, get_config, list_archs  # noqa: F401

@@ -1,0 +1,251 @@
+"""Model / run configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``. Configs are
+plain frozen dataclasses so they hash, print, and diff cleanly; ``reduced()``
+derives the CPU smoke-test variant required by the assignment (<=2 layers,
+d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    expert_d_ff: int = 0           # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.01  # load-balance loss weight
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0            # 0 => full-rank q projection
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-style selective state space block."""
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0                # 0 => ceil(d_model/16)
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block stack: ratio of mLSTM blocks to sLSTM blocks (paper 7:1)."""
+    slstm_every: int = 8            # every k-th block is sLSTM; others mLSTM
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+    d_conv: int = 4
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Stubbed-modality encoder (audio frames / vision patches).
+
+    The frontend (mel+conv / SigLIP) is a stub per the assignment carve-out:
+    input_specs() supplies precomputed frame/patch embeddings with these shapes.
+    """
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    d_ff: int = 0
+    seq_len: int = 0                # frames / patches
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 => d_model // n_heads
+    qkv_bias: bool = False
+    mlp_bias: bool = False
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    rope_theta: float = 10000.0
+    act: str = "silu"              # silu (gated) | gelu (non-gated, whisper)
+    gated_mlp: bool = True
+    max_seq_len: int = 8192
+    # long-context behaviour for decode shapes:
+    #   full            — full attention KV cache (must fit)
+    #   sliding_window  — fixed window cache (dense archs at long_500k)
+    #   native          — recurrent/compressed state (ssm / mla)
+    long_context: str = "full"
+    sliding_window: int = 4096
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    # hybrid (jamba): an attention layer every `attn_every` layers, rest mamba
+    attn_every: int = 0
+    # moe layers interleave (jamba: every other layer is MoE)
+    moe_every: int = 1              # every k-th layer is MoE (if moe set)
+    # probing / LoRA support for the paper's difficulty models
+    lora_rank: int = 0
+    # W8A16 int8 weight quantization (serving; §Perf beyond-paper knob)
+    quant_int8: bool = False
+    dtype: str = "bfloat16"
+    # citation for config provenance
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.family == "audio"
+
+    @property
+    def n_params_estimate(self) -> int:
+        """Rough dense-equivalent parameter count (for roofline MODEL_FLOPS)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab_size
+        hd = self.resolved_head_dim
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm" and self.xlstm is not None:
+            # xlstm blocks: rough 8*d^2 per mLSTM-ish block
+            return emb + L * int(8 * d * d)
+        total = 0
+        for i in range(L):
+            is_attn = (self.attn_every == 0) or ((i % self.attn_every) == (self.attn_every - 1))
+            if self.ssm is not None and not is_attn:
+                e = self.ssm.expand
+                total += 2 * d * e * d + e * d * self.ssm.d_state * 2
+            elif self.mla is not None:
+                m = self.mla
+                total += d * self.n_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                total += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                total += m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                total += self.n_heads * m.v_head_dim * d
+            else:
+                total += d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+            is_moe = self.moe is not None and ((i % self.moe_every) == 0)
+            if is_moe:
+                m = self.moe
+                ff = m.expert_d_ff or self.d_ff
+                per_e = d * ff * (3 if self.gated_mlp else 2)
+                total += (m.n_experts + m.n_shared_experts) * per_e + d * m.n_experts
+            elif self.d_ff:
+                total += d * self.d_ff * (3 if self.gated_mlp else 2)
+        if self.encoder is not None:
+            e = self.encoder
+            total += e.n_layers * (4 * e.d_model * e.d_model + 2 * e.d_model * e.d_ff)
+            if self.is_encdec:  # cross attention in decoder
+                total += L * 4 * d * d
+        return emb + total
+
+    @property
+    def n_active_params_estimate(self) -> int:
+        """Active params per token (MoE top-k instead of all experts)."""
+        if self.moe is None:
+            return self.n_params_estimate
+        m = self.moe
+        full = self.n_params_estimate
+        ff = m.expert_d_ff or self.d_ff
+        per_e = self.d_model * ff * (3 if self.gated_mlp else 2)
+        n_moe_layers = len([i for i in range(self.n_layers) if (i % self.moe_every) == 0])
+        inactive = n_moe_layers * (m.n_experts - m.top_k) * per_e
+        return full - inactive
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: same family/topology pattern, tiny dims."""
+        changes = dict(
+            n_layers=2,
+            d_model=min(self.d_model, 256),
+            n_heads=min(self.n_heads, 4),
+            n_kv_heads=min(self.n_kv_heads, 2),
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=64 if self.resolved_head_dim >= 64 else self.resolved_head_dim,
+            max_seq_len=256,
+            name=self.name + "-reduced",
+        )
+        if self.n_kv_heads == self.n_heads:
+            changes["n_kv_heads"] = changes["n_heads"]
+        if self.moe is not None:
+            changes["moe"] = dataclasses.replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                n_shared_experts=min(self.moe.n_shared_experts, 1),
+                expert_d_ff=min(self.moe.expert_d_ff, 256) if self.moe.expert_d_ff else 0,
+            )
+        if self.mla is not None:
+            changes["mla"] = dataclasses.replace(
+                self.mla, kv_lora_rank=64, q_lora_rank=0,
+                qk_nope_head_dim=32, qk_rope_head_dim=16, v_head_dim=32)
+            changes["head_dim"] = 0
+        if self.ssm is not None:
+            changes["ssm"] = dataclasses.replace(self.ssm, d_state=8)
+        if self.encoder is not None:
+            changes["encoder"] = dataclasses.replace(
+                self.encoder, n_layers=1, d_model=changes["d_model"],
+                n_heads=changes["n_heads"], d_ff=min(self.encoder.d_ff, 512),
+                seq_len=16)
+        if self.attn_every:
+            changes["attn_every"] = 2
+            changes["n_layers"] = 4
+        if self.xlstm is not None:
+            changes["xlstm"] = dataclasses.replace(self.xlstm, slstm_every=2)
+            changes["n_layers"] = 4
+        return dataclasses.replace(self, **changes)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """One assigned (seq_len, global_batch) workload."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+INPUT_SHAPES: Tuple[InputShape, ...] = (
+    InputShape("train_4k", 4096, 256, "train"),
+    InputShape("prefill_32k", 32768, 32, "prefill"),
+    InputShape("decode_32k", 32768, 128, "decode"),
+    InputShape("long_500k", 524288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in INPUT_SHAPES}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    seed: int = 0
+    remat: bool = True
+    microbatch: int = 0             # 0 => no microbatching

@@ -1,0 +1,27 @@
+"""command-r-plus-104b — dense 64L d_model=12288 96H (GQA kv=8) d_ff=33792
+vocab=256000 — GQA, no-bias. [hf:CohereForAI/c4ai-command-r-v01]
+
+Full-attention dense arch; long_500k uses the sliding-window variant
+(flagged — see DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=33792,
+    vocab_size=256000,
+    qkv_bias=False,
+    norm="layernorm",            # cohere uses LayerNorm (no bias)
+    act="silu",
+    gated_mlp=True,
+    rope_theta=75_000_000.0,     # command-r family long-rope base
+    long_context="sliding_window",
+    sliding_window=4096,
+    source="hf:CohereForAI/c4ai-command-r-v01",
+)

@@ -1,0 +1,33 @@
+"""deepseek-v2-236b — moe 60L d_model=5120 128H MLA d_ff=1536 vocab=102400,
+MoE 160 routed experts top-6 + 2 shared — MLA kv_lora=512. [arXiv:2405.04434]
+
+MLA: queries/keys split into nope+rope parts; KV is compressed to a 512-dim
+latent + 64-dim shared rope key. Decode uses the absorbed form (scores
+against the compressed cache) so the long_500k cache is
+524288 x (512+64) x 2 B = 604 MB/seq — runs WITHOUT sliding window.
+First layer is dense (paper: first layer dense FFN d_ff=12288 intermediate);
+we model every layer as MoE + 2 shared experts per the assignment line.
+160 experts shard 16-way (10 experts/device, expert-parallel).
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=1536,
+    vocab_size=102400,
+    qkv_bias=False,
+    norm="rmsnorm",
+    act="silu",
+    gated_mlp=True,
+    long_context="native",       # compressed MLA cache fits at 500k
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=160, top_k=6, n_shared_experts=2,
+                  expert_d_ff=1536),
+    source="arXiv:2405.04434",
+)

@@ -1,0 +1,27 @@
+"""grok-1-314b — moe 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2. [hf:xai-org/grok-1]
+
+8 experts do not divide the 16-way model axis, so each expert is
+tensor-sharded over d_ff (experts replicated count-wise) — see DESIGN.md.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    qkv_bias=False,
+    norm="rmsnorm",
+    act="gelu",
+    gated_mlp=True,
+    long_context="sliding_window",
+    sliding_window=4096,
+    moe=MoEConfig(n_experts=8, top_k=2, expert_d_ff=32768),
+    source="hf:xai-org/grok-1",
+)

@@ -1,0 +1,32 @@
+"""jamba-1.5-large-398b — hybrid 72L d_model=8192 64H (GQA kv=8) d_ff=24576
+vocab=65536, MoE 16 experts top-2 — Mamba+attention 1:7 interleave.
+[arXiv:2403.19887]
+
+Every 8th layer is attention (GQA kv=8), the other 7 are Mamba blocks.
+Every other layer's FFN is MoE (16 experts top-2, expert-parallel 16-way).
+long_500k: Mamba layers carry O(1) state; the 9 attention layers keep full
+KV (sharded seq-wise over the model axis at decode).
+"""
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    qkv_bias=False,
+    norm="rmsnorm",
+    act="silu",
+    gated_mlp=True,
+    long_context="native",       # mamba state + seq-sharded attn KV
+    attn_every=8,                # layer i is attention iff i % 8 == 7
+    moe_every=2,                 # every other layer MoE
+    moe=MoEConfig(n_experts=16, top_k=2, expert_d_ff=24576),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+    source="arXiv:2403.19887",
+)

@@ -1,0 +1,33 @@
+"""paligemma-3b — vlm 18L d_model=2048 8H (GQA kv=1, i.e. MQA) d_ff=16384
+vocab=257216 — SigLIP + gemma. [arXiv:2407.07726]
+
+The SigLIP vision tower is STUBBED per the assignment carve-out:
+input_specs() supplies 256 precomputed patch embeddings (d=2048 after the
+projector). The gemma-2b text decoder is implemented in full (prefix-LM
+attention over image tokens, causal over text).
+"""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+N_PATCHES = 256
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,                # gemma-2b: 8 heads x 256
+    d_ff=16384,
+    vocab_size=257216,
+    qkv_bias=False,
+    norm="rmsnorm",
+    act="gelu",                  # gemma uses gelu-gated MLP
+    gated_mlp=True,
+    tie_embeddings=True,
+    long_context="sliding_window",
+    sliding_window=4096,
+    encoder=EncoderConfig(n_layers=0, d_model=2048, n_heads=0, d_ff=0,
+                          seq_len=N_PATCHES),   # stub: projected patch embeds
+    source="arXiv:2407.07726",
+)

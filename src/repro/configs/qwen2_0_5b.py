@@ -1,0 +1,26 @@
+"""qwen2-0.5b — dense 24L d_model=896 14H (GQA kv=2) d_ff=4864
+vocab=151936 — GQA, QKV bias. [arXiv:2407.10671]
+
+14 heads padded to 16 for 16-way TP (zero o-rows, exact).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab_size=151936,
+    qkv_bias=True,
+    norm="rmsnorm",
+    act="silu",
+    gated_mlp=True,
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    long_context="sliding_window",
+    sliding_window=4096,
+    source="arXiv:2407.10671",
+)

@@ -1,0 +1,27 @@
+"""qwen2.5-32b — dense 64L d_model=5120 40H (GQA kv=8) d_ff=27648
+vocab=152064 — GQA, QKV bias. [hf:Qwen/Qwen2.5-32B]
+
+40 heads are padded to 48 for 16-way tensor parallelism (zero output-
+projection rows — exact; FLOP inflation reported in roofline useful-ratio).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=27648,
+    vocab_size=152064,
+    qkv_bias=True,
+    norm="rmsnorm",
+    act="silu",
+    gated_mlp=True,
+    rope_theta=1_000_000.0,
+    long_context="sliding_window",
+    sliding_window=4096,
+    source="hf:Qwen/Qwen2.5-32B",
+)

@@ -1,0 +1,80 @@
+"""Architecture registry: ``--arch <id>`` resolution for launch scripts.
+
+Also holds the paper's own experiment-scale configs (tiny in-framework
+stand-ins for Mathstral-7B / Starcoder-15B / Gemma-2B/7B — see DESIGN.md
+assumption table) used by the reproduction benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, SHAPES_BY_NAME, INPUT_SHAPES  # noqa: F401
+from repro.configs.command_r_plus_104b import CONFIG as COMMAND_R_PLUS_104B
+from repro.configs.paligemma_3b import CONFIG as PALIGEMMA_3B
+from repro.configs.xlstm_1_3b import CONFIG as XLSTM_1_3B
+from repro.configs.qwen1_5_0_5b import CONFIG as QWEN1_5_0_5B
+from repro.configs.whisper_small import CONFIG as WHISPER_SMALL
+from repro.configs.grok_1_314b import CONFIG as GROK_1_314B
+from repro.configs.qwen2_5_32b import CONFIG as QWEN2_5_32B
+from repro.configs.deepseek_v2_236b import CONFIG as DEEPSEEK_V2_236B
+from repro.configs.qwen2_0_5b import CONFIG as QWEN2_0_5B
+from repro.configs.jamba_1_5_large_398b import CONFIG as JAMBA_1_5_LARGE_398B
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        COMMAND_R_PLUS_104B,
+        PALIGEMMA_3B,
+        XLSTM_1_3B,
+        QWEN1_5_0_5B,
+        WHISPER_SMALL,
+        GROK_1_314B,
+        QWEN2_5_32B,
+        DEEPSEEK_V2_236B,
+        QWEN2_0_5B,
+        JAMBA_1_5_LARGE_398B,
+    )
+}
+
+# ---------------------------------------------------------------------------
+# Paper-experiment stand-ins (trainable on CPU; same structural family as the
+# paper's models). Used by examples/ and benchmarks/ for the faithful repro.
+# ---------------------------------------------------------------------------
+
+def _tiny(name: str, n_layers: int, d_model: int, n_heads: int, d_ff: int,
+          vocab: int, **kw) -> ModelConfig:
+    return ModelConfig(
+        name=name, family="dense", n_layers=n_layers, d_model=d_model,
+        n_heads=n_heads, n_kv_heads=kw.pop("n_kv_heads", n_heads),
+        d_ff=d_ff, vocab_size=vocab, max_seq_len=kw.pop("max_seq_len", 256),
+        tie_embeddings=True, source="in-framework paper stand-in", **kw)
+
+# "Mathstral-7B" stand-in: the best-of-k generator for Math-like tasks.
+MATHSTRAL_TINY = _tiny("mathstral-tiny", 4, 256, 4, 512, 64)
+# "Starcoder-15B" stand-in: Code-like tasks.
+STARCODER_TINY = _tiny("starcoder-tiny", 4, 256, 4, 512, 64)
+# "Gemma-2B" / "Gemma-7B" routing pair stand-ins (weak / strong).
+GEMMA_WEAK_TINY = _tiny("gemma-weak-tiny", 2, 128, 4, 256, 64)
+GEMMA_STRONG_TINY = _tiny("gemma-strong-tiny", 6, 320, 4, 768, 64)
+# Reward-model stand-in (OffsetBias-RM-8B analogue): scalar head on a tiny LM.
+REWARD_TINY = _tiny("reward-tiny", 2, 128, 4, 256, 64)
+
+STANDINS: Dict[str, ModelConfig] = {
+    c.name: c for c in (MATHSTRAL_TINY, STARCODER_TINY, GEMMA_WEAK_TINY,
+                        GEMMA_STRONG_TINY, REWARD_TINY)
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch in ARCHS:
+        return ARCHS[arch]
+    if arch in STANDINS:
+        return STANDINS[arch]
+    if arch.endswith("-reduced"):
+        return get_config(arch[: -len("-reduced")]).reduced()
+    raise KeyError(
+        f"unknown arch {arch!r}; known: {sorted(ARCHS) + sorted(STANDINS)}")
+
+
+def list_archs():
+    return sorted(ARCHS)

@@ -1,0 +1,38 @@
+"""whisper-small — audio enc-dec 12L d_model=768 12H (kv=12) d_ff=3072
+vocab=51865 — enc-dec, conv frontend (stub). [arXiv:2212.04356]
+
+The mel-spectrogram + conv feature extractor is STUBBED per the assignment
+carve-out: input_specs() supplies 1500 precomputed frame embeddings
+(whisper's 30 s / 2x-downsampled audio context). The 12L encoder transformer
+and 12L decoder (self-attn cache + cross-attn to encoder states) are real.
+
+Whisper uses non-gated GELU MLPs, LayerNorm with bias, learned positions
+(we use sinusoidal-equivalent learned tables), and biased projections.
+long_500k runs via the sliding-window decoder variant (structurally valid;
+semantically whisper is bounded to 30 s windows — see DESIGN.md).
+"""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+N_AUDIO_FRAMES = 1500
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    qkv_bias=True,
+    mlp_bias=True,
+    norm="layernorm",
+    act="gelu",
+    gated_mlp=False,
+    tie_embeddings=True,
+    long_context="sliding_window",
+    sliding_window=4096,
+    encoder=EncoderConfig(n_layers=12, d_model=768, n_heads=12, d_ff=3072,
+                          seq_len=N_AUDIO_FRAMES),
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,26 @@
+"""xlstm-1.3b — ssm 48L d_model=2048 4H (kv=4) d_ff=0 vocab=50304 —
+sLSTM + mLSTM blocks. [arXiv:2405.04517]
+
+xLSTM[7:1]: every 8th block is sLSTM (sequential scan), the rest mLSTM
+(matrix-memory, parallelizable linear-attention form). d_ff=0: blocks use
+internal projection factors instead of a separate FFN (paper §4).
+Attention-free => long_500k runs natively (O(1) recurrent state decode).
+"""
+from repro.configs.base import ModelConfig, XLSTMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    norm="layernorm",
+    gated_mlp=False,
+    long_context="native",
+    xlstm=XLSTMConfig(slstm_every=8, mlstm_proj_factor=2.0,
+                      slstm_proj_factor=4.0 / 3.0, d_conv=4),
+    source="arXiv:2405.04517",
+)

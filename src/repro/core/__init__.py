@@ -1,0 +1,5 @@
+"""The paper's primary contribution: input-adaptive allocation of LM
+computation — difficulty models, the matroid-greedy allocator, adaptive
+best-of-k, and weak/strong routing."""
+from repro.core import allocator, bestofk, difficulty, marginal, routing  # noqa: F401
+from repro.core.policy import AdaptivePolicy  # noqa: F401

@@ -1,0 +1,259 @@
+"""Computation allocation (paper §3.2).
+
+The ILP (paper Eq. 5)
+
+    max Σ_ij c_ij Δ_ij   s.t.  Σ c_ij <= B·n,  c_ij <= c_{i,j-1}
+
+is a matroid (feasible prefix sets), so greedy is exact (Edmonds 1971) for
+non-increasing rows. Rows predicted by a learned Δ̂ may be non-monotone; we
+apply PAV "ironing" (pool-adjacent-violators averaging, sum-preserving)
+first — greedy on the ironed rows selects the same prefixes the exact
+matroid greedy would, up to one pooled block at the budget boundary.
+
+Three implementations, all tested against each other + brute force:
+
+    greedy_allocate       exact frontier greedy, numpy heap, O(nB log n)
+    allocate_threshold    vectorized sort/threshold (jax or numpy), used
+                          on-device inside the serving scheduler
+    OfflinePolicy         paper's offline variant — bin by predicted
+                          difficulty on held-out data, solve once with a
+                          per-bin-equality constraint, ship a lookup table
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# ironing
+# ---------------------------------------------------------------------------
+
+def iron_rows(delta: np.ndarray) -> np.ndarray:
+    """Sum-preserving non-increasing envelope per row (PAV)."""
+    d = np.array(delta, np.float64, copy=True)
+    n, B = d.shape
+    for i in range(n):
+        # stack of (value_sum, count)
+        stack = []
+        for j in range(B):
+            v, c = d[i, j], 1
+            while stack and stack[-1][0] / stack[-1][1] <= v / c:
+                pv, pc = stack.pop()
+                v += pv
+                c += pc
+            stack.append((v, c))
+        out = []
+        for v, c in stack:
+            out.extend([v / c] * c)
+        d[i] = out
+    return d
+
+
+def iron_rows_jnp(delta: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized PAV via iterated pooling (O(B) passes, B small)."""
+    d = delta.astype(jnp.float32)
+    B = d.shape[1]
+    # Exact PAV via the minimax identity for decreasing isotonic regression:
+    #   ironed[j] = min_{a < j} max_{b >= j} mean(d[a..b])
+    # i.e. the derivative of the concave hull of the prefix sums.
+    # O(B^2) memory; B <= a few hundred in all experiments.
+    pre = jnp.concatenate([jnp.zeros((d.shape[0], 1), d.dtype),
+                           jnp.cumsum(d, axis=1)], axis=1)   # (n,B+1)
+    # concave hull of points (j, pre[j]) via upper envelope slopes
+    jj = jnp.arange(B + 1, dtype=jnp.float32)
+    # slope[a,b] = (pre[b]-pre[a])/(b-a) for b>a
+    diff = pre[:, None, :] - pre[:, :, None]                 # (n,a,b)
+    span = jj[None, :] - jj[:, None]
+    slope = jnp.where(span > 0, diff / jnp.maximum(span, 1.0), -jnp.inf)
+    # ironed[j] (1-indexed unit j) = min_{a<j} max_{b>=j} slope[a,b]
+    maxb = jax.lax.cummax(slope[:, :, ::-1], axis=2)[:, :, ::-1]  # max over b'>=b
+    # for unit j (1..B): candidates a in [0, j-1], b in [j, B]
+    cand = maxb[:, :, 1:]                                    # b index >= 1
+    # cand[n, a, j-1] = max_{b>=j} slope[a,b]; need min over a <= j-1
+    cand = jnp.where(jnp.arange(B + 1)[None, :, None]
+                     <= jnp.arange(1, B + 1)[None, None, :] - 1,
+                     cand, jnp.inf)
+    return jnp.min(cand, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# exact greedy (reference + production host path)
+# ---------------------------------------------------------------------------
+
+def greedy_allocate(delta: np.ndarray, total_budget: int, *,
+                    b_min: int = 0, allow_negative: bool = False,
+                    iron: bool = False) -> np.ndarray:
+    """Solve Eq. 5: returns integer budgets b (n,), Σb <= total_budget.
+
+    b_min pre-assigns that many units to every query (chat experiments use
+    b_min=1). Stops early when the best remaining marginal is <= 0 unless
+    allow_negative (paper: impossible queries get b=0 and a default answer).
+
+    iron=False (default) runs FRONTIER greedy on the raw marginals: exact
+    for monotone rows (the matroid argument), and on noisy non-monotone
+    rows it realizes the actual prefix values — measured better than
+    hull-greedy, whose pooled blocks overestimate value when the budget
+    cuts a block mid-way (see EXPERIMENTS.md §Repro chat notes). iron=True
+    selects by the PAV concave hull instead (optimal w.r.t. the hull).
+    """
+    d = np.asarray(delta, np.float64)
+    if iron:
+        d = iron_rows(d)
+    n, B = d.shape
+    b = np.full(n, min(b_min, B), np.int64)
+    spent = int(b.sum())
+    heap = []
+    for i in range(n):
+        if b[i] < B:
+            heap.append((-d[i, b[i]], i))
+    heapq.heapify(heap)
+    while heap and spent < total_budget:
+        negv, i = heapq.heappop(heap)
+        if not allow_negative and -negv <= 0:
+            break
+        b[i] += 1
+        spent += 1
+        if b[i] < B:
+            heapq.heappush(heap, (-d[i, b[i]], i))
+    return b
+
+
+def allocate_threshold(delta, total_budget: int, *, b_min: int = 0,
+                       assume_monotone: bool = False):
+    """Vectorized allocation: global top-k over (ironed) marginals.
+
+    Equivalent to greedy for monotone rows. Works on jnp or np arrays; used
+    on-device by the serving scheduler (device-resident, no host sync).
+    """
+    xp = jnp if isinstance(delta, jnp.ndarray) else np
+    d = delta
+    if not assume_monotone:
+        d = (iron_rows_jnp(d) if xp is jnp
+             else iron_rows(np.asarray(d, np.float64)))
+    n, B = d.shape
+    base = min(b_min, B)
+    remaining = max(0, total_budget - base * n)
+    if xp is jnp:
+        dm = jnp.where(jnp.arange(B)[None, :] < base, -jnp.inf, d)
+        flat = dm.reshape(-1)
+        k = min(remaining, flat.shape[0])
+        if k == 0:
+            return jnp.full((n,), base, jnp.int32)
+        # exact top-k by index (ties broken toward earlier units, which
+        # preserves the prefix property for monotone rows and hits the
+        # budget exactly)
+        _, idx = jax.lax.top_k(flat, k)
+        take = jnp.zeros_like(flat, jnp.int32).at[idx].set(1).reshape(n, B)
+        take = take * (dm > 0)
+        b = jnp.sum(jnp.cumprod(take, axis=1), axis=1)
+        return (base + b).astype(jnp.int32)
+    else:
+        dm = np.where(np.arange(B)[None, :] < base, -np.inf, d)
+        flat = dm.reshape(-1)
+        k = min(remaining, flat.size)
+        if k == 0:
+            return np.full(n, base, np.int64)
+        idx = np.argsort(-flat, kind="stable")[:k]
+        take = np.zeros(flat.size, np.int64)
+        take[idx] = 1
+        take = take.reshape(n, B) * (dm > 0)
+        b = np.cumprod(take, axis=1).sum(axis=1)
+        return base + b
+
+
+# ---------------------------------------------------------------------------
+# offline (binned) policy — paper §3.2 "Offline allocation"
+# ---------------------------------------------------------------------------
+
+@dataclass
+class OfflinePolicy:
+    """Fixed difficulty-bin -> budget lookup table."""
+    bin_edges: np.ndarray       # (n_bins-1,) thresholds on the bin statistic
+    budgets: np.ndarray         # (n_bins,) budget per bin
+
+    def __call__(self, stat: np.ndarray) -> np.ndarray:
+        """stat (n,): the per-query difficulty statistic (e.g. Δ̂_1 or λ̂)."""
+        bins = np.searchsorted(self.bin_edges, np.asarray(stat))
+        return self.budgets[bins]
+
+
+def build_offline_policy(delta_holdout: np.ndarray, stat: np.ndarray,
+                         avg_budget: float, *, n_bins: int = 10,
+                         b_min: int = 0) -> OfflinePolicy:
+    """Solve Eq. 5 on held-out data with per-bin equality constraints.
+
+    delta_holdout (m, B): empirical marginals of the held-out queries.
+    stat (m,): the statistic used to bin them at deployment (the paper uses
+    the first-sample prediction Δ̂_1).
+    """
+    m, B = delta_holdout.shape
+    qs = np.quantile(stat, np.linspace(0, 1, n_bins + 1)[1:-1])
+    edges = np.unique(qs)
+    bins = np.searchsorted(edges, stat)
+    n_eff = len(edges) + 1
+    # per-bin mean marginal rows + counts
+    rows = np.zeros((n_eff, B))
+    counts = np.zeros(n_eff, np.int64)
+    for g in range(n_eff):
+        sel = bins == g
+        counts[g] = sel.sum()
+        if counts[g]:
+            rows[g] = iron_rows(delta_holdout[sel]).mean(axis=0)
+    total = int(round(avg_budget * m))
+    budgets = np.full(n_eff, b_min, np.int64)
+    spent = int((budgets * counts).sum())
+    heap = [(-rows[g, budgets[g]], g) for g in range(n_eff)
+            if counts[g] and budgets[g] < B]
+    heapq.heapify(heap)
+    while heap:
+        negv, g = heapq.heappop(heap)
+        if -negv <= 0:
+            break
+        if spent + counts[g] > total:
+            continue
+        budgets[g] += 1
+        spent += int(counts[g])
+        if budgets[g] < B:
+            heapq.heappush(heap, (-rows[g, budgets[g]], g))
+    return OfflinePolicy(bin_edges=edges, budgets=budgets)
+
+
+# ---------------------------------------------------------------------------
+# routing allocation (paper §4.2)
+# ---------------------------------------------------------------------------
+
+def route_by_preference(pref: np.ndarray, strong_frac: float) -> np.ndarray:
+    """Route the top strong_frac fraction (by predicted preference) to the
+    strong decoder. Returns bool mask (n,). Matches the paper's top-B
+    percentile rule."""
+    n = len(pref)
+    k = int(round(strong_frac * n))
+    if k <= 0:
+        return np.zeros(n, bool)
+    if k >= n:
+        return np.ones(n, bool)
+    thresh = np.partition(pref, -k)[-k]
+    mask = pref >= thresh
+    # break ties deterministically to hit the exact count
+    if mask.sum() > k:
+        idx = np.where(pref == thresh)[0]
+        drop = idx[: mask.sum() - k]
+        mask[drop] = False
+    return mask
+
+
+def route_budgeted(pref: np.ndarray, cost_weak: float, cost_strong: float,
+                   avg_budget: float) -> np.ndarray:
+    """Cost-aware routing: strong calls cost (cost_strong - cost_weak) extra;
+    fit as many of the highest-preference queries as the budget allows."""
+    n = len(pref)
+    extra = cost_strong - cost_weak
+    spare = (avg_budget - cost_weak) * n
+    k = int(spare // extra) if extra > 0 else n
+    return route_by_preference(pref, min(max(k, 0), n) / n)

@@ -1,0 +1,167 @@
+"""Difficulty models Δ̂(x; θ) — paper §3.1.
+
+Two parameterizations, both implemented on top of our in-framework LMs:
+
+* **MLPProbe** — a 2-layer MLP on the base LM's last hidden state of the
+  encoded query ("extremely little overhead: its input are hidden states
+  that are already computed as part of the decoding procedure").
+* **LoRAProbe** — LoRA adapters on the base LM's attention projections plus
+  a prediction head; trained end-to-end through the (merged-form) adapted
+  forward pass.
+
+Heads / losses:
+    kind="mse"   : predict the Δ vector, MSE (paper Eq. 6)
+    kind="bce"   : predict λ (binary-reward domains), BCE on soft labels
+                   (paper Eq. 7); Δ then follows analytically
+    kind="pref"  : predict p(p^S ≻ p^W | x) for routing (paper Eq. 8)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import modules as nn
+
+
+# ---------------------------------------------------------------------------
+# MLP probe
+# ---------------------------------------------------------------------------
+
+def init_mlp_probe(key, d_in: int, d_out: int, *, d_hidden: int = 128):
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc1": nn.init_linear(k1, d_in, d_hidden, bias=True),
+        "fc2": nn.init_linear(k2, d_hidden, d_out, bias=True, zero=True),
+    }
+
+
+def mlp_probe_apply(p, h: jnp.ndarray) -> jnp.ndarray:
+    """h (..., d_in) -> raw logits (..., d_out)."""
+    z = jax.nn.relu(nn.linear(p["fc1"], h.astype(jnp.float32)))
+    return nn.linear(p["fc2"], z)
+
+
+def probe_loss(p, h, targets, kind: str) -> jnp.ndarray:
+    out = mlp_probe_apply(p, h)
+    if kind == "mse":
+        return jnp.mean(jnp.sum((out - targets) ** 2, axis=-1))
+    # bce / pref: scalar sigmoid head on soft labels
+    logit = out[..., 0]
+    t = targets.astype(jnp.float32)
+    return jnp.mean(t * jax.nn.softplus(-logit)
+                    + (1 - t) * jax.nn.softplus(logit))
+
+
+def train_mlp_probe(key, feats: np.ndarray, targets: np.ndarray, *,
+                    kind: str = "bce", d_hidden: int = 128,
+                    steps: int = 2000, lr: float = 1e-3,
+                    batch_size: int = 256, weight_decay: float = 1e-4,
+                    val_frac: float = 0.1) -> Tuple[Dict, Dict[str, Any]]:
+    """Full training loop (AdamW, minibatched). Returns (params, info)."""
+    from repro.optim import adamw_init, adamw_update
+
+    feats = np.asarray(feats, np.float32)
+    targets = np.asarray(targets, np.float32)
+    n = len(feats)
+    n_val = max(1, int(n * val_frac))
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(n)
+    vi, ti = perm[:n_val], perm[n_val:]
+    d_out = targets.shape[1] if (kind == "mse" and targets.ndim > 1) else 1
+    if targets.ndim == 1:
+        targets = targets[:, None] if kind == "mse" else targets
+    params = init_mlp_probe(key, feats.shape[1], d_out, d_hidden=d_hidden)
+    opt = adamw_init(params)
+    ft, tt = jnp.asarray(feats[ti]), jnp.asarray(targets[ti])
+    fv, tv = jnp.asarray(feats[vi]), jnp.asarray(targets[vi])
+
+    @jax.jit
+    def step(params, opt, idx):
+        loss, g = jax.value_and_grad(probe_loss)(params, ft[idx], tt[idx], kind)
+        params, opt = adamw_update(params, g, opt, lr=lr,
+                                   weight_decay=weight_decay)
+        return params, opt, loss
+
+    val_loss_fn = jax.jit(lambda p: probe_loss(p, fv, tv, kind))
+    losses, best, best_params = [], np.inf, params
+    m = len(ti)
+    for s in range(steps):
+        idx = jnp.asarray(rng.integers(0, m, size=min(batch_size, m)))
+        params, opt, loss = step(params, opt, idx)
+        if s % 50 == 0 or s == steps - 1:
+            vl = float(val_loss_fn(params))
+            losses.append((s, float(loss), vl))
+            if vl < best:
+                best, best_params = vl, jax.tree.map(jnp.copy, params)
+    return best_params, {"history": losses, "val_loss": best, "kind": kind}
+
+
+def probe_predict(params, feats: np.ndarray, kind: str) -> np.ndarray:
+    out = np.asarray(mlp_probe_apply(params, jnp.asarray(feats, jnp.float32)))
+    if kind == "mse":
+        return out
+    return 1.0 / (1.0 + np.exp(-out[..., 0]))
+
+
+# ---------------------------------------------------------------------------
+# LoRA probe (adapter fine-tuning of the base LM + head)
+# ---------------------------------------------------------------------------
+
+_LORA_TARGETS = ("wq", "wo", "wx", "wz")   # attention & xlstm/mamba inputs
+
+
+def init_lora_probe(key, base_params, d_model: int, d_out: int, *,
+                    rank: int = 8):
+    """LoRA params matching 2-D/3-D weight leaves named in _LORA_TARGETS,
+    plus an MLP head on the final hidden state."""
+    flat = jax.tree.flatten_with_path(base_params)[0]
+    lora: Dict[str, Any] = {}
+    k = key
+    for path, leaf in flat:
+        names = [getattr(pp, "key", str(pp)) for pp in path]
+        if len(names) >= 2 and names[-1] == "w" and names[-2] in _LORA_TARGETS:
+            k, sub = jax.random.split(k)
+            if leaf.ndim == 2:          # (d_in, d_out)
+                lead, d_in, d_o = (), leaf.shape[0], leaf.shape[1]
+            else:                        # (n_repeat, d_in, *out_dims)
+                lead = (leaf.shape[0],)
+                d_in = leaf.shape[1]
+                d_o = int(np.prod(leaf.shape[2:]))
+            a = (jax.random.normal(sub, lead + (d_in, rank), jnp.float32)
+                 / math.sqrt(d_in))
+            b = jnp.zeros(lead + (rank, d_o), jnp.float32)
+            lora["/".join(names)] = {"a": a, "b": b}
+    k, sub = jax.random.split(k)
+    head = init_mlp_probe(sub, d_model, d_out)
+    return {"adapters": lora, "head": head}
+
+
+def apply_lora(base_params, lora, scale: float = 1.0):
+    """Merged-form LoRA: returns params with w + a@b on adapted leaves."""
+    adapters = lora["adapters"]
+
+    def walk(tree, prefix):
+        if isinstance(tree, dict):
+            return {k: walk(v, prefix + [k]) for k, v in tree.items()}
+        name = "/".join(prefix)
+        if name in adapters:
+            ad = adapters[name]
+            delta = jnp.einsum("...ir,...ro->...io", ad["a"], ad["b"]) * scale
+            if delta.shape != tree.shape:
+                delta = delta.reshape(tree.shape)
+            return tree + delta.astype(tree.dtype)
+        return tree
+
+    return walk(base_params, [])
+
+
+def lora_probe_loss(lora, base_params, encode_fn: Callable, tokens,
+                    targets, kind: str) -> jnp.ndarray:
+    params = apply_lora(base_params, lora)
+    h = encode_fn(params, tokens)          # (n, d) last hidden state
+    return probe_loss(lora["head"], h, targets, kind)

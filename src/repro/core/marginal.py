@@ -1,0 +1,74 @@
+"""Marginal-reward machinery (paper §3, §3.3).
+
+Definitions (paper Eq. 4-5):
+    q(x, b)   = E_{y ~ f(x,b)}[r(x, y)]                 expected reward
+    Δ_ij      = q(x_i, j) - q(x_i, j-1)                 marginal reward
+
+Binary-reward special case (§3.3): with per-sample success prob λ,
+    q(x, b) = 1 - (1-λ)^b        Δ_ij = λ (1-λ)^{j-1}   (monotone ↓ in j)
+
+Continuous-reward (best-of-k with a reward model): Δ is estimated by
+bootstrap over a pool of sampled rewards, exactly as the paper's Appendix A
+training pipelines do.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def binary_q(lam: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """q(x,b) = 1-(1-λ)^b; lam (...,), b (...,) broadcastable."""
+    return 1.0 - np.power(1.0 - lam, b)
+
+
+def binary_marginals(lam: np.ndarray, b_max: int) -> np.ndarray:
+    """Δ matrix (n, b_max): Δ[:, j-1] = λ(1-λ)^{j-1}."""
+    lam = np.asarray(lam, np.float64)[:, None]
+    j = np.arange(b_max)[None, :]
+    return lam * np.power(1.0 - lam, j)
+
+
+def bootstrap_best_of_k(rewards: np.ndarray, k: int, *, n_boot: int = 256,
+                        rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    """E[max of k samples] per query via bootstrap.
+
+    rewards (n, m): m sampled rewards per query. Returns (n,) estimates of
+    q(x, k) for best-of-k under the reward model (paper's evaluation
+    procedure: sample B_max generations once, bootstrap subsets).
+    """
+    rng = rng or np.random.default_rng(0)
+    n, m = rewards.shape
+    if k <= 0:
+        return np.zeros(n)
+    if k >= m:
+        return rewards.max(axis=1)
+    idx = rng.integers(0, m, size=(n_boot, k))
+    # (n_boot, n, k) -> max over k -> mean over boot
+    return rewards[:, idx].max(axis=2).mean(axis=1)
+
+
+def bootstrap_marginals(rewards: np.ndarray, b_max: int, *,
+                        n_boot: int = 256,
+                        rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    """Empirical Δ matrix (n, b_max) from sampled rewards (n, m)."""
+    rng = rng or np.random.default_rng(0)
+    q = np.stack([bootstrap_best_of_k(rewards, k, n_boot=n_boot, rng=rng)
+                  for k in range(0, b_max + 1)], axis=1)   # (n, b_max+1)
+    return np.diff(q, axis=1)
+
+
+def empirical_lambda(successes: np.ndarray) -> np.ndarray:
+    """Per-query single-sample success rate from binary outcomes (n, m)."""
+    return np.asarray(successes, np.float64).mean(axis=1)
+
+
+def preference_prob(rewards_strong: np.ndarray, rewards_weak: np.ndarray,
+                    *, sigma_scale: float = 1.0) -> np.ndarray:
+    """Monte-Carlo p(p^S ≻ p^W | x) = E[σ(r(y_S) − r(y_W))]  (paper Eq. 8/11).
+
+    rewards_strong (n, mS), rewards_weak (n, mW): all pairs are used.
+    """
+    ds = rewards_strong[:, :, None] - rewards_weak[:, None, :]
+    return (1.0 / (1.0 + np.exp(-sigma_scale * ds))).mean(axis=(1, 2))

@@ -1,0 +1,46 @@
+"""AdaptivePolicy: the paper's technique as a first-class serving feature.
+
+Ties together (probe -> marginals -> allocator) behind one object the
+serving scheduler calls per batch. Supports:
+  * online mode  — exact batch solve of Eq. 5 (greedy on device or host)
+  * offline mode — the fixed bin->budget table (per-query, batch-free)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import allocator as alloc
+from repro.core import marginal
+from repro.core.difficulty import mlp_probe_apply, probe_predict
+
+
+@dataclass
+class AdaptivePolicy:
+    probe_params: dict
+    kind: str                     # "bce" (binary λ̂) | "mse" (Δ̂ vector)
+    b_max: int
+    b_min: int = 0
+    offline: Optional[alloc.OfflinePolicy] = None
+
+    def predict(self, hidden: np.ndarray) -> np.ndarray:
+        """hidden (n, d) last-token hidden states from prefill."""
+        return probe_predict(self.probe_params, hidden, self.kind)
+
+    def marginals(self, hidden: np.ndarray) -> np.ndarray:
+        pred = self.predict(hidden)
+        if self.kind == "bce":
+            return marginal.binary_marginals(pred, self.b_max)
+        return np.asarray(pred)[:, : self.b_max]
+
+    def allocate(self, hidden: np.ndarray, avg_budget: float) -> np.ndarray:
+        """Returns integer budgets (n,)."""
+        if self.offline is not None:
+            pred = self.predict(hidden)
+            stat = pred if pred.ndim == 1 else pred[:, 0]
+            return np.minimum(self.offline(stat), self.b_max).astype(np.int64)
+        delta = self.marginals(hidden)
+        total = int(round(avg_budget * len(delta)))
+        return alloc.greedy_allocate(delta, total, b_min=self.b_min)

@@ -1,0 +1,8 @@
+from repro.data.pipeline import LMDataPipeline, PipelineConfig  # noqa: F401
+from repro.data.tasks import (  # noqa: F401
+    ArithProblem,
+    ArithTaskGen,
+    ChatQuery,
+    ChatTaskGen,
+    VOCAB,
+)

@@ -1,0 +1,160 @@
+"""Difficulty-graded synthetic task suite (the paper-repro workload).
+
+The paper's Math/Code/Chat datasets can't be shipped offline, so the
+reproduction uses a *controlled* task family where ground-truth difficulty
+exists but is hidden from the model: multi-digit modular arithmetic.
+
+    query  : "a+b=" / "a*b="  (digit tokens), a,b with d digits
+    answer : the result mod 10^d, as digit tokens
+    reward : exact-match (binary) — the "unit test" / oracle verifier
+
+Difficulty rises sharply with digit count; a small LM trained for a few
+hundred steps solves 1-2 digit problems reliably, is stochastic at 3-4, and
+fails at >=6 — giving the full λ spectrum the paper's Fig. 3 needs
+(including a zero-success mass like TACO's 50%).
+
+Everything is tokenized with a fixed 64-symbol vocabulary (digits,
+operators, BOS/EOS/SEP/PAD + filler letters for chat-like tasks).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+DIGIT0 = 4                   # tokens 4..13 are digits 0..9
+PLUS, TIMES, EQ = 14, 15, 16
+LETTER0 = 20                 # letters for chat-like filler
+VOCAB = 64
+
+
+def encode_digits(n: int, width: int) -> List[int]:
+    s = str(n).zfill(width)
+    return [DIGIT0 + int(c) for c in s]
+
+
+def decode_digits(toks: Sequence[int]) -> Optional[int]:
+    ds = []
+    for t in toks:
+        if DIGIT0 <= t < DIGIT0 + 10:
+            ds.append(str(t - DIGIT0))
+        elif t == EOS:
+            break
+        else:
+            return None
+    if not ds:
+        return None
+    return int("".join(ds))
+
+
+@dataclass(frozen=True)
+class ArithProblem:
+    a: int
+    b: int
+    op: str                  # '+' or '*'
+    digits: int
+
+    @property
+    def answer(self) -> int:
+        mod = 10 ** self.digits
+        return (self.a + self.b) % mod if self.op == "+" else \
+            (self.a * self.b) % mod
+
+    def prompt_tokens(self) -> List[int]:
+        op_tok = PLUS if self.op == "+" else TIMES
+        return ([BOS] + encode_digits(self.a, self.digits) + [op_tok]
+                + encode_digits(self.b, self.digits) + [EQ])
+
+    def answer_tokens(self) -> List[int]:
+        return encode_digits(self.answer, self.digits) + [EOS]
+
+    def check(self, generated: Sequence[int]) -> bool:
+        """Binary reward: exact-match verifier (the 'unit test')."""
+        return decode_digits(generated) == self.answer
+
+
+class ArithTaskGen:
+    """Samples problems with difficulty mixture over digit counts."""
+
+    def __init__(self, *, max_digits: int = 6, ops=("+",), seed: int = 0,
+                 digit_weights: Optional[Sequence[float]] = None):
+        self.max_digits = max_digits
+        self.ops = ops
+        self.rng = np.random.default_rng(seed)
+        w = np.asarray(digit_weights if digit_weights is not None
+                       else np.ones(max_digits), np.float64)
+        self.w = w / w.sum()
+
+    def sample(self, n: int) -> List[ArithProblem]:
+        out = []
+        for _ in range(n):
+            d = int(self.rng.choice(self.max_digits, p=self.w)) + 1
+            lo, hi = 0, 10 ** d
+            a = int(self.rng.integers(lo, hi))
+            b = int(self.rng.integers(lo, hi))
+            op = str(self.rng.choice(self.ops))
+            out.append(ArithProblem(a=a, b=b, op=op, digits=d))
+        return out
+
+    def training_sequences(self, n: int, seq_len: int) -> np.ndarray:
+        """Packed LM training batches: BOS a op b = answer EOS ..."""
+        toks = []
+        while sum(len(t) for t in toks) < n * seq_len:
+            p = self.sample(1)[0]
+            toks.append(p.prompt_tokens() + p.answer_tokens())
+        flat = [t for seq in toks for t in seq]
+        flat = flat[: n * seq_len]
+        return np.asarray(flat, np.int32).reshape(n, seq_len)
+
+
+# ---------------------------------------------------------------------------
+# Chat-like continuous-reward task (for the Chat/Fig.4 reproduction)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ChatQuery:
+    """A query with latent 'reward landscape' parameters.
+
+    mu: the mean reward the base LM achieves; sigma: per-sample reward
+    spread (the variance tranches of Fig. 4 select extremes of sigma).
+    """
+    tokens: Tuple[int, ...]
+    mu: float
+    sigma: float
+
+
+class ChatTaskGen:
+    """Queries whose token content ENCODES the latent (mu, sigma) through a
+    noisy linear map — so difficulty is predictable from the tokens (by a
+    probe), but not trivially."""
+
+    def __init__(self, *, seq_len: int = 24, seed: int = 0):
+        self.seq_len = seq_len
+        self.rng = np.random.default_rng(seed)
+        # random projection from token histogram -> (mu, sigma)
+        self.proj = self.rng.normal(size=(VOCAB, 2)) / np.sqrt(VOCAB)
+
+    def sample(self, n: int) -> List[ChatQuery]:
+        out = []
+        # token histograms over seq_len~24 have std ~0.03 per entry, so the
+        # projection is rescaled to spread (mu, sigma) over their full
+        # ranges — otherwise every query lands at sigma~0.35 and there is
+        # no difficulty signal to allocate against (measured; see
+        # bench_chat docstring)
+        for _ in range(n):
+            toks = self.rng.integers(LETTER0, VOCAB,
+                                     size=self.seq_len).astype(np.int32)
+            hist = np.bincount(toks, minlength=VOCAB) / self.seq_len
+            z = hist @ self.proj
+            mu = float(np.tanh(25.0 * z[0]))                # in (-1, 1)
+            sigma = float(0.05 + 0.6 * (1 / (1 + np.exp(-50 * z[1]))))
+            out.append(ChatQuery(tokens=tuple(int(t) for t in toks),
+                                 mu=mu, sigma=sigma))
+        return out
+
+    def sample_rewards(self, qs: Sequence[ChatQuery], m: int,
+                       seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        return np.stack([rng.normal(q.mu, q.sigma, size=m) for q in qs])

@@ -1,0 +1,80 @@
+"""Fused streaming cross-entropy (TPU Pallas target).
+
+For 256k-vocab models the (batch*seq, V) logits tensor dominates HBM during
+training; this kernel streams (row_block x vocab_block) tiles, maintaining
+running (m, l, gold) per row in VMEM scratch — the logsumexp analogue of
+flash attention. The model's hidden @ W_vocab tiles can be fused upstream by
+XLA; the kernel removes the fp32 logits materialization + second pass.
+
+Grid (n_row_blocks, n_vocab_blocks), vocab innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ce_kernel(logits_ref, labels_ref, loss_ref, m_scr, l_scr, gold_scr, *,
+               block_v: int, vocab: int):
+    vi = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        gold_scr[...] = jnp.zeros_like(gold_scr)
+
+    x = logits_ref[...].astype(jnp.float32)                   # (br, bv)
+    v_start = vi * block_v
+    col = v_start + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    x = jnp.where(col < vocab, x, NEG_INF)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(x, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(jnp.exp(x - m_new[:, None]),
+                                              axis=1)
+    m_scr[...] = m_new
+    labels = labels_ref[...]                                  # (br,)
+    hit = col == labels[:, None]
+    gold_scr[...] = gold_scr[...] + jnp.sum(jnp.where(hit, x, 0.0), axis=1)
+
+    @pl.when(vi == nv - 1)
+    def _finish():
+        loss_ref[...] = (m_scr[...] + jnp.log(jnp.maximum(l_scr[...], 1e-30))
+                         - gold_scr[...]).astype(loss_ref.dtype)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, *,
+                  block_rows: int = 128, block_v: int = 2048,
+                  interpret: bool = True) -> jnp.ndarray:
+    """logits (n, V); labels (n,) int32 -> per-row loss (n,) fp32."""
+    n, V = logits.shape
+    block_rows = min(block_rows, n)
+    block_v = min(block_v, V)
+    nr = pl.cdiv(n, block_rows)
+    nv = pl.cdiv(V, block_v)
+    assert n % block_rows == 0, "pad rows upstream"
+    kernel = functools.partial(_ce_kernel, block_v=block_v, vocab=V)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=(nr, nv),
+        in_specs=[
+            pl.BlockSpec((block_rows, block_v), lambda ri, vi: (ri, vi)),
+            pl.BlockSpec((block_rows,), lambda ri, vi: (ri,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda ri, vi: (ri,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_rows,), jnp.float32),
+            pltpu.VMEM((block_rows,), jnp.float32),
+            pltpu.VMEM((block_rows,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits, labels.astype(jnp.int32))

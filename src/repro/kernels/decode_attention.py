@@ -1,0 +1,107 @@
+"""Flash-decoding attention (TPU Pallas target).
+
+One new token's q (b, H, hd) attends to a long KV cache (b, S, KV, hd).
+Grid (batch, n_kv_blocks) with the kv axis sequential; the (m, l, acc)
+online-softmax state persists in VMEM scratch, so arbitrarily long caches
+stream through (block_k x KV x hd) VMEM tiles with one final normalization.
+This is the single-chip analogue of the framework's cross-chip
+sequence-sharded decode (DESIGN.md): split-S within a chip here, split-S
+over the `model` mesh axis there.
+
+Validity masking uses the per-batch `pos` scalar (slots <= pos are live),
+matching the serving engine's cache semantics.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                *, block_k: int, groups: int, sm_scale: float, seq_k: int):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[0]
+    k_start = ki * block_k
+
+    @pl.when(k_start <= pos)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                      # (H, hd)
+        k = k_ref[0].astype(jnp.float32)                      # (bk, KV, hd)
+        v = v_ref[0].astype(jnp.float32)
+        krow = k_start + jax.lax.broadcasted_iota(jnp.int32, k.shape, 0)
+        k = jnp.where(krow < seq_k, k, 0.0)
+        v = jnp.where(krow < seq_k, v, 0.0)
+        H, hd = q.shape
+        KV = k.shape[1]
+        qg = q.reshape(KV, groups, hd)
+        # scores (KV, g, bk)
+        s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        ok = (kpos <= pos) & (kpos < seq_k)
+        s = jnp.where(ok, s, NEG_INF)
+        sf = s.reshape(H, -1)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sf, axis=1))
+        p = jnp.exp(sf - m_new[:, None]).reshape(KV, groups, -1)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = (l_scr[...] * alpha
+                      + jnp.sum(p.reshape(H, -1), axis=1))
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((0,), (1,))),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv.reshape(H, -1)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     pos: jnp.ndarray, *, block_k: int = 256,
+                     interpret: bool = True) -> jnp.ndarray:
+    """q (b,H,hd); k,v (b,S,KV,hd); pos (b,) int32. Returns (b,H,hd)."""
+    b, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    block_k = min(block_k, S)
+    nk = pl.cdiv(S, block_k)
+    kernel = functools.partial(_dec_kernel, block_k=block_k, groups=g,
+                               sm_scale=1.0 / math.sqrt(hd), seq_k=S)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, ki: (bi,)),             # pos
+            pl.BlockSpec((1, H, hd), lambda bi, ki: (bi, 0, 0)),  # q
+            pl.BlockSpec((1, block_k, KV, hd),
+                         lambda bi, ki: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, block_k, KV, hd),
+                         lambda bi, ki: (bi, ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda bi, ki: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos.astype(jnp.int32), q, k, v)

@@ -1,0 +1,135 @@
+"""Flash attention forward (TPU Pallas target).
+
+Tiling: grid (batch, q_heads, n_q_blocks, n_k_blocks) with the k axis
+innermost/sequential; (block_q x head_dim) q tiles and (block_k x head_dim)
+k/v tiles live in VMEM, the (block_q x block_k) score tile feeds the MXU,
+and the online-softmax running stats (m, l, acc) persist in VMEM scratch
+across the k loop. Causal / sliding-window blocks that are fully masked are
+skipped with @pl.when (no MXU work issued). GQA is handled in the k/v
+BlockSpec index maps (head h reads kv head h // group) — no repeated KV in
+HBM.
+
+Block sizes default to 128x128: MXU-aligned (128 lanes) and small enough
+that q,k,v,acc tiles (4 x 128 x head_dim x 4B) stay well under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               block_q: int, block_k: int, sm_scale: float, causal: bool,
+               window: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # static-shape block skip decisions must be dynamic on grid ids:
+    run = jnp.bool_(True)
+    if causal:
+        run &= k_start <= q_start + block_q - 1
+    if window > 0:
+        run &= (k_start + block_k - 1) >= q_start - window + 1
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                   # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                   # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        # zero the ragged tail (OOB block rows may hold garbage: 0 * NaN)
+        krow = k_start + jax.lax.broadcasted_iota(jnp.int32, k.shape, 0)
+        k = jnp.where(krow < seq_k, k, 0.0)
+        v = jnp.where(krow < seq_k, v, 0.0)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                      # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = kpos < seq_k
+        if causal:
+            ok &= qpos >= kpos
+        if window > 0:
+            ok &= (qpos - kpos) < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q (b,sq,H,hd); k,v (b,sk,KV,hd), H % KV == 0. Returns (b,sq,H,hd).
+
+    Assumes sq == sk (self-attention; right-aligned positions otherwise are
+    handled by the decode kernel).
+    """
+    b, sq, H, hd = q.shape
+    sk, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    sm_scale = 1.0 / math.sqrt(hd)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(sk, block_k)
+    # layout: (b, heads, seq, hd)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    kernel = functools.partial(
+        _fa_kernel, block_q=block_q, block_k=block_k, sm_scale=sm_scale,
+        causal=causal, window=window, seq_k=sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bi, hi, qi, ki, g=g: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bi, hi, qi, ki, g=g: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, H, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu_vmem((block_q,), jnp.float32),
+            pltpu_vmem((block_q,), jnp.float32),
+            pltpu_vmem((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)
+
+
+def pltpu_vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

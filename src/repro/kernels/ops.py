@@ -1,0 +1,63 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute with interpret=True (correctness
+mode); on TPU set REPRO_PALLAS_COMPILE=1 (or pass interpret=False) to lower
+them for real. The model code selects kernel vs XLA-reference paths via
+`use_pallas` flags; the dry-run always uses the XLA path (Pallas-TPU does
+not lower on the CPU backend).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cross_entropy import cross_entropy as _ce
+from repro.kernels.decode_attention import decode_attention as _dec
+from repro.kernels.flash_attention import flash_attention as _fa
+from repro.kernels.ssm_scan import ssm_scan as _ssm
+
+
+def _interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _fa(q, k, v, causal=causal, window=window, block_q=block_q,
+               block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k, v, pos, *, block_k=256, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _dec(q, k, v, pos, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "d_block", "interpret"))
+def ssm_scan(dt, A, B, C, x, *, chunk=64, d_block=128, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _ssm(dt, A, B, C, x, chunk=chunk, d_block=d_block,
+                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_v",
+                                             "interpret"))
+def cross_entropy(logits, labels, *, block_rows=128, block_v=2048,
+                  interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _ce(logits, labels, block_rows=block_rows, block_v=block_v,
+               interpret=interpret)
+
+
+# re-export oracles for tests/benchmarks
+flash_attention_ref = ref.flash_attention_ref
+decode_attention_ref = ref.decode_attention_ref
+ssm_scan_ref = ref.ssm_scan_ref
+cross_entropy_ref = ref.cross_entropy_ref

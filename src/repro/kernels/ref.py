@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q (b,sq,H,hd); k,v (b,sk,KV,hd) with H % KV == 0. fp32 softmax."""
+    b, sq, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    sk = k.shape[1]
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)   # right-aligned positions
+    kpos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= qpos >= kpos
+    if window > 0:
+        ok &= (qpos - kpos) < window
+    scores = jnp.where(ok[None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         pos: jnp.ndarray) -> jnp.ndarray:
+    """q (b,H,hd); k,v (b,S,KV,hd); pos (b,) — attends slots <= pos."""
+    b, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    kk = jnp.repeat(k, g, axis=2) if g > 1 else k
+    vv = jnp.repeat(v, g, axis=2) if g > 1 else v
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / math.sqrt(hd)
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", w,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan_ref(dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+                 C: jnp.ndarray, x: jnp.ndarray,
+                 h0: Optional[jnp.ndarray] = None):
+    """Sequential selective scan (fp64-free oracle, fp32 math).
+
+    dt,x (b,s,d); A (d,n); B,C (b,s,n); h0 (b,d,n).
+    Returns (y (b,s,d), hT (b,d,n)).
+    """
+    bsz, s, d = x.shape
+    n = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, d, n), jnp.float32)
+
+    def step(h, args):
+        dt_t, B_t, C_t, x_t = args
+        dA = jnp.exp(dt_t[..., None] * A[None])              # (b,d,n)
+        h = h * dA + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    args = (dt.swapaxes(0, 1).astype(jnp.float32),
+            B.swapaxes(0, 1).astype(jnp.float32),
+            C.swapaxes(0, 1).astype(jnp.float32),
+            x.swapaxes(0, 1).astype(jnp.float32))
+    hT, ys = jax.lax.scan(step, h0, args)
+    return ys.swapaxes(0, 1), hT
+
+
+def cross_entropy_ref(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-row CE loss. logits (n,V); labels (n,) -> (n,) fp32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[:, None], axis=1)[:, 0]
+    return lse - gold

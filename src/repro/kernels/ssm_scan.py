@@ -1,0 +1,86 @@
+"""Chunked selective scan (Mamba) — TPU Pallas target.
+
+Grid (batch, n_d_blocks, n_chunks) with chunks innermost/sequential. Each
+step loads a (chunk_len x d_block) tile of dt/x and (chunk_len x d_state)
+B/C into VMEM, runs the recurrence time-step-by-time-step on the VPU
+(elementwise (d_block x d_state) updates — the TPU-idiomatic port of
+Mamba's CUDA parallel scan: parallel over channels, sequential in time,
+chunked so the carried state (d_block x d_state) lives in VMEM scratch),
+and writes the (chunk_len x d_block) outputs.
+
+The wrapper also returns the final state (needed for prefill -> decode
+handoff), read back from the scratch on the last chunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssm_kernel(dt_ref, a_ref, b_ref, c_ref, x_ref, y_ref, hT_ref, h_scr, *,
+                chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    A = a_ref[...].astype(jnp.float32)                        # (dblk, n)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t].astype(jnp.float32)               # (dblk,)
+        B_t = b_ref[0, t].astype(jnp.float32)                 # (n,)
+        C_t = c_ref[0, t].astype(jnp.float32)                 # (n,)
+        x_t = x_ref[0, t].astype(jnp.float32)                 # (dblk,)
+        dA = jnp.exp(dt_t[:, None] * A)                       # (dblk,n)
+        h = h * dA + (dt_t * x_t)[:, None] * B_t[None, :]
+        y_ref[0, t] = (h @ C_t).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        hT_ref[0] = h_scr[...].astype(hT_ref.dtype)
+
+
+def ssm_scan(dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
+             x: jnp.ndarray, *, chunk: int = 64, d_block: int = 128,
+             interpret: bool = True):
+    """dt,x (b,s,d); A (d,n); B,C (b,s,n). Returns (y (b,s,d), hT (b,d,n))."""
+    bsz, s, d = x.shape
+    n = A.shape[1]
+    chunk = min(chunk, s)
+    d_block = min(d_block, d)
+    assert s % chunk == 0 and d % d_block == 0
+    nc = s // chunk
+    nd = d // d_block
+    kernel = functools.partial(_ssm_kernel, chunk=chunk)
+    from jax.experimental.pallas import tpu as pltpu
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(bsz, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_block), lambda bi, di, ci: (bi, ci, di)),
+            pl.BlockSpec((d_block, n), lambda bi, di, ci: (di, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, di, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, di, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, d_block), lambda bi, di, ci: (bi, ci, di)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d_block), lambda bi, di, ci: (bi, ci, di)),
+            pl.BlockSpec((1, d_block, n), lambda bi, di, ci: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, d), x.dtype),
+            jax.ShapeDtypeStruct((bsz, d, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d_block, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, A, B, C, x)
+    return y, hT

@@ -1,0 +1,112 @@
+"""Per-op attribution of collective/memory bytes from a stored .hlo.gz —
+the 'profiler' of the dry-run perf loop.
+
+    PYTHONPATH=src python -m repro.launch.attribute <artifact-stem> [--mem]
+"""
+from __future__ import annotations
+
+import gzip
+import re
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+from repro.launch.hlo_analysis import (COLLECTIVES, Computation, Op,
+                                       _FUSIBLE_OPS, _SKIP_BYTES_OPS,
+                                       _UPDATE_OPS, _WINDOW_OPS,
+                                       _fusion_bytes, _parse_trip_count,
+                                       parse_hlo, shape_info)
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "experiments" / "artifacts"
+
+
+def multipliers(comps):
+    entry = next(c for c in comps.values() if c.is_entry)
+    mult = defaultdict(float)
+    fus = defaultdict(bool)
+    mult[entry.name] = 1.0
+    order, seen, i = [entry.name], {entry.name}, 0
+    while i < len(order):
+        cn = order[i]
+        i += 1
+        comp = comps.get(cn)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            callees = []
+            if op.opcode == "while":
+                t = _parse_trip_count(op.attrs)
+                for kw in ("body", "condition"):
+                    m = re.search(kw + r"=%?([\w\.\-]+)", op.attrs)
+                    if m:
+                        callees.append((m.group(1), float(t), False))
+            elif op.opcode == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", op.attrs)
+                if m:
+                    callees.append((m.group(1), 1.0, True))
+            else:
+                for kw in ("calls", "to_apply", "body", "condition"):
+                    m = re.search(kw + r"=%?([\w\.\-]+)", op.attrs)
+                    if m:
+                        callees.append((m.group(1), 1.0, fus[cn]))
+            for c, k, f in callees:
+                mult[c] += mult[cn] * k
+                fus[c] = fus[c] or f or (op.opcode == "fusion")
+                if c not in seen:
+                    seen.add(c)
+                    order.append(c)
+    return mult, fus, order
+
+
+def attribute(stem: str, top: int = 15, mem: bool = False):
+    hlo = gzip.open(ARTIFACTS / f"{stem}.hlo.gz", "rt").read()
+    comps = parse_hlo(hlo)
+    mult, fus, order = multipliers(comps)
+    rows = []
+    for cn in order:
+        comp = comps.get(cn)
+        if comp is None:
+            continue
+        k = mult[cn]
+        for op in comp.ops:
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if not mem:
+                if base in COLLECTIVES and not op.opcode.endswith("-done"):
+                    opb = sum(shape_info(comp.shapes.get(o, ""))[0]
+                              for o in op.operands)
+                    size = max(opb, op.result_bytes)
+                    if base == "all-reduce":
+                        size *= 2
+                    meta = re.search(r'op_name="([^"]*)"', op.attrs)
+                    rows.append((k * size, k, base, op.result_shape[:48],
+                                 (meta.group(1) if meta else "")[:90]))
+            else:
+                if fus[cn] or op.opcode in _SKIP_BYTES_OPS:
+                    continue
+                rb = op.result_bytes
+                if op.opcode in _WINDOW_OPS:
+                    b = 2 * rb
+                elif op.opcode in _UPDATE_OPS:
+                    upd = (shape_info(comp.shapes.get(op.operands[1], ""))[0]
+                           if len(op.operands) > 1 else rb)
+                    b = 2 * upd
+                elif op.opcode == "fusion":
+                    b = _fusion_bytes(op, comp, comps)
+                else:
+                    b = rb + sum(shape_info(comp.shapes.get(o, ""))[0]
+                                 for o in op.operands)
+                if op.opcode in _FUSIBLE_OPS:
+                    continue
+                meta = re.search(r'op_name="([^"]*)"', op.attrs)
+                rows.append((k * b, k, op.opcode, op.result_shape[:48],
+                             (meta.group(1) if meta else "")[:90]))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total {'mem' if mem else 'collective'} bytes: {total:.3e}")
+    for r in rows[:top]:
+        print(f"{r[0]:10.3e}  x{r[1]:<4.0f} {r[2]:<18s} {r[3]:<48s} {r[4]}")
+
+
+if __name__ == "__main__":
+    stem = sys.argv[1]
+    attribute(stem, mem="--mem" in sys.argv)

@@ -1,0 +1,368 @@
+"""Static analysis of optimized HLO for the roofline deliverable.
+
+XLA's `compiled.cost_analysis()` counts while-loop bodies ONCE, which makes
+scan-over-layers models look 24-72x cheaper than they are. This module
+re-derives per-device cost from the HLO text with proper loop accounting:
+
+  * parses every computation + a per-computation symbol table (op -> shape)
+  * builds the call graph (calls= / to_apply= / body= / condition=) and
+    propagates multipliers from `backend_config known_trip_count`
+  * FLOPs: 2 * prod(result) * prod(contracting dims) per `dot`
+    (+ convolutions if any), summed over reachable computations x multiplier
+  * bytes: per-op (operands + result), counted at fusion boundaries only
+    (fusion internals are register/VMEM traffic, not HBM)
+  * collective bytes per kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), loop-aware; all-reduce counted 2x
+    (reduce-scatter + all-gather phases on a ring)
+
+These are per-PARTITION numbers (the module is already SPMD-partitioned).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+               "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+               "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+               "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_info(s: str) -> Tuple[int, List[int]]:
+    """'bf16[2,3]{1,0}' -> (bytes, dims). Tuples: sum of element bytes."""
+    if s.startswith("("):
+        total = 0
+        for m in _SHAPE_RE.finditer(s):
+            total += _one_shape_bytes(m.group(1), m.group(2))
+        return total, []
+    m = _SHAPE_RE.match(s)
+    if not m:
+        return 0, []
+    dt, dims_s = m.groups()
+    dims = [int(d) for d in dims_s.split(",") if d]
+    return _one_shape_bytes(dt, dims_s), dims
+
+
+def _one_shape_bytes(dt: str, dims_s) -> int:
+    if isinstance(dims_s, str):
+        dims = [int(d) for d in dims_s.split(",") if d]
+    else:
+        dims = dims_s
+    n = 1
+    for d in dims:
+        n *= d
+    return n * DTYPE_BYTES.get(dt, 0)
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result_shape: str
+    operands: List[str]
+    attrs: str
+    is_root: bool = False
+
+    @property
+    def result_bytes(self) -> int:
+        return shape_info(self.result_shape)[0]
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    params: Dict[str, str] = field(default_factory=dict)   # name -> shape
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)   # symbol table
+
+
+_HEADER_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*{\s*$")
+_OP_RE = re.compile(
+    r"^\s+(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"([\w\-]+)\((.*)$")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m:
+                is_entry, name, params, _ = m.groups()
+                cur = Computation(name=name, is_entry=bool(is_entry))
+                for pm in _PARAM_RE.finditer(params):
+                    cur.params[pm.group(1)] = pm.group(2)
+                    cur.shapes[pm.group(1)] = pm.group(2)
+                comps[name] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        root_kw, name, shape, opcode, rest = m.groups()
+        # operands: %names before attrs; attrs after final ')'
+        depth, i = 1, 0
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        arg_str, attrs = rest[: i - 1], rest[i:]
+        operands = re.findall(r"%([\w\.\-]+)", arg_str)
+        op = Op(name=name, opcode=opcode, result_shape=shape,
+                operands=operands, attrs=attrs, is_root=bool(root_kw))
+        cur.ops.append(op)
+        cur.shapes[name] = shape
+    return comps
+
+
+def _parse_trip_count(attrs: str) -> int:
+    m = re.search(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)', attrs)
+    return int(m.group(1)) if m else 1
+
+
+def _dot_flops(op: Op, comp: Computation) -> int:
+    rbytes, rdims = shape_info(op.result_shape)
+    n_out = 1
+    for d in rdims:
+        n_out *= d
+    lhs = comp.shapes.get(op.operands[0], "") if op.operands else ""
+    _, ldims = shape_info(lhs)
+    m = re.search(r"lhs_contracting_dims={([0-9,]*)}", op.attrs)
+    contract = 1
+    if m and ldims:
+        for idx in m.group(1).split(","):
+            if idx:
+                i = int(idx)
+                if i < len(ldims):
+                    contract *= ldims[i]
+    return 2 * n_out * contract
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "while", "conditional", "call", "custom-call",
+                   "after-all", "partition-id", "replica-id"}
+
+
+_LAYOUT_OPS = {"parameter", "constant", "convert", "bitcast", "copy",
+               "transpose", "reshape", "broadcast"}
+def _is_passthrough(callee: "Computation") -> bool:
+    """Layout/slice/dequant-only fusion: its output is a re-coded view of
+    its params (a TPU compiler folds it into the consumer's read)."""
+    return all(o.opcode in _LAYOUT_OPS or o.opcode in _WINDOW_OPS
+               or o.opcode == "multiply" for o in callee.ops)
+
+
+def _passthrough_bytes(callee: "Computation") -> int:
+    """True HBM bytes behind a passthrough fusion: its params at their
+    stored dtype/window."""
+    total = 0
+    for pname, pshape in callee.params.items():
+        psize = shape_info(pshape)[0]
+        consumers = [o for o in callee.ops if pname in o.operands]
+        if consumers and all(o.opcode in _WINDOW_OPS for o in consumers):
+            psize = max(o.result_bytes for o in consumers)
+        total += psize
+    return total
+
+
+def _fusion_bytes(op: "Op", comp: "Computation", comps) -> int:
+    """HBM traffic of a fusion: operands + result, with in-place
+    dynamic-update-slice roots charged at UPDATE-window size (XLA aliases
+    the big buffer; without this, a scanned cache update is billed the
+    whole multi-GB cache every iteration)."""
+    m = re.search(r"calls=%?([\w\.\-]+)", op.attrs)
+    callee = comps.get(m.group(1)) if m else None
+    rb = op.result_bytes
+    if callee is None or not callee.ops:
+        opb = sum(shape_info(comp.shapes.get(o, ""))[0] for o in op.operands)
+        return opb + rb
+    # Pure dtype/layout/slice/dequant fusions are CPU-backend artifacts (no
+    # native bf16/int8 matmul on CPU => f32 weight copies): the consumer op
+    # charges the SOURCE bytes (see _passthrough_bytes) — charge zero here.
+    if _is_passthrough(callee):
+        return 0
+    root = next((o for o in callee.ops if o.is_root), callee.ops[-1])
+    # follow convert/bitcast/copy chains: a DUS wrapped in dtype converts is
+    # still an in-place window update on TPU
+    by_name = {o.name: o for o in callee.ops}
+    hops = 0
+    while (root.opcode in ("convert", "bitcast", "copy") and root.operands
+           and root.operands[0] in by_name and hops < 8):
+        root = by_name[root.operands[0]]
+        hops += 1
+    if root.opcode in _UPDATE_OPS:
+        upd = (shape_info(callee.shapes.get(root.operands[1], ""))[0]
+               if len(root.operands) > 1 else 0)
+        # 2x window + any small non-aliased operands
+        small = sum(shape_info(comp.shapes.get(o, ""))[0]
+                    for o in op.operands
+                    if shape_info(comp.shapes.get(o, ""))[0] != rb)
+        return 2 * upd + min(small, rb)
+    # general fusion: charge each callee parameter at its consumed window
+    # (a param only read through dynamic-slice/gather costs the window, not
+    # the whole stacked-layers buffer), plus the result write.
+    total = rb
+    pnames = list(callee.params)
+    for idx, pname in enumerate(pnames):
+        psize = shape_info(callee.params[pname])[0]
+        consumers = [o for o in callee.ops if pname in o.operands]
+        if consumers and all(o.opcode in _WINDOW_OPS for o in consumers):
+            psize = max(o.result_bytes for o in consumers)
+        total += psize
+    return total
+
+
+# ops that touch only their RESULT-sized window of the operand (counting the
+# full operand would charge a scan body for the whole stacked-layer tensor
+# on every iteration)
+_WINDOW_OPS = {"dynamic-slice", "slice", "gather"}
+# in-place update ops: traffic ~ 2x the update slice, not the full buffer
+_UPDATE_OPS = {"dynamic-update-slice", "scatter", "select-and-scatter"}
+
+# elementwise/layout ops that a TPU compiler fuses into neighbours; counted
+# in bytes_upper but excluded from the fusion-adjusted bytes estimate
+_FUSIBLE_OPS = {"add", "subtract", "multiply", "divide", "maximum",
+                "minimum", "exponential", "tanh", "negate", "abs", "power",
+                "rsqrt", "sqrt", "log", "logistic", "compare", "select",
+                "and", "or", "not", "convert", "broadcast", "iota",
+                "reshape", "transpose", "reverse", "clamp", "sign",
+                "floor", "ceil", "round-nearest-even", "pad",
+                "exponential-minus-one", "log-plus-one", "remainder",
+                "shift-right-logical", "shift-left", "xor", "map",
+                "reduce-precision", "is-finite", "atan2", "cosine", "sine",
+                "tan", "erf", "real", "imag", "stochastic-convert",
+                "bitcast-convert", "copy", "concatenate"}
+
+
+def analyze(text: str) -> Dict:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {"flops": 0, "bytes": 0, "collectives": {}}
+
+    # accumulate multipliers by BFS over the call graph
+    mult: Dict[str, float] = defaultdict(float)
+    fusion_ctx: Dict[str, bool] = defaultdict(bool)   # inside a fusion body?
+    mult[entry.name] = 1.0
+    order = [entry.name]
+    seen = {entry.name}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            callees: List[Tuple[str, float, bool]] = []
+            if op.opcode == "while":
+                trip = _parse_trip_count(op.attrs)
+                for kw in ("body", "condition"):
+                    m = re.search(kw + r"=%?([\w\.\-]+)", op.attrs)
+                    if m:
+                        callees.append((m.group(1), float(trip), False))
+            elif op.opcode == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", op.attrs)
+                if m:
+                    callees.append((m.group(1), 1.0, True))
+            else:
+                for kw in ("calls", "to_apply", "body", "condition",
+                           "true_computation", "false_computation"):
+                    m = re.search(kw + r"=%?([\w\.\-]+)", op.attrs)
+                    if m:
+                        callees.append((m.group(1), 1.0,
+                                        fusion_ctx[cname]))
+            for callee, k, fus in callees:
+                mult[callee] += mult[cname] * k
+                fusion_ctx[callee] = fusion_ctx[callee] or fus or \
+                    (op.opcode == "fusion")
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    flops = 0.0
+    transcend = 0.0
+    bytes_upper = 0.0       # every non-fused op: operands + result
+    bytes_major = 0.0       # fusion-adjusted: TPU-fusible elementwise skipped
+    coll = {c: 0.0 for c in COLLECTIVES}
+    coll_counts = {c: 0 for c in COLLECTIVES}
+    for cname in order:
+        comp = comps.get(cname)
+        if comp is None or mult[cname] == 0:
+            continue
+        k = mult[cname]
+        in_fusion = fusion_ctx[cname]
+        # passthrough-fusion source sizes (dequant/layout/slice views):
+        # consumers charge these instead of the materialized f32 copies
+        passthrough: Dict[str, int] = {}
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", op.attrs)
+                callee = comps.get(m.group(1)) if m else None
+                if callee is not None and callee.ops and \
+                        _is_passthrough(callee):
+                    passthrough[op.name] = _passthrough_bytes(callee)
+
+        def operand_bytes(o: str) -> int:
+            if o in passthrough:
+                return passthrough[o]
+            return shape_info(comp.shapes.get(o, ""))[0]
+
+        for op in comp.ops:
+            if op.opcode == "dot":
+                flops += k * _dot_flops(op, comp)
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES and not op.opcode.endswith("-done"):
+                opb = sum(shape_info(comp.shapes.get(o, ""))[0]
+                          for o in op.operands)
+                rb = op.result_bytes
+                size = max(opb, rb)
+                if base == "all-reduce":
+                    size *= 2          # ring RS + AG phases
+                coll[base] += k * size
+                coll_counts[base] += 1
+            if not in_fusion and op.opcode not in _SKIP_BYTES_OPS:
+                rb = op.result_bytes
+                if op.opcode in _WINDOW_OPS:
+                    b = 2 * rb                       # read window + write
+                elif op.opcode in _UPDATE_OPS:
+                    # update operand (second arg) read + written window
+                    upd = (shape_info(comp.shapes.get(op.operands[1], ""))[0]
+                           if len(op.operands) > 1 else rb)
+                    b = 2 * upd
+                elif op.opcode == "fusion":
+                    b = _fusion_bytes(op, comp, comps)
+                else:
+                    opb = sum(operand_bytes(o) for o in op.operands)
+                    b = opb + rb
+                bytes_upper += k * b
+                if op.opcode not in _FUSIBLE_OPS:
+                    bytes_major += k * b
+            if op.opcode in ("exponential", "tanh", "log", "rsqrt", "power",
+                             "logistic") and not in_fusion:
+                transcend += k * max(op.result_bytes // 4, 0)
+    return {
+        "flops": flops,
+        "bytes": bytes_major,
+        "bytes_upper": bytes_upper,
+        "transcendentals": transcend,
+        "collectives": coll,
+        "collective_counts": coll_counts,
+        "collective_bytes_total": sum(coll.values()),
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,44 @@
+"""Re-run hlo_analysis over stored .hlo.gz artifacts (no recompilation).
+
+Lets the analyzer evolve during the perf loop without paying compile time:
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+from __future__ import annotations
+
+import gzip
+import json
+from pathlib import Path
+
+from repro.launch.hlo_analysis import analyze
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "experiments" / "artifacts"
+
+
+def main():
+    n = 0
+    for jf in sorted(ARTIFACTS.glob("*.json")):
+        hf = jf.with_suffix("").with_suffix("")  # strip .json
+        hf = jf.parent / (jf.stem + ".hlo.gz")
+        if not hf.exists():
+            continue
+        rec = json.loads(jf.read_text())
+        if not rec.get("ok"):
+            continue
+        with gzip.open(hf, "rt") as f:
+            hlo = f.read()
+        ana = analyze(hlo)
+        rec["hlo_analysis"] = {
+            "flops": ana["flops"],
+            "bytes": ana["bytes"],
+            "bytes_upper": ana.get("bytes_upper", ana["bytes"]),
+            "collectives": ana["collectives"],
+            "collective_counts": ana["collective_counts"],
+            "collective_bytes_total": ana["collective_bytes_total"],
+        }
+        jf.write_text(json.dumps(rec, indent=1))
+        n += 1
+    print(f"reanalyzed {n} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Step functions lowered by the dry-run and launchers.
+
+train_step   — fwd + CE loss (+MoE aux) + bwd + global-norm clip + AdamW
+prefill_step — forward over the full prompt; returns last-token logits AND
+               the last-token hidden state (the difficulty probe's input —
+               this is where the paper's predictor taps the serving path
+               for free)
+serve_step   — ONE new token against a seq_len KV cache/state
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import Model
+from repro.optim import adamw_update, clip_by_global_norm
+from repro.sharding import lshard
+
+
+def make_train_step(model: Model, *, lr: float = 1e-4, grad_clip: float = 1.0,
+                    weight_decay: float = 0.1):
+    def train_step(params, opt_state, batch: Dict[str, Any]):
+        def loss_fn(p):
+            return model.loss_fn(p, batch)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr,
+                                         weight_decay=weight_decay)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch: Dict[str, Any]):
+        logits, hidden, _ = model.forward(
+            params, batch["tokens"], frames=batch.get("frames"),
+            patches=batch.get("patches"))
+        # last-token logits (next-token dist) + probe features
+        return {"next_logits": logits[:, -1], "probe_hidden": hidden[:, -1]}
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, token, cache, pos):
+        logits, hidden, new_cache = model.decode_step(params, token, cache,
+                                                      pos)
+        return {"next_logits": logits[:, 0], "probe_hidden": hidden[:, 0],
+                "cache": new_cache}
+
+    return serve_step

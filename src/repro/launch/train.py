@@ -1,0 +1,81 @@
+"""Training launcher.
+
+On the CPU container this trains REDUCED/tiny configs for real (the
+paper-repro path); on a TPU fleet the same entrypoint drives full configs
+over the production mesh (the dry-run proves those lower + compile).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b-reduced \
+        --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mathstral-tiny")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-digits", type=int, default=6)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint import save_checkpoint
+    from repro.configs import get_config
+    from repro.data import LMDataPipeline, PipelineConfig, VOCAB
+    from repro.models import build_model
+    from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                             linear_warmup_cosine)
+
+    cfg = get_config(args.arch)
+    if cfg.vocab_size != VOCAB:
+        cfg = dataclasses.replace(cfg, vocab_size=VOCAB)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    opt = adamw_init(params)
+    pipe = LMDataPipeline(PipelineConfig(global_batch=args.batch,
+                                         seq_len=args.seq, seed=args.seed,
+                                         max_digits=args.max_digits))
+
+    @jax.jit
+    def step_fn(params, opt, batch, lr):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt = adamw_update(params, grads, opt, lr=lr,
+                                   weight_decay=0.01)
+        return params, opt, loss, gnorm
+
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+        lr = linear_warmup_cosine(jnp.float32(step), base_lr=args.lr,
+                                  warmup_steps=args.warmup,
+                                  total_steps=args.steps)
+        params, opt, loss, gnorm = step_fn(params, opt, batch, lr)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(loss):.4f} "
+                  f"gnorm {float(gnorm):.3f} "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, {"params": params},
+                        step=args.steps, extra={"arch": args.arch})
+        print("saved", args.ckpt)
+    return params, model
+
+
+if __name__ == "__main__":
+    main()

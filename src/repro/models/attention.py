@@ -1,0 +1,446 @@
+"""Attention for all assigned families.
+
+TPU adaptation highlights (see DESIGN.md):
+
+* **Head padding for 16-way TP.** q heads are padded to `Hp`, the smallest
+  multiple of lcm(tp, n_kv) >= n_heads (GQA) or of tp (MHA, kv padded too).
+  Padded q heads read kv head 0 and their output-projection rows are zero, so
+  the function computed is exactly the unpadded model. The layout is
+  *pre-grouped*: q head p belongs to kv group p // (Hp // KVp), with real
+  heads occupying the leading slots of each group — this keeps plain
+  `jnp.repeat` GQA expansion and grouped decode einsums correct even when
+  padded.
+
+* **Blockwise (flash-structured) prefill/train attention.** q is processed in
+  static blocks unrolled at trace time; each block attends to a *statically
+  sliced* k range (causal upper bound, sliding-window lower bound), so HLO
+  FLOPs equal true causal/windowed FLOPs — no wasted upper-triangle compute,
+  and the (block_q, k_len) score tile bounds live memory. This mirrors the
+  Pallas flash kernel's tiling (kernels/flash_attention.py is the TPU target;
+  this is the XLA path used for dry-run compilation).
+
+* **Decode = sequence-sharded flash-decoding.** The KV cache shards its seq
+  dim over the `model` mesh axis ("kv_seq"); q and the output are replicated
+  within a model row and XLA inserts the tiny softmax all-reduces. This works
+  for every kv-head count (1, 2, 8, 12, ...) where head-sharding cannot.
+
+* **MLA (DeepSeek-V2)** implements both the decompressed prefill form and the
+  *absorbed* decode form against the compressed (kv_lora + rope) cache.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models import modules as nn
+from repro.sharding import lshard
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)
+
+
+@dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    heads_padded: int       # Hp
+    kv_padded: int          # KVp
+    tp: int
+
+    @property
+    def group(self) -> int:
+        return self.heads_padded // self.kv_padded
+
+    @property
+    def real_group(self) -> int:
+        return self.n_heads // self.n_kv
+
+    def real_head_mask(self) -> jnp.ndarray:
+        """(Hp,) 1.0 for real q-head slots in the pre-grouped layout."""
+        g, rg = self.group, self.real_group
+        slot = jnp.arange(self.heads_padded)
+        kv_real = (slot // g) < self.n_kv
+        return ((slot % g < rg) & kv_real).astype(jnp.float32)
+
+
+def attn_dims(cfg: ModelConfig, tp: int) -> AttnDims:
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    if H % tp == 0:
+        Hp, KVp = H, KV
+    elif H == KV:  # MHA: pad both
+        Hp = KVp = ((H + tp - 1) // tp) * tp
+    else:          # GQA: pad q heads only, keep kv-groupable
+        base = _lcm(tp, KV)
+        Hp = ((H + base - 1) // base) * base
+        KVp = KV
+    return AttnDims(H, KV, hd, Hp, KVp, tp)
+
+
+# ----------------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, tp: int, dtype):
+    d = cfg.d_model
+    dims = attn_dims(cfg, tp)
+    hd = dims.head_dim
+    ks = jax.random.split(key, 4)
+    bias = cfg.qkv_bias
+    q8 = cfg.quant_int8
+    p = {
+        "wq": nn.init_linear(ks[0], d, (dims.heads_padded, hd), bias=bias,
+                             dtype=dtype, quant=q8),
+        "wk": nn.init_linear(ks[1], d, (dims.kv_padded, hd), bias=bias,
+                             dtype=dtype, quant=q8),
+        "wv": nn.init_linear(ks[2], d, (dims.kv_padded, hd), bias=bias,
+                             dtype=dtype, quant=q8),
+        "wo": nn.init_linear(ks[3], (dims.heads_padded * hd), d,
+                             bias=cfg.mlp_bias, dtype=dtype, quant=q8),
+    }
+
+    def _mask_out(pp, out_mask=None, in_mask=None):
+        """Zero padded slots exactly. out_mask broadcasts over output
+        channels (scale-zero for quantized); in_mask over input rows
+        (applied to the stored weight)."""
+        if "w_scale" in pp:
+            if out_mask is not None:
+                pp["w_scale"] = pp["w_scale"] * out_mask.astype(
+                    pp["w_scale"].dtype)
+            if in_mask is not None:
+                pp["w_q8"] = pp["w_q8"] * in_mask.astype(jnp.int8)
+        else:
+            w = pp["w"]
+            if out_mask is not None:
+                w = w * out_mask.astype(w.dtype)[None]
+            if in_mask is not None:
+                w = w * in_mask.astype(w.dtype)
+            pp["w"] = w
+
+    mask_q = dims.real_head_mask().astype(dtype)
+    _mask_out(p["wq"], out_mask=mask_q[:, None])
+    if bias:
+        p["wq"]["b"] = p["wq"]["b"] * mask_q[:, None]
+    if dims.kv_padded != dims.n_kv:
+        mk = (jnp.arange(dims.kv_padded) < dims.n_kv).astype(dtype)
+        for nm in ("wk", "wv"):
+            _mask_out(p[nm], out_mask=mk[:, None])
+            if bias:
+                p[nm]["b"] = p[nm]["b"] * mk[:, None]
+    wo_mask = jnp.repeat(mask_q, hd).astype(dtype)
+    _mask_out(p["wo"], in_mask=wo_mask[:, None])
+    return p
+
+
+def attention_specs(cfg: ModelConfig):
+    bias = cfg.qkv_bias
+
+    def lin(in_names, out_names, b):
+        s = nn.linear_specs(in_names, out_names, quant=cfg.quant_int8)
+        if b:
+            s["b"] = tuple(out_names)
+        return s
+
+    return {
+        "wq": lin(("embed",), ("heads", None), bias),
+        "wk": lin(("embed",), ("kv_heads", None), bias),
+        "wv": lin(("embed",), ("kv_heads", None), bias),
+        "wo": lin(("heads",), ("embed",), cfg.mlp_bias),
+    }
+
+
+# ----------------------------------------------------------------------------
+# Blockwise masked attention (train / prefill)
+# ----------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int, prefix_len) -> jnp.ndarray:
+    """Additive bias (q, k) in fp32; -inf where disallowed."""
+    allowed = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok = q_pos[:, None] >= k_pos[None, :]
+        if prefix_len is not None:
+            ok = ok | ((q_pos[:, None] < prefix_len) & (k_pos[None, :] < prefix_len))
+        allowed &= ok
+    if window > 0:
+        allowed &= (q_pos[:, None] - k_pos[None, :]) < window
+    return jnp.where(allowed, 0.0, -1e30).astype(jnp.float32)
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        prefix_len: Optional[int] = None, block_q: int = 512,
+                        softmax_scale: Optional[float] = None) -> jnp.ndarray:
+    """q (b,sq,H,hd); k,v (b,sk,H,hd) — already GQA-expanded.
+
+    Unrolls q into static blocks; each block's k range is statically sliced
+    to [lo, hi) where hi enforces causality and lo the sliding window, so the
+    compiled FLOPs match the true masked FLOPs.
+    """
+    b, sq, H, hd = q.shape
+    sk = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(hd)
+    aligned = causal and (sq == sk) and prefix_len is None
+    out_blocks = []
+    n_blocks = (sq + block_q - 1) // block_q
+    for i in range(n_blocks):
+        qs, qe = i * block_q, min(sq, (i + 1) * block_q)
+        if aligned:
+            hi = qe
+            lo = max(0, qs - window + 1) if window > 0 else 0
+        else:
+            hi, lo = sk, 0
+        qb = q[:, qs:qe]
+        kb, vb = k[:, lo:hi], v[:, lo:hi]
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qb, kb,
+                            preferred_element_type=jnp.float32) * scale
+        q_pos = jnp.arange(qs, qe)
+        k_pos = jnp.arange(lo, hi)
+        scores = scores + _mask_bias(q_pos, k_pos, causal=causal,
+                                     window=window, prefix_len=prefix_len)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out_blocks.append(jnp.einsum("bhqk,bkhd->bqhd", w, vb))
+    return jnp.concatenate(out_blocks, axis=1) if len(out_blocks) > 1 else out_blocks[0]
+
+
+def gqa_expand(kv: jnp.ndarray, dims: AttnDims) -> jnp.ndarray:
+    """(b,s,KVp,hd) -> (b,s,Hp,hd) via the pre-grouped repeat."""
+    if dims.kv_padded == dims.heads_padded:
+        return kv
+    return jnp.repeat(kv, dims.group, axis=2)
+
+
+def attention_forward(p, x: jnp.ndarray, dims: AttnDims, *,
+                      cos, sin, causal: bool = True, window: int = 0,
+                      prefix_len: Optional[int] = None,
+                      kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                      block_q: int = 512) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill). x (b,s,d)."""
+    q = nn.linear(p["wq"], x)                               # (b,s,Hp,hd)
+    q = lshard(q, "batch", None, "heads", None)
+    if kv_override is None:
+        k = nn.linear(p["wk"], x)
+        v = nn.linear(p["wv"], x)
+    else:
+        k, v = kv_override
+    if cos is not None:
+        q = nn.apply_rope(q, cos, sin)
+        if kv_override is None:
+            k = nn.apply_rope(k, cos, sin)
+    k = gqa_expand(k, dims)
+    v = gqa_expand(v, dims)
+    o = blockwise_attention(q, k, v, causal=causal, window=window,
+                            prefix_len=prefix_len, block_q=block_q)
+    o = o.reshape(*x.shape[:-1], dims.heads_padded * dims.head_dim)
+    o = lshard(o, "batch", None, "heads")
+    return nn.linear(p["wo"], o)
+
+
+# ----------------------------------------------------------------------------
+# Decode (single new token, seq-sharded KV cache)
+# ----------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, cache_len: int, dims: AttnDims, dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, cache_len, dims.kv_padded, dims.head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, dims.kv_padded, dims.head_dim), dtype),
+    }
+
+
+def kv_cache_specs() -> dict:
+    return {"k": ("batch", "kv_seq", None, None),
+            "v": ("batch", "kv_seq", None, None)}
+
+
+def _write_slot(buf: jnp.ndarray, new: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
+    """Write new (b,1,...) at per-batch slot (b,) into buf (b,S,...).
+
+    Masked-select write: uniformly shardable on the seq axis (a vmap'd
+    dynamic_update_slice forces GSPMD to reshard); costs one extra cache
+    read/write which we account for in the roofline notes.
+    """
+    S = buf.shape[1]
+    sel = jnp.arange(S)[None, :] == slot[:, None]           # (b,S)
+    sel = sel.reshape(sel.shape + (1,) * (buf.ndim - 2))
+    return jnp.where(sel, new.astype(buf.dtype), buf)
+
+
+def attention_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
+                     dims: AttnDims, *, rope_theta: float = 0.0,
+                     window: int = 0) -> Tuple[jnp.ndarray, dict]:
+    """x (b,1,d); pos (b,) current absolute position. Returns (out, cache').
+
+    Full cache: slot = pos. Sliding window: ring buffer, slot = pos % W.
+    """
+    b = x.shape[0]
+    S = cache["k"].shape[1]
+    q = nn.linear(p["wq"], x)                               # (b,1,Hp,hd)
+    k = nn.linear(p["wk"], x)                               # (b,1,KVp,hd)
+    v = nn.linear(p["wv"], x)
+    if rope_theta > 0:
+        cos, sin = nn.rope_cos_sin(pos[:, None], dims.head_dim, rope_theta)
+        q = nn.apply_rope(q, cos, sin)
+        k = nn.apply_rope(k, cos, sin)
+    slot = (pos % S) if window > 0 else pos
+    ck = _write_slot(cache["k"], k, slot)
+    cv = _write_slot(cache["v"], v, slot)
+    ck = lshard(ck, "batch", "kv_seq", None, None)
+    cv = lshard(cv, "batch", "kv_seq", None, None)
+    # grouped scores against the compact (un-expanded) cache
+    g = dims.group
+    qg = q.reshape(b, 1, dims.kv_padded, g, dims.head_dim)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(dims.head_dim)
+    # validity: which cache slots hold live positions <= pos
+    idx = jnp.arange(S)[None, :]                            # (1,S)
+    if window > 0:
+        # ring slot s holds position pos - ((pos - s) mod S); valid if >= 0
+        held = pos[:, None] - ((pos[:, None] - idx) % S)
+        valid = held >= 0
+    else:
+        valid = idx <= pos[:, None]
+    bias = jnp.where(valid, 0.0, -1e30)[:, None, None, None, :]
+    w = jax.nn.softmax(scores + bias, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, cv)
+    o = o.reshape(b, 1, dims.heads_padded * dims.head_dim)
+    out = nn.linear(p["wo"], o)
+    return out, {"k": ck, "v": cv}
+
+
+# ----------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ----------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, tp: int, dtype):
+    m: MLAConfig = cfg.mla
+    d = cfg.d_model
+    H = cfg.n_heads
+    assert H % tp == 0, "MLA head counts in this pool divide the model axis"
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    p = {}
+    if m.q_lora_rank:
+        p["wq_a"] = nn.init_linear(ks[0], d, m.q_lora_rank, dtype=dtype)
+        p["q_norm"] = nn.init_norm(m.q_lora_rank, dtype=dtype)
+        p["wq_b"] = nn.init_linear(ks[1], m.q_lora_rank, (H, qk), dtype=dtype)
+    else:
+        p["wq"] = nn.init_linear(ks[1], d, (H, qk), dtype=dtype)
+    p["wkv_a"] = nn.init_linear(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim,
+                                dtype=dtype)
+    p["kv_norm"] = nn.init_norm(m.kv_lora_rank, dtype=dtype)
+    p["wkv_b"] = nn.init_linear(ks[3], m.kv_lora_rank,
+                                (H, m.qk_nope_head_dim + m.v_head_dim), dtype=dtype)
+    p["wo"] = nn.init_linear(ks[4], H * m.v_head_dim, d, dtype=dtype)
+    return p
+
+
+def mla_specs(cfg: ModelConfig):
+    m = cfg.mla
+    s = {
+        "wkv_a": {"w": ("embed", None)},
+        "kv_norm": nn.norm_specs(),
+        "wkv_b": {"w": ("kv_lora", "heads", None)},
+        "wo": {"w": ("heads", "embed")},
+    }
+    if m.q_lora_rank:
+        s["wq_a"] = {"w": ("embed", "q_lora")}
+        s["q_norm"] = nn.norm_specs()
+        s["wq_b"] = {"w": ("q_lora", "heads", None)}
+    else:
+        s["wq"] = {"w": ("embed", "heads", None)}
+    return s
+
+
+def _mla_q(p, x, m: MLAConfig, eps: float):
+    if "wq_a" in p:
+        qc = nn.apply_norm(p["q_norm"], nn.linear(p["wq_a"], x), eps=eps)
+        q = nn.linear(p["wq_b"], qc)
+    else:
+        q = nn.linear(p["wq"], x)
+    return q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+
+
+def mla_forward(p, x: jnp.ndarray, cfg: ModelConfig, *, positions,
+                block_q: int = 512) -> jnp.ndarray:
+    """Decompressed prefill/train form."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(p, x, m, cfg.norm_eps)
+    kv_a = nn.linear(p["wkv_a"], x)
+    c_kv = nn.apply_norm(p["kv_norm"], kv_a[..., : m.kv_lora_rank], eps=cfg.norm_eps)
+    k_rope = kv_a[..., m.kv_lora_rank:][..., None, :]        # (b,s,1,rope)
+    cos, sin = nn.rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = nn.apply_rope(q_rope, cos, sin)
+    k_rope = nn.apply_rope(k_rope, cos, sin)
+    kv = nn.linear(p["wkv_b"], c_kv)                         # (b,s,H,nope+v)
+    k_nope = kv[..., : m.qk_nope_head_dim]
+    v = kv[..., m.qk_nope_head_dim:]
+    H = cfg.n_heads
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (b, s, H, m.qk_rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = lshard(q, "batch", None, "heads", None)
+    k = lshard(k, "batch", None, "heads", None)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    # pad v's head_dim up to qk dim so blockwise_attention's shapes agree
+    o = blockwise_attention(q, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                              (0, k.shape[-1] - v.shape[-1]))),
+                            causal=True, block_q=block_q, softmax_scale=scale)
+    o = o[..., : m.v_head_dim].reshape(b, s, H * m.v_head_dim)
+    o = lshard(o, "batch", None, "heads")
+    return nn.linear(p["wo"], o)
+
+
+def init_mla_cache(batch: int, cache_len: int, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.mla
+    return {"c_kv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dtype)}
+
+
+def mla_cache_specs() -> dict:
+    return {"c_kv": ("batch", "kv_seq", None),
+            "k_rope": ("batch", "kv_seq", None)}
+
+
+def mla_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
+               cfg: ModelConfig) -> Tuple[jnp.ndarray, dict]:
+    """Absorbed decode form: scores live in the compressed latent space."""
+    m = cfg.mla
+    b = x.shape[0]
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, x, m, cfg.norm_eps)           # (b,1,H,*)
+    kv_a = nn.linear(p["wkv_a"], x)
+    c_new = nn.apply_norm(p["kv_norm"], kv_a[..., : m.kv_lora_rank],
+                          eps=cfg.norm_eps)
+    kr_new = kv_a[..., m.kv_lora_rank:]
+    cos, sin = nn.rope_cos_sin(pos[:, None], m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = nn.apply_rope(q_rope, cos, sin)
+    kr_new = nn.apply_rope(kr_new[..., None, :], cos, sin)[..., 0, :]
+    c_kv = _write_slot(cache["c_kv"], c_new, pos)
+    k_rope = _write_slot(cache["k_rope"], kr_new, pos)
+    c_kv = lshard(c_kv, "batch", "kv_seq", None)
+    k_rope = lshard(k_rope, "batch", "kv_seq", None)
+    wkv_b = p["wkv_b"]["w"].astype(x.dtype)                  # (r,H,nope+v)
+    w_k = wkv_b[..., : m.qk_nope_head_dim]                   # (r,H,nope)
+    w_v = wkv_b[..., m.qk_nope_head_dim:]                    # (r,H,v)
+    # absorb: q_c (b,1,H,r)
+    q_c = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_k)
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_c, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope,
+                           preferred_element_type=jnp.float32))
+    scores = scores / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    S = c_kv.shape[1]
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+    scores = scores + jnp.where(valid, 0.0, -1e30)[:, None, None, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", w, c_kv)            # (b,1,H,r)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_v)
+    o = o.reshape(b, 1, H * m.v_head_dim)
+    out = nn.linear(p["wo"], o)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

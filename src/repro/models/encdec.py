@@ -1,0 +1,82 @@
+"""Whisper-style audio encoder (transformer over stubbed frame embeddings).
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor is
+a STUB: `input_specs()` feeds precomputed frame embeddings (b, 1500, d). The
+12-layer bidirectional encoder transformer itself is real and trained.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import modules as nn
+from repro.sharding import lshard
+
+
+class AudioEncoder:
+    def __init__(self, cfg: ModelConfig, tp: int = 1):
+        self.cfg = cfg
+        self.enc = cfg.encoder
+        self.tp = tp
+        # encoder uses the same head geometry as the decoder in whisper-small
+        self.dims = attn.attn_dims(cfg, tp)
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        keys = jax.random.split(key, self.enc.n_layers + 1)
+
+        def one(k):
+            ks = jax.random.split(k, 2)
+            return {
+                "norm1": nn.init_norm(cfg.d_model, kind=cfg.norm,
+                                      dtype=self.dtype, bias=cfg.mlp_bias),
+                "mix": attn.init_attention(ks[0], cfg, self.tp, self.dtype),
+                "norm2": nn.init_norm(cfg.d_model, kind=cfg.norm,
+                                      dtype=self.dtype, bias=cfg.mlp_bias),
+                "ffn": nn.init_mlp(ks[1], cfg.d_model, self.enc.d_ff,
+                                   gated=cfg.gated_mlp, bias=cfg.mlp_bias,
+                                   dtype=self.dtype),
+            }
+
+        stacked = jax.vmap(one)(keys[: self.enc.n_layers])
+        return {"layers": stacked,
+                "final_norm": nn.init_norm(cfg.d_model, kind=cfg.norm,
+                                           dtype=self.dtype)}
+
+    def specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        layer = {
+            "norm1": nn.norm_specs(cfg.norm, cfg.mlp_bias),
+            "mix": attn.attention_specs(cfg),
+            "norm2": nn.norm_specs(cfg.norm, cfg.mlp_bias),
+            "ffn": nn.mlp_specs(gated=cfg.gated_mlp, bias=cfg.mlp_bias),
+        }
+        layer = jax.tree.map(lambda t: (None,) + tuple(t), layer,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return {"layers": layer, "final_norm": nn.norm_specs(cfg.norm)}
+
+    def forward(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        """frames (b, n_frames, d) precomputed embeddings -> encoder states."""
+        cfg = self.cfg
+        x = frames.astype(self.dtype)
+        x = x + nn.sinusoidal_positions(x.shape[1], cfg.d_model,
+                                        self.dtype)[None]
+        x = lshard(x, "batch", None, None)
+
+        def block(x, p):
+            h = nn.apply_norm(p["norm1"], x, kind=cfg.norm, eps=cfg.norm_eps)
+            h = attn.attention_forward(p["mix"], h, self.dims, cos=None,
+                                       sin=None, causal=False, block_q=512)
+            x = x + h
+            h = nn.apply_norm(p["norm2"], x, kind=cfg.norm, eps=cfg.norm_eps)
+            x = x + nn.mlp(p["ffn"], h, act=cfg.act)
+            return x, None
+
+        x, _ = jax.lax.scan(block, x, params["layers"])
+        return nn.apply_norm(params["final_norm"], x, kind=cfg.norm,
+                             eps=cfg.norm_eps)

@@ -1,0 +1,107 @@
+"""Model factory + step functions for every assigned architecture.
+
+`build_model(cfg, tp)` returns a `Model` bundle exposing:
+    init / specs                          parameters
+    loss_fn(params, batch)                training loss (CE + MoE aux)
+    train_inputs / prefill_inputs / ...   ShapeDtypeStruct builders live in
+                                          launch.dryrun (they need shapes)
+    forward / decode_step / init_cache    delegated to the family modules
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import modules as nn
+from repro.models.encdec import AudioEncoder
+from repro.models.transformer import TransformerLM
+from repro.sharding import lshard
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-mean CE in fp32. logits (b,s,V); labels (b,s) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+@dataclass(eq=False)     # id-hash: usable as a jit static argument
+class Model:
+    cfg: ModelConfig
+    lm: TransformerLM
+    encoder: Optional[AudioEncoder] = None
+
+    # ------------------------------------------------------------- params
+    def init(self, key):
+        if self.encoder is not None:
+            k1, k2 = jax.random.split(key)
+            return {"lm": self.lm.init(k1), "encoder": self.encoder.init(k2)}
+        return {"lm": self.lm.init(key)}
+
+    def specs(self):
+        s = {"lm": self.lm.specs()}
+        if self.encoder is not None:
+            s["encoder"] = self.encoder.specs()
+        return s
+
+    def param_shapes(self, key=None):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init, key)
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params, tokens, *, frames=None, patches=None,
+                train: bool = False):
+        """Returns (logits, hidden, aux). `frames` (audio) / `patches` (vlm)
+        are the stubbed-modality embeddings."""
+        enc_out = None
+        if self.encoder is not None:
+            assert frames is not None, "audio model needs frame embeddings"
+            enc_out = self.encoder.forward(params["encoder"], frames)
+        return self.lm.forward(params["lm"], tokens,
+                               prefix_embeds=patches,
+                               encoder_out=enc_out, train=train)
+
+    def loss_fn(self, params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """batch: tokens (b,s), labels (b,s), optional frames/patches/mask."""
+        logits, _, aux = self.forward(
+            params, batch["tokens"], frames=batch.get("frames"),
+            patches=batch.get("patches"), train=True)
+        labels = batch["labels"]
+        if self.cfg.family == "vlm" and batch.get("patches") is not None:
+            # loss over the text suffix only
+            P = batch["patches"].shape[1]
+            logits = logits[:, P:]
+        loss = cross_entropy_loss(logits, labels, batch.get("mask"))
+        if self.cfg.moe is not None:
+            loss = loss + self.cfg.moe.router_aux_loss * aux / self.cfg.n_layers
+        return loss
+
+    # ------------------------------------------------------------- decode
+    def init_cache(self, batch: int, seq_len: int):
+        enc_len = self.cfg.encoder.seq_len if self.cfg.is_encdec else 0
+        return self.lm.init_cache(batch, seq_len, encoder_len=enc_len)
+
+    def cache_specs(self):
+        return self.lm.cache_specs()
+
+    def decode_step(self, params, token, cache, pos):
+        return self.lm.decode_step(params["lm"], token, cache, pos)
+
+
+def build_model(cfg: ModelConfig, tp: int = 1, remat: bool = False,
+                block_q: int = 512) -> Model:
+    lm = TransformerLM(cfg, tp=tp, block_q=block_q, remat=remat)
+    encoder = None
+    if cfg.is_encdec and cfg.encoder is not None and cfg.encoder.n_layers:
+        encoder = AudioEncoder(cfg, tp=tp)
+    return Model(cfg=cfg, lm=lm, encoder=encoder)

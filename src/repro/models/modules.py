@@ -1,0 +1,226 @@
+"""Core parameterized building blocks (pytree params + parallel logical-spec
+trees). flax is unavailable offline, so this is a from-scratch functional
+module system:
+
+    params = init_linear(key, d_in, d_out)          # dict of arrays
+    specs  = linear_specs(("embed",), ("mlp",))     # same-shape dict of
+                                                    # logical-axis tuples
+    y      = linear(params, x)
+
+Spec trees mirror param trees exactly; ``repro.sharding.logical_spec``
+resolves them against a mesh at launch time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def truncnorm_init(key, shape, scale: float, dtype) -> jax.Array:
+    stddev = scale / max(1.0, math.sqrt(shape[0] if len(shape) > 1 else 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+def init_linear(key, d_in: int, d_out, *, bias: bool = False,
+                dtype=jnp.float32, scale: float = 1.0, zero: bool = False,
+                quant: bool = False):
+    """d_out may be an int or a tuple (e.g. (heads, head_dim)).
+
+    quant=True stores the weight as int8 + per-output-channel fp scales
+    (W8A16 serving quantization — §Perf: halves the weight-read bandwidth
+    that dominates decode)."""
+    out_shape = (d_out,) if isinstance(d_out, int) else tuple(d_out)
+    shape = (d_in,) + out_shape
+    if zero:
+        w = jnp.zeros(shape, dtype)
+    else:
+        w = truncnorm_init(key, shape, scale, dtype)
+    if quant:
+        amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0) + 1e-8
+        p = {"w_q8": jnp.clip(jnp.round(w.astype(jnp.float32) / amax * 127),
+                              -127, 127).astype(jnp.int8),
+             "w_scale": (amax / 127).astype(dtype)}
+    else:
+        p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros(out_shape, dtype)
+    return p
+
+
+def linear_specs(in_names: Sequence, out_names: Sequence, *,
+                 bias: bool = False, quant: bool = False):
+    if quant:
+        s = {"w_q8": tuple(in_names) + tuple(out_names),
+             "w_scale": tuple(out_names)}
+    else:
+        s = {"w": tuple(in_names) + tuple(out_names)}
+    if bias:
+        s["b"] = tuple(out_names)
+    return s
+
+
+def linear(p, x: jax.Array, *, out_ndim: Optional[int] = None) -> jax.Array:
+    """Contract the last dim of x with the first dim of w."""
+    if "w_q8" in p:
+        w = p["w_q8"].astype(x.dtype) * p["w_scale"].astype(x.dtype)
+    else:
+        w = p["w"].astype(x.dtype)
+    y = jax.lax.dot_general(
+        x, w,
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def init_norm(d: int, *, kind: str = "rmsnorm", dtype=jnp.float32,
+              bias: bool = False):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm" and bias:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_specs(kind: str = "rmsnorm", bias: bool = False):
+    s = {"scale": ("embed",)}
+    if kind == "layernorm" and bias:
+        s["bias"] = ("embed",)
+    return s
+
+
+def apply_norm(p, x: jax.Array, *, kind: str = "rmsnorm",
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        xf = xf - mu
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    y = xf * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": truncnorm_init(key, (vocab, d), math.sqrt(d), dtype)}
+
+
+def embedding_specs():
+    return {"table": ("vocab", "embed")}
+
+
+def embed(p, tokens: jax.Array, dtype=None) -> jax.Array:
+    t = p["table"]
+    if dtype is not None:
+        t = t.astype(dtype)
+    return jnp.take(t, tokens, axis=0)
+
+
+def unembed(p, x: jax.Array) -> jax.Array:
+    """Tied LM head: x @ table^T."""
+    return jax.lax.dot_general(
+        x, p["table"].astype(x.dtype),
+        dimension_numbers=(((x.ndim - 1,), (1,)), ((), ())))
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(name)
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings (GPT-NeoX half-rotation convention)
+# ----------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                 dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin (..., head_dim//2)."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., seq, heads, head_dim); cos/sin (..., seq, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)   # broadcast over heads
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def sinusoidal_positions(seq_len: int, d: int, dtype=jnp.float32) -> jax.Array:
+    """Whisper-style sinusoidal absolute position table (seq_len, d)."""
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / max(half - 1, 1))
+    ang = jnp.arange(seq_len, dtype=jnp.float32)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# Gated / plain MLP
+# ----------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, *, gated: bool, bias: bool = False,
+             dtype=jnp.float32, quant: bool = False):
+    ks = jax.random.split(key, 3)
+    p = {"up": init_linear(ks[0], d, d_ff, bias=bias, dtype=dtype,
+                           quant=quant),
+         "down": init_linear(ks[1], d_ff, d, bias=bias, dtype=dtype,
+                             quant=quant)}
+    if gated:
+        p["gate"] = init_linear(ks[2], d, d_ff, bias=bias, dtype=dtype,
+                                quant=quant)
+    return p
+
+
+def mlp_specs(*, gated: bool, bias: bool = False, ff_name: str = "mlp",
+              quant: bool = False):
+    s = {"up": linear_specs(("embed",), (ff_name,), bias=bias, quant=quant),
+         "down": linear_specs((ff_name,), ("embed",), bias=bias,
+                              quant=quant)}
+    if gated:
+        s["gate"] = linear_specs(("embed",), (ff_name,), bias=bias,
+                                 quant=quant)
+    return s
+
+
+def mlp(p, x: jax.Array, *, act: str = "silu") -> jax.Array:
+    fn = activation(act)
+    h = linear(p["up"], x)
+    if "gate" in p:
+        h = h * fn(linear(p["gate"], x))
+    else:
+        h = fn(h)
+    return linear(p["down"], h)
+
+
+# ----------------------------------------------------------------------------
+# LoRA adapters (paper §3.1 difficulty-model variant)
+# ----------------------------------------------------------------------------
+
+def init_lora(key, d_in: int, d_out: int, rank: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"a": truncnorm_init(k1, (d_in, rank), 1.0, dtype),
+            "b": jnp.zeros((rank, d_out), dtype)}
+
+
+def lora_specs():
+    return {"a": ("embed", None), "b": (None, "embed")}
+
+
+def lora_delta(p, x: jax.Array, scale: float = 1.0) -> jax.Array:
+    return (x @ p["a"].astype(x.dtype)) @ p["b"].astype(x.dtype) * scale

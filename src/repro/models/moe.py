@@ -1,0 +1,206 @@
+"""Mixture-of-Experts FFN.
+
+Two execution paths with identical routing math:
+
+* **local** (no mesh / smoke tests / tiny training): all experts are computed
+  densely and combined with the (zeroed) top-k gate weights — exact, no
+  capacity drops.
+
+* **sharded** (production meshes): a `shard_map` over the `model` axis.
+  Activations arrive sequence-sharded (Megatron-SP residual); each device
+  all-gathers its model-row's tokens, routes, runs *only its share* of
+  experts on a per-expert top-capacity gather (honest top-k FLOPs), and the
+  partial outputs are combined + re-seq-sharded with a single
+  `psum_scatter`. Expert placement is rule-driven (repro.sharding):
+  experts shard over `model` when n_experts % tp == 0 (DeepSeek 160,
+  Jamba 16); otherwise each expert is tensor-sharded over its ff dim
+  (Grok 8 x 32768) and the same psum combines the ff partials.
+
+Capacity follows GShard: C = ceil(T * top_k / E * capacity_factor); overflow
+tokens are dropped by the gather (kept by the local path).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import modules as nn
+from repro.sharding import current_rules, logical_spec
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ff = m.expert_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / max(1.0, math.sqrt(d))
+
+    def ew(k, shape):
+        return (jax.random.truncated_normal(k, -2, 2, shape, jnp.float32)
+                * scale).astype(dtype)
+
+    def maybe_quant(w):
+        """W8A16 expert weights (per-expert, per-out-channel scales)."""
+        if not cfg.quant_int8:
+            return w
+        amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=1,
+                       keepdims=True) + 1e-8                  # (E,1,out)
+        q = jnp.clip(jnp.round(w.astype(jnp.float32) / amax * 127),
+                     -127, 127).astype(jnp.int8)
+        return {"q8": q, "scale": (amax[:, 0] / 127).astype(dtype)}
+
+    p = {
+        "router": {"w": ew(ks[0], (d, m.n_experts))},
+        "up": maybe_quant(ew(ks[1], (m.n_experts, d, ff))),
+        "down": maybe_quant(ew(ks[2], (m.n_experts, ff, d))),
+    }
+    if cfg.gated_mlp:
+        p["gate"] = maybe_quant(ew(ks[3], (m.n_experts, d, ff)))
+    if m.n_shared_experts:
+        p["shared"] = nn.init_mlp(ks[4], d, ff * m.n_shared_experts,
+                                  gated=cfg.gated_mlp, dtype=dtype,
+                                  quant=cfg.quant_int8)
+    return p
+
+
+def moe_specs(cfg: ModelConfig):
+    def wspec(in_name, out_name):
+        names = ("experts", in_name, out_name)
+        if cfg.quant_int8:
+            return {"q8": names, "scale": ("experts", out_name)}
+        return names
+
+    s = {
+        "router": {"w": ("embed", None)},
+        "up": wspec("embed", "expert_ff"),
+        "down": wspec("expert_ff", "embed"),
+    }
+    if cfg.gated_mlp:
+        s["gate"] = wspec("embed", "expert_ff")
+    if cfg.moe.n_shared_experts:
+        s["shared"] = nn.mlp_specs(gated=cfg.gated_mlp,
+                                   quant=cfg.quant_int8)
+    return s
+
+
+def _route(p, x2d: jnp.ndarray, cfg: ModelConfig):
+    """x2d (T,d) -> (weights (T,k), idx (T,k), aux_loss scalar)."""
+    m = cfg.moe
+    logits = (x2d.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T,E)
+    top_w, top_i = jax.lax.top_k(probs, m.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss
+    density = jnp.mean(jax.nn.one_hot(top_i[:, 0], m.n_experts), axis=0)
+    density_prob = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_prob) * float(m.n_experts)
+    return top_w.astype(x2d.dtype), top_i, aux.astype(jnp.float32)
+
+
+def _w(pw, dtype):
+    """Expert weight, dequantizing W8A16 storage on read."""
+    if isinstance(pw, dict) and "q8" in pw:
+        return pw["q8"].astype(dtype) * pw["scale"][:, None, :].astype(dtype)
+    return pw.astype(dtype)
+
+
+def _expert_ffn(p, xs: jnp.ndarray, act: str) -> jnp.ndarray:
+    """xs (E, C, d) through per-expert (gated) FFN -> (E, C, d)."""
+    fn = nn.activation(act)
+    h = jnp.einsum("ecd,edf->ecf", xs, _w(p["up"], xs.dtype))
+    if "gate" in p:
+        h = h * fn(jnp.einsum("ecd,edf->ecf", xs, _w(p["gate"], xs.dtype)))
+    else:
+        h = fn(h)
+    return jnp.einsum("ecf,efd->ecd", h, _w(p["down"], xs.dtype))
+
+
+def _moe_local(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact dense-combine path (all experts on all tokens)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    x2 = x.reshape(-1, d)
+    w, idx, aux = _route(p, x2, cfg)
+    combine = jnp.zeros((x2.shape[0], m.n_experts), x.dtype)
+    combine = jax.vmap(lambda c, i, v: c.at[i].add(v))(combine, idx, w)
+    outs = _expert_ffn(p, jnp.broadcast_to(x2, (m.n_experts,) + x2.shape),
+                       cfg.act)                               # (E,T,d)
+    y = jnp.einsum("te,etd->td", combine, outs)
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y, aux_loss). Chooses local vs shard_map path from context."""
+    m = cfg.moe
+    y_shared = None
+    if m.n_shared_experts:
+        y_shared = nn.mlp(p["shared"], x, act=cfg.act)
+    cur = current_rules()
+    if cur is None or cur[0] is None:
+        y, aux = _moe_local(p, x, cfg)
+    else:
+        mesh, rules = cur
+        tp = mesh.shape["model"]
+        b, s, d = x.shape
+        expert_parallel = rules.get("experts") == "model"
+        e_loc = m.n_experts // tp if expert_parallel else m.n_experts
+        seq_shard = (s % tp == 0) and s >= tp
+        batch_axes = rules.get("batch") or ()
+        if isinstance(batch_axes, str):
+            batch_axes = (batch_axes,)
+        nb = 1
+        for a in batch_axes:
+            nb *= mesh.shape[a]
+        batch_shard = (b % nb == 0) and b >= nb
+        x_spec = logical_spec(("batch" if batch_shard else None,
+                               "seq_sp" if seq_shard else None, None),
+                              rules)
+        all_specs = {k: v for k, v in moe_specs(cfg).items() if k != "shared"}
+        w_specs = jax.tree.map(lambda names: logical_spec(names, rules),
+                               all_specs,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        p_in = {k: p[k] for k in w_specs}
+        # tokens visible per device AFTER the row all-gather: local batch
+        # shard x full sequence
+        T_loc = (b // nb if batch_shard else b) * s
+        capacity = min(T_loc, max(1, int(math.ceil(
+            T_loc * m.top_k / m.n_experts * m.capacity_factor))))
+
+        def body(xl, pl):
+            xg = (jax.lax.all_gather(xl, "model", axis=1, tiled=True)
+                  if seq_shard else xl)
+            x2 = xg.reshape(-1, d)
+            off = (jax.lax.axis_index("model") * e_loc
+                   if expert_parallel else 0)
+            w, idx, aux = _route(pl, x2, cfg)
+
+            def per_expert(e_off):
+                e = off + e_off
+                we = jnp.sum(jnp.where(idx == e, w, 0.0), axis=-1)   # (T,)
+                vals, ti = jax.lax.top_k(we, capacity)
+                return jnp.take(x2, ti, axis=0), vals, ti
+
+            xs, vals, gidx = jax.vmap(per_expert)(jnp.arange(e_loc))
+            out = _expert_ffn(pl, xs, cfg.act)                # (E_loc,C,d)
+            out = out * vals[..., None].astype(out.dtype)
+            y = jnp.zeros_like(x2)
+            y = y.at[gidx.reshape(-1)].add(out.reshape(-1, d))
+            y = y.reshape(xg.shape)
+            if seq_shard:
+                y = jax.lax.psum_scatter(y, "model", scatter_dimension=1,
+                                         tiled=True)
+            else:
+                y = jax.lax.psum(y, "model")
+            return y, jax.lax.pmean(aux, "model")
+
+        fn = jax.shard_map(body, mesh=mesh, in_specs=(x_spec, w_specs),
+                           out_specs=(x_spec, P()), check_vma=False)
+        y, aux = fn(x, p_in)
+    if y_shared is not None:
+        y = y + y_shared
+    return y, aux

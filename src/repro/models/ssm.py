@@ -1,0 +1,179 @@
+"""Mamba selective-state-space block (Jamba's sequence mixer).
+
+TPU adaptation: the selective scan is computed **chunkwise** — a sequential
+`lax.scan` over chunks with a parallel `associative_scan` inside each chunk —
+so the live (b, chunk, d_inner, d_state) tensor stays VMEM-sized instead of
+materializing the full (b, seq, d_inner, d_state) scan. The inner dimension
+(d_inner = expand * d_model) shards over the `model` mesh axis; the scan is
+per-channel so the recurrence needs **zero collectives** (this is why hybrid
+SSMs are ICI-friendly at long context — visible in the roofline tables).
+
+kernels/ssm_scan.py is the Pallas TPU target for the inner chunk scan; this
+module is the XLA path and the oracle's substrate.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import modules as nn
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or max(1, math.ceil(cfg.d_model / 16))
+    return d_in, s.d_state, s.d_conv, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in, d_state, d_conv, dt_rank = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    p = {
+        "wx": nn.init_linear(ks[0], d, d_in, dtype=dtype),
+        "wz": nn.init_linear(ks[1], d, d_in, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (d_conv, d_in), jnp.float32)
+                   / math.sqrt(d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": nn.init_linear(ks[3], d_in, dt_rank + 2 * d_state, dtype=dtype),
+        "dt_proj": nn.init_linear(ks[4], dt_rank, d_in, bias=True, dtype=dtype),
+        # S4D-real initialization for A
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, d_state + 1, dtype=jnp.float32)),
+            (d_in, d_state)).astype(jnp.float32) * jnp.ones((d_in, 1), jnp.float32),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": nn.init_linear(ks[5], d_in, d, dtype=dtype),
+    }
+    # dt bias init so softplus(dt) starts in [1e-3, 1e-1]
+    dt_init = jnp.exp(jax.random.uniform(ks[6], (d_in,), jnp.float32)
+                      * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    p["dt_proj"]["b"] = (dt_init + jnp.log(-jnp.expm1(-dt_init))).astype(dtype)
+    return p
+
+
+def mamba_specs(cfg: ModelConfig):
+    return {
+        "wx": {"w": ("embed", "mamba_inner")},
+        "wz": {"w": ("embed", "mamba_inner")},
+        "conv_w": (None, "mamba_inner"),
+        "conv_b": ("mamba_inner",),
+        "x_proj": {"w": ("mamba_inner", None)},
+        "dt_proj": {"w": (None, "mamba_inner"), "b": ("mamba_inner",)},
+        "A_log": ("mamba_inner", None),
+        "D": ("mamba_inner",),
+        "out_proj": {"w": ("mamba_inner", "embed")},
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x (b,s,d_in); w (d_conv,d_in).
+
+    state (b, d_conv-1, d_in) holds the trailing inputs from the previous
+    segment (zeros at sequence start). Returns (y, new_state).
+    """
+    d_conv = w.shape[0]
+    bsz, s, d_in = x.shape
+    if state is None:
+        state = jnp.zeros((bsz, d_conv - 1, d_in), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, j:j + s] * w[j][None, None, :].astype(x.dtype)
+            for j in range(d_conv))
+    y = y + b[None, None, :].astype(x.dtype)
+    new_state = xp[:, -(d_conv - 1):] if d_conv > 1 else state
+    return y, new_state
+
+
+def _ssm_params(p, xc: jnp.ndarray, cfg: ModelConfig):
+    """xc (..., d_in) -> dt (..., d_in), B, C (..., d_state) in fp32."""
+    _, d_state, _, dt_rank = _dims(cfg)
+    proj = nn.linear(p["x_proj"], xc)
+    dt, B, C = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = nn.linear(p["dt_proj"], dt).astype(jnp.float32)
+    dt = jax.nn.softplus(dt)
+    return dt, B.astype(jnp.float32), C.astype(jnp.float32)
+
+
+def _scan_chunk(A: jnp.ndarray, dt, B, C, xc, h0):
+    """One chunk of the selective scan via associative_scan (fp32).
+
+    dt (b,L,d); B,C (b,L,n); xc (b,L,d); h0 (b,d,n) -> (y (b,L,d), hL).
+    """
+    dA = jnp.exp(dt[..., None] * A[None, None])              # (b,L,d,n)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * B[:, :, None, :]
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, a2 * b1 + b2
+
+    accA, accB = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = accA * h0[:, None] + accB                            # (b,L,d,n)
+    y = jnp.einsum("bldn,bln->bld", h, C)
+    return y, h[:, -1]
+
+
+def mamba_mix(p, x: jnp.ndarray, cfg: ModelConfig, *, chunk: int = 256
+              ) -> jnp.ndarray:
+    """Full-sequence mamba mixer (train / prefill). x (b,s,d_model)."""
+    d_in, d_state, d_conv, _ = _dims(cfg)
+    b, s, _ = x.shape
+    xi = nn.linear(p["wx"], x)                               # (b,s,d_in)
+    z = nn.linear(p["wz"], x)
+    xc, _ = _causal_conv(xi, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt, B, C = _ssm_params(p, xc, cfg)
+    A = -jnp.exp(p["A_log"])                                 # (d_in,n) fp32
+    L = min(chunk, s)
+    n_chunks = (s + L - 1) // L
+    pad = n_chunks * L - s
+    if pad:
+        z5 = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xc, dt, B, C = z5(xc), z5(dt), z5(B), z5(C)
+
+    def step(h, args):
+        xcc, dtc, Bc, Cc = args
+        y, h = _scan_chunk(A, dtc, Bc, Cc, xcc, h)
+        return h, y
+
+    resh = lambda t: t.reshape(b, n_chunks, L, t.shape[-1]).swapaxes(0, 1)
+    h0 = jnp.zeros((b, d_in, d_state), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (resh(xc), resh(dt), resh(B), resh(C)))
+    y = ys.swapaxes(0, 1).reshape(b, n_chunks * L, d_in)[:, :s]
+    y = y + xc.astype(jnp.float32)[:, :s] * p["D"][None, None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return nn.linear(p["out_proj"], y)
+
+
+def init_mamba_cache(batch: int, cfg: ModelConfig, dtype) -> dict:
+    d_in, d_state, d_conv, _ = _dims(cfg)
+    return {"conv": jnp.zeros((batch, d_conv - 1, d_in), dtype),
+            "ssm": jnp.zeros((batch, d_in, d_state), jnp.float32)}
+
+
+def mamba_cache_specs() -> dict:
+    return {"conv": ("batch", None, "mamba_inner"),
+            "ssm": ("batch", "mamba_inner", None)}
+
+
+def mamba_decode(p, x: jnp.ndarray, cache: dict, cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, dict]:
+    """Single-token recurrent step. x (b,1,d_model)."""
+    xi = nn.linear(p["wx"], x)
+    z = nn.linear(p["wz"], x)
+    xc, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"],
+                                  state=cache["conv"])
+    xc = jax.nn.silu(xc)
+    dt, B, C = _ssm_params(p, xc, cfg)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A[None])                # (b,d,n)
+    dBx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * B[:, 0, None, :]
+    h = cache["ssm"] * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C[:, 0])[:, None]
+    y = y + xc.astype(jnp.float32) * p["D"][None, None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return nn.linear(p["out_proj"], y), {"conv": conv_state, "ssm": h}

@@ -1,0 +1,490 @@
+"""Unified decoder LM covering all six assigned families.
+
+An architecture is a repeating **pattern** of layer descriptors (mixer + ffn):
+
+    dense / vlm        [attn+dense]                      x L
+    moe (grok/dsv2)    [attn|mla + moe]                  x L
+    hybrid (jamba)     [7x mamba, 1x attn; moe every 2]  x L/8
+    ssm (xlstm)        [7x mlstm, 1x slstm]              x L/8
+    audio (whisper)    [attn+cross+dense]                x L   (decoder)
+
+Parameters for each pattern position are **stacked over repeats** and the
+stack is driven by `jax.lax.scan`, keeping HLO size O(pattern) instead of
+O(L) — essential for 64-72 layer configs to compile quickly and for remat
+to apply uniformly. Caches mirror the same (repeat-stacked) structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import modules as nn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.sharding import lshard
+
+
+@dataclass(frozen=True)
+class LayerDesc:
+    mixer: str                  # attn | mla | mamba | mlstm | slstm
+    ffn: str                    # dense | moe | none
+    d_ff: int = 0               # override (sLSTM post-FFN)
+    cross: bool = False         # whisper decoder cross-attention
+
+
+def build_pattern(cfg: ModelConfig) -> Tuple[Tuple[LayerDesc, ...], int]:
+    """Returns (pattern, n_repeat) with len(pattern) * n_repeat == n_layers."""
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        k = cfg.xlstm.slstm_every
+        assert cfg.n_layers % k == 0
+        ds = []
+        for i in range(k):
+            if i == k - 1:
+                # round the 4/3 projection up to a TP-shardable multiple
+                d_ff = int(cfg.xlstm.slstm_proj_factor * cfg.d_model)
+                d_ff = ((d_ff + 127) // 128) * 128
+                ds.append(LayerDesc("slstm", "dense", d_ff=d_ff))
+            else:
+                ds.append(LayerDesc("mlstm", "none"))
+        return tuple(ds), cfg.n_layers // k
+    if cfg.family == "hybrid":
+        k = cfg.attn_every
+        assert cfg.n_layers % k == 0
+        ds = []
+        for i in range(k):
+            mixer = "attn" if i == k - 1 else "mamba"
+            ffn = "moe" if (cfg.moe is not None and i % cfg.moe_every == 0) \
+                else "dense"
+            ds.append(LayerDesc(mixer, ffn))
+        return tuple(ds), cfg.n_layers // k
+    mixer = "mla" if cfg.mla is not None else "attn"
+    ffn = "moe" if cfg.moe is not None else "dense"
+    cross = cfg.is_encdec
+    return (LayerDesc(mixer, ffn, cross=cross),), cfg.n_layers
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+class TransformerLM:
+    """Functional LM: `init` -> params pytree, `specs` -> logical-axis tree,
+    `forward` / `decode_step` / `init_cache`."""
+
+    def __init__(self, cfg: ModelConfig, tp: int = 1, block_q: int = 512,
+                 remat: bool = False):
+        self.cfg = cfg
+        self.tp = tp
+        self.block_q = block_q
+        self.remat = remat
+        self.pattern, self.n_repeat = build_pattern(cfg)
+        self.dims = attn.attn_dims(cfg, tp) if cfg.mla is None else None
+        self.dtype = _dtype(cfg)
+        # pad the vocab so the LM head shards over the model axis (padded
+        # logits are masked to -inf; exactness preserved)
+        self.vocab_padded = ((cfg.vocab_size + tp - 1) // tp) * tp
+
+    # ------------------------------------------------------------------ init
+    def _init_layer(self, key, desc: LayerDesc):
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        p: Dict[str, Any] = {}
+        bias = cfg.norm == "layernorm" and cfg.mlp_bias
+        p["norm1"] = nn.init_norm(cfg.d_model, kind=cfg.norm,
+                                  dtype=self.dtype, bias=bias)
+        if desc.mixer == "attn":
+            p["mix"] = attn.init_attention(ks[0], cfg, self.tp, self.dtype)
+        elif desc.mixer == "mla":
+            p["mix"] = attn.init_mla(ks[0], cfg, self.tp, self.dtype)
+        elif desc.mixer == "mamba":
+            p["mix"] = ssm_mod.init_mamba(ks[0], cfg, self.dtype)
+        elif desc.mixer == "mlstm":
+            p["mix"] = xlstm_mod.init_mlstm(ks[0], cfg, self.tp, self.dtype)
+        elif desc.mixer == "slstm":
+            p["mix"] = xlstm_mod.init_slstm(ks[0], cfg, self.tp, self.dtype)
+        if desc.cross:
+            p["norm_cross"] = nn.init_norm(cfg.d_model, kind=cfg.norm,
+                                           dtype=self.dtype, bias=bias)
+            p["cross"] = attn.init_attention(ks[1], cfg, self.tp, self.dtype)
+        if desc.ffn != "none":
+            p["norm2"] = nn.init_norm(cfg.d_model, kind=cfg.norm,
+                                      dtype=self.dtype, bias=bias)
+            if desc.ffn == "moe":
+                p["ffn"] = moe_mod.init_moe(ks[2], cfg, self.dtype)
+            else:
+                d_ff = desc.d_ff or cfg.d_ff
+                p["ffn"] = nn.init_mlp(ks[2], cfg.d_model, d_ff,
+                                       gated=cfg.gated_mlp, bias=cfg.mlp_bias,
+                                       dtype=self.dtype,
+                                       quant=cfg.quant_int8)
+        return p
+
+    def _layer_specs(self, desc: LayerDesc):
+        cfg = self.cfg
+        bias = cfg.norm == "layernorm" and cfg.mlp_bias
+        s: Dict[str, Any] = {"norm1": nn.norm_specs(cfg.norm, bias)}
+        if desc.mixer == "attn":
+            s["mix"] = attn.attention_specs(cfg)
+        elif desc.mixer == "mla":
+            s["mix"] = attn.mla_specs(cfg)
+        elif desc.mixer == "mamba":
+            s["mix"] = ssm_mod.mamba_specs(cfg)
+        elif desc.mixer == "mlstm":
+            s["mix"] = xlstm_mod.mlstm_specs()
+        elif desc.mixer == "slstm":
+            s["mix"] = xlstm_mod.slstm_specs()
+        if desc.cross:
+            s["norm_cross"] = nn.norm_specs(cfg.norm, bias)
+            s["cross"] = attn.attention_specs(cfg)
+        if desc.ffn != "none":
+            s["norm2"] = nn.norm_specs(cfg.norm, bias)
+            if desc.ffn == "moe":
+                s["ffn"] = moe_mod.moe_specs(cfg)
+            else:
+                s["ffn"] = nn.mlp_specs(gated=cfg.gated_mlp,
+                                        bias=cfg.mlp_bias,
+                                        quant=cfg.quant_int8)
+        return s
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_emb, k_layers, k_head = jax.random.split(key, 3)
+        params: Dict[str, Any] = {
+            "embed": nn.init_embedding(k_emb, self.vocab_padded, cfg.d_model,
+                                       self.dtype),
+            "final_norm": nn.init_norm(cfg.d_model, kind=cfg.norm,
+                                       dtype=self.dtype),
+        }
+        layer_keys = jax.random.split(k_layers, self.n_repeat)
+        layers = {}
+        for i, desc in enumerate(self.pattern):
+            def one(k, d=desc):
+                return self._init_layer(k, d)
+            sub_keys = jax.vmap(lambda k: jax.random.fold_in(k, i))(layer_keys)
+            layers[f"pos{i}"] = jax.vmap(one)(sub_keys)
+        params["layers"] = layers
+        if not cfg.tie_embeddings:
+            params["lm_head"] = nn.init_linear(k_head, cfg.d_model,
+                                               self.vocab_padded,
+                                               dtype=self.dtype)
+        return params
+
+    def _mask_padded_logits(self, logits: jnp.ndarray) -> jnp.ndarray:
+        if self.vocab_padded == self.cfg.vocab_size:
+            return logits
+        col = jnp.arange(self.vocab_padded)
+        return jnp.where(col < self.cfg.vocab_size, logits,
+                         jnp.asarray(-1e30, logits.dtype))
+
+    def specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        s: Dict[str, Any] = {
+            "embed": nn.embedding_specs(),
+            "final_norm": nn.norm_specs(cfg.norm),
+        }
+        layers = {}
+        for i, desc in enumerate(self.pattern):
+            ls = self._layer_specs(desc)
+            layers[f"pos{i}"] = jax.tree.map(
+                lambda t: (None,) + tuple(t), ls,
+                is_leaf=lambda t: isinstance(t, tuple))
+        s["layers"] = layers
+        if not cfg.tie_embeddings:
+            s["lm_head"] = {"w": ("embed", "vocab")}
+        return s
+
+    # --------------------------------------------------------------- forward
+    def _apply_mixer(self, desc: LayerDesc, p, h, *, cos, sin, prefix_len,
+                     encoder_out, window):
+        cfg = self.cfg
+        if desc.mixer == "attn":
+            return attn.attention_forward(
+                p["mix"], h, self.dims, cos=cos, sin=sin, causal=True,
+                window=window, prefix_len=prefix_len, block_q=self.block_q)
+        if desc.mixer == "mla":
+            return attn.mla_forward(p["mix"], h, cfg,
+                                    positions=jnp.arange(h.shape[1]),
+                                    block_q=self.block_q)
+        if desc.mixer == "mamba":
+            return ssm_mod.mamba_mix(p["mix"], h, cfg)
+        if desc.mixer == "mlstm":
+            return xlstm_mod.mlstm_mix(p["mix"], h, cfg, self.tp)
+        if desc.mixer == "slstm":
+            return xlstm_mod.slstm_mix(p["mix"], h, cfg, self.tp)
+        raise ValueError(desc.mixer)
+
+    def _block(self, layer_params, x, *, cos, sin, prefix_len, encoder_out,
+               window, train):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        for i, desc in enumerate(self.pattern):
+            p = layer_params[f"pos{i}"]
+            h = nn.apply_norm(p["norm1"], x, kind=cfg.norm, eps=cfg.norm_eps)
+            # (measured in §Perf: explicit Megatron AG/RS boundary
+            # constraints here EMIT MORE collectives than GSPMD's own
+            # propagation from the residual constraint — refuted, reverted)
+            h = self._apply_mixer(desc, p, h, cos=cos, sin=sin,
+                                  prefix_len=prefix_len,
+                                  encoder_out=encoder_out, window=window)
+            x = lshard(x + h, "batch", "seq_sp", None)
+            if desc.cross:
+                hc = nn.apply_norm(p["norm_cross"], x, kind=cfg.norm,
+                                   eps=cfg.norm_eps)
+                kv_k = nn.linear(p["cross"]["wk"], encoder_out)
+                kv_v = nn.linear(p["cross"]["wv"], encoder_out)
+                hc = attn.attention_forward(
+                    p["cross"], hc, self.dims, cos=None, sin=None,
+                    causal=False, kv_override=(kv_k, kv_v),
+                    block_q=self.block_q)
+                x = lshard(x + hc, "batch", "seq_sp", None)
+            if desc.ffn != "none":
+                h = nn.apply_norm(p["norm2"], x, kind=cfg.norm,
+                                  eps=cfg.norm_eps)
+                if desc.ffn == "moe":
+                    h, a = moe_mod.moe_apply(p["ffn"], h, cfg)
+                    aux = aux + a
+                else:
+                    h = nn.mlp(p["ffn"], h, act=cfg.act)
+                x = lshard(x + h, "batch", "seq_sp", None)
+        return x, aux
+
+    def forward(self, params, tokens: jnp.ndarray, *,
+                prefix_embeds: Optional[jnp.ndarray] = None,
+                encoder_out: Optional[jnp.ndarray] = None,
+                window_override: Optional[int] = None,
+                train: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """tokens (b,s) -> (logits (b,s_total,V), hidden (b,s_total,d), aux).
+
+        prefix_embeds (b,P,d): VLM patch embeddings (prefix-LM attention).
+        encoder_out (b,Se,d): whisper encoder states for cross-attention.
+        """
+        cfg = self.cfg
+        x = nn.embed(params["embed"], tokens, self.dtype)
+        prefix_len = None
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(self.dtype), x], axis=1)
+            prefix_len = prefix_embeds.shape[1]
+        s = x.shape[1]
+        if cfg.is_encdec:  # whisper: sinusoidal absolute positions, no rope
+            x = x + nn.sinusoidal_positions(s, cfg.d_model, self.dtype)[None]
+            cos = sin = None
+        else:
+            hd = cfg.resolved_head_dim if cfg.mla is None else 0
+            if cfg.mla is None:
+                cos, sin = nn.rope_cos_sin(jnp.arange(s), hd, cfg.rope_theta)
+            else:
+                cos = sin = None
+        x = lshard(x, "batch", "seq_sp", None)
+        window = window_override
+        if window is None:
+            window = 0  # training/prefill default: full causal attention
+        block = lambda lp, xx: self._block(
+            lp, xx, cos=cos, sin=sin, prefix_len=prefix_len,
+            encoder_out=encoder_out, window=window, train=train)
+        if self.remat:
+            block = jax.checkpoint(block,
+                                   policy=jax.checkpoint_policies.nothing_saveable)
+
+        def step(carry, layer_params):
+            x, aux = carry
+            x, a = block(layer_params, x)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+        hidden = nn.apply_norm(params["final_norm"], x, kind=cfg.norm,
+                               eps=cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = nn.unembed(params["embed"], hidden)
+        else:
+            logits = nn.linear(params["lm_head"], hidden)
+        logits = self._mask_padded_logits(logits)
+        logits = lshard(logits, "batch", "seq_sp", "vocab")
+        return logits, hidden, aux
+
+    # ----------------------------------------------------------------- cache
+    def effective_cache_len(self, seq_len: int) -> int:
+        if self.cfg.long_context == "sliding_window":
+            return min(seq_len, self.cfg.sliding_window)
+        return seq_len
+
+    def _layer_cache(self, desc: LayerDesc, batch: int, cache_len: int,
+                     encoder_len: int):
+        cfg = self.cfg
+        c: Dict[str, Any] = {}
+        if desc.mixer == "attn":
+            c["kv"] = attn.init_kv_cache(batch, cache_len, self.dims,
+                                         self.dtype)
+        elif desc.mixer == "mla":
+            c["kv"] = attn.init_mla_cache(batch, cache_len, cfg, self.dtype)
+        elif desc.mixer == "mamba":
+            c["state"] = ssm_mod.init_mamba_cache(batch, cfg, self.dtype)
+        elif desc.mixer == "mlstm":
+            c["state"] = xlstm_mod.init_mlstm_cache(batch, cfg, self.tp)
+        elif desc.mixer == "slstm":
+            c["state"] = xlstm_mod.init_slstm_cache(batch, cfg, self.tp)
+        if desc.cross:
+            d = self.dims
+            c["cross_kv"] = {
+                "k": jnp.zeros((batch, encoder_len, d.kv_padded, d.head_dim),
+                               self.dtype),
+                "v": jnp.zeros((batch, encoder_len, d.kv_padded, d.head_dim),
+                               self.dtype),
+            }
+        return c
+
+    def _layer_cache_specs(self, desc: LayerDesc):
+        c: Dict[str, Any] = {}
+        if desc.mixer == "attn":
+            c["kv"] = attn.kv_cache_specs()
+        elif desc.mixer == "mla":
+            c["kv"] = attn.mla_cache_specs()
+        elif desc.mixer == "mamba":
+            c["state"] = ssm_mod.mamba_cache_specs()
+        elif desc.mixer == "mlstm":
+            c["state"] = xlstm_mod.mlstm_cache_specs()
+        elif desc.mixer == "slstm":
+            c["state"] = xlstm_mod.slstm_cache_specs()
+        if desc.cross:
+            c["cross_kv"] = {"k": ("batch", None, "kv_heads", None),
+                             "v": ("batch", None, "kv_heads", None)}
+        return c
+
+    def init_cache(self, batch: int, seq_len: int, encoder_len: int = 0):
+        cache_len = self.effective_cache_len(seq_len)
+        out = {}
+        for i, desc in enumerate(self.pattern):
+            piece = self._layer_cache(desc, batch, cache_len, encoder_len)
+            out[f"pos{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.n_repeat,) + a.shape),
+                piece)
+        return out
+
+    def cache_specs(self):
+        out = {}
+        for i, desc in enumerate(self.pattern):
+            cs = self._layer_cache_specs(desc)
+            out[f"pos{i}"] = jax.tree.map(
+                lambda t: (None,) + tuple(t), cs,
+                is_leaf=lambda t: isinstance(t, tuple))
+        return out
+
+    # ---------------------------------------------------------------- decode
+    def decode_step(self, params, token: jnp.ndarray, cache, pos: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+        """token (b,1); pos (b,) absolute positions. Returns
+        (logits (b,1,V), hidden (b,1,d), new_cache)."""
+        cfg = self.cfg
+        x = nn.embed(params["embed"], token, self.dtype)
+        if cfg.is_encdec:
+            # per-token sinusoidal position (computed directly)
+            x = x + _sinusoid_at(pos, cfg.d_model, self.dtype)[:, None, :]
+        window = (cfg.sliding_window
+                  if cfg.long_context == "sliding_window" else 0)
+
+        def block(carry, xs):
+            x = carry
+            layer_params, layer_cache = xs
+            new_cache = {}
+            for i, desc in enumerate(self.pattern):
+                p = layer_params[f"pos{i}"]
+                c = layer_cache[f"pos{i}"]
+                nc: Dict[str, Any] = {}
+                h = nn.apply_norm(p["norm1"], x, kind=cfg.norm,
+                                  eps=cfg.norm_eps)
+                if desc.mixer == "attn":
+                    h, kv = attn.attention_decode(
+                        p["mix"], h, c["kv"], pos, self.dims,
+                        rope_theta=0.0 if cfg.is_encdec else cfg.rope_theta,
+                        window=window)
+                    nc["kv"] = kv
+                elif desc.mixer == "mla":
+                    h, kv = attn.mla_decode(p["mix"], h, c["kv"], pos, cfg)
+                    nc["kv"] = kv
+                elif desc.mixer == "mamba":
+                    h, st = ssm_mod.mamba_decode(p["mix"], h, c["state"], cfg)
+                    nc["state"] = st
+                elif desc.mixer == "mlstm":
+                    h, st = xlstm_mod.mlstm_decode(p["mix"], h, c["state"],
+                                                   cfg, self.tp)
+                    nc["state"] = st
+                elif desc.mixer == "slstm":
+                    h, st = xlstm_mod.slstm_decode(p["mix"], h, c["state"],
+                                                   cfg, self.tp)
+                    nc["state"] = st
+                x = x + h
+                if desc.cross:
+                    hc = nn.apply_norm(p["norm_cross"], x, kind=cfg.norm,
+                                       eps=cfg.norm_eps)
+                    hc = _cross_decode(p["cross"], hc, c["cross_kv"],
+                                       self.dims)
+                    nc["cross_kv"] = c["cross_kv"]
+                    x = x + hc
+                if desc.ffn != "none":
+                    h = nn.apply_norm(p["norm2"], x, kind=cfg.norm,
+                                      eps=cfg.norm_eps)
+                    if desc.ffn == "moe":
+                        h, _ = moe_mod.moe_apply(p["ffn"], h, cfg)
+                    else:
+                        h = nn.mlp(p["ffn"], h, act=cfg.act)
+                    x = x + h
+                new_cache[f"pos{i}"] = nc
+            return x, new_cache
+
+        x, new_cache = jax.lax.scan(block, x, (params["layers"], cache))
+        hidden = nn.apply_norm(params["final_norm"], x, kind=cfg.norm,
+                               eps=cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = nn.unembed(params["embed"], hidden)
+        else:
+            logits = nn.linear(params["lm_head"], hidden)
+        logits = self._mask_padded_logits(logits)
+        logits = lshard(logits, "batch", None, "vocab")
+        return logits, hidden, new_cache
+
+    # ---------------------------------------------------------------- prefill
+    def prefill(self, params, tokens: jnp.ndarray, *,
+                encoder_out: Optional[jnp.ndarray] = None,
+                prefix_embeds: Optional[jnp.ndarray] = None):
+        """Forward pass that also builds the decode cache.
+
+        Implemented (for the serving engine on small models) by running
+        `forward` and re-deriving per-layer kv/state via a second annotated
+        pass; for large-scale serving the dry-run lowers `decode_step` with a
+        pre-filled cache ShapeDtypeStruct, so prefill cost is the `forward`
+        cost. Returns (logits, hidden, cache).
+        """
+        raise NotImplementedError("use serving.engine.prefill")
+
+
+def _sinusoid_at(pos: jnp.ndarray, d: int, dtype) -> jnp.ndarray:
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0)
+                   * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = pos.astype(jnp.float32)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _cross_decode(p, x: jnp.ndarray, cross_kv, dims) -> jnp.ndarray:
+    """Single-token cross-attention against precomputed encoder K/V."""
+    b = x.shape[0]
+    q = nn.linear(p["wq"], x)                                # (b,1,Hp,hd)
+    k, v = cross_kv["k"], cross_kv["v"]                      # (b,Se,KVp,hd)
+    g = dims.group
+    qg = q.reshape(b, 1, dims.kv_padded, g, dims.head_dim)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(q.dtype),
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(dims.head_dim)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(x.dtype))
+    o = o.reshape(b, 1, dims.heads_padded * dims.head_dim)
+    return nn.linear(p["wo"], o)

@@ -1,0 +1,350 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix-memory, parallelizable)
+and sLSTM (scalar-memory, sequential) in the paper's 7:1 interleave.
+
+TPU adaptation:
+
+* **mLSTM** is computed in the exact *chunkwise-parallel* form (GLA-style):
+  a sequential `lax.scan` over chunks carrying the stabilized state
+  (C (dqk,dv), n (dqk), m scalar) per head, with fully parallel intra-chunk
+  (L x L) score tiles — the linear-attention analogue of flash attention's
+  tiling, matched to MXU-sized blocks.
+* **mLSTM shards the value/state dim**, not heads (4 monolithic dh=1024
+  heads are TP-hostile): C-state and value matmuls are 16-way local, q·k
+  scores replicate (4x cheaper than the state terms — §Perf math in
+  EXPERIMENTS.md). sLSTM keeps padded-head sharding for its block-diagonal
+  recurrence.
+* **sLSTM** keeps its per-head block-diagonal recurrence as a `lax.scan`
+  over time (inherently sequential; this is the paper's own trade-off).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import modules as nn
+
+
+def mlstm_dims(cfg: ModelConfig, tp: int) -> Tuple[int, int, int]:
+    """(heads, d_inner, head_dim).
+
+    §Perf (beyond-paper): mLSTM heads are NOT padded/sharded — with 4 heads
+    of dh=1024 on a 16-way model axis, head padding wastes 4x of every
+    tensor. Instead the VALUE/state dim shards over `model` ("mlstm_v"):
+    C-state (b,H,dhq,dhv/16) and all value-side matmuls are 16-way local;
+    only the (4x cheaper) q·k score terms replicate.
+    """
+    x = cfg.xlstm
+    d_in = int(x.mlstm_proj_factor * cfg.d_model)
+    return cfg.n_heads, d_in, d_in // cfg.n_heads
+
+
+# ----------------------------------------------------------------------------
+# mLSTM block
+# ----------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, tp: int, dtype):
+    d = cfg.d_model
+    H, d_in, hd = mlstm_dims(cfg, tp)
+    ks = jax.random.split(key, 8)
+    p = {
+        "wx": nn.init_linear(ks[0], d, (H, hd), dtype=dtype),
+        "wz": nn.init_linear(ks[1], d, (H, hd), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.xlstm.d_conv, H, hd),
+                                     jnp.float32) / 2.0).astype(dtype),
+        "conv_b": jnp.zeros((H, hd), dtype),
+        "wq": nn.init_linear(ks[3], hd, (hd,), dtype=dtype),
+        "wk": nn.init_linear(ks[4], hd, (hd,), dtype=dtype),
+        "wv": nn.init_linear(ks[5], hd, (hd,), dtype=dtype),
+        # scalar gates per head from the block input
+        "w_if": nn.init_linear(ks[6], d, (H, 2), bias=True, dtype=dtype),
+        "out_norm": {"scale": jnp.ones((H, hd), dtype)},
+        # 3-D so the value-dim sharding survives the output contraction
+        "wo": {"w": nn.truncnorm_init(ks[7], (H, hd, d), 1.0, dtype)},
+    }
+    # forget-gate bias init: strongly positive => long memory at init
+    b = p["w_if"]["b"]
+    p["w_if"]["b"] = b.at[:, 1].set(3.0)
+    return p
+
+
+def mlstm_specs():
+    return {
+        "wx": {"w": ("embed", None, "mlstm_v")},
+        "wz": {"w": ("embed", None, "mlstm_v")},
+        "conv_w": (None, None, "mlstm_v"),
+        "conv_b": (None, "mlstm_v"),
+        "wq": {"w": (None, None)},
+        "wk": {"w": (None, None)},
+        "wv": {"w": (None, "mlstm_v")},
+        "w_if": {"w": ("embed", None, None), "b": (None, None)},
+        "out_norm": {"scale": (None, "mlstm_v")},
+        "wo": {"w": (None, "mlstm_v", "embed")},
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, state, *, matmul_dtype=jnp.bfloat16):
+    """Exact-stabilized chunkwise mLSTM with mixed precision.
+
+    q,k,v (b,H,L,hd); li,lf (b,H,L) log input/forget gates (fp32).
+    state = (C (b,H,hd,hd), n (b,H,hd), m (b,H)) — fp32 carries.
+
+    §Perf: matmul operands run in bf16 (fp32 accumulation via
+    preferred_element_type) — gate math, stabilizers, and the carried state
+    stay fp32. Halves the intra-chunk HBM footprint and doubles effective
+    MXU rate; max-abs output delta vs full-fp32 measured < 2e-2 (test).
+    """
+    C0, n0, m0 = state
+    b, H, L, hd = q.shape
+    mm = lambda e, x, y: jnp.einsum(e, x.astype(matmul_dtype),
+                                    y.astype(matmul_dtype),
+                                    preferred_element_type=jnp.float32)
+    F = jnp.cumsum(lf, axis=-1)                              # inclusive
+    a = li - F                                               # (b,H,L)
+    m_intra = jax.lax.cummax(a, axis=2) + F
+    m = jnp.maximum(F + m0[..., None], m_intra)              # (b,H,L)
+    # intra-chunk decay matrix D[t,s] = exp(F_t - F_s + li_s - m_t), s<=t
+    logD = (F[..., :, None] - F[..., None, :] + li[..., None, :]
+            - m[..., :, None])
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(tri, jnp.exp(logD), 0.0)
+    scores = mm("bhtd,bhsd->bhts", q, k) / math.sqrt(hd)
+    w = scores * D
+    num = mm("bhts,bhsd->bhtd", w, v)
+    n_intra = mm("bhts,bhsd->bhtd", D, k) / math.sqrt(hd)
+    inter_scale = jnp.exp(F + m0[..., None] - m)             # (b,H,L)
+    num = num + mm("bhtd,bhde->bhte", q, C0) * inter_scale[..., None]
+    n = n_intra + n0[:, :, None] * inter_scale[..., None]
+    qn = jnp.abs(jnp.einsum("bhtd,bhtd->bht", q, n))
+    denom = jnp.maximum(qn, jnp.exp(-m))
+    h = num / denom[..., None]
+    # carry to next chunk
+    mL = m[..., -1]
+    gL = jnp.exp(F[..., -1:] - F + li - mL[..., None])       # (b,H,L)
+    CL = (C0 * jnp.exp(F[..., -1] + m0 - mL)[..., None, None]
+          + mm("bhld,bhle->bhde", (k / math.sqrt(hd)) * gL[..., None], v))
+    nL = (n0 * jnp.exp(F[..., -1] + m0 - mL)[..., None]
+          + jnp.sum((k / math.sqrt(hd)) * gL[..., None], axis=2))
+    return h, (CL, nL, mL)
+
+
+def mlstm_mix(p, x: jnp.ndarray, cfg: ModelConfig, tp: int, *,
+              chunk: int = 256, matmul_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Full-sequence mLSTM block core. x (b,s,d)."""
+    from repro.sharding import lshard
+    Hp, d_in, hd = mlstm_dims(cfg, tp)
+    b, s, _ = x.shape
+    xi = nn.linear(p["wx"], x)                               # (b,s,H,hd)
+    xi = lshard(xi, "batch", None, None, "mlstm_v")
+    z = nn.linear(p["wz"], x)
+    z = lshard(z, "batch", None, None, "mlstm_v")
+    # causal depthwise conv over time per (head, dim)
+    d_conv = p["conv_w"].shape[0]
+    xp = jnp.pad(xi, ((0, 0), (d_conv - 1, 0), (0, 0), (0, 0)))
+    xc = sum(xp[:, j:j + s] * p["conv_w"][j][None, None].astype(x.dtype)
+             for j in range(d_conv)) + p["conv_b"][None, None].astype(x.dtype)
+    xc = jax.nn.silu(xc)
+    # q,k need the full head dim (scores replicate over model — measured
+    # cheaper than padding heads 4->16; see EXPERIMENTS.md §Perf).
+    # kept in model dtype through the chunk scan (fp32 q/k doubled the
+    # saved-activation footprint — §Perf iteration)
+    q = nn.linear(p["wq"], lshard(xc, "batch", None, None, None))
+    k = nn.linear(p["wk"], lshard(xc, "batch", None, None, None))
+    v = nn.linear(p["wv"], xi)
+    v = lshard(v, "batch", None, None, "mlstm_v")
+    gates = nn.linear(p["w_if"], x).astype(jnp.float32)      # (b,s,H,2)
+    li = gates[..., 0]
+    lf = jax.nn.log_sigmoid(gates[..., 1])
+    # to (b,H,s,hd)
+    tr = lambda t: t.swapaxes(1, 2)
+    q, k, v = tr(q), tr(k), tr(v)
+    li, lf = li.swapaxes(1, 2), lf.swapaxes(1, 2)
+    L = min(chunk, s)
+    n_chunks = (s + L - 1) // L
+    pad = n_chunks * L - s
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                   for t in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, 0), (0, pad)))
+        lf = jnp.pad(lf, ((0, 0), (0, 0), (0, pad)))
+
+    def step(state, args):
+        qc, kc, vc, lic, lfc = args
+        h, state = _mlstm_chunk(qc, kc, vc, lic, lfc, state,
+                                matmul_dtype=matmul_dtype)
+        return state, h
+
+    chunked = lambda t: t.reshape(b, Hp, n_chunks, L, *t.shape[3:]).swapaxes(0, 2).swapaxes(1, 2)
+    # -> (n_chunks, b, H, L, ...)
+    state0 = (jnp.zeros((b, Hp, hd, hd), jnp.float32),
+              jnp.zeros((b, Hp, hd), jnp.float32),
+              jnp.full((b, Hp), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(step, state0,
+                         (chunked(q), chunked(k), chunked(v),
+                          chunked(li), chunked(lf)))
+    h = hs.swapaxes(0, 1).swapaxes(1, 2).reshape(b, Hp, n_chunks * L, hd)
+    h = h[:, :, :s].swapaxes(1, 2)                           # (b,s,H,hd)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6)
+    h = (h * p["out_norm"]["scale"][None, None].astype(jnp.float32)).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    h = lshard(h, "batch", None, None, "mlstm_v")
+    # 3-D contraction keeps the value-dim sharding local until the psum
+    return jnp.einsum("bsnd,nde->bse", h, p["wo"]["w"].astype(h.dtype))
+
+
+def init_mlstm_cache(batch: int, cfg: ModelConfig, tp: int) -> dict:
+    Hp, d_in, hd = mlstm_dims(cfg, tp)
+    d_conv = cfg.xlstm.d_conv
+    return {
+        "C": jnp.zeros((batch, Hp, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, Hp, hd), jnp.float32),
+        "m": jnp.full((batch, Hp), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, Hp, hd), jnp.float32),
+    }
+
+
+def mlstm_cache_specs() -> dict:
+    return {"C": ("batch", None, None, "mlstm_v"),
+            "n": ("batch", None, None),
+            "m": ("batch", None),
+            "conv": ("batch", None, None, "mlstm_v")}
+
+
+def mlstm_decode(p, x: jnp.ndarray, cache: dict, cfg: ModelConfig, tp: int
+                 ) -> Tuple[jnp.ndarray, dict]:
+    """Single-token recurrent mLSTM step. x (b,1,d)."""
+    Hp, d_in, hd = mlstm_dims(cfg, tp)
+    b = x.shape[0]
+    xi = nn.linear(p["wx"], x)[:, 0]                         # (b,Hp,hd)
+    z = nn.linear(p["wz"], x)[:, 0]
+    d_conv = p["conv_w"].shape[0]
+    hist = jnp.concatenate([cache["conv"].astype(x.dtype), xi[:, None]], axis=1)
+    xc = jnp.einsum("bjhd,jhd->bhd", hist, p["conv_w"].astype(x.dtype))
+    xc = jax.nn.silu(xc + p["conv_b"][None].astype(x.dtype))
+    q = nn.linear(p["wq"], xc).astype(jnp.float32)
+    k = nn.linear(p["wk"], xc).astype(jnp.float32) / math.sqrt(hd)
+    v = nn.linear(p["wv"], xi).astype(jnp.float32)
+    gates = nn.linear(p["w_if"], x)[:, 0].astype(jnp.float32)
+    li = gates[..., 0]
+    lf = jax.nn.log_sigmoid(gates[..., 1])
+    C0, n0, m0 = cache["C"], cache["n"], cache["m"]
+    m = jnp.maximum(lf + m0, li)
+    fg = jnp.exp(lf + m0 - m)[..., None]
+    ig = jnp.exp(li - m)[..., None]
+    C = C0 * fg[..., None] + ig[..., None] * k[..., :, None] * v[..., None, :]
+    n = n0 * fg + ig * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    qn = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))
+    h = num / jnp.maximum(qn, jnp.exp(-m))[..., None]
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6)
+    h = (h * p["out_norm"]["scale"][None].astype(jnp.float32)).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bnd,nde->be", h, p["wo"]["w"].astype(h.dtype))[:, None]
+    new_conv = hist[:, 1:].astype(jnp.float32)
+    return out, {"C": C, "n": n, "m": m, "conv": new_conv}
+
+
+# ----------------------------------------------------------------------------
+# sLSTM block
+# ----------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, tp: int, dtype):
+    d = cfg.d_model
+    Hp = ((cfg.n_heads + tp - 1) // tp) * tp if cfg.n_heads % tp else cfg.n_heads
+    hd = d // cfg.n_heads
+    ks = jax.random.split(key, 4)
+    real = (jnp.arange(Hp) < cfg.n_heads).astype(dtype)
+    p = {
+        # z,i,f,o input projections: (d, Hp, 4*hd)
+        "wx": nn.init_linear(ks[0], d, (Hp, 4 * hd), bias=True, dtype=dtype),
+        # per-head recurrent block-diagonal (Hp, hd, 4*hd)
+        "r": (jax.random.normal(ks[1], (Hp, hd, 4 * hd), jnp.float32)
+              / math.sqrt(hd)).astype(dtype),
+        "out_norm": {"scale": jnp.ones((Hp, hd), dtype)},
+        "wo": nn.init_linear(ks[2], Hp * hd, d, dtype=dtype),
+    }
+    b = p["wx"]["b"].reshape(Hp, 4, hd)
+    p["wx"]["b"] = b.at[:, 2].set(3.0).reshape(Hp, 4 * hd)   # forget bias
+    p["wx"]["w"] = p["wx"]["w"] * real[None, :, None]
+    p["r"] = p["r"] * real[:, None, None]
+    p["wo"]["w"] = p["wo"]["w"] * jnp.repeat(real, hd)[:, None]
+    return p
+
+
+def slstm_specs():
+    return {
+        "wx": {"w": ("embed", "heads", None), "b": ("heads", None)},
+        "r": ("heads", None, None),
+        "out_norm": {"scale": ("heads", None)},
+        "wo": {"w": ("heads", "embed")},
+    }
+
+
+def _slstm_cell(p, xg: jnp.ndarray, state):
+    """xg (b,Hp,4*hd) pre-activation input projections; one time step."""
+    h0, c0, n0, m0 = state                                   # (b,Hp,hd)x3,(b,Hp,hd)
+    Hp, hd = h0.shape[1], h0.shape[2]
+    rec = jnp.einsum("bhd,hde->bhe", h0, p["r"].astype(h0.dtype))
+    g = (xg + rec).astype(jnp.float32).reshape(-1, Hp, 4, hd)
+    z = jnp.tanh(g[:, :, 0])
+    li = g[:, :, 1]
+    lf = jax.nn.log_sigmoid(g[:, :, 2])
+    o = jax.nn.sigmoid(g[:, :, 3])
+    m = jnp.maximum(lf + m0, li)
+    ig = jnp.exp(li - m)
+    fg = jnp.exp(lf + m0 - m)
+    c = fg * c0 + ig * z
+    n = fg * n0 + ig
+    h = o * c / jnp.maximum(n, 1e-6)
+    return (h.astype(h0.dtype), c, n, m)
+
+
+def slstm_mix(p, x: jnp.ndarray, cfg: ModelConfig, tp: int) -> jnp.ndarray:
+    """Sequential sLSTM over the sequence. x (b,s,d)."""
+    b, s, d = x.shape
+    Hp = p["r"].shape[0]
+    hd = p["r"].shape[1]
+    xg = nn.linear(p["wx"], x)                               # (b,s,Hp,4hd)
+    state = (jnp.zeros((b, Hp, hd), x.dtype),
+             jnp.zeros((b, Hp, hd), jnp.float32),
+             jnp.zeros((b, Hp, hd), jnp.float32),
+             jnp.zeros((b, Hp, hd), jnp.float32))
+
+    def step(st, xt):
+        st = _slstm_cell(p, xt, st)
+        return st, st[0]
+
+    _, hs = jax.lax.scan(step, state, xg.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(jnp.float32)                # (b,s,Hp,hd)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6)
+    h = (h * p["out_norm"]["scale"][None, None].astype(jnp.float32)).astype(x.dtype)
+    return nn.linear(p["wo"], h.reshape(b, s, Hp * hd))
+
+
+def init_slstm_cache(batch: int, cfg: ModelConfig, tp: int) -> dict:
+    Hp = ((cfg.n_heads + tp - 1) // tp) * tp if cfg.n_heads % tp else cfg.n_heads
+    hd = cfg.d_model // cfg.n_heads
+    z = lambda: jnp.zeros((batch, Hp, hd), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(), "m": z()}
+
+
+def slstm_cache_specs() -> dict:
+    names = ("batch", "heads", None)
+    return {"h": names, "c": names, "n": names, "m": names}
+
+
+def slstm_decode(p, x: jnp.ndarray, cache: dict, cfg: ModelConfig, tp: int
+                 ) -> Tuple[jnp.ndarray, dict]:
+    b = x.shape[0]
+    Hp, hd = p["r"].shape[0], p["r"].shape[1]
+    xg = nn.linear(p["wx"], x)[:, 0]                         # (b,Hp,4hd)
+    state = (cache["h"].astype(x.dtype), cache["c"], cache["n"], cache["m"])
+    h, c, n, m = _slstm_cell(p, xg, state)
+    hf = h.astype(jnp.float32)
+    hf = hf * jax.lax.rsqrt(jnp.mean(hf * hf, -1, keepdims=True) + 1e-6)
+    hf = (hf * p["out_norm"]["scale"][None].astype(jnp.float32)).astype(x.dtype)
+    out = nn.linear(p["wo"], hf.reshape(b, Hp * hd))[:, None, :]
+    return out, {"h": h.astype(jnp.float32), "c": c, "n": n, "m": m}

@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw_init, adamw_update, AdamWState  # noqa: F401
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine  # noqa: F401
+from repro.optim.clip import clip_by_global_norm, global_norm  # noqa: F401

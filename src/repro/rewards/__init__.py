@@ -1,0 +1,1 @@
+from repro.rewards.reward_model import RewardModel, VerifierReward  # noqa: F401

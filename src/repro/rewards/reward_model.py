@@ -1,0 +1,90 @@
+"""Reward models (paper's r(x, y)).
+
+* `VerifierReward` — binary programmatic verifier (Math/Code analogue:
+  exact-match / unit-test oracle from the task suite).
+* `RewardModel`    — a scalar-head LM (OffsetBias-RM analogue): pools the
+  final hidden state over (query, response) and projects to a score.
+  Trained with Bradley-Terry pairwise loss or MSE regression on
+  synthetic preference data.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.models import modules as nn
+
+
+@dataclass
+class VerifierReward:
+    """check_fn(query, response_tokens) -> bool."""
+    check_fn: Callable
+
+    def __call__(self, query, responses: Sequence) -> np.ndarray:
+        return np.asarray([1.0 if self.check_fn(query, r) else 0.0
+                           for r in responses])
+
+
+class RewardModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"lm": self.model.init(k1)["lm"],
+                "head": nn.init_linear(k2, self.cfg.d_model, 1, bias=True)}
+
+    def score(self, params, tokens: jnp.ndarray,
+              mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """tokens (b, s) query+SEP+response -> scalar scores (b,)."""
+        _, hidden, _ = self.model.forward({"lm": params["lm"]}, tokens)
+        if mask is None:
+            pooled = hidden[:, -1]
+        else:
+            m = mask.astype(hidden.dtype)[..., None]
+            pooled = (hidden * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+        return nn.linear(params["head"], pooled.astype(jnp.float32))[:, 0]
+
+    def bt_loss(self, params, tok_chosen, tok_rejected) -> jnp.ndarray:
+        """Bradley-Terry pairwise preference loss."""
+        s_c = self.score(params, tok_chosen)
+        s_r = self.score(params, tok_rejected)
+        return jnp.mean(jax.nn.softplus(-(s_c - s_r)))
+
+    def mse_loss(self, params, tokens, targets) -> jnp.ndarray:
+        return jnp.mean((self.score(params, tokens)
+                         - targets.astype(jnp.float32)) ** 2)
+
+    def train(self, key, tokens: np.ndarray, targets: np.ndarray, *,
+              steps: int = 300, lr: float = 1e-3, batch: int = 64):
+        """MSE regression training on (sequence, reward) pairs."""
+        from repro.optim import adamw_init, adamw_update
+
+        params = self.init(key)
+        opt = adamw_init(params)
+        tok = jnp.asarray(tokens)
+        tgt = jnp.asarray(targets, jnp.float32)
+        rng = np.random.default_rng(0)
+
+        @jax.jit
+        def step(params, opt, idx):
+            loss, g = jax.value_and_grad(self.mse_loss)(params, tok[idx],
+                                                        tgt[idx])
+            params, opt = adamw_update(params, g, opt, lr=lr)
+            return params, opt, loss
+
+        hist = []
+        for s in range(steps):
+            idx = jnp.asarray(rng.integers(0, len(tok),
+                                           size=min(batch, len(tok))))
+            params, opt, loss = step(params, opt, idx)
+            if s % 50 == 0:
+                hist.append((s, float(loss)))
+        return params, hist

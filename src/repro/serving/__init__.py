@@ -1,0 +1,2 @@
+from repro.serving.engine import GenerationResult, ServingEngine, prefill  # noqa: F401
+from repro.serving.scheduler import AdaptiveScheduler, ServeBatchResult  # noqa: F401

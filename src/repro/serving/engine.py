@@ -1,0 +1,121 @@
+"""Serving engine: cache-based prefill + sampling decode.
+
+Prefill is a `lax.scan` of the model's decode_step over prompt positions —
+one jitted program that fills the real KV/state caches (so the decode path
+is exercised end-to-end and prefill==forward equivalence is testable).
+Generation continues the same scan with temperature sampling.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import Model
+
+
+def _one_step(model: Model, params, token, cache, pos):
+    logits, hidden, cache = model.decode_step(params, token, cache, pos)
+    return logits[:, 0], hidden[:, 0], cache
+
+
+@functools.partial(jax.jit, static_argnames=("model", "cache_len"))
+def prefill(model: Model, params, prompts: jnp.ndarray, cache_len: int):
+    """prompts (b, sp) -> (next_logits (b,V), last_hidden (b,d), cache).
+
+    Scans decode_step over the prompt; the cache is left positioned at
+    pos = sp - 1 (the next generated token writes slot sp).
+    """
+    b, sp = prompts.shape
+    cache = model.init_cache(b, cache_len)
+
+    def step(carry, t):
+        cache = carry
+        token = jax.lax.dynamic_slice_in_dim(prompts, t, 1, axis=1)
+        pos = jnp.full((b,), t, jnp.int32)
+        logits, hidden, cache = _one_step(model, params, token, cache, pos)
+        return cache, (logits, hidden)
+
+    cache, (all_logits, all_hidden) = jax.lax.scan(
+        step, cache, jnp.arange(sp))
+    return all_logits[-1], all_hidden[-1], cache
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("model", "max_new", "temperature_zero"))
+def generate_from_cache(model: Model, params, cache, first_logits,
+                        start_pos: jnp.ndarray, key, *, max_new: int,
+                        temperature: float = 1.0,
+                        temperature_zero: bool = False):
+    """Sample max_new tokens continuing from a prefilled cache."""
+    b = first_logits.shape[0]
+
+    def sample(logits, k):
+        if temperature_zero:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(k, logits / temperature, -1).astype(
+            jnp.int32)
+
+    def step(carry, i):
+        cache, logits, key = carry
+        key, sub = jax.random.split(key)
+        tok = sample(logits, sub)
+        pos = start_pos + 1 + i
+        new_logits, _, cache = _one_step(model, params, tok[:, None], cache,
+                                         pos.astype(jnp.int32))
+        return (cache, new_logits, key), tok
+
+    (_, _, _), toks = jax.lax.scan(step, (cache, first_logits, key),
+                                   jnp.arange(max_new))
+    return toks.swapaxes(0, 1)          # (b, max_new)
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray                   # (b, max_new)
+    probe_hidden: np.ndarray             # (b, d) prefill last-token hidden
+
+
+class ServingEngine:
+    """Batched sampling over a fixed model; prompts must share a length."""
+
+    def __init__(self, model: Model, params, *, max_new: int = 16,
+                 temperature: float = 0.7):
+        self.model = model
+        self.params = params
+        self.max_new = max_new
+        self.temperature = temperature
+
+    def generate(self, prompts: np.ndarray, *, n_samples: int = 1,
+                 seed: int = 0, temperature: Optional[float] = None
+                 ) -> GenerationResult:
+        """prompts (b, sp); returns (b * n_samples, max_new) tokens,
+        sample-major per query: row i*n_samples+j = sample j of query i."""
+        temp = self.temperature if temperature is None else temperature
+        b, sp = prompts.shape
+        cache_len = sp + self.max_new + 1
+        logits, hidden, cache = prefill(self.model, self.params,
+                                        jnp.asarray(prompts), cache_len)
+        if n_samples > 1:
+            logits = jnp.repeat(logits, n_samples, axis=0)
+            # cache leaves are layer-stacked: (n_repeat, batch, ...)
+            cache = jax.tree.map(lambda x: jnp.repeat(x, n_samples, axis=1),
+                                 cache)
+        start = jnp.full((b * n_samples,), sp - 1, jnp.int32)
+        toks = generate_from_cache(
+            self.model, self.params, cache, logits, start,
+            jax.random.PRNGKey(seed), max_new=self.max_new,
+            temperature=temp, temperature_zero=(temp == 0.0))
+        return GenerationResult(tokens=np.asarray(toks),
+                                probe_hidden=np.asarray(hidden, np.float32))
+
+    def probe_features(self, prompts: np.ndarray) -> np.ndarray:
+        """Last-token hidden states only (the difficulty probe's input) —
+        no decoding at all, matching the paper's 'free' predictor."""
+        _, hidden, _ = prefill(self.model, self.params, jnp.asarray(prompts),
+                               prompts.shape[1] + 1)
+        return np.asarray(hidden, np.float32)

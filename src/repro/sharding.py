@@ -1,0 +1,131 @@
+"""Logical-axis sharding: modules name axes logically; a per-run rule set maps
+logical names to mesh axes (MaxText/flax "logical axis rules" pattern, built
+from scratch — flax is not available here).
+
+Modules call ``lshard(x, "batch", "seq_sp", None)``; outside a mesh context
+this is a no-op, so smoke tests and CPU benchmarks never touch device state.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _ctx():
+    if not hasattr(_state, "stack"):
+        _state.stack = []
+    return _state.stack
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Dict[str, Union[str, Tuple[str, ...], None]]):
+    """Activate a (mesh, logical->mesh-axis) mapping for lshard/lspec calls."""
+    _ctx().append((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        _ctx().pop()
+
+
+def current_rules() -> Optional[Tuple[Optional[Mesh], Dict]]:
+    stack = _ctx()
+    return stack[-1] if stack else None
+
+
+def logical_spec(names: Sequence[Logical],
+                 rules: Optional[Dict] = None) -> P:
+    """Resolve a tuple of logical axis names to a PartitionSpec."""
+    if rules is None:
+        cur = current_rules()
+        rules = cur[1] if cur else {}
+    out = []
+    used = set()
+    for nm in names:
+        if nm is None:
+            out.append(None)
+            continue
+        axes = rules.get(nm)
+        if axes is None:
+            out.append(None)
+        else:
+            if isinstance(axes, str):
+                axes = (axes,)
+            axes = tuple(a for a in axes if a not in used)
+            used.update(axes)
+            if not axes:
+                out.append(None)
+            elif len(axes) == 1:
+                out.append(axes[0])
+            else:
+                out.append(tuple(axes))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def lshard(x: jax.Array, *names: Logical) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op without rules/mesh)."""
+    cur = current_rules()
+    if cur is None:
+        return x
+    mesh, rules = cur
+    if mesh is None:
+        return x
+    spec = logical_spec(names, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_tree_to_shardings(mesh: Mesh, spec_tree, rules: Dict):
+    """Map a pytree of logical-name tuples to NamedShardings."""
+    def _one(names):
+        return NamedSharding(mesh, logical_spec(names, rules))
+    return jax.tree.map(_one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) or x is None)
+
+
+def default_rules(cfg, mesh: Mesh) -> Dict[str, Union[str, Tuple[str, ...], None]]:
+    """Per-arch logical->mesh mapping for the production meshes.
+
+    'model' shards heads/ff/vocab; batch shards over ('pod','data') when the
+    pod axis exists. Divisibility-dependent decisions (kv heads, experts) are
+    made here so module code stays shape-agnostic.
+    """
+    axes = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    tp = mesh.shape["model"] if "model" in axes else 1
+    rules: Dict[str, Union[str, Tuple[str, ...], None]] = {
+        "batch": batch_axes,
+        "seq_sp": "model",          # Megatron-SP residual stream
+        "heads": "model",           # q heads are padded to a multiple of tp
+        "embed": None,
+        "mlp": "model",
+        "vocab": "model",
+        "kv_seq": "model",          # decode KV caches shard the seq dim
+        "mamba_inner": "model",
+        "mlstm_v": "model",
+        "q_lora": None,
+        "kv_lora": None,
+    }
+    kv = getattr(cfg, "n_kv_heads", 0)
+    rules["kv_heads"] = "model" if (kv and kv % tp == 0) else None
+    moe = getattr(cfg, "moe", None)
+    if moe is not None:
+        if moe.n_experts % tp == 0:
+            rules["experts"] = "model"
+            rules["expert_ff"] = None
+        else:
+            rules["experts"] = None
+            rules["expert_ff"] = "model"
+    return rules
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m

@@ -1,0 +1,137 @@
+"""Allocator correctness: exactness vs brute force, property tests
+(hypothesis), jnp/np agreement, offline-policy behaviour."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import allocator as alloc
+from repro.core import marginal
+
+
+def brute_force(delta: np.ndarray, total: int) -> float:
+    """Optimal objective of Eq. 5 by enumeration (tiny instances)."""
+    n, B = delta.shape
+    best = -np.inf
+    pre = np.concatenate([np.zeros((n, 1)), np.cumsum(delta, 1)], axis=1)
+    for combo in itertools.product(range(B + 1), repeat=n):
+        if sum(combo) <= total:
+            best = max(best, sum(pre[i, b] for i, b in enumerate(combo)))
+    return best
+
+
+def objective(delta, b):
+    pre = np.concatenate([np.zeros((len(delta), 1)), np.cumsum(delta, 1)], 1)
+    return float(sum(pre[i, int(bi)] for i, bi in enumerate(b)))
+
+
+@given(st.lists(st.lists(st.floats(0, 1, width=32), min_size=3, max_size=3),
+                min_size=2, max_size=4),
+       st.integers(0, 12))
+@settings(max_examples=60, deadline=None)
+def test_greedy_matches_bruteforce_monotone(rows, total):
+    # sort each row descending => monotone marginals => greedy exact
+    delta = np.sort(np.asarray(rows, np.float64), axis=1)[:, ::-1]
+    b = alloc.greedy_allocate(delta, total)
+    assert b.sum() <= total
+    assert np.isclose(objective(delta, b), brute_force(delta, total),
+                      atol=1e-9)
+
+
+@given(st.lists(st.lists(st.floats(0, 1, width=32), min_size=3, max_size=3),
+                min_size=2, max_size=3),
+       st.integers(0, 9))
+@settings(max_examples=40, deadline=None)
+def test_greedy_nonmonotone_within_one_block(rows, total):
+    """With ironing, greedy is optimal up to one pooled block at the budget
+    boundary; verify objective is within the max single marginal."""
+    delta = np.asarray(rows, np.float64)
+    b = alloc.greedy_allocate(delta, total)
+    assert b.sum() <= total
+    opt = brute_force(delta, total)
+    gap = opt - objective(delta, b)
+    assert gap <= delta.max() * delta.shape[1] + 1e-9
+
+
+@given(st.lists(st.floats(0.0, 1.0, width=32), min_size=2, max_size=30),
+       st.integers(1, 64), st.integers(1, 16))
+@settings(max_examples=60, deadline=None)
+def test_binary_budget_and_prefix_properties(lams, bmax, avg_b):
+    lam = np.asarray(lams)
+    delta = marginal.binary_marginals(lam, bmax)
+    # binary marginals are monotone non-increasing
+    assert (np.diff(delta, axis=1) <= 1e-12).all()
+    total = avg_b * len(lam)
+    b = alloc.greedy_allocate(delta, total)
+    assert b.sum() <= total
+    assert (b >= 0).all() and (b <= bmax).all()
+    # threshold allocation agrees with greedy objective
+    b2 = alloc.allocate_threshold(delta, total, assume_monotone=True)
+    assert np.isclose(objective(delta, b), objective(delta, b2), atol=1e-9)
+
+
+def test_harder_queries_get_more_at_high_budget():
+    """Paper Fig. 6: at high budgets most compute goes to hard queries."""
+    lam = np.array([0.9, 0.5, 0.05])
+    delta = marginal.binary_marginals(lam, 128)
+    b_low = alloc.greedy_allocate(delta, 3)
+    b_high = alloc.greedy_allocate(delta, 3 * 64)
+    assert b_low[0] >= 1           # easy query served first at tiny budget
+    assert b_high[2] > b_high[0]   # hard query dominates at large budget
+
+
+def test_zero_success_gets_zero():
+    lam = np.array([0.0, 0.3])
+    delta = marginal.binary_marginals(lam, 16)
+    b = alloc.greedy_allocate(delta, 8)
+    assert b[0] == 0               # impossible query: default answer
+
+
+def test_b_min_respected():
+    lam = np.array([0.0, 0.3, 0.9])
+    delta = marginal.binary_marginals(lam, 8)
+    b = alloc.greedy_allocate(delta, 6, b_min=1)
+    assert (b >= 1).all()
+
+
+def test_iron_rows_properties():
+    rng = np.random.default_rng(0)
+    d = rng.normal(size=(20, 12))
+    ir = alloc.iron_rows(d)
+    assert np.allclose(ir.sum(1), d.sum(1))            # sum-preserving
+    assert (np.diff(ir, axis=1) <= 1e-9).all()         # non-increasing
+    # prefix sums dominate (concave hull)
+    assert (np.cumsum(ir, 1) >= np.cumsum(d, 1) - 1e-9).all()
+
+
+def test_iron_rows_jnp_matches_numpy():
+    rng = np.random.default_rng(1)
+    d = rng.normal(size=(8, 10))
+    a = alloc.iron_rows(d)
+    b = np.asarray(alloc.iron_rows_jnp(jnp.asarray(d)))
+    assert np.allclose(a, b, atol=1e-4)
+
+
+def test_offline_policy_budget_and_monotonicity():
+    rng = np.random.default_rng(2)
+    lam = rng.beta(0.6, 1.2, size=500)
+    delta = marginal.binary_marginals(lam, 32)
+    pol = alloc.build_offline_policy(delta, lam, avg_budget=4.0, n_bins=8)
+    b = pol(lam)
+    assert b.mean() <= 4.0 + 1e-9
+    # the policy maps harder (lower λ, up to the impossible cliff) bins to
+    # budgets; check it spends everything it can on positive-marginal bins
+    assert b.max() > b.min()
+
+
+def test_routing_topk_exact_fraction():
+    rng = np.random.default_rng(3)
+    pref = rng.uniform(size=100)
+    for f in (0.0, 0.25, 0.5, 1.0):
+        m = alloc.route_by_preference(pref, f)
+        assert m.sum() == int(round(f * 100))
+    # routed set is the top of the distribution
+    m = alloc.route_by_preference(pref, 0.3)
+    assert pref[m].min() >= pref[~m].max() - 1e-12

@@ -1,0 +1,54 @@
+"""HLO analyzer: FLOP counting with loop multipliers, on a controlled jit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze, parse_hlo
+
+
+def _hlo_of(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_dot_flops():
+    a = jnp.zeros((64, 128), jnp.float32)
+    b = jnp.zeros((128, 32), jnp.float32)
+    r = analyze(_hlo_of(lambda a, b: a @ b, a, b))
+    assert r["flops"] == 2 * 64 * 128 * 32
+
+
+def test_scan_multiplies_flops():
+    a = jnp.zeros((32, 32), jnp.float32)
+
+    def f(a):
+        def body(x, _):
+            return x @ a, None
+        x, _ = jax.lax.scan(body, a, None, length=7)
+        return x
+
+    r = analyze(_hlo_of(f, a))
+    # 7 iterations of one 32^3 matmul
+    assert r["flops"] == 7 * 2 * 32 ** 3
+
+
+def test_nested_scan_multiplies():
+    a = jnp.zeros((16, 16), jnp.float32)
+
+    def f(a):
+        def outer(x, _):
+            def inner(y, _):
+                return y @ a, None
+            y, _ = jax.lax.scan(inner, x, None, length=3)
+            return y, None
+        x, _ = jax.lax.scan(outer, a, None, length=5)
+        return x
+
+    r = analyze(_hlo_of(f, a))
+    assert r["flops"] == 5 * 3 * 2 * 16 ** 3
+
+
+def test_parse_hlo_computations():
+    hlo = _hlo_of(lambda x: jnp.sin(x) @ x, jnp.zeros((8, 8)))
+    comps = parse_hlo(hlo)
+    assert any(c.is_entry for c in comps.values())
+    assert sum(len(c.ops) for c in comps.values()) > 0

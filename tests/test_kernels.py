@@ -1,0 +1,92 @@
+"""Per-kernel allclose sweeps vs ref.py oracles (interpret mode), as the
+assignment requires: shapes x dtypes x masking variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,H,KV,hd,causal,window", [
+    (2, 256, 4, 2, 64, True, 0),
+    (1, 128, 4, 4, 32, True, 0),
+    (1, 256, 2, 1, 64, True, 96),     # MQA + sliding window
+    (2, 192, 4, 2, 64, False, 0),     # bidirectional (whisper encoder)
+    (1, 512, 8, 8, 128, True, 0),     # MXU-aligned full block
+])
+def test_flash_attention_allclose(b, s, H, KV, hd, causal, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, H, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, KV, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              interpret=True)
+    want = ops.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,S,H,KV,hd,block_k", [
+    (2, 512, 8, 2, 64, 128),
+    (1, 1024, 4, 1, 128, 256),
+    (3, 300, 6, 6, 32, 128),          # ragged final block
+])
+def test_decode_attention_allclose(b, S, H, KV, hd, block_k, dtype):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, H, hd), dtype)
+    k = jax.random.normal(ks[1], (b, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (b, S, KV, hd), dtype)
+    pos = jax.random.randint(ks[3], (b,), 0, S)
+    out = ops.decode_attention(q, k, v, pos, block_k=block_k, interpret=True)
+    want = ops.decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("b,s,d,n,chunk", [
+    (2, 128, 128, 16, 64),
+    (1, 256, 256, 8, 64),
+    (2, 64, 128, 4, 32),
+])
+def test_ssm_scan_allclose(b, s, d, n, chunk):
+    ks = jax.random.split(KEY, 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (b, s, d)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[1], (d, n)) * 0.3)
+    B = jax.random.normal(ks[2], (b, s, n))
+    C = jax.random.normal(ks[3], (b, s, n))
+    x = jax.random.normal(ks[4], (b, s, d))
+    y, hT = ops.ssm_scan(dt, A, B, C, x, chunk=chunk, d_block=128,
+                         interpret=True)
+    y_ref, hT_ref = ops.ssm_scan_ref(dt, A, B, C, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_ref),
+                               atol=2e-4, rtol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,V,block_v", [
+    (128, 1000, 256),                 # ragged vocab tail
+    (256, 4096, 1024),
+    (128, 50304, 8192),               # realistic LM vocab
+])
+def test_cross_entropy_allclose(n, V, block_v, dtype):
+    ks = jax.random.split(KEY, 2)
+    logits = jax.random.normal(ks[0], (n, V), dtype) * 4.0
+    labels = jax.random.randint(ks[1], (n,), 0, V)
+    out = ops.cross_entropy(logits, labels, block_rows=128, block_v=block_v,
+                            interpret=True)
+    want = ops.cross_entropy_ref(logits, labels)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5)

@@ -1,0 +1,97 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned architecture is instantiated as its REDUCED variant
+(<= 4 layers in interleaved families, d_model <= 256, <= 4 experts) and runs
+one forward pass + one train step on CPU, asserting output shapes and
+finiteness.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import build_model
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def _inputs(cfg, key, batch=2, seq=16):
+    ks = jax.random.split(key, 3)
+    batch_d = {
+        "tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab_size),
+    }
+    if cfg.family == "audio":
+        batch_d["frames"] = jax.random.normal(
+            ks[2], (batch, cfg.encoder.seq_len, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch_d["patches"] = jax.random.normal(
+            ks[2], (batch, 4, cfg.d_model), jnp.float32)
+    return batch_d
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch, rng):
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = _inputs(cfg, rng)
+    logits, hidden, aux = jax.jit(
+        lambda p, b: model.forward(p, b["tokens"], frames=b.get("frames"),
+                                   patches=b.get("patches")))(params, batch)
+    s_total = batch["tokens"].shape[1] + (
+        batch["patches"].shape[1] if "patches" in batch else 0)
+    assert logits.shape == (2, s_total, cfg.vocab_size)
+    assert hidden.shape == (2, s_total, cfg.d_model)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step_decreases_or_finite(arch, rng):
+    from repro.optim import adamw_init, adamw_update
+
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(rng)
+    batch = _inputs(cfg, rng)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=1e-3)
+        return params, opt_state, loss
+
+    opt_state = adamw_init(params)
+    params2, opt_state, loss0 = step(params, opt_state, batch)
+    _, _, loss1 = step(params2, opt_state, batch)
+    assert np.isfinite(float(loss0)) and np.isfinite(float(loss1)), arch
+    # one step on the same batch should not blow up
+    assert float(loss1) < float(loss0) + 1.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_runs(arch, rng):
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(rng)
+    b, S = 2, 32
+    cache = model.init_cache(b, S)
+    if cfg.is_encdec:
+        # fill cross-kv with zeros (stub); valid structurally
+        pass
+    token = jnp.zeros((b, 1), jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    logits, hidden, new_cache = jax.jit(model.decode_step)(
+        params, token, cache, pos)
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)

@@ -1,0 +1,134 @@
+"""Tests for §Perf beyond-paper features: W8A16 quantization and the
+mixed-precision / value-sharded mLSTM."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models import modules as nn
+
+
+def test_int8_linear_close_to_fp():
+    key = jax.random.PRNGKey(0)
+    pf = nn.init_linear(key, 64, 32, dtype=jnp.float32)
+    # quantize the SAME weight for a faithful comparison
+    w = pf["w"]
+    amax = jnp.max(jnp.abs(w), axis=0) + 1e-8
+    pq = {"w_q8": jnp.clip(jnp.round(w / amax * 127), -127, 127
+                           ).astype(jnp.int8),
+          "w_scale": (amax / 127)}
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    yf = nn.linear(pf, x)
+    yq = nn.linear(pq, x)
+    # int8 per-channel error bound: ~ (amax/127) * sqrt(d_in) levels
+    err = float(jnp.abs(yf - yq).max())
+    scale = float(jnp.abs(yf).max())
+    assert err < 0.05 * scale + 1e-3, (err, scale)
+
+
+def test_int8_model_forward_finite_and_close():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32")
+    cfg_q = dataclasses.replace(cfg, quant_int8=True)
+    m = build_model(cfg)
+    mq = build_model(cfg_q)
+    params_q = mq.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    lo, hid, _ = mq.forward(params_q, toks)
+    assert np.isfinite(np.asarray(lo, np.float32)).all()
+    # decode path too
+    cache = mq.init_cache(2, 24)
+    lo2, _, _ = mq.decode_step(params_q, toks[:, :1], cache,
+                               jnp.zeros((2,), jnp.int32))
+    assert np.isfinite(np.asarray(lo2, np.float32)).all()
+
+
+def test_int8_moe_close_to_fp():
+    """Expert-weight W8A16: quantized MoE output stays close to fp."""
+    import jax.numpy as jnp
+
+    from repro.models import moe as moe_mod
+
+    cfg = dataclasses.replace(get_config("grok-1-314b").reduced(),
+                              dtype="float32")
+    cfg_q = dataclasses.replace(cfg, quant_int8=True)
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.init_moe(key, cfg, jnp.float32)
+    pq = moe_mod.init_moe(key, cfg_q, jnp.float32)   # same underlying draws
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model)) * 0.5
+    y, _ = moe_mod.moe_apply(p, x, cfg)
+    yq, _ = moe_mod.moe_apply(pq, x, cfg_q)
+    denom = float(jnp.abs(y).max()) + 1e-6
+    assert float(jnp.abs(y - yq).max()) / denom < 0.1
+    assert np.isfinite(np.asarray(yq)).all()
+
+
+def test_mlstm_bf16_chunk_close_to_fp32():
+    """The §Perf mixed-precision claim: bf16 matmuls with fp32 accumulation
+    stay close to the all-fp32 reference."""
+    from repro.models.xlstm import _mlstm_chunk
+
+    rng = jax.random.PRNGKey(3)
+    ks = jax.random.split(rng, 5)
+    b, H, L, hd = 2, 2, 32, 64
+    q = jax.random.normal(ks[0], (b, H, L, hd))
+    k = jax.random.normal(ks[1], (b, H, L, hd))
+    v = jax.random.normal(ks[2], (b, H, L, hd))
+    li = jax.random.normal(ks[3], (b, H, L)) * 0.5
+    lf = jax.random.normal(ks[4], (b, H, L)) * 0.5
+    st = (jnp.zeros((b, H, hd, hd)), jnp.zeros((b, H, hd)),
+          jnp.full((b, H), -1e30))
+    h16, s16 = _mlstm_chunk(q, k, v, li, lf, st,
+                            matmul_dtype=jnp.bfloat16)
+    h32, s32 = _mlstm_chunk(q, k, v, li, lf, st,
+                            matmul_dtype=jnp.float32)
+    denom = float(jnp.abs(h32).max()) + 1e-6
+    assert float(jnp.abs(h16 - h32).max()) / denom < 2e-2
+
+
+def test_mlstm_chunked_equals_smaller_chunks():
+    """Chunk size must not change the function (exact chunkwise form)."""
+    import repro.models.xlstm as xl
+    from repro.configs import get_config
+
+    cfg = dataclasses.replace(get_config("xlstm-1.3b").reduced(),
+                              dtype="float32")
+    key = jax.random.PRNGKey(0)
+    p = xl.init_mlstm(key, cfg, tp=1, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    # exact in fp32
+    y_a = xl.mlstm_mix(p, x, cfg, tp=1, chunk=64, matmul_dtype=jnp.float32)
+    y_b = xl.mlstm_mix(p, x, cfg, tp=1, chunk=16, matmul_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_a), np.asarray(y_b),
+                               atol=2e-4, rtol=2e-4)
+    # bf16 matmuls: chunk-boundary rounding only (loose bound)
+    y_c = xl.mlstm_mix(p, x, cfg, tp=1, chunk=16)
+    assert float(jnp.abs(y_c - y_a).max()) < 0.3
+
+
+def test_mlstm_decode_matches_mix():
+    """Recurrent decode reproduces the chunked-parallel forward, step by
+    step (the prefill->decode handoff invariant)."""
+    import repro.models.xlstm as xl
+
+    cfg = dataclasses.replace(get_config("xlstm-1.3b").reduced(),
+                              dtype="float32")
+    p = xl.init_mlstm(jax.random.PRNGKey(0), cfg, tp=1, dtype=jnp.float32)
+    b, s = 1, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model)) * 0.5
+    # fp32 matmuls: the decode path is fp32, so compare like-for-like
+    y_par = xl.mlstm_mix(p, x, cfg, tp=1, chunk=256,
+                         matmul_dtype=jnp.float32)
+    cache = xl.init_mlstm_cache(b, cfg, tp=1)
+    outs = []
+    for t in range(s):
+        o, cache = xl.mlstm_decode(p, x[:, t:t + 1], cache, cfg, tp=1)
+        outs.append(o)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_par),
+                               atol=3e-2, rtol=3e-2)
