@@ -1,0 +1,152 @@
+"""Continuous-batching runtime vs batch-synchronous engine under a Poisson
+arrival stream with mixed adaptive budgets.
+
+Both systems replay the identical workload (same prompts, same per-request
+budgets b_i ~ {1..4}, same exponential inter-arrival gaps) in wall-clock
+time. The batch engine admits every queued arrival as one synchronous
+batch (single prefill — the patched path — then a barriered Σb_i-row
+decode), so each distinct (batch, fan-out) shape costs a fresh jit
+compile and late arrivals wait out the barrier. The runtime streams
+children through a fixed slot pool: one compiled decode program total,
+freed slots backfilled immediately.
+
+Reports tokens/sec and p50/p95 request latency for both, plus runtime
+slot occupancy.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import emit, save_result
+
+
+def _make_workload(n: int, vocab: int, width: int, *, mean_gap: float,
+                   seed: int):
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, vocab, size=(n, width)).astype(np.int32)
+    budgets = rng.integers(1, 5, size=n).astype(int)          # mixed 1..4
+    arrivals = np.cumsum(rng.exponential(mean_gap, size=n))
+    return prompts, budgets, arrivals
+
+
+def _run_batch_engine(engine, prompts, budgets, arrivals):
+    """Greedy batching baseline: serve everything that has arrived as one
+    synchronous batch, repeat until drained."""
+    n = len(prompts)
+    lat: List[float] = []
+    gen_tokens = 0
+    t0 = time.perf_counter()
+    i = 0
+    while i < n:
+        now = time.perf_counter() - t0
+        k = i
+        while k < n and arrivals[k] <= now:
+            k += 1
+        if k == i:
+            time.sleep(min(max(arrivals[i] - now, 0.0), 0.005))
+            continue
+        logits, _, cache, sp = engine.prefill_for_generate(prompts[i:k])
+        sel = np.repeat(np.arange(k - i), budgets[i:k])
+        engine.generate_from_prefill(cache, logits, sel, sp, seed=0)
+        done = time.perf_counter() - t0
+        lat.extend(done - arrivals[j] for j in range(i, k))
+        gen_tokens += int(budgets[i:k].sum()) * engine.max_new
+        i = k
+    wall = time.perf_counter() - t0
+    return dict(tokens_per_sec=gen_tokens / wall, wall_s=wall,
+                decode_tokens=gen_tokens,
+                latency_p50_s=float(np.percentile(lat, 50)),
+                latency_p95_s=float(np.percentile(lat, 95)))
+
+
+def _run_runtime(model, params, prompts, budgets, arrivals, *, n_slots,
+                 max_new, temperature, max_len):
+    from repro.serving import ContinuousBatchingRuntime
+
+    rt = ContinuousBatchingRuntime(
+        model, params, n_slots=n_slots, max_len=max_len, max_new=max_new,
+        temperature=temperature, seed=0)
+    n = len(prompts)
+    ids = []
+    t0 = time.perf_counter()
+    i = 0
+    while i < n or rt.pending():
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            ids.append(rt.submit(prompts[i], budget=int(budgets[i])))
+            i += 1
+        if rt.pending():
+            rt.step()
+        elif i < n:
+            time.sleep(min(max(arrivals[i] - now, 0.0), 0.005))
+    s = rt.metrics.summary()
+    # latency relative to *arrival*, matching the batch baseline (a submit
+    # can lag its arrival by up to one decode tick of the poll loop)
+    lat = [rt.requests[rid].done_t - (t0 + arrivals[j])
+           for j, rid in enumerate(ids)]
+    return dict(tokens_per_sec=s["tokens_per_sec"], wall_s=s["wall_s"],
+                decode_tokens=s["decode_tokens"],
+                latency_p50_s=float(np.percentile(lat, 50)),
+                latency_p95_s=float(np.percentile(lat, 95)),
+                occupancy=s["occupancy"])
+
+
+def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
+        n_slots: int = 8, mean_gap: float = 0.05, seed: int = 0) -> None:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import ServingEngine
+
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32", n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    engine = ServingEngine(model, params, max_new=max_new, temperature=1.0)
+    max_len = width + max_new + 1
+
+    prompts, budgets, arrivals = _make_workload(
+        n_requests, cfg.vocab_size, width, mean_gap=mean_gap, seed=seed)
+
+    # warm both drivers on a small all-at-once prefix so first-compile cost
+    # of the *common* shapes is off the clock. The batch engine still
+    # recompiles per distinct (batch, Σb) shape during the timed run —
+    # that is inherent to barriered batching, and the runtime's static
+    # shapes are the fix being measured.
+    warm = slice(0, 6)
+    _run_batch_engine(engine, prompts[warm], budgets[warm], np.zeros(6))
+    _run_runtime(model, params, prompts[warm], budgets[warm], np.zeros(6),
+                 n_slots=n_slots, max_new=max_new, temperature=1.0,
+                 max_len=max_len)
+
+    batch = _run_batch_engine(engine, prompts, budgets, arrivals)
+    cont = _run_runtime(model, params, prompts, budgets, arrivals,
+                        n_slots=n_slots, max_new=max_new, temperature=1.0,
+                        max_len=max_len)
+
+    for name, r in (("batch_engine", batch), ("continuous_runtime", cont)):
+        emit(f"serving/{name}/wall", r["wall_s"] * 1e6,
+             f"{r['tokens_per_sec']:.1f} tok/s")
+        emit(f"serving/{name}/latency_p50", r["latency_p50_s"] * 1e6,
+             f"p95={r['latency_p95_s']*1e3:.0f}ms")
+    emit("serving/continuous_runtime/occupancy", 0.0,
+         f"{cont['occupancy']:.2f}")
+    speedup = cont["tokens_per_sec"] / max(batch["tokens_per_sec"], 1e-9)
+    emit("serving/speedup", 0.0, f"{speedup:.2f}x tokens/sec")
+    save_result("bench_serving", dict(
+        batch=batch, runtime=cont, n_requests=n_requests, width=width,
+        max_new=max_new, n_slots=n_slots, mean_gap=mean_gap,
+        budgets_mean=float(np.mean(budgets)), speedup=speedup))
+    print(f"# continuous-batching vs batch: {speedup:.2f}x tokens/sec, "
+          f"p50 latency {batch['latency_p50_s']/max(cont['latency_p50_s'],1e-9):.2f}x lower")
+
+
+if __name__ == "__main__":
+    run()

@@ -14,9 +14,10 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_allocation, bench_allocator,
                             bench_bestofk, bench_chat, bench_predictor,
-                            bench_roofline, bench_routing)
+                            bench_roofline, bench_routing, bench_serving)
 
     sections = [
+        ("serving", bench_serving.run),
         ("allocator", bench_allocator.run),
         ("fig3_bestofk", bench_bestofk.run),
         ("fig4_chat", bench_chat.run),

@@ -17,7 +17,7 @@ import numpy as np
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
-    flat = jax.tree.flatten_with_path(tree)[0]
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
@@ -49,7 +49,7 @@ def load_checkpoint(path: str, like, *, shardings=None):
     ShapeDtypeStructs). If shardings (same-structure pytree) is given,
     leaves are device_put with them."""
     data = np.load(str(path) + ".npz")
-    flat_like = jax.tree.flatten_with_path(like)
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path_k, leaf in flat_like[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))

@@ -168,6 +168,63 @@ def allocate_threshold(delta, total_budget: int, *, b_min: int = 0,
 
 
 # ---------------------------------------------------------------------------
+# streaming (price-dual) allocation — for in-flight admission
+# ---------------------------------------------------------------------------
+
+def price_for_budget(delta_calib: np.ndarray, avg_budget: float, *,
+                     b_min: int = 0, iron: bool = True) -> float:
+    """Dual price λ* of Eq. 5 from a calibration set.
+
+    Greedy/threshold allocation admits exactly the units whose (ironed)
+    marginal is >= the value of the last unit inside the budget. Fixing
+    that *price* turns the batch-coupled allocation into a per-query rule
+    — b_i = len of the prefix of row i with Δ >= λ* — usable one request
+    at a time by a streaming scheduler. On the calibration distribution
+    the realized average budget matches avg_budget by construction.
+
+    b_min units per query are granted unconditionally by the consumer
+    (allocate_at_price's floor), so they are charged against the budget
+    here and excluded from pricing — pass the same b_min to both.
+
+    Pricing operates on the PAV-ironed (concave-hull) marginals: a single
+    threshold can only express monotone prefix rules, so for non-monotone
+    predicted rows the streaming allocation follows the hull, which can
+    differ from frontier `greedy_allocate` on raw marginals (they agree
+    exactly for monotone rows, e.g. the binary-λ "bce" predictor).
+    """
+    d = np.asarray(delta_calib, np.float64)
+    if iron:
+        d = iron_rows(d)
+    n, B = d.shape
+    base = min(b_min, B)
+    total = int(round(avg_budget * n)) - base * n
+    flat = np.sort(d[:, base:].reshape(-1))[::-1]
+    if total <= 0:
+        return float("inf")
+    if total >= flat.size:
+        return max(float(flat[-1]), 0.0) if flat.size else 0.0
+    return max(float(flat[total - 1]), 0.0)
+
+
+def allocate_at_price(delta: np.ndarray, price: float, *, b_min: int = 0,
+                      iron: bool = True) -> np.ndarray:
+    """Per-row streaming allocation at a fixed price: the longest prefix of
+    (ironed) positive marginals valued >= price, floored at b_min.
+    Batch-free: rows may be allocated one at a time as requests arrive.
+    Calibrate the price with the same b_min (see price_for_budget, incl.
+    the note on ironing vs frontier greedy for non-monotone rows)."""
+    d = np.asarray(delta, np.float64)
+    if d.ndim == 1:
+        d = d[None]
+    if iron:
+        d = iron_rows(d)
+    B = d.shape[1]
+    ok = (d >= price) & (d > 0)
+    b = np.cumprod(ok, axis=1).sum(axis=1)
+    return np.maximum(b, min(b_min, B)).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
 # offline (binned) policy — paper §3.2 "Offline allocation"
 # ---------------------------------------------------------------------------
 

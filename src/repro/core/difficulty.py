@@ -119,7 +119,7 @@ def init_lora_probe(key, base_params, d_model: int, d_out: int, *,
                     rank: int = 8):
     """LoRA params matching 2-D/3-D weight leaves named in _LORA_TARGETS,
     plus an MLP head on the final hidden state."""
-    flat = jax.tree.flatten_with_path(base_params)[0]
+    flat = jax.tree_util.tree_flatten_with_path(base_params)[0]
     lora: Dict[str, Any] = {}
     k = key
     for path, leaf in flat:

@@ -35,12 +35,38 @@ class AdaptivePolicy:
             return marginal.binary_marginals(pred, self.b_max)
         return np.asarray(pred)[:, : self.b_max]
 
+    def _offline_budgets(self, hidden: np.ndarray) -> np.ndarray:
+        pred = self.predict(hidden)
+        stat = pred if pred.ndim == 1 else pred[:, 0]
+        return np.minimum(self.offline(stat), self.b_max).astype(np.int64)
+
     def allocate(self, hidden: np.ndarray, avg_budget: float) -> np.ndarray:
         """Returns integer budgets (n,)."""
         if self.offline is not None:
-            pred = self.predict(hidden)
-            stat = pred if pred.ndim == 1 else pred[:, 0]
-            return np.minimum(self.offline(stat), self.b_max).astype(np.int64)
+            return self._offline_budgets(hidden)
         delta = self.marginals(hidden)
         total = int(round(avg_budget * len(delta)))
         return alloc.greedy_allocate(delta, total, b_min=self.b_min)
+
+    # ----------------------------------------------------------- streaming
+    def calibrate_price(self, hidden_calib: np.ndarray,
+                        avg_budget: float) -> float:
+        """Dual price λ* s.t. thresholding marginals at λ* spends
+        avg_budget per query on the calibration distribution (the b_min
+        floor is charged against the budget). Decouples allocation from
+        the batch: the serving runtime can then budget each request the
+        moment its probe prefill lands."""
+        return alloc.price_for_budget(self.marginals(hidden_calib),
+                                      avg_budget, b_min=self.b_min)
+
+    def allocate_streaming(self, hidden: np.ndarray,
+                           price: float) -> np.ndarray:
+        """Per-query budgets at a fixed price — batch-free (Eq. 5's dual
+        form). hidden may be a single row (d,) or a batch (n, d)."""
+        h = np.asarray(hidden)
+        if h.ndim == 1:
+            h = h[None]
+        if self.offline is not None:
+            return self._offline_budgets(h)
+        return alloc.allocate_at_price(self.marginals(h), price,
+                                       b_min=self.b_min)

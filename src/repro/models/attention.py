@@ -30,6 +30,7 @@ TPU adaptation highlights (see DESIGN.md):
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -271,11 +272,21 @@ def _write_slot(buf: jnp.ndarray, new: jnp.ndarray, slot: jnp.ndarray) -> jnp.nd
 
 def attention_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
                      dims: AttnDims, *, rope_theta: float = 0.0,
-                     window: int = 0) -> Tuple[jnp.ndarray, dict]:
+                     window: int = 0,
+                     use_pallas: Optional[bool] = None
+                     ) -> Tuple[jnp.ndarray, dict]:
     """x (b,1,d); pos (b,) current absolute position. Returns (out, cache').
 
     Full cache: slot = pos. Sliding window: ring buffer, slot = pos % W.
+
+    use_pallas (default: REPRO_DECODE_KERNEL=pallas) routes the attention
+    itself through the Pallas flash-decoding kernel — per-batch `pos`
+    validity masking matches the serving runtime's slot pool, where every
+    slot sits at a different position. Full-cache layouts only (the ring
+    buffer's modular validity rule is XLA-path only).
     """
+    if use_pallas is None:
+        use_pallas = os.environ.get("REPRO_DECODE_KERNEL", "") == "pallas"
     b = x.shape[0]
     S = cache["k"].shape[1]
     q = nn.linear(p["wq"], x)                               # (b,1,Hp,hd)
@@ -290,6 +301,12 @@ def attention_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     cv = _write_slot(cache["v"], v, slot)
     ck = lshard(ck, "batch", "kv_seq", None, None)
     cv = lshard(cv, "batch", "kv_seq", None, None)
+    if use_pallas and window == 0:
+        from repro.kernels import ops
+        # pre-grouped head layout == the kernel's (KV, groups) reshape
+        o = ops.decode_attention(q[:, 0], ck, cv, pos)      # (b,Hp,hd)
+        o = o.reshape(b, 1, dims.heads_padded * dims.head_dim)
+        return nn.linear(p["wo"], o), {"k": ck, "v": cv}
     # grouped scores against the compact (un-expanded) cache
     g = dims.group
     qg = q.reshape(b, 1, dims.kv_padded, g, dims.head_dim)

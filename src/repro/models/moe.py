@@ -32,6 +32,12 @@ from repro.configs.base import ModelConfig
 from repro.models import modules as nn
 from repro.sharding import current_rules, logical_spec
 
+if hasattr(jax, "shard_map"):                    # jax >= 0.6
+    _shard_map, _SM_KW = jax.shard_map, {"check_vma": False}
+else:                                            # 0.4.x experimental API
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_KW = {"check_rep": False}
+
 
 def init_moe(key, cfg: ModelConfig, dtype):
     m = cfg.moe
@@ -198,8 +204,8 @@ def moe_apply(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.nda
                 y = jax.lax.psum(y, "model")
             return y, jax.lax.pmean(aux, "model")
 
-        fn = jax.shard_map(body, mesh=mesh, in_specs=(x_spec, w_specs),
-                           out_specs=(x_spec, P()), check_vma=False)
+        fn = _shard_map(body, mesh=mesh, in_specs=(x_spec, w_specs),
+                        out_specs=(x_spec, P()), **_SM_KW)
         y, aux = fn(x, p_in)
     if y_shared is not None:
         y = y + y_shared

@@ -95,23 +95,42 @@ class ServingEngine:
                  ) -> GenerationResult:
         """prompts (b, sp); returns (b * n_samples, max_new) tokens,
         sample-major per query: row i*n_samples+j = sample j of query i."""
-        temp = self.temperature if temperature is None else temperature
+        logits, hidden, cache, sp = self.prefill_for_generate(prompts)
+        sel = np.repeat(np.arange(prompts.shape[0]), n_samples)
+        toks = self.generate_from_prefill(cache, logits, sel, sp, seed=seed,
+                                          temperature=temperature)
+        return GenerationResult(tokens=toks,
+                                probe_hidden=np.asarray(hidden, np.float32))
+
+    def prefill_for_generate(self, prompts: np.ndarray):
+        """One prefill sized for generation: returns (next_logits (b,V),
+        probe_hidden (b,d), cache, prompt_len). The hidden states feed the
+        difficulty probe AND the cache feeds generation — callers that used
+        probe_features + generate were prefilling twice."""
         b, sp = prompts.shape
-        cache_len = sp + self.max_new + 1
         logits, hidden, cache = prefill(self.model, self.params,
-                                        jnp.asarray(prompts), cache_len)
-        if n_samples > 1:
-            logits = jnp.repeat(logits, n_samples, axis=0)
-            # cache leaves are layer-stacked: (n_repeat, batch, ...)
-            cache = jax.tree.map(lambda x: jnp.repeat(x, n_samples, axis=1),
-                                 cache)
-        start = jnp.full((b * n_samples,), sp - 1, jnp.int32)
+                                        jnp.asarray(prompts),
+                                        sp + self.max_new + 1)
+        return logits, hidden, cache, sp
+
+    def generate_from_prefill(self, cache, first_logits, sel: np.ndarray,
+                              prompt_len: int, *, seed: int = 0,
+                              temperature: Optional[float] = None
+                              ) -> np.ndarray:
+        """Fan out an existing prefill: row i of the output continues
+        prefilled sequence sel[i] (cache rows are gathered, not re-run).
+        With sel = repeat(arange(b), budgets) this is the adaptive
+        best-of-k fan-out at the cost of a single prefill."""
+        temp = self.temperature if temperature is None else temperature
+        sel = jnp.asarray(sel, jnp.int32)
+        cache = jax.tree.map(lambda x: jnp.take(x, sel, axis=1), cache)
+        logits = jnp.take(first_logits, sel, axis=0)
+        start = jnp.full((sel.shape[0],), prompt_len - 1, jnp.int32)
         toks = generate_from_cache(
             self.model, self.params, cache, logits, start,
             jax.random.PRNGKey(seed), max_new=self.max_new,
             temperature=temp, temperature_zero=(temp == 0.0))
-        return GenerationResult(tokens=np.asarray(toks),
-                                probe_hidden=np.asarray(hidden, np.float32))
+        return np.asarray(toks)
 
     def probe_features(self, prompts: np.ndarray) -> np.ndarray:
         """Last-token hidden states only (the difficulty probe's input) —

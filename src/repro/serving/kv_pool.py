@@ -1,0 +1,84 @@
+"""Slot-pooled KV cache.
+
+The pool is a single model cache pytree sized for ``n_slots`` sequences of
+up to ``max_len`` positions. Every leaf is layer-stacked —
+``(n_repeat, batch, ...)`` — so *axis 1 is the slot axis* for all cache
+families (attention KV ``(r, b, S, KV, hd)``, MLA latents, mamba/xlstm
+states). Slots are allocated/freed host-side (free list); cache rows move
+with two jitted primitives that compile once for the whole runtime:
+
+    copy_row    write row `src_row` of a prefill cache into slot `slot`
+                (the adaptive fan-out replicates one probe prefill into
+                b_i slots this way — no second prefill)
+    read_row    slice one slot back out as a batch-1 cache
+
+Per-slot ``pos`` vectors live in the runtime and are fed straight to the
+model's decode step — and, with ``REPRO_DECODE_KERNEL=pallas``, to the
+Pallas flash-decoding kernel, whose per-batch `pos` validity masking was
+built for exactly this layout (slots at heterogeneous positions).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))   # pool is rebound by caller
+def _copy_row(dst, src, src_row, slot):
+    """dst leaves (r, N, ...); src leaves (r, g, ...): dst[:, slot] = src[:, src_row]."""
+    def one(d, s):
+        row = jax.lax.dynamic_index_in_dim(s, src_row, axis=1, keepdims=False)
+        return jax.lax.dynamic_update_index_in_dim(d, row, slot, axis=1)
+    return jax.tree.map(one, dst, src)
+
+
+@jax.jit
+def _read_row(cache, slot):
+    return jax.tree.map(
+        lambda x: jax.lax.dynamic_index_in_dim(x, slot, axis=1,
+                                               keepdims=True), cache)
+
+
+class SlotKVPool:
+    """Fixed pool of decode-slot cache rows with host-side lifetime."""
+
+    def __init__(self, model, n_slots: int, max_len: int):
+        self.model = model
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.cache = model.init_cache(self.n_slots, self.max_len)
+        self._free: List[int] = list(range(self.n_slots))
+        self.alloc_count = 0            # lifetime allocations (reuse metric)
+
+    # ------------------------------------------------------------ lifetime
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - self.n_free / self.n_slots
+
+    def alloc(self) -> int:
+        """Claim the lowest free slot (deterministic placement)."""
+        if not self._free:
+            raise RuntimeError("KV pool exhausted")
+        self._free.sort()
+        slot = self._free.pop(0)
+        self.alloc_count += 1
+        return slot
+
+    def release(self, slot: int) -> None:
+        assert 0 <= slot < self.n_slots and slot not in self._free
+        self._free.append(slot)
+
+    # ------------------------------------------------------------ cache io
+    def write_row(self, src_cache: Any, src_row: int, slot: int) -> None:
+        """Copy one prefilled sequence (row of a group prefill) into a slot."""
+        self.cache = _copy_row(self.cache, src_cache, src_row, slot)
+
+    def read_row(self, slot: int) -> Any:
+        return _read_row(self.cache, slot)

@@ -1,0 +1,87 @@
+"""Cost / latency metering for the serving runtime.
+
+Counts exactly what the paper's reward-vs-compute plots need (prefill
+tokens + generated tokens) plus the systems quantities the batch engine
+cannot report: slot occupancy per tick and per-request wall latency.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def percentile(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+@dataclass
+class ServingMetrics:
+    n_slots: int = 0
+    prefill_tokens: int = 0
+    prefill_calls: int = 0
+    decode_tokens: int = 0          # sampled tokens on *active* slots only
+    ticks: int = 0
+    active_sum: int = 0             # Σ active slots over ticks
+    requests_done: int = 0
+    latencies: List[float] = field(default_factory=list)
+    start_t: Optional[float] = None
+    end_t: Optional[float] = None
+
+    def _touch(self) -> float:
+        now = time.perf_counter()
+        if self.start_t is None:
+            self.start_t = now
+        self.end_t = now
+        return now
+
+    def record_prefill(self, n_tokens: int) -> None:
+        self._touch()
+        self.prefill_tokens += int(n_tokens)
+        self.prefill_calls += 1
+
+    def record_tick(self, n_active: int) -> None:
+        self._touch()
+        self.ticks += 1
+        self.active_sum += int(n_active)
+        self.decode_tokens += int(n_active)
+
+    def record_done(self, latency: Optional[float]) -> None:
+        self._touch()
+        self.requests_done += 1
+        if latency is not None:
+            self.latencies.append(float(latency))
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots active per decode tick."""
+        if self.ticks == 0 or self.n_slots == 0:
+            return 0.0
+        return self.active_sum / (self.ticks * self.n_slots)
+
+    @property
+    def wall(self) -> float:
+        if self.start_t is None or self.end_t is None:
+            return 0.0
+        return self.end_t - self.start_t
+
+    @property
+    def tokens_per_sec(self) -> float:
+        return self.decode_tokens / self.wall if self.wall > 0 else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_calls": self.prefill_calls,
+            "decode_tokens": self.decode_tokens,
+            "total_tokens": self.prefill_tokens + self.decode_tokens,
+            "ticks": self.ticks,
+            "occupancy": self.occupancy,
+            "requests_done": self.requests_done,
+            "wall_s": self.wall,
+            "tokens_per_sec": self.tokens_per_sec,
+            "latency_p50_s": percentile(self.latencies, 50),
+            "latency_p95_s": percentile(self.latencies, 95),
+        }

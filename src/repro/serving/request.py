@@ -1,0 +1,87 @@
+"""Request lifecycle for the continuous-batching runtime.
+
+A *request* is one user query; the adaptive policy turns it into ``b_i``
+*child sequences* (best-of-k fan-out) that share a single probe prefill.
+Children occupy decode slots independently, so a request's fan-out can
+start on different ticks when the pool is momentarily full.
+
+State machine::
+
+    QUEUED   submitted, awaiting prefill
+    PREFILL  probed (hidden state + prefill cache stashed), awaiting a
+             budget and/or free slots
+    DECODE   at least one child admitted to a slot
+    RERANK   all children finished, reward ranking in progress
+    DONE     best response selected (or default response for b_i = 0)
+"""
+from __future__ import annotations
+
+import enum
+import time
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    RERANK = "rerank"
+    DONE = "done"
+
+
+@dataclass
+class PrefillStash:
+    """Device-resident prefill result shared by all requests of one
+    prefill group: cache leaves (n_repeat, g, S, ...), logits (g, V).
+    Row `row` belongs to this request. Dropped once the last child has
+    been admitted (the pool slots then hold the only copies)."""
+    cache: Any
+    logits: Any
+    row: int
+    start_pos: int          # prompt_len - 1 (next decode writes slot sp)
+
+
+@dataclass
+class ChildSeq:
+    """One best-of-k sample; owns a decode slot while live. Identity (for
+    RNG streams and results) is (request_id, index)."""
+    request_id: int
+    index: int                              # j within the request
+    slot: Optional[int] = None
+    tokens: List[int] = field(default_factory=list)
+
+    def done(self, max_new: int) -> bool:
+        return len(self.tokens) >= max_new
+
+
+@dataclass
+class Request:
+    id: int
+    prompt: np.ndarray                      # (sp,) int32
+    query: Any = None                       # opaque object for the reward fn
+    budget: Optional[int] = None            # None until the policy decides
+    max_new: int = 16
+    state: RequestState = RequestState.QUEUED
+    children: List[ChildSeq] = field(default_factory=list)
+    pending: List[ChildSeq] = field(default_factory=list)   # not yet slotted
+    stash: Optional[PrefillStash] = None
+    hidden: Optional[np.ndarray] = None     # (d,) probe feature
+    response: Optional[np.ndarray] = None
+    reward: float = 0.0
+    submit_t: float = field(default_factory=time.perf_counter)
+    done_t: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def latency(self) -> Optional[float]:
+        return None if self.done_t is None else self.done_t - self.submit_t
+
+    def all_children_done(self) -> bool:
+        return (not self.pending
+                and all(c.done(self.max_new) for c in self.children))

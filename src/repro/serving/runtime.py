@@ -1,0 +1,307 @@
+"""Continuous-batching decode runtime with in-flight adaptive fan-out.
+
+Replaces the batch-synchronous serve loop (same-length prompts, full-batch
+barriers, double prefill) with a fixed pool of decode slots that variable-
+length, variable-budget requests stream through:
+
+* **One prefill per request.** The probe prefill that feeds the difficulty
+  predictor IS the generation prefill: its cache is replicated into the
+  b_i child slots (`SlotKVPool.write_row`), so the paper's "free" probe
+  stays free at serving time.
+* **One jitted decode step per tick over the whole pool.** Shapes are
+  static (n_slots, max_len), so the runtime compiles exactly once no
+  matter how budgets/prompt lengths mix — the batch engine re-jits for
+  every distinct fan-out shape.
+* **Immediate slot reclamation.** A child that finishes frees its slot at
+  the end of the tick; queued fan-out backfills it on the next tick, so
+  saved budget becomes saved wall-clock.
+
+Sampling uses per-child RNG streams — ``fold_in(fold_in(seed, request_id),
+child_index)`` — so outputs are a function of (seed, request, child) only,
+independent of slot placement and of what else is in flight. Greedy
+decoding (temperature 0) is bitwise-reproducible against the batch engine
+(see tests/test_runtime.py).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import Model
+from repro.serving.engine import prefill
+from repro.serving.kv_pool import SlotKVPool
+from repro.serving.metrics import ServingMetrics
+from repro.serving.request import (ChildSeq, PrefillStash, Request,
+                                   RequestState)
+
+
+# cache/logits/pos/keys are donated: the caller rebinds all four every tick,
+# and without donation XLA would copy the whole slot-pool KV cache per token.
+@functools.partial(jax.jit, static_argnames=("model", "temperature_zero"),
+                   donate_argnums=(2, 3, 4, 5))
+def _pool_tick(model: Model, params, cache, logits, pos, keys, active,
+               temperature, *, temperature_zero: bool):
+    """One decode tick over every slot.
+
+    Sample a token from each slot's current next-token logits, advance
+    active slots' positions, and run one decode step over the whole pool.
+    Inactive slots still flow through the model (their rows are unused and
+    row-independent) but their pos/logits are frozen so admission state
+    stays intact.
+    """
+    if temperature_zero:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        new_keys = keys
+    else:
+        split = jax.vmap(jax.random.split)(keys)            # (N, 2, 2)
+        new_keys = split[:, 0]
+        tok = jax.vmap(jax.random.categorical)(
+            split[:, 1], logits.astype(jnp.float32) / temperature
+        ).astype(jnp.int32)
+    new_pos = jnp.where(active, pos + 1, pos)
+    new_logits, _, cache = model.decode_step(params, tok[:, None], cache,
+                                             new_pos)
+    logits = jnp.where(active[:, None], new_logits[:, 0], logits)
+    return tok, logits, cache, new_pos, new_keys
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def _admit_slot(logits, pos, keys, src_logits, src_row, slot, start_pos,
+                child_key):
+    """Point a freshly allocated slot at a prefilled sequence: install its
+    next-token logits, start position, and RNG stream."""
+    lrow = jax.lax.dynamic_index_in_dim(src_logits, src_row, axis=0,
+                                        keepdims=False)
+    logits = jax.lax.dynamic_update_index_in_dim(logits, lrow, slot, axis=0)
+    pos = jax.lax.dynamic_update_index_in_dim(
+        pos, jnp.asarray(start_pos, pos.dtype), slot, axis=0)
+    keys = jax.lax.dynamic_update_index_in_dim(keys, child_key, slot, axis=0)
+    return logits, pos, keys
+
+
+class ContinuousBatchingRuntime:
+    """Slot-pooled decode runtime; see module docstring.
+
+    budget_fn(request, hidden) -> int resolves budgets at admission
+    (streaming mode, e.g. ``AdaptivePolicy.allocate_streaming`` at a
+    calibrated price). Leave it None and call :meth:`set_budget` for
+    batch-exact allocation (the AdaptiveScheduler facade does this).
+    reward_fn(query, rows) -> scores reranks a request's children when the
+    last one finishes; None keeps child 0.
+    """
+
+    def __init__(self, model: Model, params, *, n_slots: int = 8,
+                 max_len: int = 64, max_new: int = 16,
+                 temperature: float = 0.0, seed: int = 0,
+                 reward_fn: Optional[Callable] = None,
+                 budget_fn: Optional[Callable] = None,
+                 prefill_window: Optional[int] = None):
+        self.model, self.params = model, params
+        self.max_new = int(max_new)
+        self.temperature = float(temperature)
+        self.reward_fn, self.budget_fn = reward_fn, budget_fn
+        # admission control: at most this many requests may hold a
+        # device-resident prefill stash at once, bounding memory under a
+        # deep backlog (stashes drop once the last child reaches a slot).
+        # Applies to step()'s auto-prefill; an explicit prefill_queued()
+        # call (the facade's batch-exact path) is unthrottled.
+        if prefill_window is None:
+            prefill_window = 2 * n_slots
+        assert prefill_window >= 1
+        self.prefill_window = prefill_window
+        self._stashed = 0
+        self.pool = SlotKVPool(model, n_slots, max_len)
+        self.metrics = ServingMetrics(n_slots=n_slots)
+        self._base_key = jax.random.PRNGKey(seed)
+        V = model.lm.vocab_padded
+        self.logits = jnp.zeros((n_slots, V), model.lm.dtype)
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self.keys = jnp.zeros((n_slots, 2), jnp.uint32)
+        self.slots: List[Optional[ChildSeq]] = [None] * n_slots
+        self.queue: deque = deque()       # Requests awaiting prefill
+        self.fanout: deque = deque()      # Requests with un-slotted children
+        self.requests: Dict[int, Request] = {}
+        self._next_id = 0
+
+    # ------------------------------------------------------------- submit
+    def submit(self, prompt: np.ndarray, *, budget: Optional[int] = None,
+               query: Any = None, max_new: Optional[int] = None) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        mn = self.max_new if max_new is None else int(max_new)
+        if len(prompt) + mn > self.pool.max_len:
+            raise ValueError(
+                f"prompt_len {len(prompt)} + max_new {mn} exceeds pool "
+                f"max_len {self.pool.max_len}")
+        r = Request(id=self._next_id, prompt=prompt, query=query,
+                    budget=None if budget is None else int(budget),
+                    max_new=mn)
+        self._next_id += 1
+        self.requests[r.id] = r
+        self.queue.append(r)
+        return r.id
+
+    def submit_batch(self, prompts: np.ndarray,
+                     budgets: Optional[Sequence[int]] = None,
+                     queries: Optional[Sequence] = None) -> List[int]:
+        n = len(prompts)
+        return [self.submit(prompts[i],
+                            budget=None if budgets is None else budgets[i],
+                            query=None if queries is None else queries[i])
+                for i in range(n)]
+
+    # ------------------------------------------------------------ prefill
+    def prefill_queued(self, limit: Optional[int] = None) -> int:
+        """Prefill up to `limit` queued requests (all of them when None),
+        batching same-length prompts into one jitted pass (the probe
+        prefill — the only prefill a request ever gets; note it compiles
+        per distinct (group, prompt_len) shape, unlike the decode tick).
+        Resolves budgets via budget_fn when present. Returns the number
+        of requests prefilled."""
+        by_len: Dict[int, List[Request]] = {}
+        taken = 0
+        while self.queue and (limit is None or taken < limit):
+            r = self.queue.popleft()
+            by_len.setdefault(r.prompt_len, []).append(r)
+            taken += 1
+        for sp, reqs in by_len.items():
+            P = jnp.asarray(np.stack([r.prompt for r in reqs]))
+            logits, hidden, cache = prefill(self.model, self.params, P,
+                                            self.pool.max_len)
+            self.metrics.record_prefill(len(reqs) * sp)
+            hidden_np = np.asarray(hidden, np.float32)
+            for i, r in enumerate(reqs):
+                r.hidden = hidden_np[i]
+                r.stash = PrefillStash(cache=cache, logits=logits, row=i,
+                                       start_pos=sp - 1)
+                self._stashed += 1
+                r.state = RequestState.PREFILL
+                if r.budget is None and self.budget_fn is not None:
+                    r.budget = int(self.budget_fn(r, r.hidden))
+                if r.budget is not None:
+                    self._spawn_children(r)
+        return taken
+
+    def set_budget(self, request_id: int, budget: int) -> None:
+        """Resolve a deferred budget (batch-exact allocation path)."""
+        r = self.requests[request_id]
+        assert r.state == RequestState.PREFILL and r.stash is not None
+        r.budget = int(budget)
+        self._spawn_children(r)
+
+    def _drop_stash(self, r: Request) -> None:
+        if r.stash is not None:
+            r.stash = None
+            self._stashed -= 1
+
+    def _spawn_children(self, r: Request) -> None:
+        if r.budget <= 0:
+            # paper: b_i = 0 answers with the default response
+            self._drop_stash(r)
+            self._finalize(r)
+            return
+        for j in range(r.budget):
+            c = ChildSeq(request_id=r.id, index=j)
+            r.children.append(c)
+            r.pending.append(c)
+        r.state = RequestState.DECODE
+        self.fanout.append(r)
+
+    # ------------------------------------------------------------- fanout
+    def _try_fanout(self) -> int:
+        """Admit pending children into free slots (FIFO over requests).
+        Each admission replicates the request's probe-prefill cache row
+        into the slot — the fan-out shares one prefill."""
+        admitted = 0
+        while self.pool.n_free and self.fanout:
+            r = self.fanout[0]
+            c = r.pending.pop(0)
+            slot = self.pool.alloc()
+            st = r.stash
+            self.pool.write_row(st.cache, st.row, slot)
+            ck = jax.random.fold_in(
+                jax.random.fold_in(self._base_key, r.id), c.index)
+            self.logits, self.pos, self.keys = _admit_slot(
+                self.logits, self.pos, self.keys, st.logits, st.row, slot,
+                st.start_pos, ck)
+            c.slot = slot
+            self.slots[slot] = c
+            admitted += 1
+            if not r.pending:
+                self.fanout.popleft()
+                self._drop_stash(r)     # pool rows now hold the only copies
+        return admitted
+
+    # --------------------------------------------------------------- step
+    def step(self) -> bool:
+        """One scheduler tick: prefill arrivals, backfill free slots, run
+        one jitted decode step over the pool, retire finished children.
+        Returns True if any progress was made."""
+        progressed = False
+        if self.queue:
+            room = self.prefill_window - self._stashed
+            if room > 0 and self.prefill_queued(room):
+                progressed = True
+        if self._try_fanout():
+            progressed = True
+        active_idx = [s for s, c in enumerate(self.slots) if c is not None]
+        if not active_idx:
+            return progressed
+        active = np.zeros(self.pool.n_slots, bool)
+        active[active_idx] = True
+        tok, self.logits, self.pool.cache, self.pos, self.keys = _pool_tick(
+            self.model, self.params, self.pool.cache, self.logits, self.pos,
+            self.keys, jnp.asarray(active), self.temperature,
+            temperature_zero=(self.temperature == 0.0))
+        self.metrics.record_tick(len(active_idx))
+        tok_np = np.asarray(tok)
+        for s in active_idx:
+            c = self.slots[s]
+            c.tokens.append(int(tok_np[s]))
+            r = self.requests[c.request_id]
+            if c.done(r.max_new):
+                self.slots[s] = None
+                self.pool.release(s)
+                c.slot = None
+                if r.all_children_done():
+                    self._finalize(r)
+        return True
+
+    def _finalize(self, r: Request) -> None:
+        if r.children:
+            r.state = RequestState.RERANK
+            rows = [np.asarray(c.tokens, np.int32) for c in r.children]
+            if self.reward_fn is not None:
+                scores = np.asarray(self.reward_fn(r.query, rows), np.float64)
+                j = int(scores.argmax())
+                r.response, r.reward = rows[j], float(scores[j])
+            else:
+                r.response = rows[0]
+        r.state = RequestState.DONE
+        r.done_t = time.perf_counter()
+        self.metrics.record_done(r.latency)
+
+    # ---------------------------------------------------------------- run
+    @property
+    def n_inflight(self) -> int:
+        return sum(c is not None for c in self.slots)
+
+    def pending(self) -> bool:
+        return bool(self.queue or self.fanout or self.n_inflight)
+
+    def drain(self) -> None:
+        """Run until every runnable request is DONE. Requests still waiting
+        on :meth:`set_budget` are left in PREFILL (they are not runnable)."""
+        while self.pending():
+            if not self.step():
+                waiting = [r.id for r in self.requests.values()
+                           if r.state not in (RequestState.DONE,)]
+                raise RuntimeError(f"runtime stalled; waiting={waiting}")
+
+    def result(self, request_id: int) -> Request:
+        return self.requests[request_id]

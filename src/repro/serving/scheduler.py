@@ -2,10 +2,24 @@
 
 Per batch of queries:
   1. prefill once            -> probe hidden states (free difficulty input)
+     AND the generation cache (no second prefill)
   2. AdaptivePolicy.allocate -> per-query sample budgets b_i (Eq. 5 greedy)
-  3. fan out Σ b_i decode slots (queries with b_i = 0 get the default
-     response, per the paper)
+  3. fan out Σ b_i decode slots by replicating the prefill cache (queries
+     with b_i = 0 get the default response, per the paper)
   4. rerank with the reward fn; return the best response per query
+
+Two backends:
+
+  backend="runtime"  (default) a thin synchronous facade over the
+      continuous-batching ContinuousBatchingRuntime: children stream
+      through a fixed slot pool, freed slots backfill immediately, and
+      the whole batch runs under one compiled decode program regardless
+      of the budget mix. Returns slot-occupancy/latency metrics.
+
+  backend="batch"    the legacy batch-synchronous path, patched to
+      prefill ONCE (the old code probe-prefilled, threw the cache away,
+      and engine.generate prefilled again — double-counting prefill cost
+      in every benchmark).
 
 Cost accounting (prefill tokens + generated tokens) is returned so the
 benchmarks can plot reward-vs-compute exactly as the paper does.
@@ -13,12 +27,13 @@ benchmarks can plot reward-vs-compute exactly as the paper does.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.policy import AdaptivePolicy
 from repro.serving.engine import ServingEngine
+from repro.serving.runtime import ContinuousBatchingRuntime
 
 
 @dataclass
@@ -28,35 +43,75 @@ class ServeBatchResult:
     rewards: np.ndarray
     total_samples: int
     generated_tokens: int
+    prefill_tokens: int = 0
+    metrics: Optional[Dict[str, float]] = None   # runtime backend only
 
 
 class AdaptiveScheduler:
     def __init__(self, engine: ServingEngine, policy: AdaptivePolicy,
-                 reward_fn: Callable, *, seed: int = 0):
+                 reward_fn: Callable, *, seed: int = 0,
+                 backend: str = "runtime", n_slots: int = 8):
+        assert backend in ("runtime", "batch")
         self.engine = engine
         self.policy = policy
         self.reward_fn = reward_fn    # (query, list_of_token_rows) -> scores
         self.seed = seed
+        self.backend = backend
+        self.n_slots = n_slots
 
     def serve_batch(self, queries: Sequence, prompts: np.ndarray,
                     avg_budget: float) -> ServeBatchResult:
-        n = len(queries)
-        hidden = self.engine.probe_features(prompts)
+        if self.backend == "runtime":
+            return self._serve_runtime(queries, prompts, avg_budget)
+        return self._serve_batch_sync(queries, prompts, avg_budget)
+
+    # ----------------------------------------------------- runtime facade
+    def _serve_runtime(self, queries, prompts, avg_budget) -> ServeBatchResult:
+        n, sp = prompts.shape
+        eng = self.engine
+        rt = ContinuousBatchingRuntime(
+            eng.model, eng.params, n_slots=self.n_slots,
+            max_len=sp + eng.max_new + 1, max_new=eng.max_new,
+            temperature=eng.temperature, seed=self.seed,
+            reward_fn=self.reward_fn)
+        ids = rt.submit_batch(prompts, queries=list(queries))
+        rt.prefill_queued()                       # the single probe prefill
+        hidden = np.stack([rt.requests[i].hidden for i in ids])
         budgets = self.policy.allocate(hidden, avg_budget)
+        for i, b in zip(ids, budgets):
+            rt.set_budget(i, int(b))              # fan-out shares the prefill
+        rt.drain()
+        responses = [rt.requests[i].response for i in ids]
+        rewards = np.asarray([rt.requests[i].reward for i in ids])
+        total = int(np.asarray(budgets).sum())
+        return ServeBatchResult(
+            budgets=np.asarray(budgets), responses=responses,
+            rewards=rewards, total_samples=total,
+            generated_tokens=rt.metrics.decode_tokens,
+            prefill_tokens=rt.metrics.prefill_tokens,
+            metrics=rt.metrics.summary())
+
+    # ------------------------------------------------- legacy batch path
+    def _serve_batch_sync(self, queries, prompts, avg_budget
+                          ) -> ServeBatchResult:
+        n = len(queries)
+        logits, hidden, cache, sp = self.engine.prefill_for_generate(prompts)
+        budgets = self.policy.allocate(np.asarray(hidden, np.float32),
+                                       avg_budget)
         responses: List[Optional[np.ndarray]] = [None] * n
         rewards = np.zeros(n)
         total = int(budgets.sum())
         if total > 0:
-            # fan out: each query with b_i>0 is replicated b_i times
+            # fan out by gathering prefilled cache rows b_i times each
             sel = np.repeat(np.arange(n), budgets)
-            gen = self.engine.generate(prompts[sel], n_samples=1,
-                                       seed=self.seed)
+            rows_all = self.engine.generate_from_prefill(
+                cache, logits, sel, sp, seed=self.seed)
             offset = 0
             for i in range(n):
                 b = int(budgets[i])
                 if b == 0:
                     continue
-                rows = gen.tokens[offset: offset + b]
+                rows = rows_all[offset: offset + b]
                 offset += b
                 scores = np.asarray(self.reward_fn(queries[i], list(rows)))
                 j = int(scores.argmax())
@@ -65,4 +120,5 @@ class AdaptiveScheduler:
         return ServeBatchResult(
             budgets=np.asarray(budgets), responses=responses,
             rewards=rewards, total_samples=total,
-            generated_tokens=total * self.engine.max_new)
+            generated_tokens=total * self.engine.max_new,
+            prefill_tokens=n * int(prompts.shape[1]))

@@ -5,7 +5,11 @@ import itertools
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # hypothesis is dev-only: skip just those tests
+    from conftest import given, settings, st  # noqa: F401
 
 from repro.core import allocator as alloc
 from repro.core import marginal
@@ -124,6 +128,46 @@ def test_offline_policy_budget_and_monotonicity():
     # the policy maps harder (lower λ, up to the impossible cliff) bins to
     # budgets; check it spends everything it can on positive-marginal bins
     assert b.max() > b.min()
+
+
+def test_price_dual_matches_batch_allocation():
+    """Streaming (price-thresholded, per-row) allocation spends ~the same
+    total as the batch-coupled greedy at the calibration budget, and is
+    identical when calibration == deployment rows."""
+    rng = np.random.default_rng(4)
+    lam = rng.beta(0.8, 1.5, size=200)
+    delta = marginal.binary_marginals(lam, 16)       # monotone rows
+    price = alloc.price_for_budget(delta, avg_budget=3.0)
+    b_stream = alloc.allocate_at_price(delta, price)
+    b_batch = alloc.greedy_allocate(delta, 3 * 200)
+    assert abs(int(b_stream.sum()) - int(b_batch.sum())) <= 200 * 0.05
+    # rows can be processed one at a time with the same result
+    one_at_a_time = np.concatenate(
+        [alloc.allocate_at_price(delta[i], price) for i in range(20)])
+    assert np.array_equal(one_at_a_time, b_stream[:20])
+
+
+def test_price_with_b_min_respects_average_budget():
+    """The b_min floor is charged against the calibrated budget: realized
+    mean spend stays ~avg_budget instead of overshooting by the floor."""
+    rng = np.random.default_rng(6)
+    lam = rng.beta(0.5, 3.0, size=400)               # many near-zero λ
+    delta = marginal.binary_marginals(lam, 8)
+    price = alloc.price_for_budget(delta, avg_budget=1.0, b_min=1)
+    b = alloc.allocate_at_price(delta, price, b_min=1)
+    assert (b >= 1).all()
+    assert b.mean() <= 1.0 + 0.05
+
+
+def test_price_for_budget_edges():
+    delta = marginal.binary_marginals(np.array([0.3, 0.9]), 4)
+    assert alloc.price_for_budget(delta, 0.0) == float("inf")
+    assert (alloc.allocate_at_price(delta, float("inf")) == 0).all()
+    # budget >= all units: price floors at 0, all positive units admitted
+    p = alloc.price_for_budget(delta, 100.0)
+    assert (alloc.allocate_at_price(delta, p) == 4).all()
+    # b_min floor applies even at infinite price
+    assert (alloc.allocate_at_price(delta, float("inf"), b_min=1) == 1).all()
 
 
 def test_routing_topk_exact_fraction():
