@@ -1,19 +1,23 @@
-"""Continuous-batching runtime vs batch-synchronous engine under a Poisson
-arrival stream with mixed adaptive budgets.
+"""Serving benchmarks: continuous-batching runtime (paged + slot pools)
+vs the batch-synchronous engine, plus an equal-memory capacity probe.
 
-Both systems replay the identical workload (same prompts, same per-request
-budgets b_i ~ {1..4}, same exponential inter-arrival gaps) in wall-clock
-time. The batch engine admits every queued arrival as one synchronous
-batch (single prefill — the patched path — then a barriered Σb_i-row
-decode), so each distinct (batch, fan-out) shape costs a fresh jit
-compile and late arrivals wait out the barrier. The runtime streams
-children through a fixed slot pool: one compiled decode program total,
-freed slots backfilled immediately.
+Poisson stream: all three systems replay the identical workload (same
+prompts, same per-request budgets b_i ~ {1..4}, same exponential
+inter-arrival gaps) in wall-clock time. The batch engine admits every
+queued arrival as one synchronous batch (single prefill — the patched
+path — then a barriered Σb_i-row decode), so each distinct (batch,
+fan-out) shape costs a fresh jit compile and late arrivals wait out the
+barrier. The runtime streams children through a fixed pool: one compiled
+decode program total, freed slots backfilled immediately. The paged pool
+additionally folds chunked prefill into that same program and shares
+prompt blocks copy-on-write across fan-out.
 
-Reports tokens/sec and p50/p95 request latency for both, plus runtime
-slot occupancy.
+Capacity probe: at equal device KV memory (token capacity), short
+sequences let the paged pool sustain strictly more concurrent children
+than the slot pool's full-`max_len` rows — the slot pool queues first.
 
-    PYTHONPATH=src python benchmarks/bench_serving.py
+    PYTHONPATH=src python benchmarks/bench_serving.py            # full
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke    # CI gate
 """
 from __future__ import annotations
 
@@ -66,12 +70,12 @@ def _run_batch_engine(engine, prompts, budgets, arrivals):
 
 
 def _run_runtime(model, params, prompts, budgets, arrivals, *, n_slots,
-                 max_new, temperature, max_len):
+                 max_new, temperature, max_len, pool, block_size=8):
     from repro.serving import ContinuousBatchingRuntime
 
     rt = ContinuousBatchingRuntime(
         model, params, n_slots=n_slots, max_len=max_len, max_new=max_new,
-        temperature=temperature, seed=0)
+        temperature=temperature, seed=0, pool=pool, block_size=block_size)
     n = len(prompts)
     ids = []
     t0 = time.perf_counter()
@@ -94,16 +98,51 @@ def _run_runtime(model, params, prompts, budgets, arrivals, *, n_slots,
                 decode_tokens=s["decode_tokens"],
                 latency_p50_s=float(np.percentile(lat, 50)),
                 latency_p95_s=float(np.percentile(lat, 95)),
-                occupancy=s["occupancy"])
+                occupancy=s["occupancy"], peak_blocks=s["peak_blocks"])
+
+
+def _capacity_probe(model, params, vocab, *, mem_tokens, max_len,
+                    block_size, sp, max_new, n_req, seed=0):
+    """Equal device KV memory (mem_tokens of cache positions) for both
+    pools; short requests (sp + max_new << max_len). Reports the peak
+    concurrent-child count each backend sustains — the slot pool tops out
+    at mem_tokens/max_len full rows and queues the rest."""
+    from repro.serving import ContinuousBatchingRuntime
+
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, vocab, size=(n_req, sp)).astype(np.int32)
+    out = {}
+    slot_rows = mem_tokens // max_len
+    rt_s = ContinuousBatchingRuntime(
+        model, params, n_slots=slot_rows, max_len=max_len, max_new=max_new,
+        temperature=0.0, seed=0, pool="slots")
+    rt_s.submit_batch(prompts, budgets=[1] * n_req)
+    rt_s.drain()
+    out["slots"] = dict(peak_children=rt_s.metrics.peak_children,
+                        mem_rows=slot_rows)
+    rt_p = ContinuousBatchingRuntime(
+        model, params, n_slots=n_req, max_len=max_len, max_new=max_new,
+        temperature=0.0, seed=0, pool="paged", block_size=block_size,
+        n_blocks=mem_tokens // block_size + 1, prefill_slots=n_req)
+    rt_p.submit_batch(prompts, budgets=[1] * n_req)
+    rt_p.drain()
+    out["paged"] = dict(peak_children=rt_p.metrics.peak_children,
+                        peak_blocks=rt_p.metrics.peak_blocks,
+                        n_blocks=mem_tokens // block_size)
+    return out
 
 
 def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
-        n_slots: int = 8, mean_gap: float = 0.05, seed: int = 0) -> None:
+        n_slots: int = 8, mean_gap: float = 0.05, seed: int = 0,
+        smoke: bool = False) -> None:
     import jax
 
     from repro.configs import get_config
     from repro.models import build_model
     from repro.serving import ServingEngine
+
+    if smoke:
+        n_requests, width, max_new, n_slots, mean_gap = 8, 6, 4, 4, 0.01
 
     cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
                               dtype="float32", n_layers=2)
@@ -115,38 +154,77 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
     prompts, budgets, arrivals = _make_workload(
         n_requests, cfg.vocab_size, width, mean_gap=mean_gap, seed=seed)
 
-    # warm both drivers on a small all-at-once prefix so first-compile cost
+    # warm all drivers on a small all-at-once prefix so first-compile cost
     # of the *common* shapes is off the clock. The batch engine still
     # recompiles per distinct (batch, Σb) shape during the timed run —
-    # that is inherent to barriered batching, and the runtime's static
+    # that is inherent to barriered batching, and the runtimes' static
     # shapes are the fix being measured.
-    warm = slice(0, 6)
-    _run_batch_engine(engine, prompts[warm], budgets[warm], np.zeros(6))
-    _run_runtime(model, params, prompts[warm], budgets[warm], np.zeros(6),
-                 n_slots=n_slots, max_new=max_new, temperature=1.0,
-                 max_len=max_len)
+    w = min(6, n_requests)
+    warm = slice(0, w)
+    _run_batch_engine(engine, prompts[warm], budgets[warm], np.zeros(w))
+    for pool in ("paged", "slots"):
+        _run_runtime(model, params, prompts[warm], budgets[warm],
+                     np.zeros(w), n_slots=n_slots, max_new=max_new,
+                     temperature=1.0, max_len=max_len, pool=pool)
 
     batch = _run_batch_engine(engine, prompts, budgets, arrivals)
-    cont = _run_runtime(model, params, prompts, budgets, arrivals,
-                        n_slots=n_slots, max_new=max_new, temperature=1.0,
-                        max_len=max_len)
+    paged = _run_runtime(model, params, prompts, budgets, arrivals,
+                         n_slots=n_slots, max_new=max_new, temperature=1.0,
+                         max_len=max_len, pool="paged")
+    slots = _run_runtime(model, params, prompts, budgets, arrivals,
+                         n_slots=n_slots, max_new=max_new, temperature=1.0,
+                         max_len=max_len, pool="slots")
 
-    for name, r in (("batch_engine", batch), ("continuous_runtime", cont)):
+    cap = _capacity_probe(
+        model, params, cfg.vocab_size,
+        mem_tokens=(2 if smoke else 4) * 2 * max_len,
+        max_len=2 * max_len, block_size=4, sp=max(2, width // 3),
+        max_new=max_new, n_req=(6 if smoke else 12))
+
+    for name, r in (("batch_engine", batch), ("paged_runtime", paged),
+                    ("slot_runtime", slots)):
         emit(f"serving/{name}/wall", r["wall_s"] * 1e6,
              f"{r['tokens_per_sec']:.1f} tok/s")
         emit(f"serving/{name}/latency_p50", r["latency_p50_s"] * 1e6,
              f"p95={r['latency_p95_s']*1e3:.0f}ms")
-    emit("serving/continuous_runtime/occupancy", 0.0,
-         f"{cont['occupancy']:.2f}")
-    speedup = cont["tokens_per_sec"] / max(batch["tokens_per_sec"], 1e-9)
-    emit("serving/speedup", 0.0, f"{speedup:.2f}x tokens/sec")
+    emit("serving/paged_runtime/occupancy", 0.0,
+         f"{paged['occupancy']:.2f}")
+    speedup = paged["tokens_per_sec"] / max(batch["tokens_per_sec"], 1e-9)
+    parity = paged["tokens_per_sec"] / max(slots["tokens_per_sec"], 1e-9)
+    emit("serving/speedup_vs_batch", 0.0, f"{speedup:.2f}x tokens/sec")
+    emit("serving/paged_vs_slots", 0.0, f"{parity:.2f}x tokens/sec")
+    emit("serving/capacity/slots", float(cap["slots"]["peak_children"]),
+         f"{cap['slots']['peak_children']} children")
+    emit("serving/capacity/paged", float(cap["paged"]["peak_children"]),
+         f"{cap['paged']['peak_children']} children")
     save_result("bench_serving", dict(
-        batch=batch, runtime=cont, n_requests=n_requests, width=width,
-        max_new=max_new, n_slots=n_slots, mean_gap=mean_gap,
-        budgets_mean=float(np.mean(budgets)), speedup=speedup))
-    print(f"# continuous-batching vs batch: {speedup:.2f}x tokens/sec, "
-          f"p50 latency {batch['latency_p50_s']/max(cont['latency_p50_s'],1e-9):.2f}x lower")
+        batch=batch, paged=paged, slots=slots, capacity=cap,
+        n_requests=n_requests, width=width, max_new=max_new,
+        n_slots=n_slots, mean_gap=mean_gap,
+        budgets_mean=float(np.mean(budgets)), speedup_vs_batch=speedup,
+        paged_vs_slots=parity, smoke=smoke))
+    print(f"# paged vs batch: {speedup:.2f}x tokens/sec; "
+          f"paged vs slots: {parity:.2f}x; capacity at equal memory: "
+          f"paged {cap['paged']['peak_children']} vs slot "
+          f"{cap['slots']['peak_children']} concurrent children")
+
+    if smoke:
+        # CI regression gate for the throughput path (fixed seeds, tiny
+        # model): correctness is pytest's job, this guards the *runtime*
+        # plumbing — all three drivers drain, the paged pool strictly
+        # beats the slot pool on concurrency at equal memory, and cleans
+        # up its blocks.
+        assert batch["decode_tokens"] > 0 and paged["decode_tokens"] > 0
+        assert paged["decode_tokens"] == slots["decode_tokens"]
+        assert (cap["paged"]["peak_children"]
+                > cap["slots"]["peak_children"]), cap
+        print("# smoke OK")
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixed-seed run with hard assertions (CI)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -59,14 +59,27 @@ class AdaptivePolicy:
         return alloc.price_for_budget(self.marginals(hidden_calib),
                                       avg_budget, b_min=self.b_min)
 
-    def allocate_streaming(self, hidden: np.ndarray,
-                           price: float) -> np.ndarray:
+    def allocate_streaming(self, hidden: np.ndarray, price: float,
+                           max_children: Optional[int] = None) -> np.ndarray:
         """Per-query budgets at a fixed price — batch-free (Eq. 5's dual
-        form). hidden may be a single row (d,) or a batch (n, d)."""
+        form). hidden may be a single row (d,) or a batch (n, d).
+
+        max_children gates admission on *memory*, not price: the paged
+        serving runtime passes what its free blocks can eventually carry
+        (``(free - reserved) // blocks_per_child``), so a difficulty
+        spike cannot over-commit the KV pool. The cap trades that one
+        request's tail samples for memory safety; the dual price — and so
+        every later request's allocation — is unchanged. With the slot
+        pool this was implicitly "free slots", which over-admits whenever
+        sequences are shorter than the worst case."""
         h = np.asarray(hidden)
         if h.ndim == 1:
             h = h[None]
         if self.offline is not None:
-            return self._offline_budgets(h)
-        return alloc.allocate_at_price(self.marginals(h), price,
-                                       b_min=self.b_min)
+            b = self._offline_budgets(h)
+        else:
+            b = alloc.allocate_at_price(self.marginals(h), price,
+                                        b_min=self.b_min)
+        if max_children is not None:
+            b = np.minimum(b, int(max_children))
+        return b

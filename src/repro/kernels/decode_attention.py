@@ -10,6 +10,13 @@ over the `model` mesh axis there.
 
 Validity masking uses the per-batch `pos` scalar (slots <= pos are live),
 matching the serving engine's cache semantics.
+
+`paged_decode_attention` is the block-granular variant for the paged KV
+pool: K/V live in a shared physical block store (n_blocks, B, KV, hd) and
+each sequence owns a block table (b, T) mapping logical block t (token
+positions t*B .. t*B+B-1) to a physical block id. The table is a
+scalar-prefetch argument, so the BlockSpec index maps gather exactly the
+blocks a sequence owns — no dense copy of the cache is materialized.
 """
 from __future__ import annotations
 
@@ -105,3 +112,93 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         ],
         interpret=interpret,
     )(pos.astype(jnp.int32), q, k, v)
+
+
+def _paged_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, block_b: int, groups: int,
+                  sm_scale: float):
+    bi = pl.program_id(0)
+    ti = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[bi]
+    k_start = ti * block_b          # logical position of this block's row 0
+
+    @pl.when(k_start <= pos)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                      # (H, hd)
+        k = k_ref[0].astype(jnp.float32)                      # (B, KV, hd)
+        v = v_ref[0].astype(jnp.float32)
+        H, hd = q.shape
+        KV = k.shape[1]
+        qg = q.reshape(KV, groups, hd)
+        s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                      # (KV, g, B)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        sf = s.reshape(H, -1)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sf, axis=1))
+        p = jnp.exp(sf - m_new[:, None]).reshape(KV, groups, -1)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p.reshape(H, -1), axis=1)
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((0,), (1,))),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv.reshape(H, -1)
+        m_scr[...] = m_new
+
+    @pl.when(ti == nt - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jnp.ndarray, k_blocks: jnp.ndarray,
+                           v_blocks: jnp.ndarray, tables: jnp.ndarray,
+                           pos: jnp.ndarray, *,
+                           interpret: bool = True) -> jnp.ndarray:
+    """Flash decoding over a paged KV store.
+
+    q (b, H, hd); k_blocks, v_blocks (n_blocks, B, KV, hd);
+    tables (b, T) int32 physical block ids (entries past the live length
+    may point anywhere — rows beyond `pos` are masked); pos (b,) int32.
+    Returns (b, H, hd). Logical position of table entry t, row j is
+    t*B + j, so validity is the same `<= pos` rule as the dense kernel.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    b, H, hd = q.shape
+    B, KV = k_blocks.shape[1], k_blocks.shape[2]
+    T = tables.shape[1]
+    g = H // KV
+    kernel = functools.partial(_paged_kernel, block_b=B, groups=g,
+                               sm_scale=1.0 / math.sqrt(hd))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # tables, pos
+        grid=(b, T),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda bi, ti, tbl, p: (bi, 0, 0)),
+            pl.BlockSpec((1, B, KV, hd),
+                         lambda bi, ti, tbl, p: (tbl[bi, ti], 0, 0, 0)),
+            pl.BlockSpec((1, B, KV, hd),
+                         lambda bi, ti, tbl, p: (tbl[bi, ti], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda bi, ti, tbl, p: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, H, hd), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), pos.astype(jnp.int32), q, k_blocks, v_blocks)

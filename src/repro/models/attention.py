@@ -252,6 +252,49 @@ def init_kv_cache(batch: int, cache_len: int, dims: AttnDims, dtype) -> dict:
     }
 
 
+# ----------------------------------------------------------------------------
+# Paged KV primitives (block-granular cache; see serving/paged_pool.py)
+#
+# A paged cache leaf is (n_blocks, B, ...): physical blocks of B positions
+# shared by all sequences. Each sequence owns a block table (b, T) mapping
+# logical block t (positions t*B .. t*B+B-1) to a physical block id, so
+# logical position p lives at (table[p // B], p % B).
+# ----------------------------------------------------------------------------
+
+def paged_write(blocks: jnp.ndarray, new: jnp.ndarray, tables: jnp.ndarray,
+                pos: jnp.ndarray) -> jnp.ndarray:
+    """Write one new row per sequence into its current block.
+
+    blocks (nb, B, ...); new (b, ...); tables (b, T); pos (b,). The block
+    being written must be exclusively owned by its sequence (COW gives
+    every live sequence a private boundary block), so scatter indices are
+    unique across live rows; retired rows all alias the reserved null
+    block, whose contents are never read.
+    """
+    nb, B = blocks.shape[0], blocks.shape[1]
+    flat = blocks.reshape((nb * B,) + blocks.shape[2:])
+    bidx = jnp.take_along_axis(tables, (pos // B)[:, None], axis=1)[:, 0]
+    flat = flat.at[bidx * B + pos % B].set(new.astype(blocks.dtype))
+    return flat.reshape(blocks.shape)
+
+
+def paged_gather(blocks: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+    """Gather each sequence's blocks into a dense (b, T*B, ...) view.
+
+    Rows past a sequence's live length read whatever the padding table
+    entries point at — always finite values (block stores are zero-init
+    and only ever overwritten by real K/V) — and are masked by the
+    `<= pos` validity rule downstream, contributing exact zeros to the
+    softmax. This is the XLA path; REPRO_DECODE_KERNEL=pallas streams the
+    blocks through `kernels.paged_decode_attention` without densifying.
+    """
+    nb, B = blocks.shape[0], blocks.shape[1]
+    flat = blocks.reshape((nb * B,) + blocks.shape[2:])
+    idx = (tables[:, :, None] * B
+           + jnp.arange(B)[None, None, :]).reshape(tables.shape[0], -1)
+    return flat[idx]
+
+
 def kv_cache_specs() -> dict:
     return {"k": ("batch", "kv_seq", None, None),
             "v": ("batch", "kv_seq", None, None)}
@@ -270,14 +313,41 @@ def _write_slot(buf: jnp.ndarray, new: jnp.ndarray, slot: jnp.ndarray) -> jnp.nd
     return jnp.where(sel, new.astype(buf.dtype), buf)
 
 
+def _grouped_decode_scores(q, ck, cv, pos, dims: AttnDims, dtype):
+    """Grouped-einsum attention of one query token against a dense per-row
+    cache view ck/cv (b, S, KVp, hd) with `idx <= pos` validity. Shared by
+    the slot path and the paged gather path (extra masked rows contribute
+    exact zeros, so the result is invariant to S padding)."""
+    b = q.shape[0]
+    S = ck.shape[1]
+    g = dims.group
+    qg = q.reshape(b, 1, dims.kv_padded, g, dims.head_dim)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(dims.head_dim)
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+    bias = jnp.where(valid, 0.0, -1e30)[:, None, None, None, :]
+    w = jax.nn.softmax(scores + bias, axis=-1).astype(dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, cv)
+    return o.reshape(b, 1, dims.heads_padded * dims.head_dim)
+
+
 def attention_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
                      dims: AttnDims, *, rope_theta: float = 0.0,
                      window: int = 0,
+                     block_tables: Optional[jnp.ndarray] = None,
                      use_pallas: Optional[bool] = None
                      ) -> Tuple[jnp.ndarray, dict]:
     """x (b,1,d); pos (b,) current absolute position. Returns (out, cache').
 
     Full cache: slot = pos. Sliding window: ring buffer, slot = pos % W.
+
+    block_tables (b, T) selects the paged path: cache leaves are physical
+    block stores (n_blocks, B, KVp, hd) shared across sequences, the new
+    K/V row is scattered into the sequence's current (exclusively owned)
+    block, and attention runs either through the paged Pallas kernel or an
+    XLA gather of the sequence's blocks. Incompatible with the sliding
+    window ring (the serving runtime falls back to the slot pool there).
 
     use_pallas (default: REPRO_DECODE_KERNEL=pallas) routes the attention
     itself through the Pallas flash-decoding kernel — per-batch `pos`
@@ -288,7 +358,6 @@ def attention_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     if use_pallas is None:
         use_pallas = os.environ.get("REPRO_DECODE_KERNEL", "") == "pallas"
     b = x.shape[0]
-    S = cache["k"].shape[1]
     q = nn.linear(p["wq"], x)                               # (b,1,Hp,hd)
     k = nn.linear(p["wk"], x)                               # (b,1,KVp,hd)
     v = nn.linear(p["wv"], x)
@@ -296,6 +365,21 @@ def attention_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
         cos, sin = nn.rope_cos_sin(pos[:, None], dims.head_dim, rope_theta)
         q = nn.apply_rope(q, cos, sin)
         k = nn.apply_rope(k, cos, sin)
+    if block_tables is not None:
+        assert window == 0, "paged KV does not support the sliding-window ring"
+        ck = paged_write(cache["k"], k[:, 0], block_tables, pos)
+        cv = paged_write(cache["v"], v[:, 0], block_tables, pos)
+        if use_pallas:
+            from repro.kernels import ops
+            o = ops.paged_decode_attention(q[:, 0], ck, cv, block_tables,
+                                           pos)  # (b,Hp,hd)
+            o = o.reshape(b, 1, dims.heads_padded * dims.head_dim)
+        else:
+            o = _grouped_decode_scores(q, paged_gather(ck, block_tables),
+                                       paged_gather(cv, block_tables),
+                                       pos, dims, x.dtype)
+        return nn.linear(p["wo"], o), {"k": ck, "v": cv}
+    S = cache["k"].shape[1]
     slot = (pos % S) if window > 0 else pos
     ck = _write_slot(cache["k"], k, slot)
     cv = _write_slot(cache["v"], v, slot)
@@ -307,24 +391,21 @@ def attention_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
         o = ops.decode_attention(q[:, 0], ck, cv, pos)      # (b,Hp,hd)
         o = o.reshape(b, 1, dims.heads_padded * dims.head_dim)
         return nn.linear(p["wo"], o), {"k": ck, "v": cv}
-    # grouped scores against the compact (un-expanded) cache
-    g = dims.group
-    qg = q.reshape(b, 1, dims.kv_padded, g, dims.head_dim)
-    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck,
-                        preferred_element_type=jnp.float32)
-    scores = scores / math.sqrt(dims.head_dim)
-    # validity: which cache slots hold live positions <= pos
-    idx = jnp.arange(S)[None, :]                            # (1,S)
     if window > 0:
         # ring slot s holds position pos - ((pos - s) mod S); valid if >= 0
+        g = dims.group
+        qg = q.reshape(b, 1, dims.kv_padded, g, dims.head_dim)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck,
+                            preferred_element_type=jnp.float32)
+        scores = scores / math.sqrt(dims.head_dim)
+        idx = jnp.arange(S)[None, :]                        # (1,S)
         held = pos[:, None] - ((pos[:, None] - idx) % S)
-        valid = held >= 0
+        bias = jnp.where(held >= 0, 0.0, -1e30)[:, None, None, None, :]
+        w = jax.nn.softmax(scores + bias, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", w, cv)
+        o = o.reshape(b, 1, dims.heads_padded * dims.head_dim)
     else:
-        valid = idx <= pos[:, None]
-    bias = jnp.where(valid, 0.0, -1e30)[:, None, None, None, :]
-    w = jax.nn.softmax(scores + bias, axis=-1).astype(x.dtype)
-    o = jnp.einsum("bkgqs,bskd->bqkgd", w, cv)
-    o = o.reshape(b, 1, dims.heads_padded * dims.head_dim)
+        o = _grouped_decode_scores(q, ck, cv, pos, dims, x.dtype)
     out = nn.linear(p["wo"], o)
     return out, {"k": ck, "v": cv}
 
@@ -425,8 +506,16 @@ def mla_cache_specs() -> dict:
 
 
 def mla_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
-               cfg: ModelConfig) -> Tuple[jnp.ndarray, dict]:
-    """Absorbed decode form: scores live in the compressed latent space."""
+               cfg: ModelConfig,
+               block_tables: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, dict]:
+    """Absorbed decode form: scores live in the compressed latent space.
+
+    With block_tables, the compressed latents page exactly like plain KV
+    (leaves (n_blocks, B, rank)); scores run against the gathered dense
+    view — the latent store is small enough that a dedicated Pallas paged
+    kernel is not worth it.
+    """
     m = cfg.mla
     b = x.shape[0]
     H = cfg.n_heads
@@ -438,10 +527,19 @@ def mla_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     cos, sin = nn.rope_cos_sin(pos[:, None], m.qk_rope_head_dim, cfg.rope_theta)
     q_rope = nn.apply_rope(q_rope, cos, sin)
     kr_new = nn.apply_rope(kr_new[..., None, :], cos, sin)[..., 0, :]
-    c_kv = _write_slot(cache["c_kv"], c_new, pos)
-    k_rope = _write_slot(cache["k_rope"], kr_new, pos)
-    c_kv = lshard(c_kv, "batch", "kv_seq", None)
-    k_rope = lshard(k_rope, "batch", "kv_seq", None)
+    if block_tables is not None:
+        ckv_blocks = paged_write(cache["c_kv"], c_new[:, 0], block_tables, pos)
+        kr_blocks = paged_write(cache["k_rope"], kr_new[:, 0], block_tables,
+                                pos)
+        c_kv = paged_gather(ckv_blocks, block_tables)
+        k_rope = paged_gather(kr_blocks, block_tables)
+        new_cache = {"c_kv": ckv_blocks, "k_rope": kr_blocks}
+    else:
+        c_kv = _write_slot(cache["c_kv"], c_new, pos)
+        k_rope = _write_slot(cache["k_rope"], kr_new, pos)
+        c_kv = lshard(c_kv, "batch", "kv_seq", None)
+        k_rope = lshard(k_rope, "batch", "kv_seq", None)
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
     wkv_b = p["wkv_b"]["w"].astype(x.dtype)                  # (r,H,nope+v)
     w_k = wkv_b[..., : m.qk_nope_head_dim]                   # (r,H,nope)
     w_v = wkv_b[..., m.qk_nope_head_dim:]                    # (r,H,v)
@@ -460,4 +558,4 @@ def mla_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_v)
     o = o.reshape(b, 1, H * m.v_head_dim)
     out = nn.linear(p["wo"], o)
-    return out, {"c_kv": c_kv, "k_rope": k_rope}
+    return out, new_cache

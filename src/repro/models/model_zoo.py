@@ -94,8 +94,9 @@ class Model:
     def cache_specs(self):
         return self.lm.cache_specs()
 
-    def decode_step(self, params, token, cache, pos):
-        return self.lm.decode_step(params["lm"], token, cache, pos)
+    def decode_step(self, params, token, cache, pos, block_tables=None):
+        return self.lm.decode_step(params["lm"], token, cache, pos,
+                                   block_tables=block_tables)
 
 
 def build_model(cfg: ModelConfig, tp: int = 1, remat: bool = False,

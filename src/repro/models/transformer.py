@@ -379,10 +379,18 @@ class TransformerLM:
         return out
 
     # ---------------------------------------------------------------- decode
-    def decode_step(self, params, token: jnp.ndarray, cache, pos: jnp.ndarray
+    def decode_step(self, params, token: jnp.ndarray, cache, pos: jnp.ndarray,
+                    block_tables: Optional[jnp.ndarray] = None
                     ) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
         """token (b,1); pos (b,) absolute positions. Returns
-        (logits (b,1,V), hidden (b,1,d), new_cache)."""
+        (logits (b,1,V), hidden (b,1,d), new_cache).
+
+        block_tables (b, T): paged-KV mode — sequence-cache leaves (attn
+        KV, MLA latents) are physical block stores (n_blocks, B, ...)
+        indexed through the tables; recurrent-state leaves stay per-row.
+        All layers share one table (a physical block spans every layer's
+        KV for its token range). Incompatible with sliding-window configs.
+        """
         cfg = self.cfg
         x = nn.embed(params["embed"], token, self.dtype)
         if cfg.is_encdec:
@@ -390,6 +398,11 @@ class TransformerLM:
             x = x + _sinusoid_at(pos, cfg.d_model, self.dtype)[:, None, :]
         window = (cfg.sliding_window
                   if cfg.long_context == "sliding_window" else 0)
+        if block_tables is not None:
+            # Paged mode never wraps: the serving runtime only selects it
+            # when max_len <= sliding_window, where the ring is degenerate
+            # (slot == pos) and full-causal validity is exact.
+            window = 0
 
         def block(carry, xs):
             x = carry
@@ -405,10 +418,11 @@ class TransformerLM:
                     h, kv = attn.attention_decode(
                         p["mix"], h, c["kv"], pos, self.dims,
                         rope_theta=0.0 if cfg.is_encdec else cfg.rope_theta,
-                        window=window)
+                        window=window, block_tables=block_tables)
                     nc["kv"] = kv
                 elif desc.mixer == "mla":
-                    h, kv = attn.mla_decode(p["mix"], h, c["kv"], pos, cfg)
+                    h, kv = attn.mla_decode(p["mix"], h, c["kv"], pos, cfg,
+                                            block_tables=block_tables)
                     nc["kv"] = kv
                 elif desc.mixer == "mamba":
                     h, st = ssm_mod.mamba_decode(p["mix"], h, c["state"], cfg)

@@ -1,6 +1,7 @@
 from repro.serving.engine import GenerationResult, ServingEngine, prefill  # noqa: F401
 from repro.serving.kv_pool import SlotKVPool  # noqa: F401
 from repro.serving.metrics import ServingMetrics  # noqa: F401
+from repro.serving.paged_pool import PagedKVPool  # noqa: F401
 from repro.serving.request import ChildSeq, Request, RequestState  # noqa: F401
 from repro.serving.runtime import ContinuousBatchingRuntime  # noqa: F401
 from repro.serving.scheduler import AdaptiveScheduler, ServeBatchResult  # noqa: F401

@@ -20,6 +20,7 @@ built for exactly this layout (slots at heterogeneous positions).
 from __future__ import annotations
 
 import functools
+import heapq
 from typing import Any, List
 
 import jax
@@ -42,6 +43,39 @@ def _read_row(cache, slot):
                                                keepdims=True), cache)
 
 
+class FreeList:
+    """Min-heap free list shared by the slot and paged pools: O(log n)
+    pop/push with deterministic lowest-id placement, and an O(1)
+    double-release / bad-id guard that raises instead of asserting."""
+
+    def __init__(self, ids, label: str):
+        self._heap: List[int] = list(ids)
+        heapq.heapify(self._heap)
+        self._free = set(self._heap)
+        self._valid = frozenset(self._heap)
+        self._label = label
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __contains__(self, i: int) -> bool:
+        return i in self._free
+
+    def pop(self) -> int:
+        if not self._heap:
+            raise RuntimeError(f"{self._label} pool exhausted")
+        i = heapq.heappop(self._heap)
+        self._free.discard(i)
+        return i
+
+    def push(self, i: int) -> None:
+        if i not in self._valid or i in self._free:
+            raise RuntimeError(
+                f"double release / bad {self._label} id {i}")
+        heapq.heappush(self._heap, i)
+        self._free.add(i)
+
+
 class SlotKVPool:
     """Fixed pool of decode-slot cache rows with host-side lifetime."""
 
@@ -50,7 +84,9 @@ class SlotKVPool:
         self.n_slots = int(n_slots)
         self.max_len = int(max_len)
         self.cache = model.init_cache(self.n_slots, self.max_len)
-        self._free: List[int] = list(range(self.n_slots))
+        # heap free list: the old per-call sort() + pop(0) was
+        # O(n log n) per alloc
+        self._free = FreeList(range(self.n_slots), "slot")
         self.alloc_count = 0            # lifetime allocations (reuse metric)
 
     # ------------------------------------------------------------ lifetime
@@ -64,16 +100,12 @@ class SlotKVPool:
 
     def alloc(self) -> int:
         """Claim the lowest free slot (deterministic placement)."""
-        if not self._free:
-            raise RuntimeError("KV pool exhausted")
-        self._free.sort()
-        slot = self._free.pop(0)
+        slot = self._free.pop()
         self.alloc_count += 1
         return slot
 
     def release(self, slot: int) -> None:
-        assert 0 <= slot < self.n_slots and slot not in self._free
-        self._free.append(slot)
+        self._free.push(slot)
 
     # ------------------------------------------------------------ cache io
     def write_row(self, src_cache: Any, src_row: int, slot: int) -> None:

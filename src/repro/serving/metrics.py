@@ -26,6 +26,11 @@ class ServingMetrics:
     ticks: int = 0
     active_sum: int = 0             # Σ active slots over ticks
     requests_done: int = 0
+    default_responses: int = 0      # b_i = 0 requests answered by default
+    eos_terminated: int = 0         # children retired early on EOS
+    eos_saved_tokens: int = 0       # decode ticks EOS termination avoided
+    peak_children: int = 0          # max concurrent in-flight children
+    peak_blocks: int = 0            # paged pool: max blocks in use
     latencies: List[float] = field(default_factory=list)
     start_t: Optional[float] = None
     end_t: Optional[float] = None
@@ -42,11 +47,34 @@ class ServingMetrics:
         self.prefill_tokens += int(n_tokens)
         self.prefill_calls += 1
 
-    def record_tick(self, n_active: int) -> None:
+    def record_tick(self, n_active: int, n_sampled: Optional[int] = None
+                    ) -> None:
+        """n_active: occupied slots this tick (decode + chunked prefill).
+        n_sampled: tokens actually sampled (decode slots); defaults to
+        n_active for the slot pool, where every active slot samples."""
         self._touch()
         self.ticks += 1
         self.active_sum += int(n_active)
-        self.decode_tokens += int(n_active)
+        n_children = int(n_active if n_sampled is None else n_sampled)
+        self.decode_tokens += n_children
+        self.peak_children = max(self.peak_children, n_children)
+
+    def record_first_token(self, n: int = 1) -> None:
+        """Paged mode samples a child's first token at admission (from the
+        stashed probe logits) rather than inside a tick."""
+        self._touch()
+        self.decode_tokens += int(n)
+
+    def record_blocks(self, in_use: int) -> None:
+        self.peak_blocks = max(self.peak_blocks, int(in_use))
+
+    def record_eos(self, saved_tokens: int) -> None:
+        self.eos_terminated += 1
+        self.eos_saved_tokens += max(0, int(saved_tokens))
+
+    def record_default(self) -> None:
+        self._touch()
+        self.default_responses += 1
 
     def record_done(self, latency: Optional[float]) -> None:
         self._touch()
@@ -80,6 +108,11 @@ class ServingMetrics:
             "ticks": self.ticks,
             "occupancy": self.occupancy,
             "requests_done": self.requests_done,
+            "default_responses": self.default_responses,
+            "eos_terminated": self.eos_terminated,
+            "eos_saved_tokens": self.eos_saved_tokens,
+            "peak_children": self.peak_children,
+            "peak_blocks": self.peak_blocks,
             "wall_s": self.wall,
             "tokens_per_sec": self.tokens_per_sec,
             "latency_p50_s": percentile(self.latencies, 50),

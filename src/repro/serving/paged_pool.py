@@ -1,0 +1,258 @@
+"""Block-granular paged KV pool (vLLM-style paging for the decode tick).
+
+The slot pool reserves a full ``max_len`` cache row per live child, so the
+adaptive policy's saved *budget* never becomes saved *memory*: a b_i=1
+request and a b_i=8 request with short prompts pin the same worst-case
+footprint. Here sequence caches are carved into physical **blocks** of
+``block_size`` positions shared by everyone:
+
+* sequence-cache leaves (attention KV, MLA latents — anything whose spec
+  names the ``kv_seq`` axis) become ``(n_repeat, n_blocks, block_size,
+  ...)`` stores; one physical block spans every layer's KV for its token
+  range, so a single block table per sequence drives all layers;
+* recurrent-state leaves (mamba conv/ssm, mLSTM/sLSTM states, whisper
+  cross-KV) have no sequence axis and stay per-*slot* ``(n_repeat,
+  n_slots, ...)``, exactly as in the slot pool;
+* blocks are allocated on demand as a sequence's ``pos`` crosses a block
+  boundary, refcounted, and freed at retirement — memory tracks actual
+  sequence length, not the worst case;
+* the probe prefill's full prompt blocks are shared **copy-on-write**
+  across all b_i fan-out children: each child increfs the full blocks and
+  privately copies only the partial boundary block it will write into, so
+  fan-out costs O(1) extra memory instead of b_i full rows.
+
+Physical block 0 is reserved as the **null block**: retired slots' table
+rows and table padding point at it, so the uniform decode tick can keep
+writing (garbage) somewhere harmless without per-slot control flow.
+
+A worst-case **reservation** ledger prevents admission deadlock: a
+sequence is only admitted if the blocks it could ever need are still
+unclaimed, so on-demand growth can never strand a half-decoded child
+waiting for memory that will not be freed. (Admission-*level* sizing
+mistakes — a hand-shrunk pool whose queued prompt tables alone exhaust
+memory with nothing in flight to free it — cannot corrupt state; they
+surface as a descriptive ``drain()`` stall report, and ``submit`` rejects
+any single request that could never fit at all.)
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.kv_pool import FreeList
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _paged_leaf_flags(model) -> Any:
+    """Pytree of bools matching the cache structure: True where the leaf
+    has a ``kv_seq`` axis (pageable), False for per-sequence state."""
+    specs = model.cache_specs()
+    return jax.tree.map(lambda s: "kv_seq" in s, specs,
+                        is_leaf=lambda t: isinstance(t, tuple))
+
+
+def supports_paging(model, max_len: int) -> bool:
+    """Paged mode is exact whenever the cache never wraps: full-context
+    configs always, sliding-window configs only while max_len fits inside
+    the window (the ring is then degenerate: slot == pos)."""
+    cfg = model.cfg
+    if cfg.long_context == "sliding_window" and max_len > cfg.sliding_window:
+        return False
+    return True
+
+
+class PagedKVPool:
+    """Paged cache store + host-side block/slot lifetime management.
+
+    ``cache`` is one pytree fed straight to ``model.decode_step(...,
+    block_tables=...)``: paged leaves ``(r, n_blocks, B, ...)``, state
+    leaves ``(r, n_slots, ...)``. Slots carry the per-sequence scalar
+    state (logits/pos/keys rows in the runtime, recurrent states here);
+    blocks carry the KV. Both have free lists; blocks also refcount for
+    copy-on-write prompt sharing.
+    """
+
+    def __init__(self, model, n_slots: int, max_len: int, *,
+                 block_size: int = 16, n_blocks: Optional[int] = None):
+        self.model = model
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len)
+        self.block_size = int(block_size)
+        self.blocks_per_seq = cdiv(self.max_len, self.block_size)  # T
+        if n_blocks is None:
+            # worst case for a full pool of children, + the null block
+            n_blocks = self.n_slots * self.blocks_per_seq + 1
+        assert n_blocks >= 2, "need at least the null block and one real one"
+        self.n_blocks = int(n_blocks)
+        if not supports_paging(model, self.max_len):
+            raise ValueError(
+                "paged KV needs a non-wrapping cache: max_len "
+                f"{max_len} exceeds sliding window "
+                f"{model.cfg.sliding_window}")
+
+        flags = _paged_leaf_flags(model)
+        # build under jit: XLA dead-code-eliminates the unselected half of
+        # each init_cache call, so state leaves are never materialized at
+        # batch=n_blocks (nor KV leaves at batch=n_slots) — without this,
+        # a state-heavy (mamba/xLSTM) pool sized to just fit device memory
+        # could OOM transiently during construction
+        self.cache = jax.jit(lambda: jax.tree.map(
+            lambda f, p, s: p if f else s, flags,
+            model.init_cache(self.n_blocks, self.block_size),
+            model.init_cache(self.n_slots, 1)))()
+        self._flags = flags
+
+        # block 0 = reserved null block (never allocated)
+        self._free_blocks = FreeList(range(1, self.n_blocks), "block")
+        self._ref = [0] * self.n_blocks
+        self._reserved = 0              # worst-case future allocations
+        self.block_alloc_count = 0      # lifetime allocations (reuse metric)
+
+        self._free_slots = FreeList(range(self.n_slots), "slot")
+
+        # per-pool jitted helpers closing over the (python-bool) leaf flags
+        def _copy_block(cache, src, dst):
+            def one(f, x):
+                if not f:
+                    return x
+                row = jax.lax.dynamic_index_in_dim(x, src, axis=1,
+                                                   keepdims=False)
+                return jax.lax.dynamic_update_index_in_dim(x, row, dst,
+                                                           axis=1)
+            return jax.tree.map(one, flags, cache)
+
+        def _read_state(cache, slot):
+            def one(f, x):
+                if f:
+                    return jnp.zeros((0,), x.dtype)     # placeholder leaf
+                return jax.lax.dynamic_index_in_dim(x, slot, axis=1,
+                                                    keepdims=True)
+            return jax.tree.map(one, flags, cache)
+
+        def _write_state(cache, state, slot):
+            def one(f, x, s):
+                if f:
+                    return x
+                row = jax.lax.dynamic_index_in_dim(s, 0, axis=1,
+                                                   keepdims=False)
+                return jax.lax.dynamic_update_index_in_dim(x, row, slot,
+                                                           axis=1)
+            return jax.tree.map(one, flags, cache, state)
+
+        self._copy_block_jit = jax.jit(_copy_block, donate_argnums=(0,))
+        self._read_state_jit = jax.jit(_read_state)
+        self._write_state_jit = jax.jit(_write_state, donate_argnums=(0,))
+        self._has_state = any(
+            not f for f in jax.tree.leaves(flags))
+        # pristine state rows (batch 1) for resetting a reused slot before
+        # chunked prefill — init values matter (mLSTM's `m` starts at
+        # -1e30, not zero), so they come from init_cache, not zeros_like
+        if self._has_state:
+            self._init_state = jax.jit(lambda: jax.tree.map(
+                lambda f, x: jnp.zeros((0,), x.dtype) if f else x,
+                flags, model.init_cache(1, 1)))()
+        else:
+            self._init_state = None
+
+    # ------------------------------------------------------------- queries
+    @property
+    def n_free_blocks(self) -> int:
+        return len(self._free_blocks)
+
+    @property
+    def n_free_slots(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return (self.n_blocks - 1) - self.n_free_blocks
+
+    @property
+    def available_blocks(self) -> int:
+        """Free blocks not yet promised to anyone (admission headroom)."""
+        return self.n_free_blocks - self._reserved
+
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - self.n_free_slots / self.n_slots
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return cdiv(n_tokens, self.block_size)
+
+    # -------------------------------------------------------- reservations
+    def can_reserve(self, k: int) -> bool:
+        return self.n_free_blocks - self._reserved >= k
+
+    def reserve(self, k: int) -> None:
+        assert self.can_reserve(k)
+        self._reserved += k
+
+    def unreserve(self, k: int) -> None:
+        assert 0 <= k <= self._reserved
+        self._reserved -= k
+
+    # ------------------------------------------------------- block lifetime
+    def alloc_block(self, *, from_reservation: bool = True) -> int:
+        """Claim the lowest free block (refcount 1). Reserved-draw by
+        default: the caller pre-reserved this growth at admission."""
+        blk = self._free_blocks.pop()
+        if from_reservation:
+            self.unreserve(1)
+        self._ref[blk] = 1
+        self.block_alloc_count += 1
+        return blk
+
+    def incref(self, blk: int) -> None:
+        assert 0 < blk < self.n_blocks and self._ref[blk] > 0
+        self._ref[blk] += 1
+
+    def decref(self, blk: int) -> None:
+        if not (0 < blk < self.n_blocks) or self._ref[blk] <= 0:
+            raise RuntimeError(
+                f"double release / bad block id {blk} (ref="
+                f"{self._ref[blk] if 0 <= blk < self.n_blocks else '?'})")
+        self._ref[blk] -= 1
+        if self._ref[blk] == 0:
+            self._free_blocks.push(blk)
+
+    def release_table(self, table: List[int]) -> None:
+        for blk in table:
+            self.decref(blk)
+
+    # -------------------------------------------------------- slot lifetime
+    def alloc_slot(self) -> int:
+        return self._free_slots.pop()
+
+    def release_slot(self, slot: int) -> None:
+        self._free_slots.push(slot)
+
+    # ------------------------------------------------------------- cache io
+    def copy_block(self, src: int, dst: int) -> None:
+        """COW: give a fan-out child its private copy of the partial
+        boundary block it will write into."""
+        self.cache = self._copy_block_jit(self.cache, src, dst)
+
+    def snapshot_slot_state(self, slot: int) -> Any:
+        """Recurrent-state rows of `slot` (empty placeholders for paged
+        leaves). Saved at probe-prefill completion so fan-out children can
+        start from the prompt's final state."""
+        if not self._has_state:
+            return None
+        return self._read_state_jit(self.cache, slot)
+
+    def restore_slot_state(self, state: Any, slot: int) -> None:
+        if state is None:
+            return
+        self.cache = self._write_state_jit(self.cache, state, slot)
+
+    def reset_slot_state(self, slot: int) -> None:
+        """Reinitialize a slot's recurrent-state rows before chunked
+        prefill: the uniform tick keeps mutating freed slots' state rows
+        with garbage, so a reused slot would otherwise leak the previous
+        occupant's mamba/xLSTM state into the new prompt."""
+        self.restore_slot_state(self._init_state, slot)

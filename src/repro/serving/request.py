@@ -7,12 +7,14 @@ start on different ticks when the pool is momentarily full.
 
 State machine::
 
-    QUEUED   submitted, awaiting prefill
-    PREFILL  probed (hidden state + prefill cache stashed), awaiting a
-             budget and/or free slots
-    DECODE   at least one child admitted to a slot
-    RERANK   all children finished, reward ranking in progress
-    DONE     best response selected (or default response for b_i = 0)
+    QUEUED      submitted, awaiting prefill
+    PREFILLING  paged mode: chunked prefill in flight (one prompt token
+                per decode tick, interleaved with other slots)
+    PREFILL     probed (hidden state + prefill cache/blocks stashed),
+                awaiting a budget and/or free slots
+    DECODE      at least one child admitted to a slot
+    RERANK      all children finished, reward ranking in progress
+    DONE        best response selected (or default response for b_i = 0)
 """
 from __future__ import annotations
 
@@ -26,22 +28,44 @@ import numpy as np
 
 class RequestState(enum.Enum):
     QUEUED = "queued"
+    PREFILLING = "prefilling"
     PREFILL = "prefill"
     DECODE = "decode"
     RERANK = "rerank"
     DONE = "done"
 
 
+@dataclass(eq=False)        # identity-hashed: lives in the runtime's set
+class StashGroup:
+    """One device-resident prefill cache shared by a same-length prefill
+    group. Its batch dim is the group's original size (`rows`) and it is
+    only freeable when the *last* member drops its stash — so the prefill
+    window must keep counting every row until the group dies, not
+    decrement per member (that released window capacity while the cache
+    was still fully alive, under-throttling memory on large groups).
+    `nondeferred` counts live members still flowing through the pipeline;
+    groups whose every member is parked on an un-called set_budget() are
+    excluded from the window so they cannot starve new arrivals."""
+    size: int = 0
+    nondeferred: int = 0
+    rows: int = 0               # original size: cache rows pinned
+
+
 @dataclass
 class PrefillStash:
-    """Device-resident prefill result shared by all requests of one
-    prefill group: cache leaves (n_repeat, g, S, ...), logits (g, V).
-    Row `row` belongs to this request. Dropped once the last child has
-    been admitted (the pool slots then hold the only copies)."""
+    """Device-resident prefill result. Slot mode: `cache` holds the group
+    prefill (leaves (n_repeat, g, S, ...)) and `row` this request's row.
+    Paged mode: the prompt lives in the request's blocks already, so
+    `cache` is None; `logits` is the tick's logits array with `row` the
+    slot the probe finished in, and `state` snapshots recurrent-state rows
+    for fan-out. Dropped once the last child has been admitted."""
     cache: Any
     logits: Any
     row: int
     start_pos: int          # prompt_len - 1 (next decode writes slot sp)
+    group: Optional[StashGroup] = None
+    state: Any = None       # paged mode: recurrent-state snapshot
+    deferred: bool = False  # awaiting an explicit set_budget() call
 
 
 @dataclass
@@ -52,9 +76,22 @@ class ChildSeq:
     index: int                              # j within the request
     slot: Optional[int] = None
     tokens: List[int] = field(default_factory=list)
+    eos: bool = False                       # emitted EOS -> retired early
+    table: Optional[List[int]] = None       # paged mode: block table
+    reserved: int = 0                       # paged mode: unclaimed blocks
 
     def done(self, max_new: int) -> bool:
-        return len(self.tokens) >= max_new
+        return self.eos or len(self.tokens) >= max_new
+
+    def output_tokens(self, eos_id: Optional[int] = None) -> np.ndarray:
+        """Reranker/response view: tokens truncated after the first EOS
+        (the EOS itself is kept; anything past it is decode waste)."""
+        toks = np.asarray(self.tokens, np.int32)
+        if eos_id is not None:
+            hits = np.flatnonzero(toks == eos_id)
+            if hits.size:
+                toks = toks[: int(hits[0]) + 1]
+        return toks
 
 
 @dataclass
@@ -69,6 +106,9 @@ class Request:
     pending: List[ChildSeq] = field(default_factory=list)   # not yet slotted
     stash: Optional[PrefillStash] = None
     hidden: Optional[np.ndarray] = None     # (d,) probe feature
+    table: Optional[List[int]] = None       # paged mode: prompt block table
+    prefill_pos: int = 0                    # paged mode: chunked progress
+    reserved: int = 0                       # paged: standing 1-child reserve
     response: Optional[np.ndarray] = None
     reward: float = 0.0
     submit_t: float = field(default_factory=time.perf_counter)

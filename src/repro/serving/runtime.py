@@ -5,22 +5,33 @@ barriers, double prefill) with a fixed pool of decode slots that variable-
 length, variable-budget requests stream through:
 
 * **One prefill per request.** The probe prefill that feeds the difficulty
-  predictor IS the generation prefill: its cache is replicated into the
-  b_i child slots (`SlotKVPool.write_row`), so the paper's "free" probe
-  stays free at serving time.
-* **One jitted decode step per tick over the whole pool.** Shapes are
-  static (n_slots, max_len), so the runtime compiles exactly once no
-  matter how budgets/prompt lengths mix — the batch engine re-jits for
-  every distinct fan-out shape.
-* **Immediate slot reclamation.** A child that finishes frees its slot at
-  the end of the tick; queued fan-out backfills it on the next tick, so
-  saved budget becomes saved wall-clock.
+  predictor IS the generation prefill. In the default **paged** pool the
+  prompt's KV blocks are shared copy-on-write across the b_i children; in
+  the **slot** pool the prefill cache row is replicated per child
+  (`SlotKVPool.write_row`). Either way the paper's "free" probe stays free
+  at serving time.
+* **One jitted decode step per tick over the whole pool — including
+  prefill.** In paged mode prompt tokens are *chunked into the decode
+  tick*: a bounded number of slots run prefill (one prompt token per slot
+  per tick) interleaved with decoding slots, under the same compiled
+  program. There is no separate prefill program and therefore no
+  per-(group, prompt_len) recompile — one compiled program for
+  everything. (The slot pool keeps the legacy batched prefill.)
+* **Memory tracks actual sequence length.** Paged-pool blocks are
+  allocated on demand as `pos` crosses block boundaries and freed the
+  moment a child retires (or hits EOS), so the adaptive policy's saved
+  budget becomes saved memory, not just saved ticks. A worst-case
+  reservation ledger makes on-demand growth deadlock-free.
+* **Immediate slot reclamation.** A child that finishes frees its slot
+  (and blocks) at the end of the tick; queued fan-out backfills it on the
+  next tick, so saved budget becomes saved wall-clock.
 
 Sampling uses per-child RNG streams — ``fold_in(fold_in(seed, request_id),
 child_index)`` — so outputs are a function of (seed, request, child) only,
-independent of slot placement and of what else is in flight. Greedy
-decoding (temperature 0) is bitwise-reproducible against the batch engine
-(see tests/test_runtime.py).
+independent of slot placement, pool backend, and of what else is in
+flight. Greedy decoding (temperature 0) is bitwise-reproducible across
+paged pool, slot pool, and the batch engine (see tests/test_runtime.py,
+tests/test_paged_pool.py).
 """
 from __future__ import annotations
 
@@ -37,8 +48,9 @@ from repro.models.model_zoo import Model
 from repro.serving.engine import prefill
 from repro.serving.kv_pool import SlotKVPool
 from repro.serving.metrics import ServingMetrics
+from repro.serving.paged_pool import PagedKVPool, cdiv, supports_paging
 from repro.serving.request import (ChildSeq, PrefillStash, Request,
-                                   RequestState)
+                                   RequestState, StashGroup)
 
 
 # cache/logits/pos/keys are donated: the caller rebinds all four every tick,
@@ -47,7 +59,7 @@ from repro.serving.request import (ChildSeq, PrefillStash, Request,
                    donate_argnums=(2, 3, 4, 5))
 def _pool_tick(model: Model, params, cache, logits, pos, keys, active,
                temperature, *, temperature_zero: bool):
-    """One decode tick over every slot.
+    """One slot-pool decode tick over every slot.
 
     Sample a token from each slot's current next-token logits, advance
     active slots' positions, and run one decode step over the whole pool.
@@ -85,15 +97,68 @@ def _admit_slot(logits, pos, keys, src_logits, src_row, slot, start_pos,
     return logits, pos, keys
 
 
+@functools.partial(jax.jit, static_argnames=("model", "temperature_zero"),
+                   donate_argnums=(2, 6))
+def _paged_tick(model: Model, params, cache, tables, tokens, pos, keys,
+                temperature, *, temperature_zero: bool):
+    """One paged-pool tick: decode every slot's current token at its
+    position through the block tables, then sample each slot's next token.
+
+    The same program serves chunked prefill and decode: a prefilling slot's
+    input token is the next *prompt* token (its sampled output is simply
+    not used by the host), a decoding slot's input is its last sampled
+    token. Dead slots point at the reserved null block and compute
+    harmless garbage — no per-slot control flow, one compile total.
+    """
+    logits, hidden, cache = model.decode_step(params, tokens[:, None], cache,
+                                              pos, block_tables=tables)
+    lg = logits[:, 0]
+    if temperature_zero:
+        sampled = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        new_keys = keys
+    else:
+        split = jax.vmap(jax.random.split)(keys)            # (N, 2, 2)
+        new_keys = split[:, 0]
+        sampled = jax.vmap(jax.random.categorical)(
+            split[:, 1], lg.astype(jnp.float32) / temperature
+        ).astype(jnp.int32)
+    return sampled, lg, hidden[:, 0], cache, new_keys
+
+
+@functools.partial(jax.jit, static_argnames=("temperature_zero",))
+def _sample_first(logits, row, key, temperature, *, temperature_zero: bool):
+    """Sample a fan-out child's first token from its request's stashed
+    probe logits. Performs exactly the split/categorical sequence the
+    slot-pool tick would, so per-child RNG streams are identical across
+    pool backends."""
+    lrow = jax.lax.dynamic_index_in_dim(logits, row, axis=0, keepdims=False)
+    if temperature_zero:
+        return jnp.argmax(lrow).astype(jnp.int32), key
+    split = jax.random.split(key)
+    tok = jax.random.categorical(
+        split[1], lrow.astype(jnp.float32) / temperature).astype(jnp.int32)
+    return tok, split[0]
+
+
 class ContinuousBatchingRuntime:
-    """Slot-pooled decode runtime; see module docstring.
+    """Pooled decode runtime; see module docstring.
+
+    pool="paged" (default) stores KV in block-granular pages with COW
+    prompt sharing and chunked prefill inside the decode tick;
+    pool="slots" keeps the PR-1 full-row slot pool (used by the
+    bitwise-equivalence tests and as the fallback for sliding-window
+    configs whose cache would wrap).
 
     budget_fn(request, hidden) -> int resolves budgets at admission
     (streaming mode, e.g. ``AdaptivePolicy.allocate_streaming`` at a
-    calibrated price). Leave it None and call :meth:`set_budget` for
+    calibrated price); in paged mode the result is additionally gated on
+    free *blocks* (not free slots), so difficulty-driven fan-out cannot
+    over-commit memory. Leave it None and call :meth:`set_budget` for
     batch-exact allocation (the AdaptiveScheduler facade does this).
     reward_fn(query, rows) -> scores reranks a request's children when the
-    last one finishes; None keeps child 0.
+    last one finishes; None keeps child 0. eos_id terminates a child
+    early when sampled, immediately freeing its slot/blocks and excluding
+    post-EOS tokens from the reranker input.
     """
 
     def __init__(self, model: Model, params, *, n_slots: int = 8,
@@ -101,33 +166,64 @@ class ContinuousBatchingRuntime:
                  temperature: float = 0.0, seed: int = 0,
                  reward_fn: Optional[Callable] = None,
                  budget_fn: Optional[Callable] = None,
-                 prefill_window: Optional[int] = None):
+                 prefill_window: Optional[int] = None,
+                 pool: str = "paged", block_size: int = 16,
+                 n_blocks: Optional[int] = None,
+                 prefill_slots: Optional[int] = None,
+                 eos_id: Optional[int] = None):
+        assert pool in ("paged", "slots")
+        if pool == "paged" and not supports_paging(model, max_len):
+            pool = "slots"          # sliding-window wrap: paged is inexact
+        self.pool_kind = pool
         self.model, self.params = model, params
         self.max_new = int(max_new)
         self.temperature = float(temperature)
         self.reward_fn, self.budget_fn = reward_fn, budget_fn
-        # admission control: at most this many requests may hold a
-        # device-resident prefill stash at once, bounding memory under a
-        # deep backlog (stashes drop once the last child reaches a slot).
-        # Applies to step()'s auto-prefill; an explicit prefill_queued()
-        # call (the facade's batch-exact path) is unthrottled.
+        self.eos_id = None if eos_id is None else int(eos_id)
+        # admission control: at most this many *stash groups* (device-
+        # resident prefill caches / prompt-block tables) may be live at
+        # once, bounding memory under a deep backlog. Requests parked on
+        # an un-called set_budget() are excluded — they are the caller's
+        # memory, and counting them starved new arrivals (spurious
+        # drain() stalls).
         if prefill_window is None:
             prefill_window = 2 * n_slots
         assert prefill_window >= 1
         self.prefill_window = prefill_window
-        self._stashed = 0
-        self.pool = SlotKVPool(model, n_slots, max_len)
+        self._groups: set = set()           # live StashGroups
         self.metrics = ServingMetrics(n_slots=n_slots)
         self._base_key = jax.random.PRNGKey(seed)
+        self.n_slots = int(n_slots)
         V = model.lm.vocab_padded
-        self.logits = jnp.zeros((n_slots, V), model.lm.dtype)
-        self.pos = jnp.zeros((n_slots,), jnp.int32)
         self.keys = jnp.zeros((n_slots, 2), jnp.uint32)
         self.slots: List[Optional[ChildSeq]] = [None] * n_slots
         self.queue: deque = deque()       # Requests awaiting prefill
         self.fanout: deque = deque()      # Requests with un-slotted children
         self.requests: Dict[int, Request] = {}
         self._next_id = 0
+        if pool == "paged":
+            if n_blocks is None:
+                # in-flight children worst case + one stashed-window's
+                # worth of prompts + the null block
+                n_blocks = ((n_slots + prefill_window)
+                            * cdiv(max_len, block_size) + 1)
+            self.pool = PagedKVPool(model, n_slots, max_len,
+                                    block_size=block_size, n_blocks=n_blocks)
+            # chunked prefill may use the whole pool: fan-out admission
+            # runs first each tick, so decode children always reclaim
+            # freed slots before new prompts do; lower this to bound
+            # prompt tokens per tick (prefill work) explicitly
+            if prefill_slots is None:
+                prefill_slots = n_slots
+            self.prefill_slots = int(prefill_slots)
+            self._pref: Dict[int, Request] = {}   # slot -> prefilling req
+            self._tok = np.zeros(n_slots, np.int32)   # next input token
+            self._pos = np.zeros(n_slots, np.int32)   # its decode position
+            self._fanout_blocked = False
+        else:
+            self.pool = SlotKVPool(model, n_slots, max_len)
+            self.logits = jnp.zeros((n_slots, V), model.lm.dtype)
+            self.pos = jnp.zeros((n_slots,), jnp.int32)
 
     # ------------------------------------------------------------- submit
     def submit(self, prompt: np.ndarray, *, budget: Optional[int] = None,
@@ -138,6 +234,18 @@ class ContinuousBatchingRuntime:
             raise ValueError(
                 f"prompt_len {len(prompt)} + max_new {mn} exceeds pool "
                 f"max_len {self.pool.max_len}")
+        if self.pool_kind == "paged":
+            # one child's worst case while the request's prompt table is
+            # still held: the prompt's blocks plus the child's privately
+            # owned tail (incl. its COW boundary copy)
+            sp = len(prompt)
+            owned = (self.pool.blocks_for(sp + mn)
+                     - sp // self.pool.block_size)
+            worst = self.pool.blocks_for(sp) + owned
+            if worst > self.pool.n_blocks - 1:
+                raise ValueError(
+                    f"request needs up to {worst} blocks but the pool has "
+                    f"{self.pool.n_blocks - 1} usable")
         r = Request(id=self._next_id, prompt=prompt, query=query,
                     budget=None if budget is None else int(budget),
                     max_new=mn)
@@ -155,14 +263,58 @@ class ContinuousBatchingRuntime:
                             query=None if queries is None else queries[i])
                 for i in range(n)]
 
+    # --------------------------------------------------- stash accounting
+    def _window_used(self) -> int:
+        """Device cache rows pinned by live stash groups. A group's cache
+        has batch dim = its original size and is only freeable when the
+        *last* member drops its stash, so every row stays counted until
+        the group dies — the old per-request count released window
+        capacity as members dropped while the cache was still fully
+        alive, under-throttling memory on large same-length groups.
+        Groups whose every live member awaits set_budget() are excluded
+        (they starved arrivals -> spurious drain() stalls; their memory
+        belongs to the caller)."""
+        return sum(g.rows for g in self._groups if g.nondeferred > 0)
+
+    def _make_stash(self, r: Request, group: StashGroup, **kw) -> None:
+        deferred = r.budget is None and self.budget_fn is None
+        r.stash = PrefillStash(group=group, deferred=deferred, **kw)
+        group.size += 1
+        group.rows += 1             # pinned until the whole group dies
+        if not deferred:
+            group.nondeferred += 1
+        self._groups.add(group)
+
+    def _drop_stash(self, r: Request) -> None:
+        st = r.stash
+        if st is None:
+            return
+        r.stash = None
+        g = st.group
+        g.size -= 1
+        if not st.deferred:
+            g.nondeferred -= 1
+        if g.size == 0:
+            self._groups.discard(g)
+
     # ------------------------------------------------------------ prefill
     def prefill_queued(self, limit: Optional[int] = None) -> int:
-        """Prefill up to `limit` queued requests (all of them when None),
-        batching same-length prompts into one jitted pass (the probe
-        prefill — the only prefill a request ever gets; note it compiles
-        per distinct (group, prompt_len) shape, unlike the decode tick).
-        Resolves budgets via budget_fn when present. Returns the number
-        of requests prefilled."""
+        """Prefill up to `limit` queued requests (all of them when None)
+        and return how many. Slot pool: batch same-length prompts into
+        one jitted pass (the probe prefill — note it compiles per
+        distinct (group, prompt_len) shape; each row it stashes counts
+        against the prefill window until its group dies). Paged pool:
+        drive the chunked prefill to completion for those requests by
+        running decode ticks — same compiled program as decoding.
+        Resolves budgets via budget_fn when present."""
+        if self.pool_kind == "paged":
+            n = len(self.queue) if limit is None else min(int(limit),
+                                                          len(self.queue))
+            targets = [r.id for r in list(self.queue)[:n]]
+            while any(self.requests[i].hidden is None for i in targets):
+                if not self.step():
+                    raise RuntimeError(self._stall_report("prefill_queued"))
+            return n
         by_len: Dict[int, List[Request]] = {}
         taken = 0
         while self.queue and (limit is None or taken < limit):
@@ -175,11 +327,11 @@ class ContinuousBatchingRuntime:
                                             self.pool.max_len)
             self.metrics.record_prefill(len(reqs) * sp)
             hidden_np = np.asarray(hidden, np.float32)
+            group = StashGroup()        # one shared device cache
             for i, r in enumerate(reqs):
                 r.hidden = hidden_np[i]
-                r.stash = PrefillStash(cache=cache, logits=logits, row=i,
-                                       start_pos=sp - 1)
-                self._stashed += 1
+                self._make_stash(r, group, cache=cache, logits=logits,
+                                 row=i, start_pos=sp - 1)
                 r.state = RequestState.PREFILL
                 if r.budget is None and self.budget_fn is not None:
                     r.budget = int(self.budget_fn(r, r.hidden))
@@ -191,17 +343,46 @@ class ContinuousBatchingRuntime:
         """Resolve a deferred budget (batch-exact allocation path)."""
         r = self.requests[request_id]
         assert r.state == RequestState.PREFILL and r.stash is not None
+        if r.stash.deferred:
+            r.stash.deferred = False
+            r.stash.group.nondeferred += 1
         r.budget = int(budget)
         self._spawn_children(r)
 
-    def _drop_stash(self, r: Request) -> None:
-        if r.stash is not None:
-            r.stash = None
-            self._stashed -= 1
+    def _gate_budget(self, r: Request, budget: int) -> int:
+        """Paged streaming admission is gated on free *blocks*: cap the
+        resolved budget at what unreserved memory can eventually carry.
+        The request's standing one-child reservation (made at prefill
+        admission) already pays for its first child, so that child is
+        granted on top of the open-market capacity; the floor of 1 covers
+        the degenerate no-reservation path."""
+        if self.pool_kind != "paged" or budget <= 0:
+            return budget
+        per_child = self._child_owned_blocks(r)
+        guaranteed = 1 if r.reserved else 0
+        cap = guaranteed + self.pool.available_blocks // max(1, per_child)
+        return max(1, min(budget, cap))
+
+    def _child_owned_blocks(self, r: Request) -> int:
+        """Blocks a fan-out child may come to own privately: its COW copy
+        of the partial boundary block plus its decode tail. Full prompt
+        blocks are shared and stay the request's."""
+        B = self.pool.block_size
+        full = r.prompt_len // B
+        return self.pool.blocks_for(r.prompt_len + r.max_new) - full
+
+    def _release_prompt_table(self, r: Request) -> None:
+        if r.table is not None:
+            self.pool.release_table(r.table)
+            r.table = None
 
     def _spawn_children(self, r: Request) -> None:
         if r.budget <= 0:
             # paper: b_i = 0 answers with the default response
+            if self.pool_kind == "paged":
+                self._release_prompt_table(r)
+                self.pool.unreserve(r.reserved)   # standing child reserve
+                r.reserved = 0
             self._drop_stash(r)
             self._finalize(r)
             return
@@ -215,8 +396,8 @@ class ContinuousBatchingRuntime:
     # ------------------------------------------------------------- fanout
     def _try_fanout(self) -> int:
         """Admit pending children into free slots (FIFO over requests).
-        Each admission replicates the request's probe-prefill cache row
-        into the slot — the fan-out shares one prefill."""
+        Slot pool: each admission replicates the request's probe-prefill
+        cache row into the slot — the fan-out shares one prefill."""
         admitted = 0
         while self.pool.n_free and self.fanout:
             r = self.fanout[0]
@@ -237,14 +418,120 @@ class ContinuousBatchingRuntime:
                 self._drop_stash(r)     # pool rows now hold the only copies
         return admitted
 
+    def _try_fanout_paged(self) -> int:
+        """Admit pending children: share the request's full prompt blocks
+        copy-on-write (incref), privately copy only the partial boundary
+        block, reserve the child's worst-case decode tail, and sample its
+        first token from the stashed probe logits."""
+        admitted = 0
+        self._fanout_blocked = False
+        tz = self.temperature == 0.0
+        while self.fanout and self.pool.n_free_slots:
+            r = self.fanout[0]
+            owned = self._child_owned_blocks(r)
+            if r.reserved:
+                # first child: consume the standing reservation made at
+                # prefill admission (guaranteed progress, no competition)
+                assert r.reserved == owned
+            elif not self.pool.can_reserve(owned):
+                self._fanout_blocked = True   # hold new prefills back
+                break
+            c = r.pending.pop(0)
+            slot = self.pool.alloc_slot()
+            if r.reserved:
+                r.reserved = 0                # transfer to the child
+            else:
+                self.pool.reserve(owned)
+            c.reserved = owned
+            B = self.pool.block_size
+            full = r.prompt_len // B
+            table = []
+            for t in range(full):               # shared, read-only forever
+                self.pool.incref(r.table[t])
+                table.append(r.table[t])
+            if r.prompt_len % B:                # COW the boundary block
+                blk = self.pool.alloc_block()
+                c.reserved -= 1
+                self.pool.copy_block(r.table[full], blk)
+                table.append(blk)
+            c.table = table
+            self.pool.restore_slot_state(r.stash.state, slot)
+            ck = jax.random.fold_in(
+                jax.random.fold_in(self._base_key, r.id), c.index)
+            tok, nk = _sample_first(r.stash.logits, r.stash.row, ck,
+                                    self.temperature, temperature_zero=tz)
+            self.keys = self.keys.at[slot].set(nk)
+            tok_i = int(tok)
+            c.tokens.append(tok_i)
+            self.metrics.record_first_token()
+            if self.eos_id is not None and tok_i == self.eos_id:
+                c.eos = True
+                self.metrics.record_eos(r.max_new - len(c.tokens))
+            c.slot = slot
+            self.slots[slot] = c
+            self._tok[slot] = tok_i
+            self._pos[slot] = r.prompt_len      # first decode position
+            admitted += 1
+            if c.done(r.max_new):               # EOS/max_new=1 at admission
+                self._retire_paged_child(c, r)
+            if not r.pending:
+                self.fanout.popleft()
+                self._release_prompt_table(r)   # children hold their refs
+                self._drop_stash(r)
+        return admitted
+
+    def _admit_prefill_paged(self) -> int:
+        """Move queued requests into chunked prefill: claim a slot, the
+        prompt's worst-case block reservation PLUS one child's worst case
+        (guaranteed progress: anything admitted to prefill can eventually
+        decode at least one child — its first fan-out child draws this
+        standing reservation instead of competing for fresh memory), and
+        the prompt's first block. While the fan-out backlog is blocked on
+        memory, no new prompts are admitted (their blocks belong to the
+        backlog head)."""
+        admitted = 0
+        while (self.queue and not self._fanout_blocked
+               and len(self._pref) < self.prefill_slots
+               and self.pool.n_free_slots > 0
+               and self._window_used() < self.prefill_window):
+            r = self.queue[0]
+            need = self.pool.blocks_for(r.prompt_len)
+            # budget-deferred requests (no budget, no budget_fn — parked
+            # until set_budget) take no child reservation: they will not
+            # decode promptly, and pinning a tail per deferred request
+            # would let a deep batch-exact backlog reserve the whole pool
+            # (the facade sizes one block-row per request, not two)
+            child_need = (0 if r.budget is None and self.budget_fn is None
+                          else self._child_owned_blocks(r))
+            if not self.pool.can_reserve(need + child_need):
+                break
+            self.queue.popleft()
+            self.pool.reserve(need + child_need)
+            r.reserved = child_need
+            slot = self.pool.alloc_slot()
+            self.pool.reset_slot_state(slot)    # purge previous occupant
+            r.table = [self.pool.alloc_block()]
+            r.state = RequestState.PREFILLING
+            r.prefill_pos = 0
+            self._pref[slot] = r
+            self._tok[slot] = int(r.prompt[0])
+            self._pos[slot] = 0
+            admitted += 1
+        return admitted
+
     # --------------------------------------------------------------- step
     def step(self) -> bool:
-        """One scheduler tick: prefill arrivals, backfill free slots, run
-        one jitted decode step over the pool, retire finished children.
-        Returns True if any progress was made."""
+        """One scheduler tick: admit work, run one jitted decode step over
+        the pool, retire finished children. Returns True on progress."""
+        if self.pool_kind == "paged":
+            return self._step_paged()
+        return self._step_slots()
+
+    def _step_slots(self) -> bool:
         progressed = False
         if self.queue:
-            room = self.prefill_window - self._stashed
+            # room is in cache rows: each admitted request stashes one
+            room = self.prefill_window - self._window_used()
             if room > 0 and self.prefill_queued(room):
                 progressed = True
         if self._try_fanout():
@@ -262,8 +549,12 @@ class ContinuousBatchingRuntime:
         tok_np = np.asarray(tok)
         for s in active_idx:
             c = self.slots[s]
-            c.tokens.append(int(tok_np[s]))
+            t = int(tok_np[s])
+            c.tokens.append(t)
             r = self.requests[c.request_id]
+            if self.eos_id is not None and t == self.eos_id:
+                c.eos = True
+                self.metrics.record_eos(r.max_new - len(c.tokens))
             if c.done(r.max_new):
                 self.slots[s] = None
                 self.pool.release(s)
@@ -272,16 +563,117 @@ class ContinuousBatchingRuntime:
                     self._finalize(r)
         return True
 
+    def _step_paged(self) -> bool:
+        progressed = bool(self._try_fanout_paged())
+        progressed = bool(self._admit_prefill_paged()) or progressed
+        live_dec = [s for s, c in enumerate(self.slots) if c is not None]
+        live_pref = list(self._pref.keys())
+        if not live_dec and not live_pref:
+            return progressed
+        B = self.pool.block_size
+        # allocate blocks on demand before the tick's writes cross into
+        # them (reservation-backed: can_reserve was checked at admission)
+        for s in live_dec:
+            c = self.slots[s]
+            if self._pos[s] // B == len(c.table):
+                c.table.append(self.pool.alloc_block())
+                c.reserved -= 1
+        for s in live_pref:
+            r = self._pref[s]
+            if self._pos[s] // B == len(r.table):
+                r.table.append(self.pool.alloc_block())
+        tables = np.zeros((self.n_slots, self.pool.blocks_per_seq), np.int32)
+        for s in live_dec:
+            t = self.slots[s].table
+            tables[s, :len(t)] = t
+        for s in live_pref:
+            t = self._pref[s].table
+            tables[s, :len(t)] = t
+        sampled, logits, hidden, cache, self.keys = _paged_tick(
+            self.model, self.params, self.pool.cache, jnp.asarray(tables),
+            jnp.asarray(self._tok), jnp.asarray(self._pos), self.keys,
+            self.temperature, temperature_zero=(self.temperature == 0.0))
+        self.pool.cache = cache
+        self.metrics.record_tick(len(live_dec) + len(live_pref),
+                                 n_sampled=len(live_dec))
+        self.metrics.record_blocks(self.pool.blocks_in_use)
+        if live_pref:
+            self.metrics.record_prefill(len(live_pref))
+        sampled_np = np.asarray(sampled)
+        hidden_np = (np.asarray(hidden, np.float32) if live_pref else None)
+        for s in live_pref:
+            r = self._pref[s]
+            t = int(self._pos[s])
+            if t == r.prompt_len - 1:           # probe complete
+                r.hidden = hidden_np[s]
+                group = StashGroup()
+                self._make_stash(r, group, cache=None, logits=logits,
+                                 row=s, start_pos=t,
+                                 state=self.pool.snapshot_slot_state(s))
+                del self._pref[s]
+                self.pool.release_slot(s)
+                self._tok[s] = 0
+                self._pos[s] = 0
+                r.state = RequestState.PREFILL
+                if r.budget is None and self.budget_fn is not None:
+                    r.budget = self._gate_budget(
+                        r, int(self.budget_fn(r, r.hidden)))
+                if r.budget is not None:
+                    self._spawn_children(r)
+            else:
+                r.prefill_pos = t + 1
+                self._pos[s] = t + 1
+                self._tok[s] = int(r.prompt[t + 1])
+        for s in live_dec:
+            c = self.slots[s]
+            if c is None:
+                continue
+            r = self.requests[c.request_id]
+            t = int(sampled_np[s])
+            c.tokens.append(t)
+            if self.eos_id is not None and t == self.eos_id:
+                c.eos = True
+                self.metrics.record_eos(r.max_new - len(c.tokens))
+            if c.done(r.max_new):
+                self._retire_paged_child(c, r)
+            else:
+                self._tok[s] = t
+                self._pos[s] = int(self._pos[s]) + 1
+        return True
+
+    def _retire_paged_child(self, c: ChildSeq, r: Request) -> None:
+        """Free the child's slot, blocks (shared ones decref), and any
+        unclaimed reservation — immediately, so EOS/short children return
+        memory to the pool the same tick they finish."""
+        slot = c.slot
+        self.slots[slot] = None
+        self.pool.release_slot(slot)
+        self._tok[slot] = 0
+        self._pos[slot] = 0
+        c.slot = None
+        self.pool.release_table(c.table)
+        c.table = None
+        self.pool.unreserve(c.reserved)
+        c.reserved = 0
+        if r.all_children_done():
+            self._finalize(r)
+
     def _finalize(self, r: Request) -> None:
         if r.children:
             r.state = RequestState.RERANK
-            rows = [np.asarray(c.tokens, np.int32) for c in r.children]
+            rows = [c.output_tokens(self.eos_id) for c in r.children]
             if self.reward_fn is not None:
                 scores = np.asarray(self.reward_fn(r.query, rows), np.float64)
                 j = int(scores.argmax())
                 r.response, r.reward = rows[j], float(scores[j])
             else:
                 r.response = rows[0]
+        else:
+            # b_i = 0: the documented default response — an empty token
+            # row with zero reward (the paper's "answer with the default")
+            r.response = np.zeros((0,), np.int32)
+            r.reward = 0.0
+            self.metrics.record_default()
         r.state = RequestState.DONE
         r.done_t = time.perf_counter()
         self.metrics.record_done(r.latency)
@@ -292,16 +684,40 @@ class ContinuousBatchingRuntime:
         return sum(c is not None for c in self.slots)
 
     def pending(self) -> bool:
-        return bool(self.queue or self.fanout or self.n_inflight)
+        prefilling = self.pool_kind == "paged" and bool(self._pref)
+        return bool(self.queue or self.fanout or self.n_inflight
+                    or prefilling)
+
+    def _stall_report(self, ctx: str = "drain") -> str:
+        parts = [f"runtime stalled in {ctx}"]
+        deferred = [r.id for r in self.requests.values()
+                    if r.state is RequestState.PREFILL and r.stash is not None
+                    and r.stash.deferred]
+        if deferred:
+            parts.append(f"requests awaiting set_budget(): {deferred}")
+        if self.queue:
+            parts.append(
+                f"queued, cannot prefill: {[r.id for r in self.queue]}")
+        if self.fanout:
+            head = self.fanout[0]
+            if self.pool_kind == "paged":
+                parts.append(
+                    f"fan-out blocked for request {head.id} "
+                    f"(free_slots={self.pool.n_free_slots}, "
+                    f"free_blocks={self.pool.n_free_blocks}, "
+                    f"reserved={self.pool._reserved})")
+            else:
+                parts.append(f"fan-out blocked for request {head.id} "
+                             f"(free_slots={self.pool.n_free})")
+        return "; ".join(parts)
 
     def drain(self) -> None:
         """Run until every runnable request is DONE. Requests still waiting
-        on :meth:`set_budget` are left in PREFILL (they are not runnable)."""
+        on :meth:`set_budget` are left in PREFILL (they are not runnable
+        and do not count against the prefill window)."""
         while self.pending():
             if not self.step():
-                waiting = [r.id for r in self.requests.values()
-                           if r.state not in (RequestState.DONE,)]
-                raise RuntimeError(f"runtime stalled; waiting={waiting}")
+                raise RuntimeError(self._stall_report())
 
     def result(self, request_id: int) -> Request:
         return self.requests[request_id]

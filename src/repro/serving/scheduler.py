@@ -39,7 +39,7 @@ from repro.serving.runtime import ContinuousBatchingRuntime
 @dataclass
 class ServeBatchResult:
     budgets: np.ndarray
-    responses: List[Optional[np.ndarray]]    # token rows (or None: default)
+    responses: List[Optional[np.ndarray]]    # token rows (b_i=0: empty row)
     rewards: np.ndarray
     total_samples: int
     generated_tokens: int
@@ -50,7 +50,8 @@ class ServeBatchResult:
 class AdaptiveScheduler:
     def __init__(self, engine: ServingEngine, policy: AdaptivePolicy,
                  reward_fn: Callable, *, seed: int = 0,
-                 backend: str = "runtime", n_slots: int = 8):
+                 backend: str = "runtime", n_slots: int = 8,
+                 pool: str = "paged", block_size: int = 16):
         assert backend in ("runtime", "batch")
         self.engine = engine
         self.policy = policy
@@ -58,6 +59,8 @@ class AdaptiveScheduler:
         self.seed = seed
         self.backend = backend
         self.n_slots = n_slots
+        self.pool = pool
+        self.block_size = block_size
 
     def serve_batch(self, queries: Sequence, prompts: np.ndarray,
                     avg_budget: float) -> ServeBatchResult:
@@ -69,11 +72,19 @@ class AdaptiveScheduler:
     def _serve_runtime(self, queries, prompts, avg_budget) -> ServeBatchResult:
         n, sp = prompts.shape
         eng = self.engine
+        max_len = sp + eng.max_new + 1
+        # batch-exact allocation probes the whole batch before any budget
+        # lands, so every request briefly holds its prompt blocks: size
+        # the paged store for that plus a full pool of decode children
+        from repro.serving.paged_pool import cdiv
+        per_seq = cdiv(max_len, self.block_size)
         rt = ContinuousBatchingRuntime(
             eng.model, eng.params, n_slots=self.n_slots,
-            max_len=sp + eng.max_new + 1, max_new=eng.max_new,
+            max_len=max_len, max_new=eng.max_new,
             temperature=eng.temperature, seed=self.seed,
-            reward_fn=self.reward_fn)
+            reward_fn=self.reward_fn, pool=self.pool,
+            block_size=self.block_size,
+            n_blocks=(n + self.n_slots) * per_seq + 1)
         ids = rt.submit_batch(prompts, queries=list(queries))
         rt.prefill_queued()                       # the single probe prefill
         hidden = np.stack([rt.requests[i].hidden for i in ids])
@@ -98,7 +109,10 @@ class AdaptiveScheduler:
         logits, hidden, cache, sp = self.engine.prefill_for_generate(prompts)
         budgets = self.policy.allocate(np.asarray(hidden, np.float32),
                                        avg_budget)
-        responses: List[Optional[np.ndarray]] = [None] * n
+        # b_i = 0 answers with the documented default response (empty
+        # token row, zero reward) — parity with the runtime backends
+        responses: List[Optional[np.ndarray]] = [
+            np.zeros((0,), np.int32)] * n
         rewards = np.zeros(n)
         total = int(budgets.sum())
         if total > 0:

@@ -1,0 +1,361 @@
+"""Paged KV pool: three-way bitwise equivalence (paged / slots / batch
+engine), chunked-prefill parity with engine.prefill, COW-sharing and
+block-reuse invariants under churn, reservation-gated admission, capacity
+vs the slot pool at equal memory, and the paged Pallas kernel."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (ContinuousBatchingRuntime, PagedKVPool,
+                           RequestState, ServingEngine)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32", n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _pool_invariants_clean(pool: PagedKVPool):
+    assert pool.blocks_in_use == 0
+    assert pool.n_free_slots == pool.n_slots
+    assert pool._reserved == 0
+    assert all(r == 0 for r in pool._ref)
+
+
+def test_three_way_bitwise_equivalence(tiny):
+    """Greedy decode is bitwise identical across the paged pool, the slot
+    pool, and the batch engine, on a mixed-length mixed-budget workload."""
+    cfg, model, params = tiny
+    engine = ServingEngine(model, params, max_new=4, temperature=0.0)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (5, 9, 7, 9)]
+    budgets = [2, 1, 3, 2]
+
+    def run(pool):
+        rt = ContinuousBatchingRuntime(model, params, n_slots=4, max_len=16,
+                                       max_new=4, temperature=0.0, seed=0,
+                                       pool=pool, block_size=4)
+        ids = [rt.submit(p, budget=b) for p, b in zip(prompts, budgets)]
+        rt.drain()
+        return rt, ids
+
+    rt_p, ids_p = run("paged")
+    rt_s, ids_s = run("slots")
+    for i, (p, b) in enumerate(zip(prompts, budgets)):
+        want = engine.generate(p[None], n_samples=1, seed=0,
+                               temperature=0.0).tokens[0]
+        for c in rt_p.result(ids_p[i]).children:
+            np.testing.assert_array_equal(np.asarray(c.tokens), want)
+        for cp, cs in zip(rt_p.result(ids_p[i]).children,
+                          rt_s.result(ids_s[i]).children):
+            np.testing.assert_array_equal(cp.tokens, cs.tokens)
+    _pool_invariants_clean(rt_p.pool)
+
+
+def test_chunked_prefill_parity_with_engine_prefill(tiny):
+    """The chunked (one-prompt-token-per-tick) prefill inside the decode
+    tick reproduces engine.prefill: same probe hidden state and next-token
+    logits to float tolerance (the batched scan fuses differently than the
+    per-token tick), and the same greedy next token exactly."""
+    from repro.serving.engine import prefill as engine_prefill
+    cfg, model, params = tiny
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, (7,)).astype(np.int32)
+    logits_ref, hidden_ref, _ = engine_prefill(model, params,
+                                               jnp.asarray(prompt[None]), 12)
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=12,
+                                   max_new=2, temperature=0.0, seed=0,
+                                   pool="paged", block_size=4)
+    rid = rt.submit(prompt)                    # no budget: parks in PREFILL
+    rt.prefill_queued()
+    r = rt.result(rid)
+    assert r.state == RequestState.PREFILL
+    np.testing.assert_allclose(r.hidden,
+                               np.asarray(hidden_ref[0], np.float32),
+                               rtol=2e-5, atol=2e-5)
+    got_logits = np.asarray(r.stash.logits)[r.stash.row]
+    np.testing.assert_allclose(got_logits, np.asarray(logits_ref[0]),
+                               rtol=2e-5, atol=2e-5)
+    assert int(got_logits.argmax()) == int(np.asarray(logits_ref[0]).argmax())
+
+
+def test_cow_sharing_bounds_fanout_memory(tiny):
+    """Fan-out children share the prompt's full blocks copy-on-write: b_i
+    children cost the shared prompt + one boundary copy + their decode
+    tails, not b_i full rows."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(4)
+    sp, max_new, B, b_i = 8, 4, 4, 4
+    prompt = rng.integers(0, cfg.vocab_size, (sp,)).astype(np.int32)
+    rt = ContinuousBatchingRuntime(model, params, n_slots=4, max_len=16,
+                                   max_new=max_new, temperature=0.0, seed=0,
+                                   pool="paged", block_size=B)
+    rid = rt.submit(prompt, budget=b_i)
+    rt.drain()
+    # prompt = 2 full shared blocks; each child owns 1 decode-tail block
+    # (sp % B == 0 -> no boundary copy). Slot-pool equivalent would be
+    # b_i * ceil(max_len/B) = 16 blocks.
+    shared = sp // B
+    assert rt.metrics.peak_blocks <= shared + b_i * rt.pool.blocks_for(max_new)
+    assert rt.metrics.peak_blocks < b_i * rt.pool.blocks_per_seq
+    # greedy children identical (all reads went through shared blocks)
+    rows = [list(c.tokens) for c in rt.result(rid).children]
+    assert all(row == rows[0] for row in rows)
+    _pool_invariants_clean(rt.pool)
+
+
+def test_block_reuse_under_churn(tiny):
+    """Sustained traffic through a small pool recycles blocks (lifetime
+    allocations exceed the pool) and every block/slot/reservation returns
+    to the free state afterwards."""
+    cfg, model, params = tiny
+    engine = ServingEngine(model, params, max_new=3, temperature=0.0)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (5, 6, 7, 5, 6, 7, 5, 6)]
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=10,
+                                   max_new=3, temperature=0.0, seed=0,
+                                   pool="paged", block_size=4,
+                                   budget_fn=lambda r, h: 2)
+    ids = [rt.submit(p) for p in prompts]
+    rt.drain()
+    for p, rid in zip(prompts, ids):
+        want = engine.generate(p[None], n_samples=1, seed=0,
+                               temperature=0.0).tokens[0]
+        np.testing.assert_array_equal(rt.result(rid).response, want)
+    assert rt.pool.block_alloc_count > rt.pool.n_blocks - 1   # reuse
+    _pool_invariants_clean(rt.pool)
+
+
+def test_paged_beats_slots_on_concurrency_at_equal_memory(tiny):
+    """The acceptance claim in miniature: at the same device KV memory
+    (token capacity), the paged pool sustains more concurrent children
+    than the slot pool when sequences are shorter than the worst case —
+    the slot pool queues first."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(6)
+    max_len, B = 16, 4
+    mem_tokens = 4 * max_len                   # slot pool: 4 rows
+    sp, max_new, n_req = 4, 4, 6
+    prompts = np.stack([rng.integers(0, cfg.vocab_size, (sp,))
+                        for _ in range(n_req)]).astype(np.int32)
+
+    rt_s = ContinuousBatchingRuntime(model, params,
+                                     n_slots=mem_tokens // max_len,
+                                     max_len=max_len, max_new=max_new,
+                                     temperature=0.0, seed=0, pool="slots")
+    ids = rt_s.submit_batch(prompts, budgets=[1] * n_req)
+    rt_s.drain()
+
+    rt_p = ContinuousBatchingRuntime(model, params, n_slots=n_req,
+                                     max_len=max_len, max_new=max_new,
+                                     temperature=0.0, seed=0, pool="paged",
+                                     block_size=B,
+                                     n_blocks=mem_tokens // B + 1,
+                                     prefill_slots=n_req)
+    ids_p = rt_p.submit_batch(prompts, budgets=[1] * n_req)
+    rt_p.drain()
+
+    for a, b in zip(ids, ids_p):
+        np.testing.assert_array_equal(rt_s.result(a).response,
+                                      rt_p.result(b).response)
+    # 6 short children fit the paged pool at once; the slot pool tops out
+    # at its 4 full-length rows
+    assert rt_p.metrics.peak_children > rt_s.metrics.peak_children
+    assert rt_s.metrics.peak_children == mem_tokens // max_len
+    _pool_invariants_clean(rt_p.pool)
+
+
+def test_reservations_prevent_deadlock_when_blocks_scarce(tiny):
+    """With barely more blocks than one worst-case child, admission must
+    serialize via reservations instead of deadlocking mid-decode."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+               for _ in range(3)]
+    rt = ContinuousBatchingRuntime(model, params, n_slots=3, max_len=12,
+                                   max_new=4, temperature=0.0, seed=0,
+                                   pool="paged", block_size=4,
+                                   n_blocks=2 * 3 + 1 + 1)  # ~2 children
+    ids = [rt.submit(p, budget=2) for p in prompts]
+    rt.drain()                                 # must complete, not stall
+    for rid in ids:
+        assert rt.result(rid).state == RequestState.DONE
+        assert all(len(c.tokens) == 4 for c in rt.result(rid).children)
+    _pool_invariants_clean(rt.pool)
+
+
+def test_streaming_budget_gated_on_free_blocks(tiny):
+    """The paged runtime caps budget_fn's answer at what unreserved
+    blocks can carry (floor 1): a greedy budget of 64 on a tiny pool
+    admits a bounded fan-out instead of over-committing memory."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=12,
+                                   max_new=4, temperature=0.0, seed=0,
+                                   pool="paged", block_size=4, n_blocks=8,
+                                   budget_fn=lambda r, h: 64)
+    rid = rt.submit(prompt)
+    rt.drain()
+    r = rt.result(rid)
+    assert r.state == RequestState.DONE
+    assert 1 <= r.budget < 64                  # gated, not granted
+    _pool_invariants_clean(rt.pool)
+
+
+def test_submit_rejects_request_that_can_never_fit(tiny):
+    """The worst case for one child includes the request's held prompt
+    table plus the child's COW boundary copy — a pool sized only for
+    blocks_for(sp + max_new) would deadlock at fan-out, so submit must
+    reject it up front; one block more and the request completes."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(10)
+    prompt = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    # sp=6, B=4, max_new=4: prompt 2 blocks + child owns 2 => worst 4
+    rt = ContinuousBatchingRuntime(model, params, n_slots=1, max_len=12,
+                                   max_new=4, temperature=0.0, seed=0,
+                                   pool="paged", block_size=4, n_blocks=4)
+    with pytest.raises(ValueError, match="blocks"):
+        rt.submit(prompt, budget=1)
+    rt_ok = ContinuousBatchingRuntime(model, params, n_slots=1, max_len=12,
+                                      max_new=4, temperature=0.0, seed=0,
+                                      pool="paged", block_size=4, n_blocks=5)
+    rid = rt_ok.submit(prompt, budget=1)
+    rt_ok.drain()
+    assert rt_ok.result(rid).state == RequestState.DONE
+    _pool_invariants_clean(rt_ok.pool)
+
+
+def test_state_model_slot_reuse_resets_recurrent_state(tiny):
+    """Recurrent-state leaves (here xLSTM) live per-slot, and the uniform
+    tick keeps mutating freed slots' rows with garbage — so chunked
+    prefill must reset a reused slot's state to its init values or the
+    previous occupant contaminates the new request's probe and tokens.
+    Forces reuse with n_slots=1 and checks each request against its own
+    batch-engine run."""
+    cfg = dataclasses.replace(get_config("xlstm-1.3b").reduced(),
+                              dtype="float32", n_layers=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, max_new=3, temperature=0.0)
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (6, 5, 7)]
+    rt = ContinuousBatchingRuntime(model, params, n_slots=1, max_len=10,
+                                   max_new=3, temperature=0.0, seed=0,
+                                   pool="paged", block_size=4)
+    assert rt.pool._has_state            # the model really carries state
+    ids = [rt.submit(p, budget=1) for p in prompts]
+    rt.drain()
+    for p, rid in zip(prompts, ids):
+        want = engine.generate(p[None], n_samples=1, seed=0,
+                               temperature=0.0).tokens[0]
+        np.testing.assert_array_equal(rt.result(rid).response, want)
+    _pool_invariants_clean(rt.pool)
+
+
+def test_deferred_backlog_fits_one_block_row_per_request(tiny):
+    """Facade-sizing regression: budget-deferred requests must pin only
+    their prompt blocks (no standing child reservation — they will not
+    decode until set_budget), so a batch-exact backlog sized at one
+    block-row per request probes completely instead of stalling on block
+    exhaustion."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(11)
+    n, sp, mn, B, max_len, n_slots = 10, 5, 4, 4, 12, 2
+    per_seq = -(-max_len // B)
+    prompts = [rng.integers(0, cfg.vocab_size, (sp,)).astype(np.int32)
+               for _ in range(n)]
+    rt = ContinuousBatchingRuntime(model, params, n_slots=n_slots,
+                                   max_len=max_len, max_new=mn,
+                                   temperature=0.0, seed=0, pool="paged",
+                                   block_size=B, prefill_slots=n_slots,
+                                   n_blocks=(n + n_slots) * per_seq + 1)
+    ids = [rt.submit(p) for p in prompts]      # all budget-deferred
+    assert rt.prefill_queued() == n            # must not stall
+    for rid in ids:
+        assert rt.result(rid).hidden is not None
+        rt.set_budget(rid, 2)
+    rt.drain()
+    assert all(rt.result(i).state == RequestState.DONE for i in ids)
+    _pool_invariants_clean(rt.pool)
+
+
+def test_policy_allocate_streaming_max_children():
+    """AdaptivePolicy.allocate_streaming clamps to the runtime-provided
+    memory cap without touching the dual price."""
+    from repro.core import AdaptivePolicy
+    from repro.core.difficulty import init_mlp_probe
+    probe = init_mlp_probe(jax.random.PRNGKey(1), 8, 1)
+    policy = AdaptivePolicy(probe_params=probe, kind="bce", b_max=8, b_min=1)
+    h = np.random.default_rng(0).normal(size=(5, 8)).astype(np.float32)
+    free = policy.allocate_streaming(h, price=0.0)       # price 0: max out
+    capped = policy.allocate_streaming(h, price=0.0, max_children=2)
+    assert free.max() > 2
+    assert capped.max() <= 2
+    np.testing.assert_array_equal(np.minimum(free, 2), capped)
+
+
+def test_paged_pool_block_double_release_raises(tiny):
+    cfg, model, params = tiny
+    pool = PagedKVPool(model, 2, 8, block_size=4, n_blocks=6)
+    pool.reserve(1)
+    blk = pool.alloc_block()
+    pool.decref(blk)
+    with pytest.raises(RuntimeError, match="double release"):
+        pool.decref(blk)
+    with pytest.raises(RuntimeError, match="double release|bad block"):
+        pool.decref(0)                         # the null block is sacred
+    s = pool.alloc_slot()
+    pool.release_slot(s)
+    with pytest.raises(RuntimeError, match="double release"):
+        pool.release_slot(s)
+
+
+def test_paged_pallas_kernel_matches_xla(tiny, monkeypatch):
+    """REPRO_DECODE_KERNEL=pallas routes the paged runtime through the
+    block-table Pallas kernel; greedy outputs match the XLA gather path.
+
+    The env var is read at *trace* time, and _paged_tick's jit cache is
+    keyed on the Model object — so the pallas run must use a freshly
+    built Model (same weights) to force a retrace, and the kernel call
+    count proves the pallas path was actually traced (a cache hit would
+    silently re-execute the XLA program)."""
+    from repro.kernels import ops
+    from repro.models import build_model as _build
+    cfg, model, params = tiny
+    rng = np.random.default_rng(9)
+    prompts = np.stack([rng.integers(0, cfg.vocab_size, (6,))
+                        for _ in range(2)]).astype(np.int32)
+
+    calls = []
+    orig = ops.paged_decode_attention
+    monkeypatch.setattr(
+        ops, "paged_decode_attention",
+        lambda *a, **k: (calls.append(1), orig(*a, **k))[1])
+
+    def run(m):
+        rt = ContinuousBatchingRuntime(m, params, n_slots=2, max_len=12,
+                                       max_new=3, temperature=0.0, seed=0,
+                                       pool="paged", block_size=4)
+        ids = rt.submit_batch(prompts, budgets=[1, 1])
+        rt.drain()
+        return [list(rt.result(i).response) for i in ids]
+
+    xla = run(model)
+    assert not calls                           # default path: no kernel
+    monkeypatch.setenv("REPRO_DECODE_KERNEL", "pallas")
+    pallas = run(_build(cfg))                  # fresh Model -> fresh trace
+    assert calls                               # kernel actually traced
+    assert xla == pallas

@@ -1,6 +1,8 @@
 """Continuous-batching runtime: greedy equivalence vs the batch engine,
 slot reuse/backfill, variable prompt lengths, facade parity, streaming
-admission."""
+admission. Pool-agnostic behavior is parametrized over both KV backends;
+slot-pool-specific mechanics (batched prefill metrics, alloc counts) pin
+pool="slots". Paged-pool mechanics live in tests/test_paged_pool.py."""
 import dataclasses
 
 import jax
@@ -22,9 +24,11 @@ def tiny():
     return cfg, model, params
 
 
-def test_runtime_matches_batch_engine(tiny):
+@pytest.mark.parametrize("pool", ["slots", "paged"])
+def test_runtime_matches_batch_engine(tiny, pool):
     """Greedy continuous-batching output == batch ServingEngine.generate
-    for the same budgets: every child token row is bitwise identical."""
+    for the same budgets: every child token row is bitwise identical —
+    for both KV backends."""
     cfg, model, params = tiny
     engine = ServingEngine(model, params, max_new=4, temperature=0.0)
     prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (3, 8),
@@ -34,7 +38,9 @@ def test_runtime_matches_batch_engine(tiny):
     ref = engine.generate(prompts[sel], n_samples=1, seed=0, temperature=0.0)
 
     rt = ContinuousBatchingRuntime(model, params, n_slots=6, max_len=13,
-                                   max_new=4, temperature=0.0, seed=0)
+                                   max_new=4, temperature=0.0, seed=0,
+                                   pool=pool, block_size=4)
+    assert rt.pool_kind == pool
     ids = rt.submit_batch(prompts, budgets=budgets)
     rt.drain()
     off = 0
@@ -45,10 +51,12 @@ def test_runtime_matches_batch_engine(tiny):
             np.testing.assert_array_equal(np.asarray(c.tokens),
                                           ref.tokens[off])
             off += 1
-    # cost accounting: one prefill, every decode token counted once
+    # cost accounting: every prompt token prefilled once, every decode
+    # token counted once, in both pools
     assert rt.metrics.prefill_tokens == 3 * 8
-    assert rt.metrics.prefill_calls == 1
     assert rt.metrics.decode_tokens == sum(budgets) * 4
+    if pool == "slots":
+        assert rt.metrics.prefill_calls == 1    # one batched prefill pass
 
 
 def test_slot_reuse_and_backfill(tiny):
@@ -61,7 +69,8 @@ def test_slot_reuse_and_backfill(tiny):
     one = engine.generate(prompts, n_samples=1, seed=0, temperature=0.0)
 
     rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=13,
-                                   max_new=4, temperature=0.0, seed=0)
+                                   max_new=4, temperature=0.0, seed=0,
+                                   pool="slots")
     ids = rt.submit_batch(prompts, budgets=[2, 2, 2])
     rt.drain()
     for i, rid in enumerate(ids):
@@ -74,6 +83,23 @@ def test_slot_reuse_and_backfill(tiny):
     assert 0.9 < rt.metrics.occupancy <= 1.0   # backfill keeps slots busy
 
 
+def test_slot_pool_heap_free_list_and_double_release(tiny):
+    """SlotKVPool allocates the lowest free slot via the heap and raises
+    (not asserts) on double release / bad ids."""
+    from repro.serving import SlotKVPool
+    cfg, model, params = tiny
+    pool = SlotKVPool(model, 4, 8)
+    a, b = pool.alloc(), pool.alloc()
+    assert (a, b) == (0, 1)
+    pool.release(a)
+    assert pool.alloc() == 0                   # lowest-first, heap order
+    pool.release(b)                            # legitimate release: no raise
+    with pytest.raises(RuntimeError, match="double release"):
+        pool.release(b)
+    with pytest.raises(RuntimeError, match="bad slot"):
+        pool.release(99)
+
+
 def test_variable_prompt_lengths_interleave(tiny):
     """Different-length prompts decode concurrently in one pool; each
     request matches its own single-prompt batch-engine run."""
@@ -83,7 +109,8 @@ def test_variable_prompt_lengths_interleave(tiny):
     prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
                for L in (5, 8, 11)]
     rt = ContinuousBatchingRuntime(model, params, n_slots=3, max_len=16,
-                                   max_new=3, temperature=0.0, seed=0)
+                                   max_new=3, temperature=0.0, seed=0,
+                                   pool="slots")
     ids = [rt.submit(p, budget=1) for p in prompts]
     rt.drain()
     for p, rid in zip(prompts, ids):
@@ -95,9 +122,11 @@ def test_variable_prompt_lengths_interleave(tiny):
     assert rt.metrics.occupancy == 1.0
 
 
-def test_scheduler_backends_agree(tiny):
-    """The runtime facade and the (patched single-prefill) batch path give
-    identical responses/budgets under greedy decoding."""
+@pytest.mark.parametrize("pool", ["slots", "paged"])
+def test_scheduler_backends_agree(tiny, pool):
+    """The runtime facade (either KV backend) and the (patched
+    single-prefill) batch path give identical responses/budgets under
+    greedy decoding."""
     from repro.core import AdaptivePolicy
     from repro.core.difficulty import init_mlp_probe
 
@@ -111,7 +140,8 @@ def test_scheduler_backends_agree(tiny):
     outs = {}
     for backend in ("runtime", "batch"):
         sched = AdaptiveScheduler(engine, policy, reward, seed=0,
-                                  backend=backend, n_slots=4)
+                                  backend=backend, n_slots=4, pool=pool,
+                                  block_size=4)
         outs[backend] = sched.serve_batch(list(range(5)), prompts,
                                           avg_budget=2.0)
     a, b = outs["runtime"], outs["batch"]
@@ -127,7 +157,9 @@ def test_scheduler_backends_agree(tiny):
 
 def test_streaming_budget_admission(tiny):
     """budget_fn resolves budgets at admission (price-dual allocation):
-    requests flow QUEUED -> DONE without any batch-level allocate call."""
+    requests flow QUEUED -> DONE without any batch-level allocate call.
+    Runs on the default (paged) pool, where the resolved budget is also
+    gated on free blocks."""
     from repro.core import AdaptivePolicy
     from repro.core.difficulty import init_mlp_probe
 
@@ -145,6 +177,7 @@ def test_streaming_budget_admission(tiny):
     rt = ContinuousBatchingRuntime(model, params, n_slots=4, max_len=11,
                                    max_new=2, temperature=0.0, seed=0,
                                    budget_fn=budget_fn)
+    assert rt.pool_kind == "paged"             # the default backend
     ids = rt.submit_batch(prompts[3:])
     rt.drain()
     for rid in ids:
@@ -154,10 +187,10 @@ def test_streaming_budget_admission(tiny):
         assert all(len(c.tokens) == 2 for c in r.children)
 
 
-def test_prefill_window_bounds_stashes(tiny):
+def test_prefill_window_bounds_stash_rows(tiny):
     """A deep backlog must not stash one prefill cache per queued request:
     step()'s auto-prefill is throttled to prefill_window outstanding
-    stashes, and outputs are unaffected."""
+    stash cache *rows*, and outputs are unaffected."""
     cfg, model, params = tiny
     engine = ServingEngine(model, params, max_new=2, temperature=0.0)
     prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(9), (8, 6),
@@ -165,22 +198,148 @@ def test_prefill_window_bounds_stashes(tiny):
     one = engine.generate(prompts, n_samples=1, seed=0, temperature=0.0)
     rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=9,
                                    max_new=2, temperature=0.0, seed=0,
-                                   prefill_window=2,
+                                   prefill_window=2, pool="slots",
                                    budget_fn=lambda r, h: 1)
     ids = rt.submit_batch(prompts)
-    max_stashed = 0
+    max_rows = 0
     while rt.pending():
         rt.step()
-        max_stashed = max(max_stashed, rt._stashed)
-    assert max_stashed <= 2
-    assert rt._stashed == 0                    # all stashes released
+        max_rows = max(max_rows, rt._window_used())
+    assert max_rows <= 2
+    assert rt._window_used() == 0 and not rt._groups   # all released
     for i, rid in enumerate(ids):
         np.testing.assert_array_equal(rt.result(rid).response, one.tokens[i])
 
 
+def test_stash_rows_pinned_until_group_dies(tiny):
+    """S3 regression: a same-length group's prefill cache has batch dim =
+    group size and only frees when the LAST member drops its stash, so
+    the window must keep counting every row until then — per-request
+    decrements under-throttled memory on large groups."""
+    cfg, model, params = tiny
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(10), (4, 6),
+                                            0, cfg.vocab_size))
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=9,
+                                   max_new=2, temperature=0.0, seed=0,
+                                   pool="slots",
+                                   budget_fn=lambda r, h: 2)
+    rt.submit_batch(prompts)
+    rt.prefill_queued()                        # one same-length group of 4
+    assert len(rt._groups) == 1
+    assert rt._window_used() == 4              # 4 pinned cache rows
+    rt.step()                                  # admits request 0's fan-out
+    assert rt.requests[0].stash is None        # member dropped its stash...
+    assert rt._window_used() == 4              # ...but the cache is alive
+    rt.drain()
+    assert not rt._groups and rt._window_used() == 0
+
+
+def test_drain_not_stalled_by_budget_deferred_requests(tiny):
+    """S1 regression: requests parked on an un-called set_budget() used to
+    saturate the prefill window, so later arrivals could never prefill
+    and drain() raised a spurious RuntimeError. Deferred stashes are now
+    excluded from window accounting."""
+    cfg, model, params = tiny
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(11), (4, 6),
+                                            0, cfg.vocab_size))
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=9,
+                                   max_new=2, temperature=0.0, seed=0,
+                                   prefill_window=1, pool="slots")
+    # no budget, no budget_fn: every request parks in PREFILL (deferred)
+    ids = [rt.submit(p) for p in prompts]
+    rt.drain()                                 # must NOT raise
+    for rid in ids:
+        r = rt.result(rid)
+        assert r.state == RequestState.PREFILL and r.hidden is not None
+    # late budgets still run to completion
+    for rid in ids:
+        rt.set_budget(rid, 1)
+    rt.drain()
+    assert all(rt.result(i).state == RequestState.DONE for i in ids)
+
+
+def test_stall_report_names_blockers(tiny):
+    """A genuine stall must name what is stuck instead of a bare id list:
+    a fan-out that can never fit reports the blocking request and the
+    pool's free resources."""
+    cfg, model, params = tiny
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(12), (1, 6),
+                                            0, cfg.vocab_size))
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=9,
+                                   max_new=2, temperature=0.0, seed=0,
+                                   pool="slots")
+    rid = rt.submit(prompts[0], budget=1)
+    rt.prefill_queued()
+    # simulate a wedged pool: every slot leaked
+    rt.pool.alloc(), rt.pool.alloc()
+    with pytest.raises(RuntimeError, match=f"fan-out blocked for request "
+                                           f"{rid}"):
+        rt.drain()
+
+
+@pytest.mark.parametrize("pool", ["slots", "paged"])
+def test_b0_default_response(tiny, pool):
+    """S2 regression: budget 0 must produce the documented default
+    response (empty token row, reward 0.0) and count in the metrics —
+    r.response used to stay None."""
+    cfg, model, params = tiny
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(13), (2, 6),
+                                            0, cfg.vocab_size))
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=9,
+                                   max_new=2, temperature=0.0, seed=0,
+                                   pool=pool, block_size=4)
+    ra = rt.submit(prompts[0], budget=0)
+    rb = rt.submit(prompts[1], budget=2)
+    rt.drain()
+    r = rt.result(ra)
+    assert r.state == RequestState.DONE
+    np.testing.assert_array_equal(r.response, np.zeros((0,), np.int32))
+    assert r.reward == 0.0
+    assert rt.metrics.default_responses == 1
+    assert rt.result(rb).response is not None
+    assert len(rt.result(rb).response) == 2
+
+
+@pytest.mark.parametrize("pool", ["slots", "paged"])
+def test_eos_early_termination(tiny, pool):
+    """S4: a child that samples EOS stops immediately (freeing its slot /
+    blocks), post-EOS tokens never reach the reranker, and the savings
+    are metered."""
+    cfg, model, params = tiny
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(14), (1, 6),
+                                            0, cfg.vocab_size))
+    # find the greedy continuation, then declare its second token EOS
+    probe_rt = ContinuousBatchingRuntime(model, params, n_slots=1,
+                                         max_len=14, max_new=6,
+                                         temperature=0.0, seed=0, pool=pool,
+                                         block_size=4)
+    pid = probe_rt.submit(prompts[0], budget=1)
+    probe_rt.drain()
+    full = [int(t) for t in probe_rt.result(pid).response]
+    assert len(full) == 6
+    eos = full[1]
+    want = full[: full.index(eos) + 1]         # up to & including first EOS
+
+    rt = ContinuousBatchingRuntime(model, params, n_slots=1, max_len=14,
+                                   max_new=6, temperature=0.0, seed=0,
+                                   pool=pool, block_size=4, eos_id=eos)
+    rid = rt.submit(prompts[0], budget=1)
+    rt.drain()
+    r = rt.result(rid)
+    got = list(r.response)
+    assert got == want                         # truncated at EOS, EOS kept
+    assert r.children[0].eos
+    assert rt.metrics.eos_terminated == 1
+    assert rt.metrics.eos_saved_tokens == 6 - len(want)
+    # the early stop really saved decode work
+    assert rt.metrics.decode_tokens < 6
+    if pool == "paged":
+        assert rt.pool.blocks_in_use == 0      # blocks freed immediately
+
+
 def test_per_request_max_new_staggered_retirement(tiny):
     """Children with different max_new retire at different ticks; freed
-    slots backfill pending fan-out immediately."""
+    slots backfill pending fan-out immediately (default paged pool)."""
     cfg, model, params = tiny
     prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(8), (2, 6),
                                             0, cfg.vocab_size))
