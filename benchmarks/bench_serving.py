@@ -16,8 +16,16 @@ Capacity probe: at equal device KV memory (token capacity), short
 sequences let the paged pool sustain strictly more concurrent children
 than the slot pool's full-`max_len` rows — the slot pool queues first.
 
+Prefix-heavy probe: realistic adaptive-best-of-k traffic shares a task
+preamble / few-shot header across requests. The same greedy stream runs
+with the radix prefix cache on and off; the cache must cut prefill tokens
+computed by >= 30% (metered via `prefix_hit_tokens`) at bitwise-identical
+outputs. `REPRO_DECODE_KERNEL=pallas` routes it through the paged chunk
+kernel (interpret mode on CPU) — that combination is the CI gate.
+
     PYTHONPATH=src python benchmarks/bench_serving.py            # full
     PYTHONPATH=src python benchmarks/bench_serving.py --smoke    # CI gate
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke --prefix-heavy
 """
 from __future__ import annotations
 
@@ -132,9 +140,48 @@ def _capacity_probe(model, params, vocab, *, mem_tokens, max_len,
     return out
 
 
+def _prefix_heavy_probe(model, params, vocab, *, n_req, pre_len, tail_len,
+                        max_new, n_slots, block_size, seed=0):
+    """Replay one greedy prefix-heavy stream (shared preamble, distinct
+    tails) with the radix prefix cache on and off. prefill_slots is kept
+    below n_req so most requests are admitted after the preamble's blocks
+    were published — the cross-request hit path, not the same-tick burst.
+    Returns per-mode prefill accounting plus the bitwise-parity verdict."""
+    from repro.serving import ContinuousBatchingRuntime
+
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, vocab, size=(pre_len,)).astype(np.int32)
+    prompts = [np.concatenate(
+        [pre, rng.integers(0, vocab, size=(tail_len,)).astype(np.int32)])
+        for _ in range(n_req)]
+
+    def replay(prefix_cache: bool):
+        rt = ContinuousBatchingRuntime(
+            model, params, n_slots=n_slots, max_len=pre_len + tail_len
+            + max_new + 1, max_new=max_new, temperature=0.0, seed=0,
+            pool="paged", block_size=block_size, prefill_slots=2,
+            prefix_cache=prefix_cache)
+        ids = [rt.submit(p, budget=1) for p in prompts]
+        rt.drain()
+        s = rt.metrics.summary()
+        return [list(rt.result(i).response) for i in ids], s
+
+    hot_rows, hot = replay(True)
+    cold_rows, cold = replay(False)
+    reduction = 1.0 - hot["prefill_tokens"] / max(cold["prefill_tokens"], 1)
+    return dict(
+        hit_tokens=int(hot["prefix_hit_tokens"]),
+        hits=int(hot["prefix_hits"]),
+        prefill_hot=int(hot["prefill_tokens"]),
+        prefill_cold=int(cold["prefill_tokens"]),
+        reduction=reduction,
+        bitwise_equal=(hot_rows == cold_rows),
+        evicted=int(hot["radix_evicted_blocks"]))
+
+
 def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
         n_slots: int = 8, mean_gap: float = 0.05, seed: int = 0,
-        smoke: bool = False) -> None:
+        smoke: bool = False, prefix_only: bool = False) -> None:
     import jax
 
     from repro.configs import get_config
@@ -148,6 +195,27 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
                               dtype="float32", n_layers=2)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
+
+    if prefix_only:
+        # the standalone prefix-heavy gate (CI runs this twice: XLA and
+        # REPRO_DECODE_KERNEL=pallas interpret mode)
+        pf = _prefix_heavy_probe(
+            model, params, cfg.vocab_size,
+            n_req=8 if smoke else 24, pre_len=8, tail_len=4,
+            max_new=max_new if not smoke else 4, n_slots=4, block_size=4,
+            seed=seed)
+        emit("serving/prefix_heavy/hit_tokens", float(pf["hit_tokens"]),
+             f"{pf['reduction']*100:.0f}% prefill reduction")
+        save_result("bench_serving_prefix", pf)
+        print(f"# prefix-heavy: {pf['hit_tokens']} prompt tokens skipped, "
+              f"{pf['reduction']*100:.0f}% fewer prefill tokens computed, "
+              f"bitwise_equal={pf['bitwise_equal']}")
+        if smoke:
+            assert pf["bitwise_equal"], "prefix-cache hit path diverged"
+            assert pf["reduction"] >= 0.30, pf
+            print("# prefix smoke OK")
+        return
+
     engine = ServingEngine(model, params, max_new=max_new, temperature=1.0)
     max_len = width + max_new + 1
 
@@ -181,6 +249,11 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
         max_len=2 * max_len, block_size=4, sp=max(2, width // 3),
         max_new=max_new, n_req=(6 if smoke else 12))
 
+    pf = _prefix_heavy_probe(
+        model, params, cfg.vocab_size, n_req=8 if smoke else 24,
+        pre_len=8, tail_len=4, max_new=4, n_slots=4, block_size=4,
+        seed=seed)
+
     for name, r in (("batch_engine", batch), ("paged_runtime", paged),
                     ("slot_runtime", slots)):
         emit(f"serving/{name}/wall", r["wall_s"] * 1e6,
@@ -197,8 +270,11 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
          f"{cap['slots']['peak_children']} children")
     emit("serving/capacity/paged", float(cap["paged"]["peak_children"]),
          f"{cap['paged']['peak_children']} children")
+    emit("serving/prefix_heavy/hit_tokens", float(pf["hit_tokens"]),
+         f"{pf['reduction']*100:.0f}% prefill reduction")
     save_result("bench_serving", dict(
         batch=batch, paged=paged, slots=slots, capacity=cap,
+        prefix_heavy=pf,
         n_requests=n_requests, width=width, max_new=max_new,
         n_slots=n_slots, mean_gap=mean_gap,
         budgets_mean=float(np.mean(budgets)), speedup_vs_batch=speedup,
@@ -206,18 +282,22 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
     print(f"# paged vs batch: {speedup:.2f}x tokens/sec; "
           f"paged vs slots: {parity:.2f}x; capacity at equal memory: "
           f"paged {cap['paged']['peak_children']} vs slot "
-          f"{cap['slots']['peak_children']} concurrent children")
+          f"{cap['slots']['peak_children']} concurrent children; "
+          f"prefix-heavy: {pf['reduction']*100:.0f}% fewer prefill tokens")
 
     if smoke:
         # CI regression gate for the throughput path (fixed seeds, tiny
         # model): correctness is pytest's job, this guards the *runtime*
         # plumbing — all three drivers drain, the paged pool strictly
-        # beats the slot pool on concurrency at equal memory, and cleans
-        # up its blocks.
+        # beats the slot pool on concurrency at equal memory, cleans up
+        # its blocks, and the prefix cache pays for itself on a
+        # prefix-heavy stream without perturbing outputs.
         assert batch["decode_tokens"] > 0 and paged["decode_tokens"] > 0
         assert paged["decode_tokens"] == slots["decode_tokens"]
         assert (cap["paged"]["peak_children"]
                 > cap["slots"]["peak_children"]), cap
+        assert pf["bitwise_equal"], "prefix-cache hit path diverged"
+        assert pf["reduction"] >= 0.30, pf
         print("# smoke OK")
 
 
@@ -226,5 +306,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fixed-seed run with hard assertions (CI)")
+    ap.add_argument("--prefix-heavy", action="store_true",
+                    help="run only the prefix-heavy radix-cache probe "
+                         "(pairs with REPRO_DECODE_KERNEL=pallas in CI)")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, prefix_only=args.prefix_heavy)

@@ -17,6 +17,14 @@ each sequence owns a block table (b, T) mapping logical block t (token
 positions t*B .. t*B+B-1) to a physical block id. The table is a
 scalar-prefetch argument, so the BlockSpec index maps gather exactly the
 blocks a sequence owns — no dense copy of the cache is materialized.
+
+`paged_chunk_attention` extends the paged kernel to C query tokens per
+sequence (varlen chunked prefill): queries at positions pos .. pos+C-1
+stream the same block-table gather, the chunk axis is folded into the
+online-softmax row dimension (C*H rows of scratch), and per-row validity
+`kpos <= pos + c` gives exact causality including within the chunk —
+the new K/V rows are scattered into the sequence's freshly-owned blocks
+*before* the kernel runs, so within-chunk keys are just cache reads.
 """
 from __future__ import annotations
 
@@ -160,6 +168,64 @@ def _paged_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _chunk_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, block_b: int, groups: int,
+                  chunk: int, sm_scale: float):
+    bi = pl.program_id(0)
+    ti = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[bi]               # chunk start position
+    k_start = ti * block_b
+
+    # skip blocks wholly beyond the *last* query's position. Rows whose
+    # own position is below k_start mask to all-NEG_INF here, but their
+    # running max is already finite (their ti=0 block always has a valid
+    # key), so exp(s - m) underflows to exact 0 — no 0/0.
+    @pl.when(k_start <= pos + chunk - 1)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                      # (C, H, hd)
+        k = k_ref[0].astype(jnp.float32)                      # (B, KV, hd)
+        v = v_ref[0].astype(jnp.float32)
+        C, H, hd = q.shape
+        KV = k.shape[1]
+        # fold the chunk axis into the grouped-row axis: (KV, C*g, hd)
+        qg = q.reshape(C, KV, groups, hd).transpose(1, 0, 2, 3)
+        qg = qg.reshape(KV, C * groups, hd)
+        s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                      # (KV, C*g, B)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        qpos = pos + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) // groups
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        sf = s.reshape(C * H, -1)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sf, axis=1))
+        p = jnp.exp(sf - m_new[:, None]).reshape(KV, C * groups, -1)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p.reshape(C * H, -1),
+                                                  axis=1)
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((0,), (1,))),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv.reshape(C * H, -1)
+        m_scr[...] = m_new
+
+    @pl.when(ti == nt - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o = acc_scr[...] / l[:, None]                         # (C*H, hd)
+        hd = o.shape[-1]
+        # scratch rows are (KV, C, g)-ordered; emit (C, H=KV*g, hd)
+        o = o.reshape(-1, chunk, groups, hd).transpose(1, 0, 2, 3)
+        o_ref[0] = o.reshape(chunk, -1, hd).astype(o_ref.dtype)
+
+
 def paged_decode_attention(q: jnp.ndarray, k_blocks: jnp.ndarray,
                            v_blocks: jnp.ndarray, tables: jnp.ndarray,
                            pos: jnp.ndarray, *,
@@ -200,5 +266,54 @@ def paged_decode_attention(q: jnp.ndarray, k_blocks: jnp.ndarray,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, H, hd), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), pos.astype(jnp.int32), q, k_blocks, v_blocks)
+
+
+def paged_chunk_attention(q: jnp.ndarray, k_blocks: jnp.ndarray,
+                          v_blocks: jnp.ndarray, tables: jnp.ndarray,
+                          pos: jnp.ndarray, *,
+                          interpret: bool = True) -> jnp.ndarray:
+    """Varlen chunked-prefill flash attention over a paged KV store.
+
+    q (b, C, H, hd) — up to C consecutive query tokens per sequence at
+    positions pos[b] .. pos[b]+C-1 (the chunk's K/V rows are already in
+    the block store); k_blocks, v_blocks (n_blocks, B, KV, hd);
+    tables (b, T); pos (b,) int32 chunk start. Returns (b, C, H, hd).
+    Causality is the per-row rule `kpos <= pos + c`, so rows past a
+    sequence's true chunk length just compute garbage the host discards
+    (they never write — the scatter happened before the kernel).
+    Interpret-mode is the tested path on CPU; the (C*H)-row scratch and
+    the final (KV,C,g)->(C,KV*g) transpose lower on TPU like the dense
+    kernel's reshapes but are not lowering-tested here."""
+    from jax.experimental.pallas import tpu as pltpu
+    b, C, H, hd = q.shape
+    B, KV = k_blocks.shape[1], k_blocks.shape[2]
+    T = tables.shape[1]
+    g = H // KV
+    kernel = functools.partial(_chunk_kernel, block_b=B, groups=g,
+                               chunk=C, sm_scale=1.0 / math.sqrt(hd))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # tables, pos
+        grid=(b, T),
+        in_specs=[
+            pl.BlockSpec((1, C, H, hd), lambda bi, ti, tbl, p: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, B, KV, hd),
+                         lambda bi, ti, tbl, p: (tbl[bi, ti], 0, 0, 0)),
+            pl.BlockSpec((1, B, KV, hd),
+                         lambda bi, ti, tbl, p: (tbl[bi, ti], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, H, hd),
+                               lambda bi, ti, tbl, p: (bi, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C * H,), jnp.float32),
+            pltpu.VMEM((C * H,), jnp.float32),
+            pltpu.VMEM((C * H, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, C, H, hd), q.dtype),
         interpret=interpret,
     )(tables.astype(jnp.int32), pos.astype(jnp.int32), q, k_blocks, v_blocks)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.cross_entropy import cross_entropy as _ce
 from repro.kernels.decode_attention import decode_attention as _dec
+from repro.kernels.decode_attention import paged_chunk_attention as _pchunk
 from repro.kernels.decode_attention import paged_decode_attention as _pdec
 from repro.kernels.flash_attention import flash_attention as _fa
 from repro.kernels.ssm_scan import ssm_scan as _ssm
@@ -46,6 +47,13 @@ def paged_decode_attention(q, k_blocks, v_blocks, tables, pos, *,
                            interpret=None):
     interpret = _interpret_default() if interpret is None else interpret
     return _pdec(q, k_blocks, v_blocks, tables, pos, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_chunk_attention(q, k_blocks, v_blocks, tables, pos, *,
+                         interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _pchunk(q, k_blocks, v_blocks, tables, pos, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "d_block", "interpret"))

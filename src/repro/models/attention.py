@@ -278,6 +278,35 @@ def paged_write(blocks: jnp.ndarray, new: jnp.ndarray, tables: jnp.ndarray,
     return flat.reshape(blocks.shape)
 
 
+def paged_write_chunk(blocks: jnp.ndarray, new: jnp.ndarray,
+                      tables: jnp.ndarray, pos: jnp.ndarray,
+                      valid: jnp.ndarray) -> jnp.ndarray:
+    """Write up to C new rows per sequence (varlen chunked prefill).
+
+    blocks (nb, B, ...); new (b, C, ...); tables (b, T); pos (b,) start
+    position of each sequence's chunk; valid (b,) how many of its C rows
+    are real. Row j of sequence i lands at logical position pos[i] + j;
+    rows past valid[i] are redirected into the reserved null block (their
+    contents are never read, and colliding null-row scatters are harmless
+    for the same reason). Valid rows write only into blocks the sequence
+    exclusively owns — chunked prefill allocates fresh blocks ahead of the
+    write and shared (radix/COW) blocks are never below the write range —
+    so real scatter indices stay unique across sequences.
+    """
+    nb, B = blocks.shape[0], blocks.shape[1]
+    b, C = new.shape[0], new.shape[1]
+    T = tables.shape[1]
+    flat = blocks.reshape((nb * B,) + blocks.shape[2:])
+    p = pos[:, None] + jnp.arange(C)[None, :]                   # (b, C)
+    lb = jnp.clip(p // B, 0, T - 1)
+    bidx = jnp.take_along_axis(tables, lb, axis=1)              # (b, C)
+    ok = jnp.arange(C)[None, :] < valid[:, None]
+    idx = jnp.where(ok, bidx * B + p % B, p % B)                # null blk
+    flat = flat.at[idx.reshape(-1)].set(
+        new.reshape((b * C,) + new.shape[2:]).astype(blocks.dtype))
+    return flat.reshape(blocks.shape)
+
+
 def paged_gather(blocks: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
     """Gather each sequence's blocks into a dense (b, T*B, ...) view.
 
@@ -313,23 +342,26 @@ def _write_slot(buf: jnp.ndarray, new: jnp.ndarray, slot: jnp.ndarray) -> jnp.nd
     return jnp.where(sel, new.astype(buf.dtype), buf)
 
 
-def _grouped_decode_scores(q, ck, cv, pos, dims: AttnDims, dtype):
-    """Grouped-einsum attention of one query token against a dense per-row
-    cache view ck/cv (b, S, KVp, hd) with `idx <= pos` validity. Shared by
-    the slot path and the paged gather path (extra masked rows contribute
-    exact zeros, so the result is invariant to S padding)."""
-    b = q.shape[0]
+def _grouped_decode_scores(q, ck, cv, positions, dims: AttnDims, dtype):
+    """Grouped-einsum attention of Q query tokens against a dense per-row
+    cache view ck/cv (b, S, KVp, hd) with per-query `idx <= positions`
+    validity. q (b, Q, Hp, hd); positions (b, Q). Shared by the slot path,
+    the paged gather path (Q = 1) and varlen chunked prefill (Q = chunk):
+    extra masked rows contribute exact zeros, so the result is invariant
+    to S padding, and each query row's math is independent of its
+    batch-mates, so chunk placement does not perturb values."""
+    b, Q = q.shape[0], q.shape[1]
     S = ck.shape[1]
     g = dims.group
-    qg = q.reshape(b, 1, dims.kv_padded, g, dims.head_dim)
+    qg = q.reshape(b, Q, dims.kv_padded, g, dims.head_dim)
     scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck,
                         preferred_element_type=jnp.float32)
     scores = scores / math.sqrt(dims.head_dim)
-    valid = jnp.arange(S)[None, :] <= pos[:, None]
-    bias = jnp.where(valid, 0.0, -1e30)[:, None, None, None, :]
+    valid = jnp.arange(S)[None, None, :] <= positions[:, :, None]  # (b,Q,S)
+    bias = jnp.where(valid, 0.0, -1e30)[:, None, None, :, :]
     w = jax.nn.softmax(scores + bias, axis=-1).astype(dtype)
     o = jnp.einsum("bkgqs,bskd->bqkgd", w, cv)
-    return o.reshape(b, 1, dims.heads_padded * dims.head_dim)
+    return o.reshape(b, Q, dims.heads_padded * dims.head_dim)
 
 
 def attention_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
@@ -377,7 +409,7 @@ def attention_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
         else:
             o = _grouped_decode_scores(q, paged_gather(ck, block_tables),
                                        paged_gather(cv, block_tables),
-                                       pos, dims, x.dtype)
+                                       pos[:, None], dims, x.dtype)
         return nn.linear(p["wo"], o), {"k": ck, "v": cv}
     S = cache["k"].shape[1]
     slot = (pos % S) if window > 0 else pos
@@ -405,9 +437,48 @@ def attention_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
         o = jnp.einsum("bkgqs,bskd->bqkgd", w, cv)
         o = o.reshape(b, 1, dims.heads_padded * dims.head_dim)
     else:
-        o = _grouped_decode_scores(q, ck, cv, pos, dims, x.dtype)
+        o = _grouped_decode_scores(q, ck, cv, pos[:, None], dims, x.dtype)
     out = nn.linear(p["wo"], o)
     return out, {"k": ck, "v": cv}
+
+
+def attention_decode_chunk(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
+                           valid: jnp.ndarray, dims: AttnDims, *,
+                           rope_theta: float, block_tables: jnp.ndarray,
+                           use_pallas: Optional[bool] = None
+                           ) -> Tuple[jnp.ndarray, dict]:
+    """Varlen chunked prefill over the paged cache: x (b, C, d) holds up
+    to C consecutive prompt tokens per sequence starting at pos (b,), of
+    which valid (b,) are real. All C new K/V rows are scattered first
+    (invalid rows into the null block), then every query attends the
+    gathered dense view with per-query `idx <= pos + j` causality — so
+    within-chunk attention needs no separate mask and each position's
+    result is bitwise independent of where the chunk starts. Rows past
+    `valid` compute garbage the host discards. Paged full-causal caches
+    only (the runtime never routes sliding-window configs here)."""
+    if use_pallas is None:
+        use_pallas = os.environ.get("REPRO_DECODE_KERNEL", "") == "pallas"
+    b, C = x.shape[0], x.shape[1]
+    q = nn.linear(p["wq"], x)                               # (b,C,Hp,hd)
+    k = nn.linear(p["wk"], x)                               # (b,C,KVp,hd)
+    v = nn.linear(p["wv"], x)
+    positions = pos[:, None] + jnp.arange(C)[None, :]       # (b,C)
+    if rope_theta > 0:
+        cos, sin = nn.rope_cos_sin(positions, dims.head_dim, rope_theta)
+        q = nn.apply_rope(q, cos, sin)
+        k = nn.apply_rope(k, cos, sin)
+    ck = paged_write_chunk(cache["k"], k, block_tables, pos, valid)
+    cv = paged_write_chunk(cache["v"], v, block_tables, pos, valid)
+    if use_pallas:
+        from repro.kernels import ops
+        o = ops.paged_chunk_attention(q, ck, cv, block_tables,
+                                      pos)  # (b,C,Hp,hd)
+        o = o.reshape(b, C, dims.heads_padded * dims.head_dim)
+    else:
+        o = _grouped_decode_scores(q, paged_gather(ck, block_tables),
+                                   paged_gather(cv, block_tables),
+                                   positions, dims, x.dtype)
+    return nn.linear(p["wo"], o), {"k": ck, "v": cv}
 
 
 # ----------------------------------------------------------------------------
@@ -507,7 +578,8 @@ def mla_cache_specs() -> dict:
 
 def mla_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
                cfg: ModelConfig,
-               block_tables: Optional[jnp.ndarray] = None
+               block_tables: Optional[jnp.ndarray] = None,
+               valid: Optional[jnp.ndarray] = None
                ) -> Tuple[jnp.ndarray, dict]:
     """Absorbed decode form: scores live in the compressed latent space.
 
@@ -515,26 +587,45 @@ def mla_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     (leaves (n_blocks, B, rank)); scores run against the gathered dense
     view — the latent store is small enough that a dedicated Pallas paged
     kernel is not worth it.
+
+    `valid` selects varlen chunked prefill (paged only): x (b, C, d)
+    holds up to C consecutive prompt tokens starting at pos, of which
+    valid (b,) are real — the scores einsums are already q-general, so
+    the chunk path only changes the per-query positions, the cache write
+    (all C rows scattered, invalid ones into the null block) and the
+    causal mask. Without it x is (b, 1, d), exactly the PR-2 tick.
     """
     m = cfg.mla
-    b = x.shape[0]
+    b, Q = x.shape[0], x.shape[1]
     H = cfg.n_heads
-    q_nope, q_rope = _mla_q(p, x, m, cfg.norm_eps)           # (b,1,H,*)
+    q_nope, q_rope = _mla_q(p, x, m, cfg.norm_eps)           # (b,Q,H,*)
     kv_a = nn.linear(p["wkv_a"], x)
     c_new = nn.apply_norm(p["kv_norm"], kv_a[..., : m.kv_lora_rank],
                           eps=cfg.norm_eps)
     kr_new = kv_a[..., m.kv_lora_rank:]
-    cos, sin = nn.rope_cos_sin(pos[:, None], m.qk_rope_head_dim, cfg.rope_theta)
+    if valid is None:
+        positions = pos[:, None]                              # (b,1)
+    else:
+        positions = pos[:, None] + jnp.arange(Q)[None, :]     # (b,C)
+    cos, sin = nn.rope_cos_sin(positions, m.qk_rope_head_dim, cfg.rope_theta)
     q_rope = nn.apply_rope(q_rope, cos, sin)
     kr_new = nn.apply_rope(kr_new[..., None, :], cos, sin)[..., 0, :]
     if block_tables is not None:
-        ckv_blocks = paged_write(cache["c_kv"], c_new[:, 0], block_tables, pos)
-        kr_blocks = paged_write(cache["k_rope"], kr_new[:, 0], block_tables,
-                                pos)
+        if valid is None:
+            ckv_blocks = paged_write(cache["c_kv"], c_new[:, 0],
+                                     block_tables, pos)
+            kr_blocks = paged_write(cache["k_rope"], kr_new[:, 0],
+                                    block_tables, pos)
+        else:
+            ckv_blocks = paged_write_chunk(cache["c_kv"], c_new,
+                                           block_tables, pos, valid)
+            kr_blocks = paged_write_chunk(cache["k_rope"], kr_new,
+                                          block_tables, pos, valid)
         c_kv = paged_gather(ckv_blocks, block_tables)
         k_rope = paged_gather(kr_blocks, block_tables)
         new_cache = {"c_kv": ckv_blocks, "k_rope": kr_blocks}
     else:
+        assert valid is None, "chunked prefill is paged-only"
         c_kv = _write_slot(cache["c_kv"], c_new, pos)
         k_rope = _write_slot(cache["k_rope"], kr_new, pos)
         c_kv = lshard(c_kv, "batch", "kv_seq", None)
@@ -543,7 +634,7 @@ def mla_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
     wkv_b = p["wkv_b"]["w"].astype(x.dtype)                  # (r,H,nope+v)
     w_k = wkv_b[..., : m.qk_nope_head_dim]                   # (r,H,nope)
     w_v = wkv_b[..., m.qk_nope_head_dim:]                    # (r,H,v)
-    # absorb: q_c (b,1,H,r)
+    # absorb: q_c (b,Q,H,r)
     q_c = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_k)
     scores = (jnp.einsum("bqhr,bsr->bhqs", q_c, c_kv,
                          preferred_element_type=jnp.float32)
@@ -551,11 +642,11 @@ def mla_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
                            preferred_element_type=jnp.float32))
     scores = scores / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     S = c_kv.shape[1]
-    valid = jnp.arange(S)[None, :] <= pos[:, None]
-    scores = scores + jnp.where(valid, 0.0, -1e30)[:, None, None, :]
+    live = jnp.arange(S)[None, None, :] <= positions[:, :, None]  # (b,Q,S)
+    scores = scores + jnp.where(live, 0.0, -1e30)[:, None, :, :]
     w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    o_lat = jnp.einsum("bhqs,bsr->bqhr", w, c_kv)            # (b,1,H,r)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", w, c_kv)            # (b,Q,H,r)
     o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_v)
-    o = o.reshape(b, 1, H * m.v_head_dim)
+    o = o.reshape(b, Q, H * m.v_head_dim)
     out = nn.linear(p["wo"], o)
     return out, new_cache

@@ -98,6 +98,20 @@ class Model:
         return self.lm.decode_step(params["lm"], token, cache, pos,
                                    block_tables=block_tables)
 
+    def decode_chunk(self, params, tokens, cache, pos, valid, block_tables):
+        """Varlen chunked prefill (paged, attention/MLA stacks only)."""
+        return self.lm.decode_chunk(params["lm"], tokens, cache, pos,
+                                    valid, block_tables=block_tables)
+
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked prefill batches C tick-steps into one program, which is
+        only a pure batching transform for stateless (attention/MLA)
+        mixers — recurrent state must advance token-by-token."""
+        return (not self.cfg.is_encdec
+                and all(d.mixer in ("attn", "mla") and not d.cross
+                        for d in self.lm.pattern))
+
 
 def build_model(cfg: ModelConfig, tp: int = 1, remat: bool = False,
                 block_q: int = 512) -> Model:

@@ -465,6 +465,75 @@ class TransformerLM:
         logits = lshard(logits, "batch", None, "vocab")
         return logits, hidden, new_cache
 
+    def decode_chunk(self, params, tokens: jnp.ndarray, cache,
+                     pos: jnp.ndarray, valid: jnp.ndarray,
+                     block_tables: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+        """Varlen chunked prefill: tokens (b, C) are up to C consecutive
+        prompt tokens per sequence starting at absolute position pos (b,),
+        of which valid (b,) are real. Returns (logits (b,C,V),
+        hidden (b,C,d), new_cache) — position j's row is exactly what C
+        single-token decode_steps would produce (all C K/V rows are
+        scattered before attention, and each query masks `idx <= pos+j`),
+        so chunking is a pure batching transform of the tick.
+
+        Attention/MLA mixers only: recurrent-state families advance their
+        state one token at a time, and the serving runtime keeps them on
+        the per-token interleave (prefill_chunk=1). Paged caches only.
+        """
+        cfg = self.cfg
+        assert not cfg.is_encdec, "chunked prefill: decoder-only stacks"
+        x = nn.embed(params["embed"], tokens, self.dtype)
+
+        def block(carry, xs):
+            x = carry
+            layer_params, layer_cache = xs
+            new_cache = {}
+            for i, desc in enumerate(self.pattern):
+                p = layer_params[f"pos{i}"]
+                c = layer_cache[f"pos{i}"]
+                nc: Dict[str, Any] = {}
+                h = nn.apply_norm(p["norm1"], x, kind=cfg.norm,
+                                  eps=cfg.norm_eps)
+                if desc.mixer == "attn":
+                    h, kv = attn.attention_decode_chunk(
+                        p["mix"], h, c["kv"], pos, valid, self.dims,
+                        rope_theta=cfg.rope_theta,
+                        block_tables=block_tables)
+                    nc["kv"] = kv
+                elif desc.mixer == "mla":
+                    h, kv = attn.mla_decode(p["mix"], h, c["kv"], pos, cfg,
+                                            block_tables=block_tables,
+                                            valid=valid)
+                    nc["kv"] = kv
+                else:
+                    raise NotImplementedError(
+                        f"chunked prefill does not support mixer "
+                        f"'{desc.mixer}' (recurrent state advances "
+                        f"per-token; the runtime gates on this)")
+                x = x + h
+                if desc.ffn != "none":
+                    h = nn.apply_norm(p["norm2"], x, kind=cfg.norm,
+                                      eps=cfg.norm_eps)
+                    if desc.ffn == "moe":
+                        h, _ = moe_mod.moe_apply(p["ffn"], h, cfg)
+                    else:
+                        h = nn.mlp(p["ffn"], h, act=cfg.act)
+                    x = x + h
+                new_cache[f"pos{i}"] = nc
+            return x, new_cache
+
+        x, new_cache = jax.lax.scan(block, x, (params["layers"], cache))
+        hidden = nn.apply_norm(params["final_norm"], x, kind=cfg.norm,
+                               eps=cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = nn.unembed(params["embed"], hidden)
+        else:
+            logits = nn.linear(params["lm_head"], hidden)
+        logits = self._mask_padded_logits(logits)
+        logits = lshard(logits, "batch", None, "vocab")
+        return logits, hidden, new_cache
+
     # ---------------------------------------------------------------- prefill
     def prefill(self, params, tokens: jnp.ndarray, *,
                 encoder_out: Optional[jnp.ndarray] = None,

@@ -31,6 +31,10 @@ class ServingMetrics:
     eos_saved_tokens: int = 0       # decode ticks EOS termination avoided
     peak_children: int = 0          # max concurrent in-flight children
     peak_blocks: int = 0            # paged pool: max blocks in use
+    prefix_hit_tokens: int = 0      # prefill tokens skipped via radix hits
+    prefix_hits: int = 0            # requests admitted with a nonzero match
+    radix_published_blocks: int = 0  # full blocks inserted into the tree
+    radix_evicted_blocks: int = 0   # tree blocks evicted under pressure
     latencies: List[float] = field(default_factory=list)
     start_t: Optional[float] = None
     end_t: Optional[float] = None
@@ -67,6 +71,18 @@ class ServingMetrics:
 
     def record_blocks(self, in_use: int) -> None:
         self.peak_blocks = max(self.peak_blocks, int(in_use))
+
+    def record_prefix_hit(self, n_tokens: int) -> None:
+        """A request matched `n_tokens` of radix-cached prompt prefix at
+        admission: that much prefill is skipped entirely (the saved-
+        prefill counter the reward-vs-compute plots need)."""
+        self._touch()
+        self.prefix_hits += 1
+        self.prefix_hit_tokens += int(n_tokens)
+
+    def record_radix(self, published: int = 0, evicted: int = 0) -> None:
+        self.radix_published_blocks += int(published)
+        self.radix_evicted_blocks += int(evicted)
 
     def record_eos(self, saved_tokens: int) -> None:
         self.eos_terminated += 1
@@ -113,6 +129,10 @@ class ServingMetrics:
             "eos_saved_tokens": self.eos_saved_tokens,
             "peak_children": self.peak_children,
             "peak_blocks": self.peak_blocks,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hits": self.prefix_hits,
+            "radix_published_blocks": self.radix_published_blocks,
+            "radix_evicted_blocks": self.radix_evicted_blocks,
             "wall_s": self.wall,
             "tokens_per_sec": self.tokens_per_sec,
             "latency_p50_s": percentile(self.latencies, 50),

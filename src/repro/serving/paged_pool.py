@@ -211,6 +211,9 @@ class PagedKVPool:
         assert 0 < blk < self.n_blocks and self._ref[blk] > 0
         self._ref[blk] += 1
 
+    def refcount(self, blk: int) -> int:
+        return self._ref[blk]
+
     def decref(self, blk: int) -> None:
         if not (0 < blk < self.n_blocks) or self._ref[blk] <= 0:
             raise RuntimeError(
@@ -221,8 +224,39 @@ class PagedKVPool:
             self._free_blocks.push(blk)
 
     def release_table(self, table: List[int]) -> None:
+        """Release a sequence's block table: one decref per *distinct*
+        block id. A table holds at most one reference per block no matter
+        how it was assembled, so a repeated COW-shared id (or a defensive
+        caller passing a padded view whose tail aliases an entry) must not
+        decref twice — that silently corrupted the ledger by freeing a
+        block other sequences still read. Entries pointing at the reserved
+        null block are padding and are skipped; anything out of range or
+        already free is a genuine caller bug and raises."""
+        seen = set()
         for blk in table:
+            if blk == 0:                # reserved null block: padding
+                continue
+            if not (0 < blk < self.n_blocks) or self._ref[blk] <= 0:
+                raise RuntimeError(
+                    f"release_table: invalid block id {blk} (ref="
+                    f"{self._ref[blk] if 0 <= blk < self.n_blocks else '?'})")
+            if blk in seen:
+                continue
+            seen.add(blk)
             self.decref(blk)
+
+    def check_conservation(self) -> None:
+        """Ledger invariant: every usable block is exactly one of free or
+        in use (ref > 0), reservations never exceed the free supply, and
+        the free heap agrees with the refcounts."""
+        in_use = sum(1 for r in self._ref[1:] if r > 0)
+        assert in_use == self.blocks_in_use, (in_use, self.blocks_in_use)
+        assert self.n_free_blocks + in_use == self.n_blocks - 1, (
+            self.n_free_blocks, in_use, self.n_blocks)
+        assert 0 <= self._reserved <= self.n_free_blocks, (
+            self._reserved, self.n_free_blocks)
+        assert self.available_blocks + self._reserved + in_use \
+            == self.n_blocks - 1
 
     # -------------------------------------------------------- slot lifetime
     def alloc_slot(self) -> int:

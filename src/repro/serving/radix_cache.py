@@ -1,0 +1,199 @@
+"""Radix-tree prefix cache over the paged KV pool.
+
+Adaptive best-of-k traffic is prefix-heavy by construction: every probe
+shares its task preamble / few-shot header with its siblings, and often
+with most of the stream. The paged pool already shares a *single
+request's* prompt blocks copy-on-write across its b_i fan-out children;
+this module extends that sharing **across requests**: a trie keyed on
+block-sized token chunks whose nodes own refcounted physical KV blocks,
+so a new request whose prompt shares a full-block prefix with any live or
+recently retired request reuses those blocks and skips their prefill
+entirely (its chunked prefill starts at ``pos = matched_len``).
+
+Sharing is sound because full prompt blocks are read-only for their whole
+life (decode never writes below ``prompt_len``, and the partial boundary
+block is never published) and because attention KV at a position depends
+only on the token prefix up to it — two prompts with identical first
+``k * block_size`` tokens have bitwise-identical KV for those positions.
+Recurrent-state families (mamba, xLSTM) violate that premise at the
+*runtime* level — skipping prefix tokens would skip their state updates —
+so the runtime only attaches a cache to stateless (attention/MLA) stacks.
+
+Ownership protocol (all refcounts live in :class:`PagedKVPool`):
+
+* ``publish`` — after chunked prefill fills a whole block, the tree
+  inserts a node for its token chunk and takes **one ref** of its own.
+  If a node for that chunk already exists (a concurrent request published
+  first), the existing node wins and the caller's block stays private —
+  dedup for *future* requests happens at match time.
+* ``match`` — walks the trie over the prompt's full-block chunks, increfs
+  every matched block **on the caller's behalf** (so eviction can never
+  free a block between match and use) and returns the block ids; the
+  caller installs them in the request's block table, where the normal
+  ``release_table`` decref applies.
+* ``evict`` — when ``available_blocks`` runs low the runtime evicts LRU
+  *leaves* whose only remaining ref is the tree's (shared interior nodes
+  and blocks still referenced by live requests are never freed — evicting
+  them would return no memory). Evicting a leaf can expose its parent as
+  the next candidate, so eviction proceeds until enough blocks are freed
+  or nothing evictable remains.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.paged_pool import PagedKVPool
+
+Chunk = Tuple[int, ...]
+
+
+class RadixNode:
+    """One full KV block: edge label `key` (block_size token ids) from its
+    parent, physical `block` id (the tree holds one ref on it)."""
+
+    __slots__ = ("key", "block", "children", "parent", "last_used")
+
+    def __init__(self, key: Chunk, block: int,
+                 parent: Optional["RadixNode"], last_used: int):
+        self.key = key
+        self.block = block
+        self.children: Dict[Chunk, "RadixNode"] = {}
+        self.parent = parent
+        self.last_used = last_used
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"RadixNode(block={self.block}, n_children={len(self.children)})"
+
+
+class RadixCache:
+    """Trie of published full prompt blocks; see module docstring."""
+
+    def __init__(self, pool: PagedKVPool):
+        self.pool = pool
+        self.block_size = pool.block_size
+        self.root: Dict[Chunk, RadixNode] = {}      # virtual root's children
+        self._clock = 0
+        # live state only; lifetime hit/publish/evict accounting is
+        # ServingMetrics' job (the runtime records trimmed, admission-
+        # final numbers there — a second counter here would drift)
+        self.held_blocks = 0        # == number of nodes (one block each)
+
+    def __len__(self) -> int:
+        return self.held_blocks
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _chunk(self, tokens: np.ndarray, i: int) -> Chunk:
+        B = self.block_size
+        return tuple(int(t) for t in tokens[i * B:(i + 1) * B])
+
+    # -------------------------------------------------------------- match
+    def match(self, tokens: np.ndarray) -> List[int]:
+        """Longest full-block prefix of `tokens` present in the tree.
+
+        Returns the matched physical block ids in prefix order, each
+        **already increfed for the caller** (install them in a block table
+        and release via the table as usual). Refreshes LRU clocks on the
+        whole matched path."""
+        now = self._tick()
+        out: List[int] = []
+        children = self.root
+        for i in range(len(tokens) // self.block_size):
+            node = children.get(self._chunk(tokens, i))
+            if node is None:
+                break
+            node.last_used = now
+            self.pool.incref(node.block)
+            out.append(node.block)
+            children = node.children
+        return out
+
+    def unmatch(self, blocks: List[int]) -> None:
+        """Return refs taken by :meth:`match` when the caller cannot use
+        (all of) them — e.g. a fully-matched prompt must still recompute
+        its final token, or admission failed after the match."""
+        for blk in blocks:
+            self.pool.decref(blk)
+
+    # ------------------------------------------------------------ publish
+    def publish(self, tokens: np.ndarray, table: List[int],
+                n_full: int) -> int:
+        """Insert the first `n_full` (fully written) blocks of a prompt's
+        table into the tree; returns how many nodes were newly created.
+        Idempotent: chunks already present are LRU-refreshed, not replaced
+        — their original block stays canonical and the caller's duplicate
+        block remains privately owned (freed with the request)."""
+        now = self._tick()
+        children = self.root
+        parent: Optional[RadixNode] = None
+        created = 0
+        for i in range(n_full):
+            key = self._chunk(tokens, i)
+            node = children.get(key)
+            if node is None:
+                node = RadixNode(key, table[i], parent, now)
+                self.pool.incref(table[i])          # the tree's own ref
+                children[key] = node
+                self.held_blocks += 1
+                created += 1
+            node.last_used = now
+            parent = node
+            children = node.children
+        return created
+
+    # ------------------------------------------------------------- evict
+    def _evictable(self) -> List[RadixNode]:
+        """Leaves whose block would actually return to the free list
+        (refcount 1: the tree holds the only reference)."""
+        out = []
+        stack = list(self.root.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            elif self.pool.refcount(n.block) == 1:
+                out.append(n)
+        return out
+
+    def _remove(self, node: RadixNode) -> None:
+        siblings = node.parent.children if node.parent else self.root
+        del siblings[node.key]
+        self.held_blocks -= 1
+        self.pool.decref(node.block)
+
+    def evict(self, n_blocks: int) -> int:
+        """Free up to `n_blocks` blocks by evicting LRU leaves; returns
+        how many were actually freed. Evicting a leaf can expose its
+        parent, so candidates are re-scanned until the target is met or
+        nothing evictable remains."""
+        freed = 0
+        while freed < n_blocks:
+            cands = self._evictable()
+            if not cands:
+                break
+            cands.sort(key=lambda n: n.last_used)
+            for n in cands:
+                if freed >= n_blocks:
+                    break
+                self._remove(n)
+                freed += 1
+        return freed
+
+    def clear(self) -> int:
+        """Drop every node (refs returned to the pool); returns how many
+        blocks the tree was holding. Blocks still shared with live
+        requests stay allocated until those requests release them."""
+        dropped = 0
+        stack = list(self.root.values())
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            self.pool.decref(n.block)
+            dropped += 1
+        self.root = {}
+        self.held_blocks = 0
+        return dropped

@@ -8,8 +8,11 @@ start on different ticks when the pool is momentarily full.
 State machine::
 
     QUEUED      submitted, awaiting prefill
-    PREFILLING  paged mode: chunked prefill in flight (one prompt token
-                per decode tick, interleaved with other slots)
+    PREFILLING  paged mode: chunked prefill in flight (up to
+                ``prefill_chunk`` prompt tokens per tick through the
+                varlen chunk program — or one per decode tick for
+                recurrent-state stacks — starting at the radix-matched
+                prefix length)
     PREFILL     probed (hidden state + prefill cache/blocks stashed),
                 awaiting a budget and/or free slots
     DECODE      at least one child admitted to a slot
@@ -108,6 +111,7 @@ class Request:
     hidden: Optional[np.ndarray] = None     # (d,) probe feature
     table: Optional[List[int]] = None       # paged mode: prompt block table
     prefill_pos: int = 0                    # paged mode: chunked progress
+    prefix_len: int = 0                     # radix-matched tokens (skipped)
     reserved: int = 0                       # paged: standing 1-child reserve
     response: Optional[np.ndarray] = None
     reward: float = 0.0

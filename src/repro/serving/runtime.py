@@ -4,19 +4,24 @@ Replaces the batch-synchronous serve loop (same-length prompts, full-batch
 barriers, double prefill) with a fixed pool of decode slots that variable-
 length, variable-budget requests stream through:
 
-* **One prefill per request.** The probe prefill that feeds the difficulty
-  predictor IS the generation prefill. In the default **paged** pool the
-  prompt's KV blocks are shared copy-on-write across the b_i children; in
-  the **slot** pool the prefill cache row is replicated per child
-  (`SlotKVPool.write_row`). Either way the paper's "free" probe stays free
-  at serving time.
-* **One jitted decode step per tick over the whole pool — including
-  prefill.** In paged mode prompt tokens are *chunked into the decode
-  tick*: a bounded number of slots run prefill (one prompt token per slot
-  per tick) interleaved with decoding slots, under the same compiled
-  program. There is no separate prefill program and therefore no
-  per-(group, prompt_len) recompile — one compiled program for
-  everything. (The slot pool keeps the legacy batched prefill.)
+* **At most one prefill per request — often less.** The probe prefill
+  that feeds the difficulty predictor IS the generation prefill. In the
+  default **paged** pool the prompt's KV blocks are shared copy-on-write
+  across the b_i children AND deduped across requests through a radix
+  prefix cache (`serving/radix_cache.py`): a prompt whose full-block
+  prefix was already prefilled — by a live or recently retired request —
+  adopts those blocks and starts prefill at `pos = matched_len`. In the
+  **slot** pool the prefill cache row is replicated per child
+  (`SlotKVPool.write_row`). Either way the paper's "free" probe stays
+  free at serving time.
+* **Statically-shaped programs, compiled once.** Decode runs one jitted
+  step per tick over the whole pool; prefill advances every prefilling
+  slot by up to `prefill_chunk` prompt tokens per tick through one
+  varlen chunk program at static shape (prefill_slots, prefill_chunk)
+  (`_paged_chunk_tick`; recurrent-state stacks fall back to the PR-2
+  one-token-per-tick interleave inside the decode tick). No
+  per-(group, prompt_len) recompiles anywhere. (The slot pool keeps the
+  legacy batched prefill.)
 * **Memory tracks actual sequence length.** Paged-pool blocks are
   allocated on demand as `pos` crosses block boundaries and freed the
   moment a child retires (or hits EOS), so the adaptive policy's saved
@@ -49,6 +54,7 @@ from repro.serving.engine import prefill
 from repro.serving.kv_pool import SlotKVPool
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged_pool import PagedKVPool, cdiv, supports_paging
+from repro.serving.radix_cache import RadixCache
 from repro.serving.request import (ChildSeq, PrefillStash, Request,
                                    RequestState, StashGroup)
 
@@ -125,6 +131,20 @@ def _paged_tick(model: Model, params, cache, tables, tokens, pos, keys,
     return sampled, lg, hidden[:, 0], cache, new_keys
 
 
+@functools.partial(jax.jit, static_argnames=("model",), donate_argnums=(2,))
+def _paged_chunk_tick(model: Model, params, cache, tables, tokens, pos,
+                      valid):
+    """One varlen chunked-prefill program: every prefilling slot advances
+    by up to C prompt tokens (its own `valid` count) in a single compiled
+    step. Shapes are static — (prefill_slots, prefill_chunk) — so mixed
+    prompt lengths, partial tail chunks, and idle prefill slots (valid 0,
+    null tables) all run the same program; there is exactly one compile
+    for the whole runtime, like the decode tick."""
+    logits, hidden, cache = model.decode_chunk(params, tokens, cache, pos,
+                                               valid, block_tables=tables)
+    return logits, hidden, cache
+
+
 @functools.partial(jax.jit, static_argnames=("temperature_zero",))
 def _sample_first(logits, row, key, temperature, *, temperature_zero: bool):
     """Sample a fan-out child's first token from its request's stashed
@@ -144,10 +164,12 @@ class ContinuousBatchingRuntime:
     """Pooled decode runtime; see module docstring.
 
     pool="paged" (default) stores KV in block-granular pages with COW
-    prompt sharing and chunked prefill inside the decode tick;
-    pool="slots" keeps the PR-1 full-row slot pool (used by the
-    bitwise-equivalence tests and as the fallback for sliding-window
-    configs whose cache would wrap).
+    prompt sharing, a cross-request radix prefix cache
+    (prefix_cache=True; stateless stacks only) and varlen multi-token
+    chunked prefill (prefill_chunk, default block_size; recurrent-state
+    stacks use the per-token interleave); pool="slots" keeps the PR-1
+    full-row slot pool (used by the bitwise-equivalence tests and as the
+    fallback for sliding-window configs whose cache would wrap).
 
     budget_fn(request, hidden) -> int resolves budgets at admission
     (streaming mode, e.g. ``AdaptivePolicy.allocate_streaming`` at a
@@ -170,7 +192,9 @@ class ContinuousBatchingRuntime:
                  pool: str = "paged", block_size: int = 16,
                  n_blocks: Optional[int] = None,
                  prefill_slots: Optional[int] = None,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 prefill_chunk: Optional[int] = None):
         assert pool in ("paged", "slots")
         if pool == "paged" and not supports_paging(model, max_len):
             pool = "slots"          # sliding-window wrap: paged is inexact
@@ -220,6 +244,22 @@ class ContinuousBatchingRuntime:
             self._tok = np.zeros(n_slots, np.int32)   # next input token
             self._pos = np.zeros(n_slots, np.int32)   # its decode position
             self._fanout_blocked = False
+            # multi-token chunked prefill: up to `prefill_chunk` prompt
+            # tokens per prefilling slot per tick under one compiled
+            # varlen program. Recurrent-state stacks advance state one
+            # token per step, so they stay on the per-token interleave
+            # (chunk 1 == the PR-2 path, also selectable explicitly).
+            if not self.model.supports_chunked_prefill:
+                prefill_chunk = 1
+            elif prefill_chunk is None:
+                prefill_chunk = block_size
+            self.prefill_chunk = max(1, int(prefill_chunk))
+            # radix prefix cache: cross-request dedup of full prompt
+            # blocks. Sound only when skipping prefix tokens skips no
+            # recurrent-state updates — i.e. stateless stacks.
+            self.radix: Optional[RadixCache] = (
+                RadixCache(self.pool)
+                if prefix_cache and not self.pool._has_state else None)
         else:
             self.pool = SlotKVPool(model, n_slots, max_len)
             self.logits = jnp.zeros((n_slots, V), model.lm.dtype)
@@ -305,8 +345,9 @@ class ContinuousBatchingRuntime:
         distinct (group, prompt_len) shape; each row it stashes counts
         against the prefill window until its group dies). Paged pool:
         drive the chunked prefill to completion for those requests by
-        running decode ticks — same compiled program as decoding.
-        Resolves budgets via budget_fn when present."""
+        running ticks (the varlen chunk program, or the decode-tick
+        interleave for recurrent-state stacks). Resolves budgets via
+        budget_fn when present."""
         if self.pool_kind == "paged":
             n = len(self.queue) if limit is None else min(int(limit),
                                                           len(self.queue))
@@ -360,7 +401,15 @@ class ContinuousBatchingRuntime:
             return budget
         per_child = self._child_owned_blocks(r)
         guaranteed = 1 if r.reserved else 0
-        cap = guaranteed + self.pool.available_blocks // max(1, per_child)
+        # radix-held blocks are a cache, not a commitment: fan-out
+        # admission evicts them on demand, so they count as capacity
+        # here. held_blocks is an O(1) upper bound on what eviction can
+        # free; over-granting is safe — the standing one-child
+        # reservation guarantees progress and surplus children just wait
+        # in the fan-out backlog
+        held = self.radix.held_blocks if self.radix is not None else 0
+        cap = guaranteed + ((self.pool.available_blocks + held)
+                            // max(1, per_child))
         return max(1, min(budget, cap))
 
     def _child_owned_blocks(self, r: Request) -> int:
@@ -370,6 +419,19 @@ class ContinuousBatchingRuntime:
         B = self.pool.block_size
         full = r.prompt_len // B
         return self.pool.blocks_for(r.prompt_len + r.max_new) - full
+
+    def _can_reserve_or_evict(self, k: int) -> bool:
+        """Admission headroom check that spends the radix cache first:
+        retired prompts' published blocks are a cache, not a commitment,
+        so when a reservation cannot be met the LRU evictable leaves are
+        freed before giving up."""
+        if self.pool.can_reserve(k):
+            return True
+        if self.radix is not None:
+            freed = self.radix.evict(k - self.pool.available_blocks)
+            if freed:
+                self.metrics.record_radix(evicted=freed)
+        return self.pool.can_reserve(k)
 
     def _release_prompt_table(self, r: Request) -> None:
         if r.table is not None:
@@ -433,7 +495,7 @@ class ContinuousBatchingRuntime:
                 # first child: consume the standing reservation made at
                 # prefill admission (guaranteed progress, no competition)
                 assert r.reserved == owned
-            elif not self.pool.can_reserve(owned):
+            elif not self._can_reserve_or_evict(owned):
                 self._fanout_blocked = True   # hold new prefills back
                 break
             c = r.pending.pop(0)
@@ -485,17 +547,32 @@ class ContinuousBatchingRuntime:
         prompt's worst-case block reservation PLUS one child's worst case
         (guaranteed progress: anything admitted to prefill can eventually
         decode at least one child — its first fan-out child draws this
-        standing reservation instead of competing for fresh memory), and
-        the prompt's first block. While the fan-out backlog is blocked on
-        memory, no new prompts are admitted (their blocks belong to the
-        backlog head)."""
+        standing reservation instead of competing for fresh memory).
+        While the fan-out backlog is blocked on memory, no new prompts
+        are admitted (their blocks belong to the backlog head).
+
+        With the radix prefix cache, the prompt is first matched against
+        published full blocks: matched blocks are adopted (increfed)
+        straight into the request's table, its reservation shrinks by the
+        match, and prefill starts at ``pos = matched_len`` — the hit path
+        never recomputes the shared prefix. The final prompt token is
+        always recomputed (the probe needs its logits/hidden), so a
+        fully-matched prompt drops its last matched block."""
         admitted = 0
+        B = self.pool.block_size
         while (self.queue and not self._fanout_blocked
                and len(self._pref) < self.prefill_slots
                and self.pool.n_free_slots > 0
                and self._window_used() < self.prefill_window):
             r = self.queue[0]
-            need = self.pool.blocks_for(r.prompt_len)
+            sp = r.prompt_len
+            matched: List[int] = []
+            if self.radix is not None:
+                matched = self.radix.match(r.prompt)
+                while len(matched) * B > sp - 1:
+                    self.radix.unmatch([matched.pop()])
+            m = len(matched)
+            need = self.pool.blocks_for(sp) - m
             # budget-deferred requests (no budget, no budget_fn — parked
             # until set_budget) take no child reservation: they will not
             # decode promptly, and pinning a tail per deferred request
@@ -503,19 +580,26 @@ class ContinuousBatchingRuntime:
             # (the facade sizes one block-row per request, not two)
             child_need = (0 if r.budget is None and self.budget_fn is None
                           else self._child_owned_blocks(r))
-            if not self.pool.can_reserve(need + child_need):
+            if not self._can_reserve_or_evict(need + child_need):
+                if matched:
+                    self.radix.unmatch(matched)
                 break
             self.queue.popleft()
             self.pool.reserve(need + child_need)
             r.reserved = child_need
             slot = self.pool.alloc_slot()
             self.pool.reset_slot_state(slot)    # purge previous occupant
-            r.table = [self.pool.alloc_block()]
+            # matched blocks head the table; growth allocates the rest as
+            # prefill crosses block boundaries (reservation-backed)
+            r.table = matched
+            r.prefix_len = m * B
+            if m:
+                self.metrics.record_prefix_hit(m * B)
             r.state = RequestState.PREFILLING
-            r.prefill_pos = 0
+            r.prefill_pos = m * B
             self._pref[slot] = r
-            self._tok[slot] = int(r.prompt[0])
-            self._pos[slot] = 0
+            self._tok[slot] = int(r.prompt[m * B])
+            self._pos[slot] = m * B
             admitted += 1
         return admitted
 
@@ -563,11 +647,88 @@ class ContinuousBatchingRuntime:
                     self._finalize(r)
         return True
 
+    def _chunk_prefill_tick(self) -> bool:
+        """Advance every prefilling slot by up to `prefill_chunk` prompt
+        tokens through the varlen chunk program. Chunk ends are aligned to
+        the absolute C-grid, so a prefix-cache hit (which starts prefill
+        mid-prompt) computes every remaining position in exactly the batch
+        shape a cold run would — the hit path stays bitwise identical.
+        Whole blocks finished by the chunk are published into the radix
+        tree immediately, not at probe completion."""
+        B = self.pool.block_size
+        C = self.prefill_chunk
+        P = self.prefill_slots
+        pref_slots = sorted(self._pref)
+        toks = np.zeros((P, C), np.int32)
+        pos = np.zeros((P,), np.int32)
+        valid = np.zeros((P,), np.int32)
+        tables = np.zeros((P, self.pool.blocks_per_seq), np.int32)
+        take: Dict[int, int] = {}
+        for i, s in enumerate(pref_slots):
+            r = self._pref[s]
+            p = r.prefill_pos
+            L = min(C - p % C, r.prompt_len - p)
+            # allocate the blocks this chunk writes into up front
+            # (reservation-backed, like per-token growth)
+            while (p + L - 1) // B >= len(r.table):
+                r.table.append(self.pool.alloc_block())
+            toks[i, :L] = r.prompt[p:p + L]
+            pos[i] = p
+            valid[i] = L
+            tables[i, :len(r.table)] = r.table
+            take[s] = L
+        logits, hidden, cache = _paged_chunk_tick(
+            self.model, self.params, self.pool.cache, jnp.asarray(tables),
+            jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(valid))
+        self.pool.cache = cache
+        self.metrics.record_prefill(int(valid.sum()))
+        self.metrics.record_blocks(self.pool.blocks_in_use)
+        hidden_np = None
+        for i, s in enumerate(pref_slots):
+            r = self._pref[s]
+            L = take[s]
+            end = r.prefill_pos + L
+            if self.radix is not None:
+                created = self.radix.publish(r.prompt, r.table, end // B)
+                if created:
+                    self.metrics.record_radix(published=created)
+            if end == r.prompt_len:                 # probe complete
+                if hidden_np is None:
+                    hidden_np = np.asarray(hidden, np.float32)
+                r.hidden = hidden_np[i, L - 1]
+                group = StashGroup()
+                # stash only this request's probe row (a (1, V) copy):
+                # stashing the whole (P*C, V) tick tensor would pin
+                # prefill_chunk times PR-2's footprint until fan-out —
+                # indefinitely for budget-deferred requests
+                self._make_stash(r, group, cache=None,
+                                 logits=logits[i, L - 1][None], row=0,
+                                 start_pos=end - 1, state=None)
+                del self._pref[s]
+                self.pool.release_slot(s)
+                self._tok[s] = 0
+                self._pos[s] = 0
+                r.state = RequestState.PREFILL
+                if r.budget is None and self.budget_fn is not None:
+                    r.budget = self._gate_budget(
+                        r, int(self.budget_fn(r, r.hidden)))
+                if r.budget is not None:
+                    self._spawn_children(r)
+            else:
+                r.prefill_pos = end
+        return True
+
     def _step_paged(self) -> bool:
         progressed = bool(self._try_fanout_paged())
         progressed = bool(self._admit_prefill_paged()) or progressed
+        chunked = self.prefill_chunk > 1
+        if chunked and self._pref:
+            progressed = self._chunk_prefill_tick() or progressed
         live_dec = [s for s, c in enumerate(self.slots) if c is not None]
-        live_pref = list(self._pref.keys())
+        # the per-token interleave (chunk 1: recurrent-state stacks) keeps
+        # prefilling slots inside the decode tick; the chunk program above
+        # owns them otherwise
+        live_pref = [] if chunked else list(self._pref.keys())
         if not live_dec and not live_pref:
             return progressed
         B = self.pool.block_size
@@ -605,6 +766,11 @@ class ContinuousBatchingRuntime:
             r = self._pref[s]
             t = int(self._pos[s])
             if t == r.prompt_len - 1:           # probe complete
+                if self.radix is not None:
+                    created = self.radix.publish(r.prompt, r.table,
+                                                 r.prompt_len // B)
+                    if created:
+                        self.metrics.record_radix(published=created)
                 r.hidden = hidden_np[s]
                 group = StashGroup()
                 self._make_stash(r, group, cache=None, logits=logits,
@@ -701,23 +867,69 @@ class ContinuousBatchingRuntime:
         if self.fanout:
             head = self.fanout[0]
             if self.pool_kind == "paged":
+                held = self.radix.held_blocks if self.radix else 0
                 parts.append(
                     f"fan-out blocked for request {head.id} "
                     f"(free_slots={self.pool.n_free_slots}, "
                     f"free_blocks={self.pool.n_free_blocks}, "
-                    f"reserved={self.pool._reserved})")
+                    f"reserved={self.pool._reserved}, "
+                    f"radix_held={held})")
             else:
                 parts.append(f"fan-out blocked for request {head.id} "
                              f"(free_slots={self.pool.n_free})")
         return "; ".join(parts)
 
+    def assert_ledger_balanced(self) -> None:
+        """Block-ledger balance: every refcount is explained by a live
+        owner (request prompt tables, child tables, radix nodes) and the
+        pool's reservation counter equals the live owners' unclaimed
+        worst cases. Valid at any step boundary. A leak — e.g. an EOS
+        retirement dropping blocks but not its remaining reservation —
+        fails here loudly instead of silently shrinking
+        ``available_blocks`` until admission starves."""
+        if self.pool_kind != "paged":
+            return
+        pool = self.pool
+        pool.check_conservation()
+        refs = [0] * pool.n_blocks
+        reserved = 0
+        for r in self.requests.values():
+            if r.table is not None:
+                for blk in set(r.table):
+                    refs[blk] += 1
+            reserved += r.reserved
+            if r.state is RequestState.PREFILLING:
+                # remaining prompt-growth reservation is implicit: the
+                # blocks the prompt still needs beyond its current table
+                reserved += pool.blocks_for(r.prompt_len) - len(r.table)
+            for c in r.children:
+                if c.table is not None:
+                    for blk in set(c.table):
+                        refs[blk] += 1
+                reserved += c.reserved
+        if self.radix is not None:
+            stack = list(self.radix.root.values())
+            while stack:
+                n = stack.pop()
+                stack.extend(n.children.values())
+                refs[n.block] += 1
+        assert refs == pool._ref, (
+            "block refcount leak: owners "
+            f"{[(i, a, b) for i, (a, b) in enumerate(zip(refs, pool._ref)) if a != b]}")
+        assert reserved == pool._reserved, (
+            f"reservation leak: owners hold {reserved}, "
+            f"pool ledger says {pool._reserved}")
+
     def drain(self) -> None:
         """Run until every runnable request is DONE. Requests still waiting
         on :meth:`set_budget` are left in PREFILL (they are not runnable
-        and do not count against the prefill window)."""
+        and do not count against the prefill window). On completion the
+        block ledger must balance exactly (see
+        :meth:`assert_ledger_balanced`)."""
         while self.pending():
             if not self.step():
                 raise RuntimeError(self._stall_report())
+        self.assert_ledger_balanced()
 
     def result(self, request_id: int) -> Request:
         return self.requests[request_id]

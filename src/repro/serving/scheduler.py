@@ -51,7 +51,9 @@ class AdaptiveScheduler:
     def __init__(self, engine: ServingEngine, policy: AdaptivePolicy,
                  reward_fn: Callable, *, seed: int = 0,
                  backend: str = "runtime", n_slots: int = 8,
-                 pool: str = "paged", block_size: int = 16):
+                 pool: str = "paged", block_size: int = 16,
+                 prefix_cache: bool = True,
+                 prefill_chunk: Optional[int] = None):
         assert backend in ("runtime", "batch")
         self.engine = engine
         self.policy = policy
@@ -61,6 +63,8 @@ class AdaptiveScheduler:
         self.n_slots = n_slots
         self.pool = pool
         self.block_size = block_size
+        self.prefix_cache = prefix_cache      # radix cross-batch reuse
+        self.prefill_chunk = prefill_chunk    # None: runtime default
 
     def serve_batch(self, queries: Sequence, prompts: np.ndarray,
                     avg_budget: float) -> ServeBatchResult:
@@ -84,7 +88,9 @@ class AdaptiveScheduler:
             temperature=eng.temperature, seed=self.seed,
             reward_fn=self.reward_fn, pool=self.pool,
             block_size=self.block_size,
-            n_blocks=(n + self.n_slots) * per_seq + 1)
+            n_blocks=(n + self.n_slots) * per_seq + 1,
+            prefix_cache=self.prefix_cache,
+            prefill_chunk=self.prefill_chunk)
         ids = rt.submit_batch(prompts, queries=list(queries))
         rt.prefill_queued()                       # the single probe prefill
         hidden = np.stack([rt.requests[i].hidden for i in ids])

@@ -1,0 +1,383 @@
+"""Radix-tree prefix cache: cross-request block dedup semantics
+(match / publish / LRU evict / clear), bitwise hit-vs-cold greedy parity,
+multi-token chunked prefill (grid alignment, per-token parity, Pallas
+chunk kernel), `release_table` hardening, and randomized pool-conservation
+churn over submit / EOS / b_i=0 / drain sequences on both pools."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # hypothesis is dev-only: skip just those tests
+    from conftest import given, settings, st  # noqa: F401
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (ContinuousBatchingRuntime, PagedKVPool,
+                           RadixCache, RequestState, ServingEngine)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32", n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prefix_prompts(cfg, rng, *, n, pre_len, tail_len):
+    pre = rng.integers(0, cfg.vocab_size, (pre_len,)).astype(np.int32)
+    return [np.concatenate(
+        [pre, rng.integers(0, cfg.vocab_size, (tail_len,)).astype(np.int32)])
+        for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# RadixCache unit semantics (bare pool, no model ticks)
+# ---------------------------------------------------------------------------
+
+def test_radix_match_publish_evict_unit(tiny):
+    cfg, model, params = tiny
+    pool = PagedKVPool(model, 2, 16, block_size=4, n_blocks=12)
+    radix = RadixCache(pool)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 100, (12,)).astype(np.int32)
+
+    # simulate a prefilled prompt: 3 full blocks owned by a "request"
+    pool.reserve(3)
+    table = [pool.alloc_block() for _ in range(3)]
+    assert radix.match(toks) == []             # empty tree: no match
+    assert radix.publish(toks, table, 3) == 3
+    assert radix.held_blocks == 3
+    assert [pool.refcount(b) for b in table] == [2, 2, 2]
+
+    # a second request with the same first 2 blocks matches exactly those,
+    # increfed on its behalf
+    other = np.concatenate([toks[:8], toks[8:] + 1]).astype(np.int32)
+    got = radix.match(other)
+    assert got == table[:2]
+    assert [pool.refcount(b) for b in table] == [3, 3, 2]
+    radix.unmatch(got)
+
+    # re-publishing dedups: existing nodes win, nothing new inserted
+    assert radix.publish(toks, table, 3) == 0
+
+    # request releases its table; the tree keeps the blocks alive
+    pool.release_table(table)
+    assert pool.blocks_in_use == 3
+
+    # eviction is leaf-first and only frees tree-only blocks
+    assert radix.evict(1) == 1
+    assert radix.held_blocks == 2
+    assert pool.refcount(table[2]) == 0        # deepest leaf went first
+    # clearing returns the pool to pristine
+    assert radix.clear() == 2
+    assert pool.blocks_in_use == 0
+    pool.check_conservation()
+
+
+def test_radix_evict_skips_blocks_shared_with_live_requests(tiny):
+    """A published block still referenced by a live request is not
+    evictable (freeing it would return no memory); eviction takes the
+    LRU tree-only leaf instead."""
+    cfg, model, params = tiny
+    pool = PagedKVPool(model, 2, 16, block_size=4, n_blocks=12)
+    radix = RadixCache(pool)
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 100, (4,)).astype(np.int32)
+    b = rng.integers(0, 100, (4,)).astype(np.int32)
+    pool.reserve(2)
+    ta = [pool.alloc_block()]
+    tb = [pool.alloc_block()]
+    radix.publish(a, ta, 1)                    # older
+    radix.publish(b, tb, 1)                    # newer
+    pool.release_table(tb)                     # only b is tree-only
+    assert radix.evict(2) == 1                 # a is pinned by its request
+    assert pool.refcount(ta[0]) == 2 and pool.refcount(tb[0]) == 0
+    radix.clear()
+    pool.release_table(ta)
+    pool.check_conservation()
+
+
+def test_release_table_dedup_null_and_invalid(tiny):
+    """Satellite: release_table must decref each distinct id once, skip
+    the reserved null block (table padding), and raise on genuinely
+    invalid entries instead of corrupting the ledger."""
+    cfg, model, params = tiny
+    pool = PagedKVPool(model, 2, 16, block_size=4, n_blocks=8)
+    pool.reserve(2)
+    a, b = pool.alloc_block(), pool.alloc_block()
+    pool.incref(a)                             # someone else shares a
+    # repeated COW-shared id + null-block padding: one decref per distinct
+    pool.release_table([a, a, 0, b, 0])
+    assert pool.refcount(a) == 1               # not double-decrefed
+    assert pool.refcount(b) == 0
+    with pytest.raises(RuntimeError, match="invalid block"):
+        pool.release_table([b])                # already free
+    with pytest.raises(RuntimeError, match="invalid block"):
+        pool.release_table([pool.n_blocks + 3])
+    pool.release_table([a])
+    pool.check_conservation()
+
+
+# ---------------------------------------------------------------------------
+# Hit-vs-cold parity and savings (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_prefix_hit_bitwise_matches_cold_path(tiny):
+    """A request admitted after its prefix was published skips that
+    prefill (metered in prefix_hit_tokens) and still produces tokens
+    bitwise identical to a cold run and to the batch engine."""
+    cfg, model, params = tiny
+    engine = ServingEngine(model, params, max_new=4, temperature=0.0)
+    rng = np.random.default_rng(2)
+    prompts = _prefix_prompts(cfg, rng, n=3, pre_len=8, tail_len=4)
+
+    def run(prefix_cache):
+        # prefill_slots=1 serializes prefill, so request i+1 is admitted
+        # after request i published its blocks — deterministic hits
+        rt = ContinuousBatchingRuntime(
+            model, params, n_slots=4, max_len=20, max_new=4,
+            temperature=0.0, seed=0, pool="paged", block_size=4,
+            prefill_slots=1, prefix_cache=prefix_cache)
+        ids = [rt.submit(p, budget=2) for p in prompts]
+        rt.drain()
+        return rt, ids
+
+    hot, ids_h = run(True)
+    cold, ids_c = run(False)
+    for i, p in enumerate(prompts):
+        want = engine.generate(p[None], n_samples=1, seed=0,
+                               temperature=0.0).tokens[0]
+        for ch, cc in zip(hot.result(ids_h[i]).children,
+                          cold.result(ids_c[i]).children):
+            np.testing.assert_array_equal(np.asarray(ch.tokens), want)
+            np.testing.assert_array_equal(ch.tokens, cc.tokens)
+    # requests 1 and 2 each skipped the 8-token shared preamble
+    assert hot.metrics.prefix_hits == 2
+    assert hot.metrics.prefix_hit_tokens == 16
+    assert cold.metrics.prefix_hit_tokens == 0
+    assert (hot.metrics.prefill_tokens
+            == cold.metrics.prefill_tokens - 16)
+    assert hot.requests[ids_h[1]].prefix_len == 8
+    hot.assert_ledger_balanced()
+
+
+def test_fully_matched_prompt_recomputes_final_token(tiny):
+    """An identical repeated prompt matches every full block; the probe
+    still needs the last token's logits/hidden, so the hit path drops the
+    final matched block and recomputes at least one token."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)  # 2 blocks
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=16,
+                                   max_new=3, temperature=0.0, seed=0,
+                                   pool="paged", block_size=4,
+                                   prefill_slots=1)
+    ra = rt.submit(prompt, budget=1)
+    rt.drain()
+    rb = rt.submit(prompt, budget=1)
+    rt.drain()
+    a, b = rt.result(ra), rt.result(rb)
+    np.testing.assert_array_equal(a.response, b.response)
+    assert b.prefix_len == 4                   # one block, not both
+    assert b.hidden is not None
+    np.testing.assert_allclose(a.hidden, b.hidden, rtol=1e-5, atol=1e-5)
+    assert rt.metrics.prefix_hit_tokens == 4
+    rt.assert_ledger_balanced()
+
+
+def test_eviction_under_pressure_keeps_stream_exact(tiny):
+    """A tiny pool under sustained distinct-prompt traffic must evict LRU
+    radix leaves to admit new work — outputs stay exact and the ledger
+    balances (no leak from the evict/adopt paths)."""
+    cfg, model, params = tiny
+    engine = ServingEngine(model, params, max_new=3, temperature=0.0)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, (7,)).astype(np.int32)
+               for _ in range(6)]
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=12,
+                                   max_new=3, temperature=0.0, seed=0,
+                                   pool="paged", block_size=4, n_blocks=9,
+                                   budget_fn=lambda r, h: 2)
+    ids = [rt.submit(p) for p in prompts]
+    rt.drain()
+    for p, rid in zip(prompts, ids):
+        want = engine.generate(p[None], n_samples=1, seed=0,
+                               temperature=0.0).tokens[0][:3]
+        np.testing.assert_array_equal(rt.result(rid).response, want)
+    assert rt.metrics.radix_evicted_blocks > 0
+    rt.assert_ledger_balanced()
+
+
+# ---------------------------------------------------------------------------
+# Multi-token chunked prefill
+# ---------------------------------------------------------------------------
+
+def test_chunk_width_invariance_and_tick_savings(tiny):
+    """Any prefill_chunk yields the same greedy tokens, stash logits and
+    probe hidden as the per-token interleave (chunk=1), while cutting the
+    number of host-visible prefill steps by ~C."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (9, 13, 6)]
+
+    def run(chunk):
+        rt = ContinuousBatchingRuntime(
+            model, params, n_slots=3, max_len=20, max_new=3,
+            temperature=0.0, seed=0, pool="paged", block_size=4,
+            prefill_chunk=chunk, prefix_cache=False)
+        ids = [rt.submit(p, budget=1) for p in prompts]
+        rt.drain()
+        return rt, ids
+
+    base, ids0 = run(1)
+    for C in (4, 8):
+        rt, ids = run(C)
+        assert rt.prefill_chunk == C
+        for r0, r1 in zip(ids0, ids):
+            np.testing.assert_array_equal(base.result(r0).response,
+                                          rt.result(r1).response)
+            np.testing.assert_allclose(base.result(r0).hidden,
+                                       rt.result(r1).hidden,
+                                       rtol=2e-5, atol=2e-5)
+        # same tokens computed, far fewer prefill program launches
+        assert rt.metrics.prefill_tokens == base.metrics.prefill_tokens
+        assert rt.metrics.prefill_calls < base.metrics.prefill_calls
+        rt.assert_ledger_balanced()
+
+
+def test_chunked_prefill_pallas_kernel_matches_xla(tiny, monkeypatch):
+    """REPRO_DECODE_KERNEL=pallas routes chunked prefill through the
+    varlen paged chunk kernel; greedy outputs match the XLA gather path
+    and the kernel is actually traced."""
+    from repro.kernels import ops
+    from repro.models import build_model as _build
+    cfg, model, params = tiny
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (9, 6)]
+
+    calls = []
+    orig = ops.paged_chunk_attention
+    monkeypatch.setattr(
+        ops, "paged_chunk_attention",
+        lambda *a, **k: (calls.append(1), orig(*a, **k))[1])
+
+    def run(m):
+        rt = ContinuousBatchingRuntime(m, params, n_slots=2, max_len=16,
+                                       max_new=3, temperature=0.0, seed=0,
+                                       pool="paged", block_size=4,
+                                       prefill_chunk=4)
+        ids = [rt.submit(p, budget=1) for p in prompts]
+        rt.drain()
+        return [list(rt.result(i).response) for i in ids]
+
+    xla = run(model)
+    assert not calls
+    monkeypatch.setenv("REPRO_DECODE_KERNEL", "pallas")
+    pallas = run(_build(cfg))                  # fresh Model -> fresh trace
+    assert calls
+    assert xla == pallas
+
+
+def test_paged_chunk_kernel_unit_matches_reference():
+    """The varlen chunk kernel against a dense causal reference on an
+    irregular shape (chunk crossing block boundaries, partial tail)."""
+    from repro.kernels.decode_attention import paged_chunk_attention
+    rng = np.random.default_rng(7)
+    b, C, H, KV, hd, B, T = 2, 5, 4, 2, 8, 4, 4
+    nb = 1 + b * T
+    k_blocks = rng.normal(size=(nb, B, KV, hd)).astype(np.float32)
+    v_blocks = rng.normal(size=(nb, B, KV, hd)).astype(np.float32)
+    q = rng.normal(size=(b, C, H, hd)).astype(np.float32)
+    tables = np.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], np.int32)
+    pos = np.asarray([3, 6], np.int32)         # chunks straddle boundaries
+    out = np.asarray(paged_chunk_attention(
+        jax.numpy.asarray(q), jax.numpy.asarray(k_blocks),
+        jax.numpy.asarray(v_blocks), jax.numpy.asarray(tables),
+        jax.numpy.asarray(pos)))
+    g = H // KV
+    for i in range(b):
+        dense_k = k_blocks[tables[i]].reshape(T * B, KV, hd)
+        dense_v = v_blocks[tables[i]].reshape(T * B, KV, hd)
+        for c in range(C):
+            p = pos[i] + c
+            for h in range(H):
+                kv = h // g
+                s = dense_k[: p + 1, kv] @ q[i, c, h] / np.sqrt(hd)
+                w = np.exp(s - s.max())
+                w /= w.sum()
+                want = w @ dense_v[: p + 1, kv]
+                np.testing.assert_allclose(out[i, c, h], want,
+                                           rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pool conservation under randomized churn (satellite)
+# ---------------------------------------------------------------------------
+
+def _churn_once(tiny, pool_kind, lengths, budgets, eos_pick, chunk):
+    cfg, model, params = tiny
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in lengths]
+    kw = {}
+    if pool_kind == "paged":
+        kw = dict(block_size=4, prefill_chunk=chunk)
+    rt = ContinuousBatchingRuntime(
+        model, params, n_slots=2, max_len=16, max_new=4, temperature=0.0,
+        seed=0, pool=pool_kind, eos_id=int(eos_pick), **kw)
+    ids = [rt.submit(p, budget=b) for p, b in zip(prompts, budgets)]
+    steps = 0
+    while rt.pending():
+        rt.step()
+        steps += 1
+        if pool_kind == "paged":
+            # conservation must hold at EVERY step boundary, not just
+            # at drain: available + reserved + in_use == usable blocks
+            pool = rt.pool
+            pool.check_conservation()
+            assert (pool.available_blocks + pool._reserved
+                    + pool.blocks_in_use == pool.n_blocks - 1)
+        assert steps < 10_000
+    rt.drain()
+    for rid in ids:
+        assert rt.result(rid).state == RequestState.DONE
+    rt.assert_ledger_balanced()
+    if pool_kind == "paged":
+        held = rt.radix.held_blocks if rt.radix is not None else 0
+        assert rt.pool.blocks_in_use == held
+        assert rt.pool._reserved == 0
+    else:
+        assert rt.pool.n_free == rt.pool.n_slots
+    return rt
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("pool_kind", ["paged", "slots"])
+def test_pool_conservation_fixed_churn(tiny, pool_kind):
+    """Deterministic mixed sequence: b_i=0, EOS-prone children (eos_id
+    drawn from the live vocab so some child hits it), mixed lengths and
+    budgets — free/in-use/reserved must balance after every step and the
+    drain ledger must cross-check exactly."""
+    _churn_once(tiny, pool_kind, lengths=(5, 9, 7, 6, 11),
+                budgets=(2, 0, 3, 1, 2), eos_pick=7, chunk=4)
+
+
+@pytest.mark.slow
+@given(lengths=st.lists(st.integers(4, 12), min_size=1, max_size=5),
+       budgets=st.lists(st.integers(0, 3), min_size=5, max_size=5),
+       eos_pick=st.integers(1, 50), chunk=st.sampled_from([1, 4, 8]))
+@settings(max_examples=8, deadline=None)
+def test_pool_conservation_random_churn(tiny, lengths, budgets, eos_pick,
+                                        chunk):
+    """Hypothesis: arbitrary submit/EOS/b_i=0 sequences on the paged pool
+    keep the ledger conserved at every step and balanced at drain."""
+    _churn_once(tiny, "paged", lengths, budgets[:len(lengths)], eos_pick,
+                chunk)

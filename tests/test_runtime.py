@@ -100,6 +100,7 @@ def test_slot_pool_heap_free_list_and_double_release(tiny):
         pool.release(99)
 
 
+@pytest.mark.slow
 def test_variable_prompt_lengths_interleave(tiny):
     """Different-length prompts decode concurrently in one pool; each
     request matches its own single-prompt batch-engine run."""
@@ -334,7 +335,11 @@ def test_eos_early_termination(tiny, pool):
     # the early stop really saved decode work
     assert rt.metrics.decode_tokens < 6
     if pool == "paged":
-        assert rt.pool.blocks_in_use == 0      # blocks freed immediately
+        # blocks freed immediately — only the radix prefix cache's
+        # published prompt blocks (a cache, evictable) remain alive
+        held = rt.radix.held_blocks if rt.radix is not None else 0
+        assert rt.pool.blocks_in_use == held
+        rt.assert_ledger_balanced()
 
 
 def test_per_request_max_new_staggered_retirement(tiny):
