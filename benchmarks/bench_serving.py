@@ -23,9 +23,19 @@ computed by >= 30% (metered via `prefix_hit_tokens`) at bitwise-identical
 outputs. `REPRO_DECODE_KERNEL=pallas` routes it through the paged chunk
 kernel (interpret mode on CPU) — that combination is the CI gate.
 
+Horizon probe (`--horizon`, default 8): the same decode-heavy greedy
+stream with horizon-fused decode on vs off. Fusion folds H decode steps
+into one `lax.scan` dispatch with a single host sync per horizon, so on
+the dispatch-bound probe it must deliver >= 1.5x tokens/sec at bitwise-
+identical outputs with syncs/token <= 1/H — the smoke gate. Results land
+in `experiments/results/BENCH_serving.json` (tokens/sec, p50 latency,
+dispatches and syncs per token) which CI uploads as an artifact so the
+perf trajectory is tracked across PRs.
+
     PYTHONPATH=src python benchmarks/bench_serving.py            # full
     PYTHONPATH=src python benchmarks/bench_serving.py --smoke    # CI gate
     PYTHONPATH=src python benchmarks/bench_serving.py --smoke --prefix-heavy
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke --horizon 16
 """
 from __future__ import annotations
 
@@ -140,6 +150,80 @@ def _capacity_probe(model, params, vocab, *, mem_tokens, max_len,
     return out
 
 
+def _horizon_probe(base_cfg, *, horizon, n_req=4, sp=6, max_new=33,
+                   n_slots=4, block_size=4, seed=0):
+    """Decode-heavy probe for horizon-fused decode: same greedy stream
+    through the paged runtime with fusion on (`horizon`) and off (1).
+
+    This measures exactly what the fusion attacks — per-token scheduler
+    overhead (jit dispatch, host sync, table rebuild/upload) — so it uses
+    a deliberately small 1-layer model where that overhead, not model
+    FLOPs, is the bottleneck (the production regime once device compute
+    is async), and a *warm* runtime: wave 1 pays every compile (incl. the
+    pool's per-instance jitted helpers), wave 2 is timed. max_new is
+    chosen so every fused dispatch is the same full-width scan (one
+    compile). Reports per-wave tokens/sec, request p50 latency, and
+    dispatch/sync per-token rates; fused vs unfused outputs must stay
+    bitwise equal."""
+    import dataclasses as _dc
+    import time as _time
+
+    import jax
+
+    from repro.models import build_model
+    from repro.serving import ContinuousBatchingRuntime
+
+    cfg = _dc.replace(base_cfg, dtype="float32", n_layers=1, d_model=128,
+                      n_heads=2, n_kv_heads=2, d_ff=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    waves = [[rng.integers(0, cfg.vocab_size, (sp,)).astype(np.int32)
+              for _ in range(n_req)] for _ in range(2)]
+
+    def replay(h):
+        rt = ContinuousBatchingRuntime(
+            model, params, n_slots=n_slots, max_len=sp + max_new + 1,
+            max_new=max_new, temperature=0.0, seed=0, pool="paged",
+            block_size=block_size, horizon=h, prefix_cache=False)
+        for p in waves[0]:
+            rt.submit(p, budget=1)
+        rt.drain()                          # warm: every compile lands here
+        base = (rt.metrics.host_syncs, rt.metrics.device_dispatches,
+                rt.metrics.decode_tokens)
+        ids = [rt.submit(p, budget=1) for p in waves[1]]
+        t0 = _time.perf_counter()
+        rt.drain()
+        wall = _time.perf_counter() - t0
+        rows = [list(rt.result(i).response) for i in ids]
+        toks = rt.metrics.decode_tokens - base[2]
+        lat = [rt.requests[i].latency for i in ids]
+        return rows, dict(
+            tokens_per_sec=toks / wall, wall_s=wall, decode_tokens=toks,
+            latency_p50_s=float(np.percentile(lat, 50)),
+            syncs_per_token=(rt.metrics.host_syncs - base[0]) / toks,
+            dispatches_per_token=(rt.metrics.device_dispatches - base[1])
+            / toks,
+            horizon_ticks=rt.metrics.horizon_ticks)
+
+    replay(horizon)                         # jit warm across runtimes too
+    replay(1)
+    rows_h, fused = replay(horizon)
+    rows_1, unfused = replay(1)
+    # the width fused dispatches actually run at: the runtime caps H at
+    # min remaining (max_new - 1 after the admission token) quantized to
+    # a power of two — the smoke gate must assert against this, not the
+    # raw CLI value (a legal --horizon 64 could never hit 1/64)
+    eff = 1 << (max(1, min(horizon, max_new - 1)).bit_length() - 1)
+    return dict(horizon=horizon, effective_horizon=eff,
+                fused=fused, unfused=unfused,
+                speedup=fused["tokens_per_sec"]
+                / max(unfused["tokens_per_sec"], 1e-9),
+                sync_reduction=unfused["syncs_per_token"]
+                / max(fused["syncs_per_token"], 1e-9),
+                bitwise_equal=(rows_h == rows_1))
+
+
 def _prefix_heavy_probe(model, params, vocab, *, n_req, pre_len, tail_len,
                         max_new, n_slots, block_size, seed=0):
     """Replay one greedy prefix-heavy stream (shared preamble, distinct
@@ -181,7 +265,8 @@ def _prefix_heavy_probe(model, params, vocab, *, n_req, pre_len, tail_len,
 
 def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
         n_slots: int = 8, mean_gap: float = 0.05, seed: int = 0,
-        smoke: bool = False, prefix_only: bool = False) -> None:
+        smoke: bool = False, prefix_only: bool = False,
+        horizon: int = 8) -> None:
     import jax
 
     from repro.configs import get_config
@@ -254,6 +339,9 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
         pre_len=8, tail_len=4, max_new=4, n_slots=4, block_size=4,
         seed=seed)
 
+    hz = _horizon_probe(get_config("qwen2-0.5b").reduced(), horizon=horizon,
+                        seed=seed)
+
     for name, r in (("batch_engine", batch), ("paged_runtime", paged),
                     ("slot_runtime", slots)):
         emit(f"serving/{name}/wall", r["wall_s"] * 1e6,
@@ -272,20 +360,57 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
          f"{cap['paged']['peak_children']} children")
     emit("serving/prefix_heavy/hit_tokens", float(pf["hit_tokens"]),
          f"{pf['reduction']*100:.0f}% prefill reduction")
+    emit("serving/horizon/speedup", float(hz["speedup"]),
+         f"{hz['speedup']:.2f}x tokens/sec at H={horizon}")
+    emit("serving/horizon/syncs_per_token",
+         float(hz["fused"]["syncs_per_token"]),
+         f"vs {hz['unfused']['syncs_per_token']:.2f} unfused")
     save_result("bench_serving", dict(
         batch=batch, paged=paged, slots=slots, capacity=cap,
-        prefix_heavy=pf,
+        prefix_heavy=pf, horizon=hz,
         n_requests=n_requests, width=width, max_new=max_new,
         n_slots=n_slots, mean_gap=mean_gap,
         budgets_mean=float(np.mean(budgets)), speedup_vs_batch=speedup,
         paged_vs_slots=parity, smoke=smoke))
+    # the machine-readable perf trajectory CI uploads across PRs
+    save_result("BENCH_serving", dict(
+        horizon=horizon,
+        effective_horizon=hz["effective_horizon"],
+        fused_tokens_per_sec=hz["fused"]["tokens_per_sec"],
+        unfused_tokens_per_sec=hz["unfused"]["tokens_per_sec"],
+        horizon_speedup=hz["speedup"],
+        fused_latency_p50_s=hz["fused"]["latency_p50_s"],
+        unfused_latency_p50_s=hz["unfused"]["latency_p50_s"],
+        fused_syncs_per_token=hz["fused"]["syncs_per_token"],
+        unfused_syncs_per_token=hz["unfused"]["syncs_per_token"],
+        fused_dispatches_per_token=hz["fused"]["dispatches_per_token"],
+        unfused_dispatches_per_token=hz["unfused"]["dispatches_per_token"],
+        bitwise_equal=hz["bitwise_equal"],
+        stream_tokens_per_sec=paged["tokens_per_sec"],
+        stream_latency_p50_s=paged["latency_p50_s"],
+        speedup_vs_batch=speedup, smoke=smoke))
     print(f"# paged vs batch: {speedup:.2f}x tokens/sec; "
           f"paged vs slots: {parity:.2f}x; capacity at equal memory: "
           f"paged {cap['paged']['peak_children']} vs slot "
           f"{cap['slots']['peak_children']} concurrent children; "
           f"prefix-heavy: {pf['reduction']*100:.0f}% fewer prefill tokens")
+    print(f"# horizon H={horizon}: {hz['speedup']:.2f}x tokens/sec on the "
+          f"decode-heavy probe, syncs/token "
+          f"{hz['fused']['syncs_per_token']:.3f} vs "
+          f"{hz['unfused']['syncs_per_token']:.3f} "
+          f"({hz['sync_reduction']:.1f}x fewer), "
+          f"bitwise_equal={hz['bitwise_equal']}")
 
     if smoke:
+        # horizon-fusion acceptance gate: saved dispatches must be real
+        # wall-clock at identical tokens, and syncs amortize to <= 1/H
+        # (H = the width fused dispatches actually ran at; --horizon 1
+        # disables fusion, so there is no speedup to gate)
+        assert hz["bitwise_equal"], "horizon fusion perturbed greedy tokens"
+        if hz["effective_horizon"] > 1:
+            assert hz["speedup"] >= 1.5, hz
+            assert (hz["fused"]["syncs_per_token"]
+                    <= 1.0 / hz["effective_horizon"]), hz
         # CI regression gate for the throughput path (fixed seeds, tiny
         # model): correctness is pytest's job, this guards the *runtime*
         # plumbing — all three drivers drain, the paged pool strictly
@@ -309,5 +434,9 @@ if __name__ == "__main__":
     ap.add_argument("--prefix-heavy", action="store_true",
                     help="run only the prefix-heavy radix-cache probe "
                          "(pairs with REPRO_DECODE_KERNEL=pallas in CI)")
+    ap.add_argument("--horizon", type=int, default=8,
+                    help="horizon-fused decode width for the decode-heavy "
+                         "probe (1 disables fusion)")
     args = ap.parse_args()
-    run(smoke=args.smoke, prefix_only=args.prefix_heavy)
+    run(smoke=args.smoke, prefix_only=args.prefix_heavy,
+        horizon=args.horizon)

@@ -103,6 +103,16 @@ class Model:
         return self.lm.decode_chunk(params["lm"], tokens, cache, pos,
                                     valid, block_tables=block_tables)
 
+    def decode_horizon(self, params, token, cache, pos, aux, H, transition,
+                       block_tables=None):
+        """H decode steps fused into one lax.scan; see
+        TransformerLM.decode_horizon. `transition` owns sampling/masking
+        (a serving-policy concern), the model owns threading its cache and
+        positions through the scan."""
+        return self.lm.decode_horizon(params["lm"], token, cache, pos, aux,
+                                      H, transition,
+                                      block_tables=block_tables)
+
     @property
     def supports_chunked_prefill(self) -> bool:
         """Chunked prefill batches C tick-steps into one program, which is

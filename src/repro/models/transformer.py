@@ -465,6 +465,39 @@ class TransformerLM:
         logits = lshard(logits, "batch", None, "vocab")
         return logits, hidden, new_cache
 
+    def decode_horizon(self, params, token: jnp.ndarray, cache,
+                       pos: jnp.ndarray, aux, H: int, transition,
+                       block_tables: Optional[jnp.ndarray] = None):
+        """Fuse `H` decode steps into one `jax.lax.scan` program.
+
+        Each scan iteration runs exactly the per-token :meth:`decode_step`
+        (same traced computation, so greedy tokens are bitwise identical
+        to H separate tick dispatches) and then hands the fresh next-token
+        logits to the caller-supplied ``transition``:
+
+            transition(logits (b,V), token (b,), pos (b,), aux)
+                -> (next_token, next_pos, next_aux, emit)
+
+        The serving runtime's transition samples on device, freezes
+        finished sequences under a per-sequence mask (EOS / budget), and
+        emits the (token, alive) pair the host reads back once per
+        horizon. `aux` is an arbitrary pytree carried across steps (RNG
+        keys, remaining-token counters); `block_tables` is scan-invariant,
+        which is why the caller must pre-extend every live sequence's
+        table to cover the whole horizon before dispatch. Returns
+        ``(token, pos, cache, aux, emits)`` with ``emits`` stacked over
+        the H steps."""
+        def step(carry, _):
+            tok, p, cch, ax = carry
+            logits, _, cch = self.decode_step(params, tok[:, None], cch, p,
+                                              block_tables=block_tables)
+            tok, p, ax, emit = transition(logits[:, 0], tok, p, ax)
+            return (tok, p, cch, ax), emit
+
+        (token, pos, cache, aux), emits = jax.lax.scan(
+            step, (token, pos, cache, aux), None, length=H)
+        return token, pos, cache, aux, emits
+
     def decode_chunk(self, params, tokens: jnp.ndarray, cache,
                      pos: jnp.ndarray, valid: jnp.ndarray,
                      block_tables: jnp.ndarray

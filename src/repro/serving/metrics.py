@@ -33,8 +33,13 @@ class ServingMetrics:
     peak_blocks: int = 0            # paged pool: max blocks in use
     prefix_hit_tokens: int = 0      # prefill tokens skipped via radix hits
     prefix_hits: int = 0            # requests admitted with a nonzero match
+    prefix_reordered: int = 0       # admissions pulled forward for a hit
     radix_published_blocks: int = 0  # full blocks inserted into the tree
     radix_evicted_blocks: int = 0   # tree blocks evicted under pressure
+    device_dispatches: int = 0      # jitted program launches (decode path)
+    host_syncs: int = 0             # blocking device->host transfers
+    horizon_ticks: int = 0          # fused multi-step scan dispatches
+    horizon_fused_steps: int = 0    # decode steps executed inside horizons
     latencies: List[float] = field(default_factory=list)
     start_t: Optional[float] = None
     end_t: Optional[float] = None
@@ -80,6 +85,28 @@ class ServingMetrics:
         self.prefix_hits += 1
         self.prefix_hit_tokens += int(n_tokens)
 
+    def record_horizon(self, n_live: int, width: int, n_emitted: int) -> None:
+        """One horizon-fused decode dispatch: `width` scan steps over
+        `n_live` slots emitted `n_emitted` real tokens (frozen slots'
+        masked steps are not tokens). Keeps `ticks`/occupancy comparable
+        with the per-token path: a horizon counts as `width` ticks."""
+        self._touch()
+        self.ticks += width
+        self.active_sum += int(n_emitted)
+        self.decode_tokens += int(n_emitted)
+        self.peak_children = max(self.peak_children, int(n_live))
+        self.horizon_ticks += 1
+        self.horizon_fused_steps += int(width)
+
+    def record_dispatch(self, n: int = 1) -> None:
+        self.device_dispatches += int(n)
+
+    def record_sync(self, n: int = 1) -> None:
+        self.host_syncs += int(n)
+
+    def record_reordered(self, n: int = 1) -> None:
+        self.prefix_reordered += int(n)
+
     def record_radix(self, published: int = 0, evicted: int = 0) -> None:
         self.radix_published_blocks += int(published)
         self.radix_evicted_blocks += int(evicted)
@@ -115,6 +142,17 @@ class ServingMetrics:
     def tokens_per_sec(self) -> float:
         return self.decode_tokens / self.wall if self.wall > 0 else 0.0
 
+    @property
+    def syncs_per_token(self) -> float:
+        """Blocking device->host transfers per generated token — the
+        scheduler-overhead number the horizon fusion attacks (~1.0 on the
+        per-token tick, ~1/H with horizon fusion)."""
+        return self.host_syncs / max(self.decode_tokens, 1)
+
+    @property
+    def dispatches_per_token(self) -> float:
+        return self.device_dispatches / max(self.decode_tokens, 1)
+
     def summary(self) -> Dict[str, float]:
         return {
             "prefill_tokens": self.prefill_tokens,
@@ -131,8 +169,15 @@ class ServingMetrics:
             "peak_blocks": self.peak_blocks,
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "prefix_hits": self.prefix_hits,
+            "prefix_reordered": self.prefix_reordered,
             "radix_published_blocks": self.radix_published_blocks,
             "radix_evicted_blocks": self.radix_evicted_blocks,
+            "device_dispatches": self.device_dispatches,
+            "host_syncs": self.host_syncs,
+            "syncs_per_token": self.syncs_per_token,
+            "dispatches_per_token": self.dispatches_per_token,
+            "horizon_ticks": self.horizon_ticks,
+            "horizon_fused_steps": self.horizon_fused_steps,
             "wall_s": self.wall,
             "tokens_per_sec": self.tokens_per_sec,
             "latency_p50_s": percentile(self.latencies, 50),

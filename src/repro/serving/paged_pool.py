@@ -207,6 +207,22 @@ class PagedKVPool:
         self.block_alloc_count += 1
         return blk
 
+    def preallocate(self, table: List[int], end_pos: int, *,
+                    from_reservation: bool = True) -> int:
+        """Extend `table` in place with freshly allocated blocks until it
+        covers every position below `end_pos`; returns how many blocks were
+        appended. Reservation-backed like per-token growth (the caller
+        pre-reserved this worst case at admission), so the horizon-fused
+        decode path can claim a whole horizon's worth of blocks up front —
+        the block table is then uploaded once per horizon instead of being
+        rebuilt and re-transferred every token. Claiming early cannot
+        deadlock anyone: the blocks come out of the owner's own standing
+        reservation, not the open market."""
+        need = self.blocks_for(end_pos) - len(table)
+        for _ in range(need):
+            table.append(self.alloc_block(from_reservation=from_reservation))
+        return max(0, need)
+
     def incref(self, blk: int) -> None:
         assert 0 < blk < self.n_blocks and self._ref[blk] > 0
         self._ref[blk] += 1

@@ -112,6 +112,21 @@ class RadixCache:
             children = node.children
         return out
 
+    def match_len(self, tokens: np.ndarray) -> int:
+        """Pure peek: length in *tokens* of the longest full-block prefix
+        present in the tree, with no incref and no LRU refresh. Used by
+        radix-aware admission ordering to rank queued prompts without
+        perturbing eviction order or block ownership."""
+        children = self.root
+        n = 0
+        for i in range(len(tokens) // self.block_size):
+            node = children.get(self._chunk(tokens, i))
+            if node is None:
+                break
+            n += 1
+            children = node.children
+        return n * self.block_size
+
     def unmatch(self, blocks: List[int]) -> None:
         """Return refs taken by :meth:`match` when the caller cannot use
         (all of) them — e.g. a fully-matched prompt must still recompute

@@ -59,9 +59,11 @@ class PrefillStash:
     """Device-resident prefill result. Slot mode: `cache` holds the group
     prefill (leaves (n_repeat, g, S, ...)) and `row` this request's row.
     Paged mode: the prompt lives in the request's blocks already, so
-    `cache` is None; `logits` is the tick's logits array with `row` the
-    slot the probe finished in, and `state` snapshots recurrent-state rows
-    for fan-out. Dropped once the last child has been admitted."""
+    `cache` is None and `logits` is this request's probe row alone — a
+    (V,) array (`row` stays 0), which is exactly what the batched fan-out
+    admission program stacks across same-tick children; `state` snapshots
+    recurrent-state rows for fan-out. Dropped once the last child has
+    been admitted."""
     cache: Any
     logits: Any
     row: int

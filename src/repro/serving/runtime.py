@@ -30,6 +30,18 @@ length, variable-budget requests stream through:
 * **Immediate slot reclamation.** A child that finishes frees its slot
   (and blocks) at the end of the tick; queued fan-out backfills it on the
   next tick, so saved budget becomes saved wall-clock.
+* **Horizon-fused decode, one host sync per horizon.** When no slot is
+  prefilling, the paged pool runs up to `horizon` decode steps inside a
+  single jitted `lax.scan` (`_paged_horizon_tick`): sampling, EOS
+  detection, and budget exhaustion stay on device (per-slot `remaining`
+  counters freeze finished slots mid-horizon), block tables are extended
+  for the whole horizon up front (`PagedKVPool.preallocate`) and
+  uploaded once, and the host reads back one (H, 2, n_slots)
+  token/alive buffer — 1 dispatch + 1 blocking sync where the per-token
+  tick paid H of each. Greedy outputs are bitwise identical to the
+  per-token tick (same traced step, same fold_in RNG streams);
+  recurrent-state stacks and ticks with prefill in flight fall back to
+  the per-token program.
 
 Sampling uses per-child RNG streams — ``fold_in(fold_in(seed, request_id),
 child_index)`` — so outputs are a function of (seed, request, child) only,
@@ -150,7 +162,9 @@ def _sample_first(logits, row, key, temperature, *, temperature_zero: bool):
     """Sample a fan-out child's first token from its request's stashed
     probe logits. Performs exactly the split/categorical sequence the
     slot-pool tick would, so per-child RNG streams are identical across
-    pool backends."""
+    pool backends. (The paged runtime admits through the vmapped
+    `_admit_children`, which is this program batched over children —
+    kept as the single-child reference the tests compare against.)"""
     lrow = jax.lax.dynamic_index_in_dim(logits, row, axis=0, keepdims=False)
     if temperature_zero:
         return jnp.argmax(lrow).astype(jnp.int32), key
@@ -160,16 +174,103 @@ def _sample_first(logits, row, key, temperature, *, temperature_zero: bool):
     return tok, split[0]
 
 
+@functools.partial(jax.jit, static_argnames=("temperature_zero",),
+                   donate_argnums=(5,))
+def _admit_children(lrows, base_key, rids, idxs, slots, keys, temperature,
+                    *, temperature_zero: bool):
+    """Batched fan-out admission: derive every child's RNG stream
+    (fold_in(fold_in(seed, request), child)), sample each first token
+    from its request's stashed probe logits, and install the advanced
+    keys into the pool rows — all children spawned this tick in ONE
+    program, where the per-child path paid one jit dispatch for the
+    fold_ins, one for the sample, and one `keys.at[slot].set` device op
+    per child. The caller pads every argument to the pool width with
+    out-of-range slot indices (scatter drops them), so exactly one
+    program compiles regardless of how many children a tick admits.
+    vmap of fold_in/split/categorical is element-wise (counter-based
+    threefry), so per-child streams are bitwise the per-child
+    program's."""
+    lg = jnp.stack(lrows)                                   # (m, V)
+    ck = jax.vmap(lambda r, j: jax.random.fold_in(
+        jax.random.fold_in(base_key, r), j))(rids, idxs)    # (m, 2)
+    if temperature_zero:
+        toks = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        nk = ck
+    else:
+        split = jax.vmap(jax.random.split)(ck)              # (m, 2, 2)
+        nk = split[:, 0]
+        toks = jax.vmap(jax.random.categorical)(
+            split[:, 1], lg.astype(jnp.float32) / temperature
+        ).astype(jnp.int32)
+    keys = keys.at[slots].set(nk)
+    return toks, keys
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("model", "H", "temperature_zero",
+                                    "eos_id"),
+                   donate_argnums=(2, 6))
+def _paged_horizon_tick(model: Model, params, cache, tables, tok, pos, keys,
+                        remaining, temperature, *, H: int,
+                        temperature_zero: bool, eos_id: Optional[int]):
+    """H decode steps fused into one compiled `lax.scan` program — the
+    horizon tick. Per scan step this is exactly `_paged_tick`'s
+    decode-then-sample sequence (greedy tokens are bitwise identical),
+    but sampling, EOS detection, and budget exhaustion all stay on
+    device: each slot carries a `remaining` counter, and a slot whose
+    counter hits zero (EOS sampled, or max_new reached) is frozen mid-
+    horizon — its token/pos stop advancing and its masked steps write
+    garbage K/V at its frozen position, which lands in the finished
+    child's private block and is never read. The host gets one
+    (H, 2, n_slots) [token; alive] buffer per horizon — a single
+    device->host sync where the per-token loop paid H.
+
+    Block tables are scan-invariant: the caller pre-extends every live
+    slot's table to cover the whole horizon (`PagedKVPool.preallocate`),
+    so tables upload once per horizon. Unwritten preallocated blocks sit
+    above each slot's current position and are masked by the `idx <= pos`
+    validity rule, contributing exact zeros — values are unchanged."""
+    def transition(lg, tok, pos, aux):
+        keys, remaining = aux
+        if temperature_zero:
+            sampled = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            new_keys = keys
+        else:
+            split = jax.vmap(jax.random.split)(keys)        # (N, 2, 2)
+            new_keys = split[:, 0]
+            sampled = jax.vmap(jax.random.categorical)(
+                split[:, 1], lg.astype(jnp.float32) / temperature
+            ).astype(jnp.int32)
+        alive = remaining > 0
+        new_rem = jnp.maximum(remaining - 1, 0)
+        if eos_id is not None:
+            new_rem = jnp.where(sampled == eos_id, 0, new_rem)
+        tok = jnp.where(alive, sampled, tok)
+        pos = jnp.where(alive, pos + 1, pos)
+        emit = jnp.stack([sampled, alive.astype(jnp.int32)])  # (2, N)
+        return tok, pos, (new_keys, new_rem), emit
+
+    tok, pos, cache, (keys, remaining), emits = model.decode_horizon(
+        params, tok, cache, pos, (keys, remaining), H, transition,
+        block_tables=tables)
+    return emits, cache, keys
+
+
 class ContinuousBatchingRuntime:
     """Pooled decode runtime; see module docstring.
 
     pool="paged" (default) stores KV in block-granular pages with COW
     prompt sharing, a cross-request radix prefix cache
-    (prefix_cache=True; stateless stacks only) and varlen multi-token
+    (prefix_cache=True; stateless stacks only), varlen multi-token
     chunked prefill (prefill_chunk, default block_size; recurrent-state
-    stacks use the per-token interleave); pool="slots" keeps the PR-1
-    full-row slot pool (used by the bitwise-equivalence tests and as the
-    fallback for sliding-window configs whose cache would wrap).
+    stacks use the per-token interleave), and horizon-fused decode
+    (horizon, default 8: that many decode steps per compiled dispatch
+    and per host sync, H=min(horizon, min remaining) per dispatch);
+    pool="slots" keeps the PR-1 full-row slot pool (used by the
+    bitwise-equivalence tests and as the fallback for sliding-window
+    configs whose cache would wrap). admission_lookahead bounds the
+    radix-aware admission scan that pulls the longest prefix-cache hit
+    to the front of the prefill queue.
 
     budget_fn(request, hidden) -> int resolves budgets at admission
     (streaming mode, e.g. ``AdaptivePolicy.allocate_streaming`` at a
@@ -194,7 +295,9 @@ class ContinuousBatchingRuntime:
                  prefill_slots: Optional[int] = None,
                  eos_id: Optional[int] = None,
                  prefix_cache: bool = True,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 horizon: int = 8,
+                 admission_lookahead: int = 4):
         assert pool in ("paged", "slots")
         if pool == "paged" and not supports_paging(model, max_len):
             pool = "slots"          # sliding-window wrap: paged is inexact
@@ -260,6 +363,20 @@ class ContinuousBatchingRuntime:
             self.radix: Optional[RadixCache] = (
                 RadixCache(self.pool)
                 if prefix_cache and not self.pool._has_state else None)
+            # horizon-fused decode: up to `horizon` decode steps per
+            # compiled dispatch (one host sync per horizon instead of
+            # one per token). Engages only when no slot is prefilling
+            # (the per-token interleave owns prefill for chunk-1 stacks)
+            # and the stack is stateless; recurrent-state pools stay on
+            # the per-token tick. horizon=1 disables fusion entirely.
+            self.horizon = max(1, int(horizon))
+            if self.pool._has_state:
+                self.horizon = 1
+            # radix-aware admission ordering: scan this many queued
+            # requests and admit the longest published-prefix hit first
+            # (1 = strict FIFO). Bounded, so a miss is bypassed at most
+            # while hits keep landing inside the lookahead window.
+            self.admission_lookahead = max(1, int(admission_lookahead))
         else:
             self.pool = SlotKVPool(model, n_slots, max_len)
             self.logits = jnp.zeros((n_slots, V), model.lm.dtype)
@@ -296,11 +413,17 @@ class ContinuousBatchingRuntime:
 
     def submit_batch(self, prompts: np.ndarray,
                      budgets: Optional[Sequence[int]] = None,
-                     queries: Optional[Sequence] = None) -> List[int]:
+                     queries: Optional[Sequence] = None,
+                     max_new: Optional[Sequence[int]] = None) -> List[int]:
+        """Batch submit. `max_new` is per-request, like `budgets` — it
+        used to be silently dropped (every request fell back to the
+        runtime default even though `submit` accepts it)."""
         n = len(prompts)
         return [self.submit(prompts[i],
                             budget=None if budgets is None else budgets[i],
-                            query=None if queries is None else queries[i])
+                            query=None if queries is None else queries[i],
+                            max_new=None if max_new is None
+                            else int(max_new[i]))
                 for i in range(n)]
 
     # --------------------------------------------------- stash accounting
@@ -483,63 +606,96 @@ class ContinuousBatchingRuntime:
     def _try_fanout_paged(self) -> int:
         """Admit pending children: share the request's full prompt blocks
         copy-on-write (incref), privately copy only the partial boundary
-        block, reserve the child's worst-case decode tail, and sample its
-        first token from the stashed probe logits."""
+        block, reserve the child's worst-case decode tail, and sample
+        first tokens from the stashed probe logits.
+
+        All children spawned in the same tick are admitted through ONE
+        vmapped program (`_admit_children`): host bookkeeping (slots,
+        tables, reservations) is collected first, then a single dispatch
+        derives every child's RNG stream, samples every first token, and
+        scatters the advanced keys — the per-child path paid ~3 device
+        ops per child. The outer loop re-runs collection when an
+        admission-time retirement (EOS / max_new=1) frees slots that more
+        pending children can take within the same tick."""
         admitted = 0
         self._fanout_blocked = False
         tz = self.temperature == 0.0
-        while self.fanout and self.pool.n_free_slots:
-            r = self.fanout[0]
-            owned = self._child_owned_blocks(r)
-            if r.reserved:
-                # first child: consume the standing reservation made at
-                # prefill admission (guaranteed progress, no competition)
-                assert r.reserved == owned
-            elif not self._can_reserve_or_evict(owned):
-                self._fanout_blocked = True   # hold new prefills back
+        B = self.pool.block_size
+        while True:
+            batch: List = []        # (request, child) admitted this round
+            copies = 0
+            while self.fanout and self.pool.n_free_slots:
+                r = self.fanout[0]
+                owned = self._child_owned_blocks(r)
+                if r.reserved:
+                    # first child: consume the standing reservation made
+                    # at prefill admission (guaranteed progress)
+                    assert r.reserved == owned
+                elif not self._can_reserve_or_evict(owned):
+                    self._fanout_blocked = True   # hold new prefills back
+                    break
+                c = r.pending.pop(0)
+                slot = self.pool.alloc_slot()
+                if r.reserved:
+                    r.reserved = 0                # transfer to the child
+                else:
+                    self.pool.reserve(owned)
+                c.reserved = owned
+                full = r.prompt_len // B
+                table = []
+                for t in range(full):           # shared, read-only forever
+                    self.pool.incref(r.table[t])
+                    table.append(r.table[t])
+                if r.prompt_len % B:            # COW the boundary block
+                    blk = self.pool.alloc_block()
+                    c.reserved -= 1
+                    self.pool.copy_block(r.table[full], blk)
+                    copies += 1
+                    table.append(blk)
+                c.table = table
+                self.pool.restore_slot_state(r.stash.state, slot)
+                c.slot = slot
+                self.slots[slot] = c
+                self._pos[slot] = r.prompt_len  # first decode position
+                batch.append((r, c, r.stash.logits))
+                if not r.pending:
+                    self.fanout.popleft()
+                    self._release_prompt_table(r)  # children hold refs
+                    self._drop_stash(r)
+            if not batch:
                 break
-            c = r.pending.pop(0)
-            slot = self.pool.alloc_slot()
-            if r.reserved:
-                r.reserved = 0                # transfer to the child
-            else:
-                self.pool.reserve(owned)
-            c.reserved = owned
-            B = self.pool.block_size
-            full = r.prompt_len // B
-            table = []
-            for t in range(full):               # shared, read-only forever
-                self.pool.incref(r.table[t])
-                table.append(r.table[t])
-            if r.prompt_len % B:                # COW the boundary block
-                blk = self.pool.alloc_block()
-                c.reserved -= 1
-                self.pool.copy_block(r.table[full], blk)
-                table.append(blk)
-            c.table = table
-            self.pool.restore_slot_state(r.stash.state, slot)
-            ck = jax.random.fold_in(
-                jax.random.fold_in(self._base_key, r.id), c.index)
-            tok, nk = _sample_first(r.stash.logits, r.stash.row, ck,
-                                    self.temperature, temperature_zero=tz)
-            self.keys = self.keys.at[slot].set(nk)
-            tok_i = int(tok)
-            c.tokens.append(tok_i)
-            self.metrics.record_first_token()
-            if self.eos_id is not None and tok_i == self.eos_id:
-                c.eos = True
-                self.metrics.record_eos(r.max_new - len(c.tokens))
-            c.slot = slot
-            self.slots[slot] = c
-            self._tok[slot] = tok_i
-            self._pos[slot] = r.prompt_len      # first decode position
-            admitted += 1
-            if c.done(r.max_new):               # EOS/max_new=1 at admission
-                self._retire_paged_child(c, r)
-            if not r.pending:
-                self.fanout.popleft()
-                self._release_prompt_table(r)   # children hold their refs
-                self._drop_stash(r)
+            m = len(batch)
+            # pad to the pool width so every admission batch size runs
+            # the SAME compiled program; padded rows sample garbage that
+            # the host drops, and their out-of-range slot index makes
+            # the keys scatter a documented no-op (jax drops OOB scatter
+            # updates by default)
+            N = self.n_slots
+            pad = N - m
+            toks, self.keys = _admit_children(
+                tuple(st for _, _, st in batch) + (batch[0][2],) * pad,
+                self._base_key,
+                jnp.asarray([r.id for r, _, _ in batch] + [0] * pad,
+                            jnp.int32),
+                jnp.asarray([c.index for _, c, _ in batch] + [0] * pad,
+                            jnp.int32),
+                jnp.asarray([c.slot for _, c, _ in batch] + [N] * pad,
+                            jnp.int32),
+                self.keys, self.temperature, temperature_zero=tz)
+            self.metrics.record_dispatch(1 + copies)
+            toks_np = np.asarray(toks)          # one sync for the batch
+            self.metrics.record_sync()
+            self.metrics.record_first_token(m)
+            for (r, c, _), tok_i in zip(batch, toks_np):
+                tok_i = int(tok_i)
+                c.tokens.append(tok_i)
+                if self.eos_id is not None and tok_i == self.eos_id:
+                    c.eos = True
+                    self.metrics.record_eos(r.max_new - len(c.tokens))
+                self._tok[c.slot] = tok_i
+                if c.done(r.max_new):           # EOS/max_new=1 at admission
+                    self._retire_paged_child(c, r)
+            admitted += m
         return admitted
 
     def _admit_prefill_paged(self) -> int:
@@ -564,6 +720,7 @@ class ContinuousBatchingRuntime:
                and len(self._pref) < self.prefill_slots
                and self.pool.n_free_slots > 0
                and self._window_used() < self.prefill_window):
+            self._reorder_queue_by_prefix()
             r = self.queue[0]
             sp = r.prompt_len
             matched: List[int] = []
@@ -603,6 +760,36 @@ class ContinuousBatchingRuntime:
             admitted += 1
         return admitted
 
+    def _reorder_queue_by_prefix(self) -> None:
+        """Radix-aware admission ordering: peek at the first
+        `admission_lookahead` queued requests and pull the longest
+        published-prefix hit to the front. A hit's prefill both starts
+        later-arriving work sooner (skipped tokens) and keeps its shared
+        blocks hot, so admitting it before a cold miss strictly reduces
+        total prefill compute without starving the miss: the lookahead is
+        bounded, FIFO order breaks ties (including the all-miss case, a
+        no-op), and `match_len` is a pure peek — no refcounts taken, no
+        LRU clocks touched, so the scan itself cannot perturb eviction."""
+        L = self.admission_lookahead
+        if self.radix is None or L <= 1 or len(self.queue) <= 1:
+            return
+        B = self.pool.block_size
+
+        def eff_hit(r: Request) -> int:
+            # mirror admission's trim: the final prompt token is always
+            # recomputed, so a full match drops back below sp - 1
+            m = self.radix.match_len(r.prompt)
+            return min(m, ((r.prompt_len - 1) // B) * B)
+
+        cand = list(self.queue)[:L]
+        hits = [eff_hit(r) for r in cand]
+        j = max(range(len(cand)), key=lambda i: (hits[i], -i))
+        if j > 0 and hits[j] > hits[0]:
+            r = cand[j]
+            del self.queue[j]
+            self.queue.appendleft(r)
+            self.metrics.record_reordered()
+
     # --------------------------------------------------------------- step
     def step(self) -> bool:
         """One scheduler tick: admit work, run one jitted decode step over
@@ -629,8 +816,10 @@ class ContinuousBatchingRuntime:
             self.model, self.params, self.pool.cache, self.logits, self.pos,
             self.keys, jnp.asarray(active), self.temperature,
             temperature_zero=(self.temperature == 0.0))
+        self.metrics.record_dispatch()
         self.metrics.record_tick(len(active_idx))
         tok_np = np.asarray(tok)
+        self.metrics.record_sync()
         for s in active_idx:
             c = self.slots[s]
             t = int(tok_np[s])
@@ -681,6 +870,7 @@ class ContinuousBatchingRuntime:
             self.model, self.params, self.pool.cache, jnp.asarray(tables),
             jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(valid))
         self.pool.cache = cache
+        self.metrics.record_dispatch()
         self.metrics.record_prefill(int(valid.sum()))
         self.metrics.record_blocks(self.pool.blocks_in_use)
         hidden_np = None
@@ -695,14 +885,16 @@ class ContinuousBatchingRuntime:
             if end == r.prompt_len:                 # probe complete
                 if hidden_np is None:
                     hidden_np = np.asarray(hidden, np.float32)
+                    self.metrics.record_sync()
                 r.hidden = hidden_np[i, L - 1]
                 group = StashGroup()
-                # stash only this request's probe row (a (1, V) copy):
+                # stash only this request's probe row (a (V,) copy —
+                # exactly what batched fan-out admission stacks):
                 # stashing the whole (P*C, V) tick tensor would pin
                 # prefill_chunk times PR-2's footprint until fan-out —
                 # indefinitely for budget-deferred requests
                 self._make_stash(r, group, cache=None,
-                                 logits=logits[i, L - 1][None], row=0,
+                                 logits=logits[i, L - 1], row=0,
                                  start_pos=end - 1, state=None)
                 del self._pref[s]
                 self.pool.release_slot(s)
@@ -718,6 +910,80 @@ class ContinuousBatchingRuntime:
                 r.prefill_pos = end
         return True
 
+    def _horizon_width(self, live_dec: List[int]) -> int:
+        """H = min(horizon, min remaining over live slots), quantized
+        down to a power of two. min-remaining means no slot can outrun
+        its budget inside the scan (the only mid-horizon freeze left is
+        EOS) and a fused dispatch never computes steps every slot has
+        already finished. The quantization bounds distinct compiled scan
+        programs to log2(horizon)+1: on a staggered stream min-remaining
+        takes nearly every value in [1, horizon], and compiling a fresh
+        program per width mid-run cost more wall-clock than fusion saved
+        (measured on the Poisson bench: paged dropped to 0.7x the batch
+        engine before quantization, 2x+ after)."""
+        rem = min(self.requests[self.slots[s].request_id].max_new
+                  - len(self.slots[s].tokens) for s in live_dec)
+        H = max(1, min(self.horizon, rem))
+        return 1 << (H.bit_length() - 1)
+
+    def _horizon_tick(self, live_dec: List[int], H: int) -> bool:
+        """Dispatch one horizon-fused scan over the live decode slots and
+        retire/advance from its (H, 2, n_slots) token/alive buffer — one
+        jitted dispatch and ONE blocking device->host sync for up to
+        H x len(live_dec) generated tokens. Retirement, fan-out, and
+        admission run between horizons (the caller's next step())."""
+        remaining = np.zeros(self.n_slots, np.int32)
+        for s in live_dec:
+            c = self.slots[s]
+            r = self.requests[c.request_id]
+            remaining[s] = r.max_new - len(c.tokens)
+            # extend the slot's table to cover the whole horizon up front
+            # (reservation-backed), so tables are scan-invariant and
+            # upload once per horizon instead of once per token
+            c.reserved -= self.pool.preallocate(c.table,
+                                                int(self._pos[s]) + H)
+        tables = np.zeros((self.n_slots, self.pool.blocks_per_seq), np.int32)
+        for s in live_dec:
+            t = self.slots[s].table
+            tables[s, :len(t)] = t
+        emits, cache, keys = _paged_horizon_tick(
+            self.model, self.params, self.pool.cache, jnp.asarray(tables),
+            jnp.asarray(self._tok), jnp.asarray(self._pos), self.keys,
+            jnp.asarray(remaining), self.temperature, H=H,
+            temperature_zero=(self.temperature == 0.0), eos_id=self.eos_id)
+        self.pool.cache = cache
+        self.keys = keys
+        self.metrics.record_dispatch()
+        # the dispatch above is asynchronous: host-side bookkeeping that
+        # does not depend on the sampled tokens overlaps device compute,
+        # and the buffer is forced in one transfer at the end
+        self.metrics.record_blocks(self.pool.blocks_in_use)
+        buf = np.asarray(emits)                 # (H, 2, N): [token; alive]
+        self.metrics.record_sync()
+        emitted = 0
+        for s in live_dec:
+            c = self.slots[s]
+            r = self.requests[c.request_id]
+            took = 0
+            for h in range(H):
+                if not buf[h, 1, s]:            # frozen: EOS'd earlier
+                    break
+                t = int(buf[h, 0, s])
+                c.tokens.append(t)
+                took += 1
+                if self.eos_id is not None and t == self.eos_id:
+                    c.eos = True
+                    self.metrics.record_eos(r.max_new - len(c.tokens))
+                    break
+            emitted += took
+            if c.done(r.max_new):
+                self._retire_paged_child(c, r)
+            else:                               # survivor: emitted all H
+                self._tok[s] = c.tokens[-1]
+                self._pos[s] = int(self._pos[s]) + took
+        self.metrics.record_horizon(len(live_dec), H, emitted)
+        return True
+
     def _step_paged(self) -> bool:
         progressed = bool(self._try_fanout_paged())
         progressed = bool(self._admit_prefill_paged()) or progressed
@@ -731,6 +997,16 @@ class ContinuousBatchingRuntime:
         live_pref = [] if chunked else list(self._pref.keys())
         if not live_dec and not live_pref:
             return progressed
+        # horizon-fused decode: engages only when decode has the device
+        # to itself (no prefill interleave in flight — admission and
+        # chunked prefill run between horizons) and the stack is
+        # stateless. H=1 would recompile the scan for nothing, so the
+        # per-token program below keeps that case.
+        if (self.horizon > 1 and live_dec and not self._pref
+                and not self.pool._has_state):
+            H = self._horizon_width(live_dec)
+            if H > 1:
+                return self._horizon_tick(live_dec, H)
         B = self.pool.block_size
         # allocate blocks on demand before the tick's writes cross into
         # them (reservation-backed: can_reserve was checked at admission)
@@ -755,13 +1031,17 @@ class ContinuousBatchingRuntime:
             jnp.asarray(self._tok), jnp.asarray(self._pos), self.keys,
             self.temperature, temperature_zero=(self.temperature == 0.0))
         self.pool.cache = cache
+        self.metrics.record_dispatch()
         self.metrics.record_tick(len(live_dec) + len(live_pref),
                                  n_sampled=len(live_dec))
         self.metrics.record_blocks(self.pool.blocks_in_use)
         if live_pref:
             self.metrics.record_prefill(len(live_pref))
         sampled_np = np.asarray(sampled)
+        self.metrics.record_sync()
         hidden_np = (np.asarray(hidden, np.float32) if live_pref else None)
+        if live_pref:
+            self.metrics.record_sync()
         for s in live_pref:
             r = self._pref[s]
             t = int(self._pos[s])
@@ -773,8 +1053,8 @@ class ContinuousBatchingRuntime:
                         self.metrics.record_radix(published=created)
                 r.hidden = hidden_np[s]
                 group = StashGroup()
-                self._make_stash(r, group, cache=None, logits=logits,
-                                 row=s, start_pos=t,
+                self._make_stash(r, group, cache=None, logits=logits[s],
+                                 row=0, start_pos=t,
                                  state=self.pool.snapshot_slot_state(s))
                 del self._pref[s]
                 self.pool.release_slot(s)

@@ -1,0 +1,284 @@
+"""Horizon-fused decode: multi-tick lax.scan with on-device EOS/budget
+masking and one host sync per horizon.
+
+The hard contract: greedy decode through `_paged_horizon_tick` is
+token-bitwise identical to the per-token tick for every horizon width —
+including mid-horizon EOS freezes, children with different max_new, and
+the prefix-cache hit path — while host syncs per generated token drop
+from ~1 to ~1/H. Plus the PR's satellites: `PagedKVPool.preallocate`
+ledger discipline under churn, batched same-tick fan-out admission,
+radix-aware admission ordering, and the `submit_batch` max_new fix.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (ContinuousBatchingRuntime, PagedKVPool,
+                           RequestState, ServingEngine)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32", n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _clean(rt: ContinuousBatchingRuntime):
+    pool = rt.pool
+    rt.assert_ledger_balanced()
+    held = rt.radix.held_blocks if rt.radix is not None else 0
+    assert pool.blocks_in_use == held
+    assert pool.n_free_slots == pool.n_slots
+    assert pool._reserved == 0
+
+
+def _run(model, params, prompts, budgets, *, horizon, max_new=6,
+         temperature=0.0, eos_id=None, n_slots=4, max_len=16,
+         per_max_new=None, **kw):
+    rt = ContinuousBatchingRuntime(
+        model, params, n_slots=n_slots, max_len=max_len, max_new=max_new,
+        temperature=temperature, seed=0, pool="paged", block_size=4,
+        eos_id=eos_id, horizon=horizon, **kw)
+    ids = [rt.submit(p, budget=b,
+                     max_new=None if per_max_new is None else per_max_new[i])
+           for i, (p, b) in enumerate(zip(prompts, budgets))]
+    rt.drain()
+    rows = [[list(c.tokens) for c in rt.result(i).children] for i in ids]
+    _clean(rt)
+    return rt, rows
+
+
+def test_horizon_width_invariance(tiny):
+    """H in {1, 3, 8}: bitwise-equal greedy outputs on a mixed-length,
+    mixed-budget workload, and equal to the batch engine. H=1 is the
+    per-token tick (fusion disabled), so this pins the fused scan to the
+    unfused reference exactly."""
+    cfg, model, params = tiny
+    engine = ServingEngine(model, params, max_new=6, temperature=0.0)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (5, 9, 7)]
+    budgets = [2, 1, 3]
+    outs, syncs = {}, {}
+    for H in (1, 3, 8):
+        rt, outs[H] = _run(model, params, prompts, budgets, horizon=H)
+        syncs[H] = rt.metrics.host_syncs
+        assert (rt.metrics.horizon_ticks > 0) == (H > 1)
+    assert outs[1] == outs[3] == outs[8]
+    assert syncs[8] <= syncs[3] < syncs[1]     # fewer dispatch round-trips
+    for i, p in enumerate(prompts):
+        want = engine.generate(p[None], n_samples=1, seed=0,
+                               temperature=0.0).tokens[0]
+        for row in outs[8][i]:
+            np.testing.assert_array_equal(row, want)
+
+
+def test_horizon_mid_eos_freezes_slot(tiny):
+    """A child that samples EOS mid-horizon must stop emitting inside the
+    scan (frozen by its on-device remaining counter): outputs, EOS
+    metering, and decode-token savings all match the per-token tick."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(14)
+    # greedy on the untrained tiny model fixates on one token, so mid-
+    # stream EOS needs a hot (T=50) sampled stream: find a token whose FIRST
+    # occurrence is at index >= 1 — EOS then fires inside a horizon, not
+    # at admission (the scan's remaining counter must freeze the slot)
+    eos = prompt = None
+    for _ in range(20):
+        cand = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+        _, rows = _run(model, params, [cand], [1], horizon=1,
+                       temperature=50.0)
+        full = rows[0][0]
+        fresh = [t for i, t in enumerate(full) if t not in full[:i] and i >= 1]
+        if fresh:
+            prompt, eos = cand, fresh[0]
+            break
+    assert eos is not None, "no usable EOS token found"
+    r1, a = _run(model, params, [prompt], [2], horizon=1, eos_id=eos,
+                 temperature=50.0)
+    r8, b = _run(model, params, [prompt], [2], horizon=8, eos_id=eos,
+                 temperature=50.0)
+    assert a == b
+    assert any(row[-1] == eos and len(row) < 6 for row in a[0])  # truncated
+    assert r8.metrics.eos_terminated >= 1
+    for m in ("eos_terminated", "eos_saved_tokens", "decode_tokens"):
+        assert getattr(r1.metrics, m) == getattr(r8.metrics, m)
+    assert r8.metrics.decode_tokens < 2 * 6            # savings are real
+
+
+def test_horizon_children_with_different_max_new(tiny):
+    """H = min(horizon, min remaining): staggered budgets retire at
+    different horizons and short children never overshoot max_new."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (6, 5)]
+    outs = {}
+    for H in (1, 3, 8):
+        rt, outs[H] = _run(model, params, prompts, [2, 2], horizon=H,
+                           max_new=7, per_max_new=[2, 7])
+    assert outs[1] == outs[3] == outs[8]
+    assert [len(r) for r in outs[8][0]] == [2, 2]
+    assert [len(r) for r in outs[8][1]] == [7, 7]
+
+
+def test_horizon_sampling_parity(tiny):
+    """Per-child fold_in RNG streams survive fusion: temperature>0
+    sampling through the scan matches the per-token tick token-for-token
+    (same split/categorical sequence per executed step)."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)]
+    _, a = _run(model, params, prompts, [3], horizon=1, temperature=1.0)
+    _, b = _run(model, params, prompts, [3], horizon=8, temperature=1.0)
+    assert a == b
+
+
+def test_horizon_one_sync_per_horizon(tiny):
+    """Decode-heavy single stream: the per-token tick pays one blocking
+    sync per generated token; the fused path pays one per horizon —
+    decode syncs drop to <= 1/H per token and total syncs collapse to a
+    handful (prefill chunks + one admission + the horizons)."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, (5,)).astype(np.int32)]
+    H, mn = 8, 33
+    r1, a = _run(model, params, prompts, [1], horizon=1, max_new=mn,
+                 max_len=40)
+    rh, b = _run(model, params, prompts, [1], horizon=H, max_new=mn,
+                 max_len=40)
+    assert a == b
+    # per-token path: every one of the mn-1 decode ticks blocks once
+    assert r1.metrics.host_syncs >= mn - 1
+    assert r1.metrics.syncs_per_token > 0.9            # ~1 per token
+    # fused path: ceil(32/8) = 4 horizon syncs on the decode path ...
+    assert rh.metrics.horizon_ticks == -(-(mn - 1) // H)
+    assert rh.metrics.horizon_ticks / rh.metrics.decode_tokens <= 1.0 / H
+    # ... plus an O(1) prefill/admission constant overall
+    assert rh.metrics.host_syncs <= rh.metrics.horizon_ticks + 4
+    assert rh.metrics.host_syncs < r1.metrics.host_syncs / 4
+    assert rh.metrics.device_dispatches < r1.metrics.device_dispatches / 3
+    assert rh.metrics.horizon_fused_steps >= mn - 1
+
+
+def test_preallocate_is_reservation_backed(tiny):
+    """PagedKVPool.preallocate extends a table to cover end_pos, draws
+    from the reservation ledger, and conserves blocks."""
+    cfg, model, params = tiny
+    pool = PagedKVPool(model, 2, 16, block_size=4, n_blocks=10)
+    pool.reserve(4)
+    table = [pool.alloc_block(from_reservation=False)]  # covers pos 0..3
+    assert pool.preallocate(table, 4) == 0             # already covered
+    got = pool.preallocate(table, 13)                  # pos 0..12 -> 4 blks
+    assert got == 3 and len(table) == 4
+    assert pool._reserved == 1
+    pool.check_conservation()
+    assert pool.preallocate(table, 16) == 0            # 16 pos = 4 blocks
+    pool.release_table(table)
+    pool.unreserve(1)
+    pool.check_conservation()
+    assert pool.blocks_in_use == 0
+
+
+def test_horizon_churn_keeps_ledger_balanced(tiny):
+    """Sustained traffic through a small pool with horizon preallocation:
+    blocks recycle, every request matches its own batch-engine run, and
+    the drain-time ledger audit (refcounts + reservations) balances."""
+    cfg, model, params = tiny
+    engine = ServingEngine(model, params, max_new=4, temperature=0.0)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (5, 6, 7, 5, 6, 7, 5, 6)]
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=12,
+                                   max_new=4, temperature=0.0, seed=0,
+                                   pool="paged", block_size=4, horizon=4,
+                                   budget_fn=lambda r, h: 2)
+    ids = [rt.submit(p) for p in prompts]
+    rt.drain()
+    for p, rid in zip(prompts, ids):
+        want = engine.generate(p[None], n_samples=1, seed=0,
+                               temperature=0.0).tokens[0]
+        np.testing.assert_array_equal(rt.result(rid).response, want)
+    assert rt.pool.block_alloc_count > rt.pool.n_blocks - 1   # reuse
+    assert rt.metrics.horizon_ticks > 0
+    _clean(rt)
+
+
+def test_submit_batch_forwards_max_new(tiny):
+    """Regression: submit_batch silently dropped per-request max_new."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(3)
+    prompts = np.stack([rng.integers(0, cfg.vocab_size, (5,))
+                        for _ in range(2)]).astype(np.int32)
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=14,
+                                   max_new=8, temperature=0.0, seed=0)
+    ids = rt.submit_batch(prompts, budgets=[1, 1], max_new=[2, 5])
+    rt.drain()
+    assert len(rt.result(ids[0]).response) == 2
+    assert len(rt.result(ids[1]).response) == 5
+    _clean(rt)
+
+
+def test_radix_aware_admission_ordering(tiny):
+    """With a published preamble in the radix tree and prefill_slots=1,
+    a queued prefix-cache hit is admitted before an earlier-queued miss
+    (bounded lookahead), metered as prefix_reordered — and outputs stay
+    exactly the no-reorder run's."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(4)
+    pre = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    warm = np.concatenate([pre, rng.integers(0, cfg.vocab_size, (2,))
+                           .astype(np.int32)])
+    hit = np.concatenate([pre, rng.integers(0, cfg.vocab_size, (3,))
+                          .astype(np.int32)])
+    miss = rng.integers(0, cfg.vocab_size, (9,)).astype(np.int32)
+
+    def run(lookahead):
+        rt = ContinuousBatchingRuntime(
+            model, params, n_slots=4, max_len=18, max_new=3,
+            temperature=0.0, seed=0, pool="paged", block_size=4,
+            prefill_slots=1, admission_lookahead=lookahead)
+        a = rt.submit(warm, budget=1)
+        rt.drain()                      # publishes the preamble's blocks
+        b = rt.submit(miss, budget=1)   # FIFO head: a cold miss
+        c = rt.submit(hit, budget=1)    # behind it: a 2-block hit
+        rt.drain()
+        _clean(rt)
+        return rt, [list(rt.result(i).response) for i in (a, b, c)]
+
+    rt_f, fifo = run(1)                 # strict FIFO reference
+    rt_r, reord = run(4)
+    assert fifo == reord                # ordering never changes tokens
+    assert rt_f.metrics.prefix_reordered == 0
+    assert rt_r.metrics.prefix_reordered >= 1
+    assert rt_r.metrics.prefix_hits >= 1
+    assert rt_r.metrics.prefix_hit_tokens >= 8
+
+
+def test_match_len_is_a_pure_peek(tiny):
+    """match_len must take no refs and refresh no LRU clocks — the
+    admission scan cannot perturb eviction order or the block ledger."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, (9,)).astype(np.int32)
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=16,
+                                   max_new=2, temperature=0.0, seed=0,
+                                   pool="paged", block_size=4)
+    rt.submit(prompt, budget=1)
+    rt.drain()
+    radix = rt.radix
+    assert radix.held_blocks > 0
+    refs = list(rt.pool._ref)
+    clocks = {id(n): n.last_used for n in radix.root.values()}
+    assert radix.match_len(prompt) == 8                # 2 full blocks
+    assert radix.match_len(prompt[:3]) == 0
+    assert list(rt.pool._ref) == refs                  # no refs taken
+    for n in radix.root.values():
+        assert n.last_used == clocks[id(n)]            # no LRU refresh

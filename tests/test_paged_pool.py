@@ -94,7 +94,8 @@ def test_chunked_prefill_parity_with_engine_prefill(tiny):
     np.testing.assert_allclose(r.hidden,
                                np.asarray(hidden_ref[0], np.float32),
                                rtol=2e-5, atol=2e-5)
-    got_logits = np.asarray(r.stash.logits)[r.stash.row]
+    # paged stash holds the probe's (V,) logits row directly
+    got_logits = np.asarray(r.stash.logits).reshape(-1)
     np.testing.assert_allclose(got_logits, np.asarray(logits_ref[0]),
                                rtol=2e-5, atol=2e-5)
     assert int(got_logits.argmax()) == int(np.asarray(logits_ref[0]).argmax())
