@@ -23,6 +23,14 @@ computed by >= 30% (metered via `prefix_hit_tokens`) at bitwise-identical
 outputs. `REPRO_DECODE_KERNEL=pallas` routes it through the paged chunk
 kernel (interpret mode on CPU) — that combination is the CI gate.
 
+Routing probe (`--routing` standalone, and part of the full/smoke run):
+the procedure API's weak/strong pair on ONE shared paged pool. Single
+procedures give the weak-only / strong-only reward endpoints (greedy:
+deterministic 1-sample pools), then `Route` serves the stream at a sweep
+of strong-fraction targets with an oracle gap predictor; the measured
+reward must dominate `core.routing.eval_routing`'s random-mask baseline
+at every fraction. Per-model metrics report the strong token share.
+
 Horizon probe (`--horizon`, default 8): the same decode-heavy greedy
 stream with horizon-fused decode on vs off. Fusion folds H decode steps
 into one `lax.scan` dispatch with a single host sync per horizon, so on
@@ -263,10 +271,98 @@ def _prefix_heavy_probe(model, params, vocab, *, n_req, pre_len, tail_len,
         evicted=int(hot["radix_evicted_blocks"]))
 
 
+def _routing_probe(model, params, vocab, *, n_req, sp_lo, sp_hi, max_new,
+                   n_slots, block_size, fracs=(0.0, 0.25, 0.5, 0.75, 1.0),
+                   seed=0):
+    """Weak/strong routing on the procedure API: one runtime, two
+    registry models sharing the paged pool. The weak-only and strong-only
+    endpoints come from `Single` runs (which double as the deterministic
+    greedy reward pools); a sweep over strong-fraction targets then
+    serves the same stream through `Route` with an oracle gap predictor
+    and compares the measured reward to `core.routing.eval_routing`'s
+    random-mask baseline at the same fraction — adaptive must dominate.
+    Also reports the per-model compute split (`ServingMetrics.per_model`)
+    so the strong fraction is visible in tokens, not just request
+    counts."""
+    import dataclasses as _dc
+
+    import jax
+
+    from repro.core.routing import eval_routing
+    from repro.models import build_model
+    from repro.serving import ContinuousBatchingRuntime, Route, Single
+
+    s_cfg = _dc.replace(model.cfg, n_layers=1)
+    s_model = build_model(s_cfg)
+    # scale params: at init scale every random tiny model greedily echoes
+    # its last prompt token (tied-embedding logit dominance), making the
+    # weak/strong reward gap identically zero
+    s_params = jax.tree.map(lambda x: x * 3.0,
+                            s_model.init(jax.random.PRNGKey(seed + 7)))
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, vocab, (L,)).astype(np.int32)
+               for L in rng.integers(sp_lo, sp_hi, size=n_req)]
+    max_len = sp_hi + max_new + 1
+
+    def reward(q, rows):
+        return [float(((int(np.sum(r)) % 97) + 3 * q) % 13) for r in rows]
+
+    def multi_rt():
+        rt = ContinuousBatchingRuntime(
+            model, params, n_slots=n_slots, max_len=max_len,
+            max_new=max_new, temperature=0.0, seed=0, pool="paged",
+            block_size=block_size, reward_fn=reward)
+        rt.register_model("strong", s_model, s_params)
+        return rt
+
+    def serve(proc_of):
+        rt = multi_rt()
+        ids = [rt.submit(p, query=i, procedure=proc_of(i))
+               for i, p in enumerate(prompts)]
+        rt.drain()
+        rews = np.asarray([rt.result(i).reward for i in ids])
+        routes = [rt.result(i).proc.get("route", "weak") for i in ids]
+        return rews, routes, rt.metrics
+
+    rew_w, _, _ = serve(lambda i: Single("default"))
+    rew_s, _, _ = serve(lambda i: Single("strong"))
+    gap = rew_s - rew_w
+    pred = {i: float(gap[i]) for i in range(n_req)}
+
+    rng2 = np.random.default_rng(seed + 1)
+    curve = {"frac": [], "adaptive": [], "random": [],
+             "strong_frac_real": [], "strong_token_share": []}
+    for f in fracs:
+        thr = Route.calibrate_threshold(gap, f)
+        rews, routes, metrics = serve(lambda i: Route(
+            weak="default", strong="strong", threshold=thr,
+            predictor=lambda r, h: pred[r.query]))
+        mask = np.asarray([r == "strong" for r in routes])
+        k = int(mask.sum())
+        rnd = []
+        for _ in range(32):
+            m = np.zeros(n_req, bool)
+            m[rng2.permutation(n_req)[:k]] = True
+            rnd.append(eval_routing(rew_w[:, None], rew_s[:, None], m))
+        pm = {mid: mm.summary() for mid, mm in metrics.per_model.items()}
+        tot = sum(m["total_tokens"] for m in pm.values())
+        share = pm.get("strong", {}).get("total_tokens", 0) / max(tot, 1)
+        curve["frac"].append(float(f))
+        curve["adaptive"].append(float(rews.mean()))
+        curve["random"].append(float(np.mean(rnd)))
+        curve["strong_frac_real"].append(k / n_req)
+        curve["strong_token_share"].append(float(share))
+    return dict(curve=curve,
+                weak_only=float(rew_w.mean()),
+                strong_only=float(rew_s.mean()),
+                gap_nonzero=bool(np.any(gap != 0)),
+                per_model_last=pm)
+
+
 def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
         n_slots: int = 8, mean_gap: float = 0.05, seed: int = 0,
         smoke: bool = False, prefix_only: bool = False,
-        horizon: int = 8) -> None:
+        routing_only: bool = False, horizon: int = 8) -> None:
     import jax
 
     from repro.configs import get_config
@@ -280,6 +376,33 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
                               dtype="float32", n_layers=2)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
+
+    if routing_only:
+        # the standalone routing gate: weak-only vs routed vs strong-only
+        # reward curves on a shared two-model pool (procedure API)
+        ro = _routing_probe(
+            model, params, cfg.vocab_size, n_req=8 if smoke else 16,
+            sp_lo=5, sp_hi=11, max_new=4 if smoke else max_new,
+            n_slots=4, block_size=4, seed=seed)
+        emit("serving/routing/adaptive_mid",
+             float(ro["curve"]["adaptive"][len(ro["curve"]["frac"]) // 2]),
+             f"weak {ro['weak_only']:.2f} strong {ro['strong_only']:.2f}")
+        save_result("bench_serving_routing", ro)
+        print(f"# routing: weak-only {ro['weak_only']:.3f}, strong-only "
+              f"{ro['strong_only']:.3f}; adaptive vs random by frac: "
+              + ", ".join(
+                  f"{f:.2f}:{a:.2f}/{r:.2f}" for f, a, r in
+                  zip(ro["curve"]["frac"], ro["curve"]["adaptive"],
+                      ro["curve"]["random"])))
+        if smoke:
+            assert ro["gap_nonzero"], "weak/strong reward gap is zero"
+            for a, r in zip(ro["curve"]["adaptive"], ro["curve"]["random"]):
+                assert a >= r - 1e-9, ro["curve"]
+            assert max(a - r for a, r in zip(ro["curve"]["adaptive"],
+                                             ro["curve"]["random"])) > 0, \
+                ro["curve"]
+            print("# routing smoke OK")
+        return
 
     if prefix_only:
         # the standalone prefix-heavy gate (CI runs this twice: XLA and
@@ -342,6 +465,11 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
     hz = _horizon_probe(get_config("qwen2-0.5b").reduced(), horizon=horizon,
                         seed=seed)
 
+    ro = _routing_probe(
+        model, params, cfg.vocab_size, n_req=8 if smoke else 16,
+        sp_lo=5, sp_hi=11, max_new=4 if smoke else max_new,
+        n_slots=4, block_size=4, seed=seed)
+
     for name, r in (("batch_engine", batch), ("paged_runtime", paged),
                     ("slot_runtime", slots)):
         emit(f"serving/{name}/wall", r["wall_s"] * 1e6,
@@ -365,9 +493,14 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
     emit("serving/horizon/syncs_per_token",
          float(hz["fused"]["syncs_per_token"]),
          f"vs {hz['unfused']['syncs_per_token']:.2f} unfused")
+    mid_i = len(ro["curve"]["frac"]) // 2
+    emit("serving/routing/adaptive_mid",
+         float(ro["curve"]["adaptive"][mid_i]),
+         f"random {ro['curve']['random'][mid_i]:.2f} at frac "
+         f"{ro['curve']['frac'][mid_i]:.2f}")
     save_result("bench_serving", dict(
         batch=batch, paged=paged, slots=slots, capacity=cap,
-        prefix_heavy=pf, horizon=hz,
+        prefix_heavy=pf, horizon=hz, routing=ro,
         n_requests=n_requests, width=width, max_new=max_new,
         n_slots=n_slots, mean_gap=mean_gap,
         budgets_mean=float(np.mean(budgets)), speedup_vs_batch=speedup,
@@ -388,7 +521,10 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
         bitwise_equal=hz["bitwise_equal"],
         stream_tokens_per_sec=paged["tokens_per_sec"],
         stream_latency_p50_s=paged["latency_p50_s"],
-        speedup_vs_batch=speedup, smoke=smoke))
+        speedup_vs_batch=speedup, smoke=smoke,
+        routing_curve=ro["curve"],
+        routing_weak_only=ro["weak_only"],
+        routing_strong_only=ro["strong_only"]))
     print(f"# paged vs batch: {speedup:.2f}x tokens/sec; "
           f"paged vs slots: {parity:.2f}x; capacity at equal memory: "
           f"paged {cap['paged']['peak_children']} vs slot "
@@ -400,6 +536,11 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
           f"{hz['unfused']['syncs_per_token']:.3f} "
           f"({hz['sync_reduction']:.1f}x fewer), "
           f"bitwise_equal={hz['bitwise_equal']}")
+    print(f"# routing: weak-only {ro['weak_only']:.3f}, strong-only "
+          f"{ro['strong_only']:.3f}; adaptive/random by frac: "
+          + ", ".join(f"{f:.2f}:{a:.2f}/{r:.2f}" for f, a, r in
+                      zip(ro["curve"]["frac"], ro["curve"]["adaptive"],
+                          ro["curve"]["random"])))
 
     if smoke:
         # horizon-fusion acceptance gate: saved dispatches must be real
@@ -423,6 +564,15 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
                 > cap["slots"]["peak_children"]), cap
         assert pf["bitwise_equal"], "prefix-cache hit path diverged"
         assert pf["reduction"] >= 0.30, pf
+        # routing acceptance: adaptive dominates the random baseline at
+        # every strong-fraction target (strictly somewhere), on a genuine
+        # weak/strong reward gap
+        assert ro["gap_nonzero"], "weak/strong reward gap is zero"
+        for a, r in zip(ro["curve"]["adaptive"], ro["curve"]["random"]):
+            assert a >= r - 1e-9, ro["curve"]
+        assert max(a - r for a, r in zip(ro["curve"]["adaptive"],
+                                         ro["curve"]["random"])) > 0, \
+            ro["curve"]
         print("# smoke OK")
 
 
@@ -434,9 +584,12 @@ if __name__ == "__main__":
     ap.add_argument("--prefix-heavy", action="store_true",
                     help="run only the prefix-heavy radix-cache probe "
                          "(pairs with REPRO_DECODE_KERNEL=pallas in CI)")
+    ap.add_argument("--routing", action="store_true",
+                    help="run only the weak/strong routing probe "
+                         "(two-model shared pool, procedure API)")
     ap.add_argument("--horizon", type=int, default=8,
                     help="horizon-fused decode width for the decode-heavy "
                          "probe (1 disables fusion)")
     args = ap.parse_args()
     run(smoke=args.smoke, prefix_only=args.prefix_heavy,
-        horizon=args.horizon)
+        routing_only=args.routing, horizon=args.horizon)

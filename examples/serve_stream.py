@@ -1,10 +1,22 @@
 """Streaming adaptive serving demo: requests of mixed prompt lengths flow
-through the continuous-batching runtime one at a time, each budgeted the
-moment its probe prefill lands (price-dual allocation — no batch barrier,
-no second prefill).
+through the continuous-batching runtime one at a time, each planned by a
+pluggable DecodeProcedure the moment its probe prefill lands (no batch
+barrier, no second prefill).
 
-Run:  PYTHONPATH=src python examples/serve_stream.py   (~1 min on CPU)
+    --procedure bestofk   price-dual budgets, best-of-k fan-out (default)
+    --procedure route     the model zoo's gemma-weak-tiny/gemma-strong-tiny
+                          routing pair sharing ONE paged pool: the probe
+                          prefill runs on the weak model, a preference
+                          statistic routes ~strong-frac of the stream to
+                          the strong model, and the metrics report the
+                          per-model compute split
+    --procedure single    one child per request (uniform b=1 floor)
+
+Run:  PYTHONPATH=src python examples/serve_stream.py [--procedure route]
+(~1 min on CPU; untrained weights — the demo shows the serving machinery,
+not model quality.)
 """
+import argparse
 import dataclasses
 
 import jax
@@ -14,19 +26,98 @@ from repro.configs import get_config
 from repro.core import AdaptivePolicy
 from repro.core.difficulty import init_mlp_probe
 from repro.models import build_model
-from repro.serving import ContinuousBatchingRuntime, ServingEngine
+from repro.serving import (ContinuousBatchingRuntime, Route, ServingEngine,
+                           Single)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--procedure", choices=("bestofk", "route", "single"),
+                default="bestofk")
+ap.add_argument("--strong-frac", type=float, default=0.4,
+                help="route: targeted strong-model fraction")
+args = ap.parse_args()
+
+rng = np.random.default_rng(0)
+
+if args.procedure == "route":
+    # two model-zoo configs, one shared paged pool
+    w_cfg = dataclasses.replace(get_config("gemma-weak-tiny"),
+                                dtype="float32")
+    s_cfg = dataclasses.replace(get_config("gemma-strong-tiny"),
+                                dtype="float32")
+    w_model, s_model = build_model(w_cfg), build_model(s_cfg)
+    w_params = w_model.init(jax.random.PRNGKey(0))
+    s_params = jax.tree.map(lambda x: x * 3.0,
+                            s_model.init(jax.random.PRNGKey(1)))
+    reward_fn = lambda q, rows: [float(len(set(r.tolist()))) for r in rows]
+    rt = ContinuousBatchingRuntime(
+        w_model, w_params, n_slots=6, max_len=32, max_new=8,
+        temperature=1.0, seed=0, reward_fn=reward_fn)
+    rt.register_model("strong", s_model, s_params)
+
+    # an (untrained) preference statistic: any request-measurable scalar
+    # works — here the probe hidden's mean activation stands in for the
+    # learned p(strong beats weak); calibrate its threshold on a few
+    # warm-up prompts so ~strong-frac of matching traffic routes strong
+    predictor = lambda r, h: float(np.tanh(np.mean(h)))
+    calib = [rng.integers(0, w_cfg.vocab_size, size=(L,))
+             for L in rng.integers(6, 20, size=8)]
+    probe_rt = ContinuousBatchingRuntime(w_model, w_params, n_slots=4,
+                                         max_len=32, max_new=1,
+                                         temperature=0.0, seed=0)
+    cids = [probe_rt.submit(p, procedure=Single(max_new=1)) for p in calib]
+    probe_rt.drain()
+    scores = [predictor(None, probe_rt.result(i).hidden) for i in cids]
+    thr = Route.calibrate_threshold(scores, args.strong_frac)
+    print(f"calibrated routing threshold = {thr:.4f} "
+          f"(strong_frac target {args.strong_frac})")
+    proc = Route(weak="default", strong="strong", predictor=predictor,
+                 threshold=thr)
+
+    ids = [rt.submit(rng.integers(0, w_cfg.vocab_size, size=(L,)), query=i,
+                     procedure=proc)
+           for i, L in enumerate(rng.integers(6, 20, size=12))]
+    rt.drain()
+    for rid in ids:
+        r = rt.result(rid)
+        print(f"req {rid}: prompt_len={r.prompt_len:2d} "
+              f"route={r.proc['route']:6s} pref={r.proc['pref']:+.3f} "
+              f"reward={r.reward:.1f} latency={r.latency*1e3:.0f}ms")
+    pm = {m: mm.summary() for m, mm in rt.metrics.per_model.items()}
+    for m, s in sorted(pm.items()):
+        print(f"model {m}: prefill={s['prefill_tokens']} "
+              f"decode={s['decode_tokens']} children={s['children']} "
+              f"dispatches={s['device_dispatches']}")
+    raise SystemExit(0)
 
 cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
                           dtype="float32", n_layers=2)
 model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))
+
+if args.procedure == "single":
+    rt = ContinuousBatchingRuntime(
+        model, params, n_slots=6, max_len=32, max_new=8, temperature=1.0,
+        seed=0,
+        reward_fn=lambda q, rows: [float(len(set(r.tolist())))
+                                   for r in rows])
+    ids = [rt.submit(rng.integers(0, cfg.vocab_size, size=(L,)), query=i,
+                     procedure=Single())
+           for i, L in enumerate(rng.integers(6, 20, size=12))]
+    rt.drain()
+    for rid in ids:
+        r = rt.result(rid)
+        print(f"req {rid}: prompt_len={r.prompt_len:2d} b=1 "
+              f"reward={r.reward:.1f} latency={r.latency*1e3:.0f}ms")
+    print("metrics:",
+          {k: round(v, 3) for k, v in rt.metrics.summary().items()})
+    raise SystemExit(0)
+
 engine = ServingEngine(model, params, max_new=8, temperature=1.0)
 
 # an (untrained) difficulty probe + a price calibrated offline
 policy = AdaptivePolicy(
     probe_params=init_mlp_probe(jax.random.PRNGKey(1), cfg.d_model, 1),
     kind="bce", b_max=6, b_min=1)
-rng = np.random.default_rng(0)
 calib = rng.integers(0, cfg.vocab_size, size=(16, 12)).astype(np.int32)
 price = policy.calibrate_price(engine.probe_features(calib), avg_budget=2.5)
 print(f"calibrated price λ* = {price:.4f}")

@@ -2,9 +2,14 @@
 
     f(x, b) = argmax_{y_1..y_b ~ p(.|x)} r(x, y)          (paper Eq. 1)
 
-`AdaptiveBestOfK` is the deployable procedure: probe -> allocator ->
-fan-out sampling -> reward-model rerank. Evaluation helpers implement the
-paper's bootstrap estimator of expected success / reward at a budget.
+`AdaptiveBestOfK` here is the *offline* loop over an opaque ``sample_fn``
+(one decoder call per query): probe -> allocator -> fan-out sampling ->
+reward-model rerank. Its serving-runtime counterpart is
+``repro.serving.procedure.BestOfK`` — the same rule as a pluggable
+DecodeProcedure on the continuous-batching runtime (shared probe
+prefill, COW fan-out, streaming price-dual budgets). Evaluation helpers
+implement the paper's bootstrap estimator of expected success / reward
+at a budget.
 """
 from __future__ import annotations
 

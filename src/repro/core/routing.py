@@ -5,6 +5,19 @@
 
 The learned Δ̂ models p(p^S ≻ p^W | x) (Eq. 8); online allocation routes the
 top-B fraction of queries by predicted preference.
+
+Two implementations exist:
+
+* :class:`AdaptiveRouter` here — the paper's *offline* evaluation loop
+  over opaque ``weak_fn``/``strong_fn`` callables (one decoder call per
+  query, no serving machinery). Kept as the reference protocol behind
+  :func:`eval_routing` / :func:`routing_curves`.
+* ``repro.serving.procedure.Route`` — the same decision rule *online* in
+  the continuous-batching runtime: both decoders are registry models
+  sharing one paged pool, the probe prefill on the weak model feeds the
+  predictor, and escalation re-prefills through the radix cache.
+  :func:`preference_predictor` adapts a trained ``kind="pref"`` probe to
+  its predictor interface.
 """
 from __future__ import annotations
 
@@ -14,6 +27,18 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from repro.core import allocator as alloc
+from repro.core.difficulty import probe_predict
+
+
+def preference_predictor(probe_params, kind: str = "pref") -> Callable:
+    """Adapt a trained difficulty/preference probe to the serving
+    ``Route`` procedure's ``predictor(request, probe_hidden) -> float``
+    interface (the hidden state is the weak model's probe prefill
+    output, exactly the paper's free predictor input)."""
+    def predict(request, hidden) -> float:
+        h = np.asarray(hidden, np.float32)[None]
+        return float(np.asarray(probe_predict(probe_params, h, kind))[0])
+    return predict
 
 
 @dataclass

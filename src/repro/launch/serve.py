@@ -1,17 +1,118 @@
 """Adaptive serving launcher (end-to-end driver, deliverable b).
 
-Trains a small LM on the arithmetic task suite, trains the difficulty
-probe on its own hidden states, then serves batches of queries through the
-AdaptiveScheduler — the paper's full loop — and prints the adaptive-vs-
-uniform comparison.
+Trains small LM(s) on the arithmetic task suite, trains the difficulty /
+preference probe on prefill hidden states, then serves batches of queries
+through the procedure-centric runtime — the paper's full loop — and
+prints the adaptive-vs-baseline comparison.
+
+    --procedure bestofk   (default) AdaptiveScheduler best-of-k vs the
+                          uniform baseline at equal samples (paper §4.1)
+    --procedure route     weak/strong routing (paper §4.2): a weak LM
+                          (under-trained) and a strong LM share one paged
+                          pool; a kind="pref" probe on the weak model's
+                          prefill hidden states routes the top
+                          --strong-frac of queries to the strong model.
+                          Prints routed vs weak-only / strong-only /
+                          random-routing accuracy.
+    --procedure single    the uniform b=1 baseline through the runtime's
+                          Single procedure (sanity floor)
 
     PYTHONPATH=src python -m repro.launch.serve --budget 4 --n-queries 64
+    PYTHONPATH=src python -m repro.launch.serve --procedure route \
+        --strong-frac 0.5 --n-queries 64
 """
 from __future__ import annotations
 
 import argparse
 
 import numpy as np
+
+
+def _prompts_of(problems, width=None):
+    rows = [p.prompt_tokens() for p in problems]
+    w = width or max(len(r) for r in rows)
+    return np.asarray([[0] * (w - len(r)) + r for r in rows], np.int32)
+
+
+def _success_rates(engine, queries, prompts, n_samples, seed):
+    res = engine.generate(prompts, n_samples=n_samples, seed=seed)
+    succ = np.zeros((len(queries), n_samples))
+    for i, q in enumerate(queries):
+        for j in range(n_samples):
+            succ[i, j] = q.check(list(res.tokens[i * n_samples + j]))
+    return succ
+
+
+def _serve_route(args, gen, verifier):
+    """Weak/strong routing: two models, one pool, one Route procedure."""
+    import jax
+
+    from repro.core.difficulty import train_mlp_probe
+    from repro.core.routing import preference_predictor
+    from repro.launch import train as train_mod
+    from repro.serving import (ContinuousBatchingRuntime, Route,
+                               ServingEngine)
+
+    print("== 1. train the WEAK and STRONG LMs on the task suite ==")
+    weak_steps = max(20, args.train_steps // 4)
+    w_params, w_model = train_mod.main([
+        "--arch", "mathstral-tiny", "--steps", str(weak_steps),
+        "--batch", "32", "--seq", "64", "--seed", str(args.seed)])
+    s_params, s_model = train_mod.main([
+        "--arch", "mathstral-tiny", "--steps", str(args.train_steps),
+        "--batch", "32", "--seq", "64", "--seed", str(args.seed + 1)])
+    w_engine = ServingEngine(w_model, w_params, max_new=8, temperature=1.0)
+    s_engine = ServingEngine(s_model, s_params, max_new=8, temperature=1.0)
+
+    print("== 2. label preference p(strong beats weak) on train queries ==")
+    train_q = gen.sample(args.n_train_queries)
+    tp = _prompts_of(train_q, width=16)
+    k = args.samples_for_labels
+    lam_w = _success_rates(w_engine, train_q, tp, k, args.seed + 2).mean(1)
+    lam_s = _success_rates(s_engine, train_q, tp, k, args.seed + 3).mean(1)
+    pref = np.clip(0.5 + (lam_s - lam_w) / 2.0, 0.0, 1.0)
+    print(f"   λ_weak={lam_w.mean():.3f} λ_strong={lam_s.mean():.3f} "
+          f"pref>0.5 frac={(pref > 0.5).mean():.2f}")
+
+    print("== 3. train the preference probe on WEAK prefill hiddens ==")
+    feats = w_engine.probe_features(tp)
+    probe, info = train_mlp_probe(jax.random.PRNGKey(args.seed + 4), feats,
+                                  pref, kind="pref", steps=800)
+    print(f"   probe val loss {info['val_loss']:.4f}")
+    predictor = preference_predictor(probe, kind="pref")
+
+    scores = [predictor(None, h) for h in feats]
+    thr = Route.calibrate_threshold(scores, args.strong_frac)
+    print(f"   threshold at strong_frac={args.strong_frac}: {thr:.4f}")
+
+    print("== 4. serve a fresh stream through Route (shared paged pool) ==")
+    test_q = gen.sample(args.n_queries)
+    prompts = _prompts_of(test_q, width=16)
+    rt = ContinuousBatchingRuntime(
+        w_model, w_params, n_slots=8, max_len=16 + 8 + 1, max_new=8,
+        temperature=1.0, seed=args.seed + 5, pool="paged",
+        reward_fn=verifier)
+    rt.register_model("strong", s_model, s_params)
+    proc = Route(weak="default", strong="strong", predictor=predictor,
+                 threshold=thr)
+    ids = [rt.submit(prompts[i], query=test_q[i], procedure=proc)
+           for i in range(args.n_queries)]
+    rt.drain()
+    routed = np.asarray([rt.result(i).reward > 0 for i in ids])
+    frac = np.mean([rt.result(i).proc["route"] == "strong" for i in ids])
+
+    # baselines at the same test stream
+    acc_w = (_success_rates(w_engine, test_q, prompts, 1,
+                            args.seed + 6).mean(1) > 0).mean()
+    acc_s = (_success_rates(s_engine, test_q, prompts, 1,
+                            args.seed + 7).mean(1) > 0).mean()
+    rand = frac * acc_s + (1 - frac) * acc_w    # expected random routing
+    pm = {m: mm.summary() for m, mm in rt.metrics.per_model.items()}
+    print(f"   routed  : acc={routed.mean():.3f} strong_frac={frac:.2f} "
+          f"strong_tokens={pm.get('strong', {}).get('total_tokens', 0)}")
+    print(f"   weak    : acc={acc_w:.3f}   strong: acc={acc_s:.3f}   "
+          f"random@{frac:.2f}: acc={rand:.3f}")
+    return float(routed.mean()), float(rand)
 
 
 def main(argv=None):
@@ -23,6 +124,14 @@ def main(argv=None):
     ap.add_argument("--b-max", type=int, default=16)
     ap.add_argument("--samples-for-labels", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--procedure", choices=("bestofk", "route", "single"),
+                    default="bestofk",
+                    help="serving procedure: adaptive best-of-k (paper "
+                         "§4.1), weak/strong routing (§4.2), or the "
+                         "uniform b=1 Single baseline")
+    ap.add_argument("--strong-frac", type=float, default=0.5,
+                    help="route: fraction of queries targeted at the "
+                         "strong model (threshold calibration)")
     args = ap.parse_args(argv)
 
     import jax
@@ -33,32 +142,43 @@ def main(argv=None):
     from repro.data.tasks import ArithTaskGen
     from repro.launch import train as train_mod
     from repro.rewards import VerifierReward
-    from repro.serving import AdaptiveScheduler, ServingEngine
+    from repro.serving import (AdaptiveScheduler, ContinuousBatchingRuntime,
+                               ServingEngine, Single)
+
+    gen = ArithTaskGen(max_digits=6, seed=args.seed + 1)
+    verifier = VerifierReward(lambda q, toks: q.check(list(np.asarray(toks))))
+
+    if args.procedure == "route":
+        return _serve_route(args, gen, verifier)
 
     print("== 1. train the base LM on the task suite ==")
     params, model = train_mod.main([
         "--arch", "mathstral-tiny", "--steps", str(args.train_steps),
         "--batch", "32", "--seq", "64", "--seed", str(args.seed)])
-
-    gen = ArithTaskGen(max_digits=6, seed=args.seed + 1)
     engine = ServingEngine(model, params, max_new=8, temperature=1.0)
-    verifier = VerifierReward(lambda q, toks: q.check(list(np.asarray(toks))))
 
-    def prompts_of(problems, width=None):
-        rows = [p.prompt_tokens() for p in problems]
-        w = width or max(len(r) for r in rows)
-        return np.asarray([[0] * (w - len(r)) + r for r in rows], np.int32)
+    if args.procedure == "single":
+        print("== 2. serve uniformly at b=1 through the Single procedure ==")
+        test_q = gen.sample(args.n_queries)
+        prompts = _prompts_of(test_q, width=16)
+        reward_fn = lambda q, rows: [float(q.check(list(np.asarray(r))))
+                                     for r in rows]
+        rt = ContinuousBatchingRuntime(
+            model, params, n_slots=8, max_len=16 + 8 + 1, max_new=8,
+            temperature=1.0, seed=args.seed + 5, reward_fn=reward_fn)
+        ids = [rt.submit(prompts[i], query=test_q[i], procedure=Single())
+               for i in range(args.n_queries)]
+        rt.drain()
+        acc = np.mean([rt.result(i).reward > 0 for i in ids])
+        print(f"   single(b=1): acc={acc:.3f} "
+              f"tokens={rt.metrics.decode_tokens}")
+        return float(acc), float(acc)
 
     print("== 2. label training queries with empirical λ ==")
     train_q = gen.sample(args.n_train_queries)
-    tp = prompts_of(train_q, width=16)
-    res = engine.generate(tp, n_samples=args.samples_for_labels,
-                          seed=args.seed + 2)
-    succ = np.zeros((len(train_q), args.samples_for_labels))
-    for i, q in enumerate(train_q):
-        for j in range(args.samples_for_labels):
-            succ[i, j] = q.check(
-                list(res.tokens[i * args.samples_for_labels + j]))
+    tp = _prompts_of(train_q, width=16)
+    succ = _success_rates(engine, train_q, tp, args.samples_for_labels,
+                          args.seed + 2)
     lam = empirical_lambda(succ)
     print(f"   λ: mean={lam.mean():.3f}  zero-frac={(lam == 0).mean():.2f}")
 
@@ -73,7 +193,7 @@ def main(argv=None):
 
     print("== 4. serve a fresh batch adaptively vs uniformly ==")
     test_q = gen.sample(args.n_queries)
-    prompts = prompts_of(test_q, width=16)
+    prompts = _prompts_of(test_q, width=16)
     out = sched.serve_batch(test_q, prompts, avg_budget=args.budget)
     adaptive_acc = (out.rewards > 0).mean()
 

@@ -3,6 +3,12 @@
 Counts exactly what the paper's reward-vs-compute plots need (prefill
 tokens + generated tokens) plus the systems quantities the batch engine
 cannot report: slot occupancy per tick and per-request wall latency.
+
+With a multi-model registry (weak/strong routing), every token, dispatch,
+and sync is additionally attributed to the model that ran it
+(``per_model``): routing benchmarks report the weak-vs-strong compute
+split instead of one aggregate — previously a routed run's cost breakdown
+was unrecoverable from the metrics.
 """
 from __future__ import annotations
 
@@ -15,6 +21,26 @@ import numpy as np
 
 def percentile(xs: List[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+@dataclass
+class ModelMetrics:
+    """Per-model compute attribution (one entry per registry model)."""
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    device_dispatches: int = 0
+    host_syncs: int = 0
+    children: int = 0               # children admitted on this model
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "prefill_tokens": self.prefill_tokens,
+            "decode_tokens": self.decode_tokens,
+            "total_tokens": self.prefill_tokens + self.decode_tokens,
+            "device_dispatches": self.device_dispatches,
+            "host_syncs": self.host_syncs,
+            "children": self.children,
+        }
 
 
 @dataclass
@@ -40,6 +66,7 @@ class ServingMetrics:
     host_syncs: int = 0             # blocking device->host transfers
     horizon_ticks: int = 0          # fused multi-step scan dispatches
     horizon_fused_steps: int = 0    # decode steps executed inside horizons
+    per_model: Dict[str, ModelMetrics] = field(default_factory=dict)
     latencies: List[float] = field(default_factory=list)
     start_t: Optional[float] = None
     end_t: Optional[float] = None
@@ -51,31 +78,55 @@ class ServingMetrics:
         self.end_t = now
         return now
 
-    def record_prefill(self, n_tokens: int) -> None:
+    def model(self, model_id: str) -> ModelMetrics:
+        m = self.per_model.get(model_id)
+        if m is None:
+            m = self.per_model[model_id] = ModelMetrics()
+        return m
+
+    def record_prefill(self, n_tokens: int, model: str = "default") -> None:
         self._touch()
         self.prefill_tokens += int(n_tokens)
         self.prefill_calls += 1
+        self.model(model).prefill_tokens += int(n_tokens)
 
-    def record_tick(self, n_active: int, n_sampled: Optional[int] = None
-                    ) -> None:
+    def record_tick(self, n_active: int, n_sampled: Optional[int] = None,
+                    model: str = "default") -> None:
         """n_active: occupied slots this tick (decode + chunked prefill).
         n_sampled: tokens actually sampled (decode slots); defaults to
-        n_active for the slot pool, where every active slot samples."""
+        n_active for the slot pool, where every active slot samples.
+
+        A *tick* is one compiled pool-wide program dispatch. With a
+        multi-model registry each model group dispatches its own program
+        per scheduler step (sequentially, each computing all n_slots
+        rows), so a two-model step counts two ticks — and `occupancy`
+        then reads useful rows per *computed* row, which is the honest
+        device-utilization number for grouped dispatch (foreign slots
+        really are wasted compute in that model's program)."""
         self._touch()
         self.ticks += 1
         self.active_sum += int(n_active)
         n_children = int(n_active if n_sampled is None else n_sampled)
         self.decode_tokens += n_children
+        self.model(model).decode_tokens += n_children
         self.peak_children = max(self.peak_children, n_children)
 
-    def record_first_token(self, n: int = 1) -> None:
+    def record_first_token(self, n: int = 1, model: str = "default") -> None:
         """Paged mode samples a child's first token at admission (from the
         stashed probe logits) rather than inside a tick."""
         self._touch()
         self.decode_tokens += int(n)
+        m = self.model(model)
+        m.decode_tokens += int(n)
+        m.children += int(n)
 
     def record_blocks(self, in_use: int) -> None:
         self.peak_blocks = max(self.peak_blocks, int(in_use))
+
+    def record_live(self, n_children: int) -> None:
+        """Total concurrent in-flight children across every model this
+        tick (per-model record_tick calls only see their own group)."""
+        self.peak_children = max(self.peak_children, int(n_children))
 
     def record_prefix_hit(self, n_tokens: int) -> None:
         """A request matched `n_tokens` of radix-cached prompt prefix at
@@ -85,7 +136,8 @@ class ServingMetrics:
         self.prefix_hits += 1
         self.prefix_hit_tokens += int(n_tokens)
 
-    def record_horizon(self, n_live: int, width: int, n_emitted: int) -> None:
+    def record_horizon(self, n_live: int, width: int, n_emitted: int,
+                       model: str = "default") -> None:
         """One horizon-fused decode dispatch: `width` scan steps over
         `n_live` slots emitted `n_emitted` real tokens (frozen slots'
         masked steps are not tokens). Keeps `ticks`/occupancy comparable
@@ -94,15 +146,18 @@ class ServingMetrics:
         self.ticks += width
         self.active_sum += int(n_emitted)
         self.decode_tokens += int(n_emitted)
+        self.model(model).decode_tokens += int(n_emitted)
         self.peak_children = max(self.peak_children, int(n_live))
         self.horizon_ticks += 1
         self.horizon_fused_steps += int(width)
 
-    def record_dispatch(self, n: int = 1) -> None:
+    def record_dispatch(self, n: int = 1, model: str = "default") -> None:
         self.device_dispatches += int(n)
+        self.model(model).device_dispatches += int(n)
 
-    def record_sync(self, n: int = 1) -> None:
+    def record_sync(self, n: int = 1, model: str = "default") -> None:
         self.host_syncs += int(n)
+        self.model(model).host_syncs += int(n)
 
     def record_reordered(self, n: int = 1) -> None:
         self.prefix_reordered += int(n)
@@ -154,6 +209,16 @@ class ServingMetrics:
         return self.device_dispatches / max(self.decode_tokens, 1)
 
     def summary(self) -> Dict[str, float]:
+        out = self._summary_base()
+        # flatten per-model attribution only when more than one model ran
+        # — single-model summaries stay exactly the historical key set
+        if len(self.per_model) > 1:
+            for mid, m in sorted(self.per_model.items()):
+                for k, v in m.summary().items():
+                    out[f"model/{mid}/{k}"] = v
+        return out
+
+    def _summary_base(self) -> Dict[str, float]:
         return {
             "prefill_tokens": self.prefill_tokens,
             "prefill_calls": self.prefill_calls,

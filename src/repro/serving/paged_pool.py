@@ -36,7 +36,8 @@ any single request that could never fit at all.)
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +47,60 @@ from repro.serving.kv_pool import FreeList
 
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
+
+
+class PoolPrograms(NamedTuple):
+    """Jitted cache-IO programs for one cache *structure* (the pytree of
+    paged/state leaf flags). Built once per structure at module level and
+    shared by every pool / model store with that structure — per-instance
+    jit wrappers recompiled these per runtime (the PR-4 gotcha: bench
+    probes had to warm the runtime itself, and a weak/strong model pair
+    would have paid the copy_block compile twice)."""
+    copy_block: Any
+    read_state: Any
+    write_state: Any
+
+
+@functools.lru_cache(maxsize=None)
+def _pool_programs(treedef, flag_leaves) -> PoolPrograms:
+    flags = jax.tree.unflatten(treedef, list(flag_leaves))
+
+    def _copy_block(cache, src, dst):
+        def one(f, x):
+            if not f:
+                return x
+            row = jax.lax.dynamic_index_in_dim(x, src, axis=1,
+                                               keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(x, row, dst, axis=1)
+        return jax.tree.map(one, flags, cache)
+
+    def _read_state(cache, slot):
+        def one(f, x):
+            if f:
+                return jnp.zeros((0,), x.dtype)     # placeholder leaf
+            return jax.lax.dynamic_index_in_dim(x, slot, axis=1,
+                                                keepdims=True)
+        return jax.tree.map(one, flags, cache)
+
+    def _write_state(cache, state, slot):
+        def one(f, x, s):
+            if f:
+                return x
+            row = jax.lax.dynamic_index_in_dim(s, 0, axis=1, keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(x, row, slot, axis=1)
+        return jax.tree.map(one, flags, cache, state)
+
+    return PoolPrograms(
+        copy_block=jax.jit(_copy_block, donate_argnums=(0,)),
+        read_state=jax.jit(_read_state),
+        write_state=jax.jit(_write_state, donate_argnums=(0,)))
+
+
+def pool_programs_for(model) -> PoolPrograms:
+    """The shared jitted cache-IO programs for `model`'s cache structure
+    (hash key: the flag pytree's treedef + leaf values, both hashable)."""
+    leaves, treedef = jax.tree.flatten(_paged_leaf_flags(model))
+    return _pool_programs(treedef, tuple(bool(v) for v in leaves))
 
 
 def _paged_leaf_flags(model) -> Any:
@@ -67,14 +122,26 @@ def supports_paging(model, max_len: int) -> bool:
 
 
 class PagedKVPool:
-    """Paged cache store + host-side block/slot lifetime management.
+    """Paged cache store(s) + host-side block/slot lifetime management.
 
-    ``cache`` is one pytree fed straight to ``model.decode_step(...,
-    block_tables=...)``: paged leaves ``(r, n_blocks, B, ...)``, state
-    leaves ``(r, n_slots, ...)``. Slots carry the per-sequence scalar
-    state (logits/pos/keys rows in the runtime, recurrent states here);
-    blocks carry the KV. Both have free lists; blocks also refcount for
-    copy-on-write prompt sharing.
+    Each registered model's ``cache`` is one pytree fed straight to that
+    model's ``decode_step(..., block_tables=...)``: paged leaves
+    ``(r, n_blocks, B, ...)``, state leaves ``(r, n_slots, ...)``. Slots
+    carry the per-sequence scalar state (logits/pos/keys rows in the
+    runtime, recurrent states here); blocks carry the KV. Both have free
+    lists; blocks also refcount for copy-on-write prompt sharing.
+
+    **Multi-model sharing:** :meth:`add_model` registers further models
+    (a weak/strong routing pair) on the SAME block ledger — one free
+    list, one refcount table, one reservation counter, one slot pool —
+    each with its own physical KV store indexed by the shared block ids.
+    Token capacity is therefore a single budget the models compete for:
+    admission gating, COW sharing, radix caching, and the deadlock-free
+    reservation discipline all apply across models unchanged. (Physical
+    stores stay per-model because leaf shapes differ per architecture;
+    the *ledger* is the scheduling-relevant shared resource.) Added
+    models must be stateless (attention/MLA) — recurrent state rows are
+    per-slot and single-model only.
     """
 
     def __init__(self, model, n_slots: int, max_len: int, *,
@@ -89,23 +156,6 @@ class PagedKVPool:
             n_blocks = self.n_slots * self.blocks_per_seq + 1
         assert n_blocks >= 2, "need at least the null block and one real one"
         self.n_blocks = int(n_blocks)
-        if not supports_paging(model, self.max_len):
-            raise ValueError(
-                "paged KV needs a non-wrapping cache: max_len "
-                f"{max_len} exceeds sliding window "
-                f"{model.cfg.sliding_window}")
-
-        flags = _paged_leaf_flags(model)
-        # build under jit: XLA dead-code-eliminates the unselected half of
-        # each init_cache call, so state leaves are never materialized at
-        # batch=n_blocks (nor KV leaves at batch=n_slots) — without this,
-        # a state-heavy (mamba/xLSTM) pool sized to just fit device memory
-        # could OOM transiently during construction
-        self.cache = jax.jit(lambda: jax.tree.map(
-            lambda f, p, s: p if f else s, flags,
-            model.init_cache(self.n_blocks, self.block_size),
-            model.init_cache(self.n_slots, 1)))()
-        self._flags = flags
 
         # block 0 = reserved null block (never allocated)
         self._free_blocks = FreeList(range(1, self.n_blocks), "block")
@@ -115,49 +165,79 @@ class PagedKVPool:
 
         self._free_slots = FreeList(range(self.n_slots), "slot")
 
-        # per-pool jitted helpers closing over the (python-bool) leaf flags
-        def _copy_block(cache, src, dst):
-            def one(f, x):
-                if not f:
-                    return x
-                row = jax.lax.dynamic_index_in_dim(x, src, axis=1,
-                                                   keepdims=False)
-                return jax.lax.dynamic_update_index_in_dim(x, row, dst,
-                                                           axis=1)
-            return jax.tree.map(one, flags, cache)
+        self.caches: Dict[str, Any] = {}
+        self._models: Dict[str, Any] = {}
+        self._progs: Dict[str, PoolPrograms] = {}
+        self._init_states: Dict[str, Any] = {}
+        self._state_flags: Dict[str, bool] = {}
+        self._register("default", model)
 
-        def _read_state(cache, slot):
-            def one(f, x):
-                if f:
-                    return jnp.zeros((0,), x.dtype)     # placeholder leaf
-                return jax.lax.dynamic_index_in_dim(x, slot, axis=1,
-                                                    keepdims=True)
-            return jax.tree.map(one, flags, cache)
-
-        def _write_state(cache, state, slot):
-            def one(f, x, s):
-                if f:
-                    return x
-                row = jax.lax.dynamic_index_in_dim(s, 0, axis=1,
-                                                   keepdims=False)
-                return jax.lax.dynamic_update_index_in_dim(x, row, slot,
-                                                           axis=1)
-            return jax.tree.map(one, flags, cache, state)
-
-        self._copy_block_jit = jax.jit(_copy_block, donate_argnums=(0,))
-        self._read_state_jit = jax.jit(_read_state)
-        self._write_state_jit = jax.jit(_write_state, donate_argnums=(0,))
-        self._has_state = any(
-            not f for f in jax.tree.leaves(flags))
+    def _register(self, model_id: str, model) -> None:
+        if not supports_paging(model, self.max_len):
+            raise ValueError(
+                "paged KV needs a non-wrapping cache: max_len "
+                f"{self.max_len} exceeds sliding window "
+                f"{model.cfg.sliding_window}")
+        flags = _paged_leaf_flags(model)
+        # build under jit: XLA dead-code-eliminates the unselected half of
+        # each init_cache call, so state leaves are never materialized at
+        # batch=n_blocks (nor KV leaves at batch=n_slots) — without this,
+        # a state-heavy (mamba/xLSTM) pool sized to just fit device memory
+        # could OOM transiently during construction
+        self.caches[model_id] = jax.jit(lambda: jax.tree.map(
+            lambda f, p, s: p if f else s, flags,
+            model.init_cache(self.n_blocks, self.block_size),
+            model.init_cache(self.n_slots, 1)))()
+        self._models[model_id] = model
+        self._progs[model_id] = pool_programs_for(model)
+        has_state = any(not f for f in jax.tree.leaves(flags))
+        self._state_flags[model_id] = has_state
         # pristine state rows (batch 1) for resetting a reused slot before
         # chunked prefill — init values matter (mLSTM's `m` starts at
         # -1e30, not zero), so they come from init_cache, not zeros_like
-        if self._has_state:
-            self._init_state = jax.jit(lambda: jax.tree.map(
+        if has_state:
+            self._init_states[model_id] = jax.jit(lambda: jax.tree.map(
                 lambda f, x: jnp.zeros((0,), x.dtype) if f else x,
                 flags, model.init_cache(1, 1)))()
         else:
-            self._init_state = None
+            self._init_states[model_id] = None
+
+    def add_model(self, model_id: str, model) -> None:
+        """Register an additional model on the shared block ledger (its
+        own KV store, same block ids/slots/reservations)."""
+        if model_id in self.caches:
+            raise ValueError(f"model id {model_id!r} already registered")
+        if self._has_state:
+            raise ValueError("multi-model pools require stateless stacks: "
+                             "the default model carries per-slot state")
+        flags = _paged_leaf_flags(model)
+        if any(not f for f in jax.tree.leaves(flags)):
+            raise ValueError(
+                f"model {model_id!r} carries recurrent state; only "
+                "stateless (attention/MLA) stacks can share a pool")
+        self._register(model_id, model)
+
+    @property
+    def model_ids(self) -> List[str]:
+        return list(self.caches)
+
+    # default-model views: the single-model runtime (and every pre-
+    # procedure caller/test) reads and rebinds `pool.cache` directly
+    @property
+    def cache(self):
+        return self.caches["default"]
+
+    @cache.setter
+    def cache(self, value) -> None:
+        self.caches["default"] = value
+
+    @property
+    def _has_state(self) -> bool:
+        return any(self._state_flags.values())
+
+    @property
+    def _init_state(self):
+        return self._init_states["default"]
 
     # ------------------------------------------------------------- queries
     @property
@@ -282,27 +362,35 @@ class PagedKVPool:
         self._free_slots.push(slot)
 
     # ------------------------------------------------------------- cache io
-    def copy_block(self, src: int, dst: int) -> None:
+    def copy_block(self, src: int, dst: int,
+                   model_id: str = "default") -> None:
         """COW: give a fan-out child its private copy of the partial
-        boundary block it will write into."""
-        self.cache = self._copy_block_jit(self.cache, src, dst)
+        boundary block it will write into (in the store of the model that
+        prefilled — and will decode — that sequence)."""
+        self.caches[model_id] = self._progs[model_id].copy_block(
+            self.caches[model_id], src, dst)
 
-    def snapshot_slot_state(self, slot: int) -> Any:
+    def snapshot_slot_state(self, slot: int,
+                            model_id: str = "default") -> Any:
         """Recurrent-state rows of `slot` (empty placeholders for paged
         leaves). Saved at probe-prefill completion so fan-out children can
         start from the prompt's final state."""
-        if not self._has_state:
+        if not self._state_flags[model_id]:
             return None
-        return self._read_state_jit(self.cache, slot)
+        return self._progs[model_id].read_state(self.caches[model_id], slot)
 
-    def restore_slot_state(self, state: Any, slot: int) -> None:
+    def restore_slot_state(self, state: Any, slot: int,
+                           model_id: str = "default") -> None:
         if state is None:
             return
-        self.cache = self._write_state_jit(self.cache, state, slot)
+        self.caches[model_id] = self._progs[model_id].write_state(
+            self.caches[model_id], state, slot)
 
-    def reset_slot_state(self, slot: int) -> None:
+    def reset_slot_state(self, slot: int,
+                         model_id: str = "default") -> None:
         """Reinitialize a slot's recurrent-state rows before chunked
         prefill: the uniform tick keeps mutating freed slots' state rows
         with garbage, so a reused slot would otherwise leak the previous
         occupant's mamba/xLSTM state into the new prompt."""
-        self.restore_slot_state(self._init_state, slot)
+        self.restore_slot_state(self._init_states[model_id], slot,
+                                model_id)

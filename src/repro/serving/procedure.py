@@ -1,0 +1,272 @@
+"""Procedure-centric serving API: pluggable decode procedures.
+
+The paper evaluates *procedures* — best-of-k fan-out (§4.1) and
+weak/strong routing (§4.2) — not a single decoding rule, and the serving
+runtime should be exactly as general. A :class:`DecodeProcedure` owns one
+request's lifecycle through three hooks the runtime calls at fixed points:
+
+``plan(request, probe_hidden, runtime) -> Plan | None``
+    Called once, when the request's probe prefill completes on
+    ``probe_model``. Decides which model(s) decode the request, how many
+    children each fans out, and at what per-child token budget. Returning
+    ``None`` parks the request (the back-compat path behind
+    :meth:`ContinuousBatchingRuntime.set_budget`, which re-plans).
+
+``on_child_done(request, child, runtime) -> list[ChildGroup] | None``
+    Called each time a child retires (EOS or max_new). May spawn more
+    work — including on a *different* model (escalation / cascades). The
+    runtime schedules any prefill the new groups need; a group on a model
+    whose prompt KV is gone re-prefills through the radix prefix cache.
+
+``finalize(request, runtime) -> None``
+    Called when every child is done and no phases are pending. Sets
+    ``request.response`` / ``request.reward`` from the children — rerank,
+    pick-one, ensemble, whatever the procedure means by "the answer".
+
+A :class:`Plan` is a list of :class:`ChildGroup` — ``(model_id, n,
+max_new)`` — against the runtime's **model registry**: every model
+registered via :meth:`ContinuousBatchingRuntime.register_model` shares
+one paged pool (one block ledger, per-model KV stores and radix caches),
+so a procedure mixing weak and strong decoders competes for the same
+memory the scheduler already meters. Per-request procedure state lives in
+``request.proc`` (a dict), so one procedure instance serves any number of
+concurrent requests.
+
+Shipped procedures:
+
+* :class:`BestOfK` — the paper's adaptive best-of-k, bitwise identical
+  to the pre-procedure runtime under greedy decode (it *is* the default
+  procedure behind ``submit(prompt, budget=...)``).
+* :class:`Route` — the paper's §4.2 weak/strong router, online and
+  continuous-batched: the probe prefill runs on the weak model, a
+  predictor estimates p(strong ≻ weak | x), and queries above a
+  calibrated threshold decode on the strong model instead (optionally as
+  a cascade: decode weak first, escalate only if its answer scores low).
+* :class:`Single` — one child on one model; the trivial baseline and the
+  building block for weak-only / strong-only reference curves.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Sequence
+
+import numpy as np
+
+DEFAULT_MODEL = "default"
+
+
+@dataclass(frozen=True)
+class ChildGroup:
+    """``n`` fan-out children decoded by ``model_id``. ``max_new`` caps
+    each child's generated tokens (None: the request's own max_new; must
+    not exceed it — admission reservations are sized to the request)."""
+    model_id: str = DEFAULT_MODEL
+    n: int = 1
+    max_new: Optional[int] = None
+
+
+@dataclass
+class Plan:
+    """What a procedure wants decoded for one request. An empty plan is
+    the paper's b_i = 0: answer with the default response, decode
+    nothing."""
+    groups: List[ChildGroup] = field(default_factory=list)
+
+    @property
+    def n_children(self) -> int:
+        return sum(g.n for g in self.groups)
+
+
+class DecodeProcedure:
+    """Base procedure; subclasses override the three hooks. ``runtime``
+    is passed for read access to policy-relevant state (``reward_fn``,
+    ``eos_id``, metrics, gating helpers) — procedures must not mutate
+    scheduler internals directly; they act by returning plans/groups."""
+
+    #: model whose prefill doubles as the difficulty probe (its final
+    #: hidden state is what ``plan`` receives)
+    probe_model: str = DEFAULT_MODEL
+
+    def plan(self, request, probe_hidden, runtime) -> Optional[Plan]:
+        raise NotImplementedError
+
+    def may_defer(self, request, runtime) -> bool:
+        """True when plan() could return None for this request (park
+        until set_budget). Prefill admission skips the standing one-child
+        block reservation ONLY for such parked work — a procedure that
+        always plans immediately must keep the reservation, or a tight
+        pool could prefill more prompts than it can ever decode
+        (deadlock: every plan's first child blocked on blocks that no
+        live child will free)."""
+        return False
+
+    def on_child_done(self, request, child, runtime
+                      ) -> Optional[List[ChildGroup]]:
+        return None
+
+    def finalize(self, request, runtime) -> None:
+        _rerank(request, runtime, getattr(self, "reward_fn", None))
+
+
+def _rerank(request, runtime, reward_fn=None) -> None:
+    """Shared finalizer: score every child's (EOS-truncated) token row
+    and keep the argmax — exactly the pre-procedure runtime's rerank, so
+    BestOfK stays bitwise compatible. With no reward fn, child 0 wins."""
+    rows = [c.output_tokens(runtime.eos_id) for c in request.children]
+    fn = reward_fn if reward_fn is not None else runtime.reward_fn
+    if fn is not None:
+        scores = np.asarray(fn(request.query, rows), np.float64)
+        j = int(scores.argmax())
+        request.response, request.reward = rows[j], float(scores[j])
+    else:
+        request.response = rows[0]
+
+
+class BestOfK(DecodeProcedure):
+    """Adaptive best-of-k fan-out (paper §4.1) on the procedure API.
+
+    The budget b_i resolves exactly as the pre-procedure runtime did:
+    an explicit ``submit(budget=...)`` wins; else the runtime's
+    ``budget_fn`` (price-dual streaming allocation, block-gated on the
+    paged pool); else the request parks until ``set_budget`` (the
+    batch-exact AdaptiveScheduler path). ``k`` pins a fixed fan-out
+    instead, ignoring all three. Greedy outputs are token-bitwise
+    identical to the old ``submit(prompt, budget=...)`` path — this class
+    IS that path now.
+    """
+
+    def __init__(self, k: Optional[int] = None, *,
+                 model_id: str = DEFAULT_MODEL,
+                 reward_fn: Optional[Callable] = None):
+        self.k = None if k is None else int(k)
+        self.model_id = model_id
+        self.probe_model = model_id
+        self.reward_fn = reward_fn
+
+    def plan(self, request, probe_hidden, runtime) -> Optional[Plan]:
+        b = self.k if self.k is not None else request.budget
+        if b is None:
+            if runtime.budget_fn is None:
+                return None                     # park until set_budget()
+            b = int(runtime.budget_fn(request, probe_hidden))
+            if runtime.pool_kind == "paged":
+                b = runtime._gate_budget(request, b)
+            request.budget = b
+        b = int(b)
+        return Plan([ChildGroup(self.model_id, b)] if b > 0 else [])
+
+    def may_defer(self, request, runtime) -> bool:
+        return (self.k is None and request.budget is None
+                and runtime.budget_fn is None)
+
+    def finalize(self, request, runtime) -> None:
+        _rerank(request, runtime, self.reward_fn)
+
+
+class Single(DecodeProcedure):
+    """One child on one model — the uniform-b=1 baseline, and the probe
+    used by routing benchmarks for the weak-only / strong-only
+    endpoints."""
+
+    def __init__(self, model_id: str = DEFAULT_MODEL, *,
+                 max_new: Optional[int] = None,
+                 reward_fn: Optional[Callable] = None):
+        self.model_id = model_id
+        self.probe_model = model_id
+        self.max_new = max_new
+        self.reward_fn = reward_fn
+
+    def plan(self, request, probe_hidden, runtime) -> Optional[Plan]:
+        return Plan([ChildGroup(self.model_id, 1, self.max_new)])
+
+    def finalize(self, request, runtime) -> None:
+        _rerank(request, runtime, self.reward_fn)
+
+
+class Route(DecodeProcedure):
+    """Weak/strong routing (paper §4.2), online in the serving runtime.
+
+    The probe prefill runs on the **weak** model (its hidden state is the
+    paper's free predictor input). ``predictor(request, hidden)`` returns
+    the routing statistic — the learned p(p^S ≻ p^W | x) of Eq. 8, or any
+    monotone stand-in — and queries with statistic >= ``threshold`` decode
+    on the strong model instead. Calibrate the threshold to a strong-
+    fraction target with :meth:`calibrate_threshold` (the price-dual /
+    top-B-percentile rule of ``core.allocator.route_by_preference``, made
+    batch-free: at threshold = the (1 - f) quantile of the calibration
+    scores, a fraction f of matching traffic routes strong).
+
+    Routing strong releases the weak prompt KV immediately and schedules
+    a strong-model prefill *phase*; both models share one paged pool, so
+    the strong prefill competes for (and is reservation-gated on) the
+    same blocks, and repeats of a routed prompt hit the strong model's
+    radix prefix cache.
+
+    ``cascade=True`` decodes the weak child first and escalates through
+    ``on_child_done``: only if the statistic clears the threshold AND the
+    weak answer's reward is <= ``cascade_threshold`` does the strong
+    model run — trading latency for strictly fewer strong calls.
+    """
+
+    def __init__(self, *, predictor: Callable, threshold: float = 0.0,
+                 weak: str = "weak", strong: str = "strong",
+                 reward_fn: Optional[Callable] = None,
+                 cascade: bool = False, cascade_threshold: float = 0.0,
+                 max_new_weak: Optional[int] = None,
+                 max_new_strong: Optional[int] = None):
+        self.predictor = predictor
+        self.threshold = float(threshold)
+        self.weak, self.strong = weak, strong
+        self.probe_model = weak
+        self.reward_fn = reward_fn
+        self.cascade = bool(cascade)
+        self.cascade_threshold = float(cascade_threshold)
+        self.max_new_weak = max_new_weak
+        self.max_new_strong = max_new_strong
+
+    @staticmethod
+    def calibrate_threshold(scores: Sequence[float],
+                            strong_frac: float) -> float:
+        """Threshold that routes ~``strong_frac`` of traffic matching the
+        calibration distribution to the strong model."""
+        s = np.asarray(scores, np.float64)
+        if strong_frac <= 0.0:
+            return float("inf")
+        if strong_frac >= 1.0:
+            return float("-inf")
+        return float(np.quantile(s, 1.0 - strong_frac))
+
+    def plan(self, request, probe_hidden, runtime) -> Optional[Plan]:
+        stat = float(self.predictor(request, probe_hidden))
+        request.proc["pref"] = stat
+        want_strong = stat >= self.threshold
+        if self.cascade:
+            request.proc["route"] = "weak"
+            request.proc["may_escalate"] = want_strong
+            return Plan([ChildGroup(self.weak, 1, self.max_new_weak)])
+        request.proc["route"] = "strong" if want_strong else "weak"
+        if want_strong:
+            return Plan([ChildGroup(self.strong, 1, self.max_new_strong)])
+        return Plan([ChildGroup(self.weak, 1, self.max_new_weak)])
+
+    def on_child_done(self, request, child, runtime
+                      ) -> Optional[List[ChildGroup]]:
+        if (not self.cascade or child.model_id != self.weak
+                or request.proc.get("escalated")):
+            return None
+        fn = self.reward_fn if self.reward_fn is not None \
+            else runtime.reward_fn
+        if fn is not None:
+            row = child.output_tokens(runtime.eos_id)
+            request.proc["weak_reward"] = float(
+                np.asarray(fn(request.query, [row]), np.float64)[0])
+        if request.proc.get("may_escalate") and (
+                fn is None
+                or request.proc["weak_reward"] <= self.cascade_threshold):
+            request.proc["escalated"] = True
+            request.proc["route"] = "strong"
+            return [ChildGroup(self.strong, 1, self.max_new_strong)]
+        return None
+
+    def finalize(self, request, runtime) -> None:
+        _rerank(request, runtime, self.reward_fn)

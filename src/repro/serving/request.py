@@ -1,23 +1,31 @@
 """Request lifecycle for the continuous-batching runtime.
 
-A *request* is one user query; the adaptive policy turns it into ``b_i``
-*child sequences* (best-of-k fan-out) that share a single probe prefill.
-Children occupy decode slots independently, so a request's fan-out can
-start on different ticks when the pool is momentarily full.
+A *request* is one user query; its :class:`DecodeProcedure` turns it into
+*child sequences* — best-of-k fan-out, a routed weak-or-strong child,
+cascade escalations — grouped per model. Children occupy decode slots
+independently, so a request's fan-out can start on different ticks when
+the pool is momentarily full.
 
 State machine::
 
-    QUEUED      submitted, awaiting prefill
+    QUEUED      submitted (or re-queued for a later model phase),
+                awaiting prefill on ``model_id``
     PREFILLING  paged mode: chunked prefill in flight (up to
                 ``prefill_chunk`` prompt tokens per tick through the
                 varlen chunk program — or one per decode tick for
                 recurrent-state stacks — starting at the radix-matched
                 prefix length)
     PREFILL     probed (hidden state + prefill cache/blocks stashed),
-                awaiting a budget and/or free slots
+                awaiting a plan/budget and/or free slots
     DECODE      at least one child admitted to a slot
-    RERANK      all children finished, reward ranking in progress
-    DONE        best response selected (or default response for b_i = 0)
+    RERANK      all children finished, procedure finalize in progress
+    DONE        response selected (or default response for an empty plan)
+
+A request may pass through QUEUED → PREFILL more than once: a procedure
+group on a model whose prompt KV is not resident (routing escalation, a
+cascade's strong retry) queues a fresh prefill *phase* on that model —
+``pending_phases`` holds the groups awaiting one, and the radix prefix
+cache makes a same-model re-prefill nearly free.
 """
 from __future__ import annotations
 
@@ -75,18 +83,25 @@ class PrefillStash:
 
 @dataclass
 class ChildSeq:
-    """One best-of-k sample; owns a decode slot while live. Identity (for
-    RNG streams and results) is (request_id, index)."""
+    """One sampled continuation; owns a decode slot while live. Identity
+    (for RNG streams and results) is (request_id, index) — the index is
+    global across the request's groups/models, so escalation children get
+    fresh streams. ``model_id`` names the registry model that decodes it;
+    ``max_new`` is its own token budget (a procedure group may cap it
+    below the request's)."""
     request_id: int
     index: int                              # j within the request
+    model_id: str = "default"               # registry model decoding it
+    max_new: int = 0                        # per-child token budget
     slot: Optional[int] = None
     tokens: List[int] = field(default_factory=list)
     eos: bool = False                       # emitted EOS -> retired early
     table: Optional[List[int]] = None       # paged mode: block table
     reserved: int = 0                       # paged mode: unclaimed blocks
 
-    def done(self, max_new: int) -> bool:
-        return self.eos or len(self.tokens) >= max_new
+    def done(self, max_new: Optional[int] = None) -> bool:
+        limit = self.max_new if max_new is None else max_new
+        return self.eos or len(self.tokens) >= limit
 
     def output_tokens(self, eos_id: Optional[int] = None) -> np.ndarray:
         """Reranker/response view: tokens truncated after the first EOS
@@ -106,6 +121,11 @@ class Request:
     query: Any = None                       # opaque object for the reward fn
     budget: Optional[int] = None            # None until the policy decides
     max_new: int = 16
+    procedure: Any = None                   # DecodeProcedure driving it
+    proc: dict = field(default_factory=dict)    # procedure-owned state
+    model_id: str = "default"               # model of the current phase
+    planned: bool = False                   # procedure.plan already ran
+    pending_phases: List[Any] = field(default_factory=list)  # ChildGroups
     state: RequestState = RequestState.QUEUED
     children: List[ChildSeq] = field(default_factory=list)
     pending: List[ChildSeq] = field(default_factory=list)   # not yet slotted
@@ -129,5 +149,7 @@ class Request:
         return None if self.done_t is None else self.done_t - self.submit_t
 
     def all_children_done(self) -> bool:
-        return (not self.pending
-                and all(c.done(self.max_new) for c in self.children))
+        """No child (live or queued) and no phase awaiting a prefill —
+        the procedure's finalize can run."""
+        return (not self.pending and not self.pending_phases
+                and all(c.done() for c in self.children))

@@ -43,12 +43,26 @@ length, variable-budget requests stream through:
   recurrent-state stacks and ticks with prefill in flight fall back to
   the per-token program.
 
+* **Procedure-centric, multi-model.** The runtime serves pluggable
+  :class:`DecodeProcedure` objects (``serving/procedure.py``): a
+  procedure plans which registry model(s) decode a request and how many
+  children each fans out, reacts to finished children (escalation /
+  cascades), and finalizes the response. ``register_model`` adds models
+  (a weak/strong routing pair) sharing ONE paged pool — one block
+  ledger, per-model KV stores and radix caches — and each tick groups
+  slots per model: one dispatch per model with live work, foreign slots
+  masked to the null block (and their RNG keys frozen), so any model mix
+  runs the same statically-shaped programs. ``submit(prompt,
+  budget=...)`` remains as a thin shim over the default ``BestOfK``
+  procedure and is token-bitwise identical to the pre-procedure runtime
+  under greedy decode.
+
 Sampling uses per-child RNG streams — ``fold_in(fold_in(seed, request_id),
 child_index)`` — so outputs are a function of (seed, request, child) only,
-independent of slot placement, pool backend, and of what else is in
-flight. Greedy decoding (temperature 0) is bitwise-reproducible across
-paged pool, slot pool, and the batch engine (see tests/test_runtime.py,
-tests/test_paged_pool.py).
+independent of slot placement, pool backend, model mix, and of what else
+is in flight. Greedy decoding (temperature 0) is bitwise-reproducible
+across paged pool, slot pool, and the batch engine (see
+tests/test_runtime.py, tests/test_paged_pool.py).
 """
 from __future__ import annotations
 
@@ -66,6 +80,8 @@ from repro.serving.engine import prefill
 from repro.serving.kv_pool import SlotKVPool
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged_pool import PagedKVPool, cdiv, supports_paging
+from repro.serving.procedure import (BestOfK, ChildGroup, DecodeProcedure,
+                                     Plan)
 from repro.serving.radix_cache import RadixCache
 from repro.serving.request import (ChildSeq, PrefillStash, Request,
                                    RequestState, StashGroup)
@@ -118,7 +134,7 @@ def _admit_slot(logits, pos, keys, src_logits, src_row, slot, start_pos,
 @functools.partial(jax.jit, static_argnames=("model", "temperature_zero"),
                    donate_argnums=(2, 6))
 def _paged_tick(model: Model, params, cache, tables, tokens, pos, keys,
-                temperature, *, temperature_zero: bool):
+                advance, temperature, *, temperature_zero: bool):
     """One paged-pool tick: decode every slot's current token at its
     position through the block tables, then sample each slot's next token.
 
@@ -127,6 +143,13 @@ def _paged_tick(model: Model, params, cache, tables, tokens, pos, keys,
     not used by the host), a decoding slot's input is its last sampled
     token. Dead slots point at the reserved null block and compute
     harmless garbage — no per-slot control flow, one compile total.
+
+    `advance` flags the slots whose RNG streams this tick owns (this
+    model's live decode children). Other slots still sample — their rows
+    are unused garbage, vmapped counter-based threefry is element-wise so
+    they cannot perturb the advancing rows — but their keys are frozen:
+    with several models sharing the pool, another model's tick must never
+    burn a live foreign child's stream.
     """
     logits, hidden, cache = model.decode_step(params, tokens[:, None], cache,
                                               pos, block_tables=tables)
@@ -136,7 +159,7 @@ def _paged_tick(model: Model, params, cache, tables, tokens, pos, keys,
         new_keys = keys
     else:
         split = jax.vmap(jax.random.split)(keys)            # (N, 2, 2)
-        new_keys = split[:, 0]
+        new_keys = jnp.where(advance[:, None], split[:, 0], keys)
         sampled = jax.vmap(jax.random.categorical)(
             split[:, 1], lg.astype(jnp.float32) / temperature
         ).astype(jnp.int32)
@@ -229,7 +252,14 @@ def _paged_horizon_tick(model: Model, params, cache, tables, tok, pos, keys,
     slot's table to cover the whole horizon (`PagedKVPool.preallocate`),
     so tables upload once per horizon. Unwritten preallocated blocks sit
     above each slot's current position and are masked by the `idx <= pos`
-    validity rule, contributing exact zeros — values are unchanged."""
+    validity rule, contributing exact zeros — values are unchanged.
+
+    Slots outside this model's group (remaining = 0 at entry — dead, or
+    live under ANOTHER registry model) never advance their keys: a
+    member slot's stream evolves exactly as the per-token tick's, a
+    foreign live child's stream is untouched by this model's horizon."""
+    member = remaining > 0                  # this model's live slots
+
     def transition(lg, tok, pos, aux):
         keys, remaining = aux
         if temperature_zero:
@@ -237,7 +267,7 @@ def _paged_horizon_tick(model: Model, params, cache, tables, tok, pos, keys,
             new_keys = keys
         else:
             split = jax.vmap(jax.random.split)(keys)        # (N, 2, 2)
-            new_keys = split[:, 0]
+            new_keys = jnp.where(member[:, None], split[:, 0], keys)
             sampled = jax.vmap(jax.random.categorical)(
                 split[:, 1], lg.astype(jnp.float32) / temperature
             ).astype(jnp.int32)
@@ -303,6 +333,11 @@ class ContinuousBatchingRuntime:
             pool = "slots"          # sliding-window wrap: paged is inexact
         self.pool_kind = pool
         self.model, self.params = model, params
+        # model registry: the constructor model is "default"; routing
+        # pairs etc. join via register_model (paged pool only)
+        self.models: Dict[str, Model] = {"default": model}
+        self.model_params: Dict[str, Any] = {"default": params}
+        self.default_procedure: DecodeProcedure = BestOfK()
         self.max_new = int(max_new)
         self.temperature = float(temperature)
         self.reward_fn, self.budget_fn = reward_fn, budget_fn
@@ -328,6 +363,8 @@ class ContinuousBatchingRuntime:
         self.fanout: deque = deque()      # Requests with un-slotted children
         self.requests: Dict[int, Request] = {}
         self._next_id = 0
+        self._prefix_cache = False
+        self._radices: Dict[str, RadixCache] = {}
         if pool == "paged":
             if n_blocks is None:
                 # in-flight children worst case + one stashed-window's
@@ -358,11 +395,14 @@ class ContinuousBatchingRuntime:
                 prefill_chunk = block_size
             self.prefill_chunk = max(1, int(prefill_chunk))
             # radix prefix cache: cross-request dedup of full prompt
-            # blocks. Sound only when skipping prefix tokens skips no
-            # recurrent-state updates — i.e. stateless stacks.
-            self.radix: Optional[RadixCache] = (
-                RadixCache(self.pool)
-                if prefix_cache and not self.pool._has_state else None)
+            # blocks, one tree per registry model (a prefix's KV is
+            # model-specific) on the shared block ledger. Sound only when
+            # skipping prefix tokens skips no recurrent-state updates —
+            # i.e. stateless stacks.
+            self._prefix_cache = (bool(prefix_cache)
+                                  and not self.pool._has_state)
+            if self._prefix_cache:
+                self._radices["default"] = RadixCache(self.pool)
             # horizon-fused decode: up to `horizon` decode steps per
             # compiled dispatch (one host sync per horizon instead of
             # one per token). Engages only when no slot is prefilling
@@ -382,15 +422,62 @@ class ContinuousBatchingRuntime:
             self.logits = jnp.zeros((n_slots, V), model.lm.dtype)
             self.pos = jnp.zeros((n_slots,), jnp.int32)
 
+    # ----------------------------------------------------- model registry
+    def register_model(self, model_id: str, model: Model, params) -> None:
+        """Add a model to the registry (paged pool only): it gets its own
+        KV store and radix prefix cache on the SHARED block ledger, and
+        each tick dispatches one program per model with live work.
+        Procedures address it by ``model_id`` in their plans."""
+        if self.pool_kind != "paged":
+            raise ValueError("multi-model serving needs the paged pool")
+        if model_id in self.models:
+            raise ValueError(f"model id {model_id!r} already registered")
+        if not model.supports_chunked_prefill:
+            raise ValueError(
+                f"model {model_id!r}: multi-model serving requires a "
+                "stateless (attention/MLA) stack")
+        self.pool.add_model(model_id, model)     # checks statelessness
+        self.models[model_id] = model
+        self.model_params[model_id] = params
+        if self._prefix_cache:
+            self._radices[model_id] = RadixCache(self.pool)
+
+    @property
+    def radix(self) -> Optional[RadixCache]:
+        """Default model's prefix cache (back-compat view; multi-model
+        callers use the per-model trees internally)."""
+        return self._radices.get("default") if self.pool_kind == "paged" \
+            else None
+
+    def _radix_of(self, model_id: str) -> Optional[RadixCache]:
+        return self._radices.get(model_id)
+
+    @property
+    def _radix_held(self) -> int:
+        return sum(rx.held_blocks for rx in self._radices.values())
+
     # ------------------------------------------------------------- submit
     def submit(self, prompt: np.ndarray, *, budget: Optional[int] = None,
-               query: Any = None, max_new: Optional[int] = None) -> int:
+               query: Any = None, max_new: Optional[int] = None,
+               procedure: Optional[DecodeProcedure] = None) -> int:
+        """Enqueue one request. ``procedure`` drives its lifecycle (see
+        serving/procedure.py); omitted, the runtime's default ``BestOfK``
+        reproduces the historical budget/fan-out semantics exactly —
+        ``budget=``/``budget_fn``/``set_budget`` all still work."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         mn = self.max_new if max_new is None else int(max_new)
         if len(prompt) + mn > self.pool.max_len:
             raise ValueError(
                 f"prompt_len {len(prompt)} + max_new {mn} exceeds pool "
                 f"max_len {self.pool.max_len}")
+        proc = self.default_procedure if procedure is None else procedure
+        probe = proc.probe_model
+        if probe not in self.models:
+            raise KeyError(f"procedure probes unregistered model "
+                           f"{probe!r}; register_model it first")
+        if self.pool_kind != "paged" and not isinstance(proc, BestOfK):
+            raise ValueError("the slot pool serves only the BestOfK "
+                             "procedure; use pool='paged'")
         if self.pool_kind == "paged":
             # one child's worst case while the request's prompt table is
             # still held: the prompt's blocks plus the child's privately
@@ -405,7 +492,7 @@ class ContinuousBatchingRuntime:
                     f"{self.pool.n_blocks - 1} usable")
         r = Request(id=self._next_id, prompt=prompt, query=query,
                     budget=None if budget is None else int(budget),
-                    max_new=mn)
+                    max_new=mn, procedure=proc, model_id=probe)
         self._next_id += 1
         self.requests[r.id] = r
         self.queue.append(r)
@@ -440,13 +527,19 @@ class ContinuousBatchingRuntime:
         return sum(g.rows for g in self._groups if g.nondeferred > 0)
 
     def _make_stash(self, r: Request, group: StashGroup, **kw) -> None:
-        deferred = r.budget is None and self.budget_fn is None
-        r.stash = PrefillStash(group=group, deferred=deferred, **kw)
+        # stashes start non-deferred; a plan() returning None (BestOfK
+        # awaiting set_budget) flips the flag in _run_plan
+        r.stash = PrefillStash(group=group, deferred=False, **kw)
         group.size += 1
         group.rows += 1             # pinned until the whole group dies
-        if not deferred:
-            group.nondeferred += 1
+        group.nondeferred += 1
         self._groups.add(group)
+
+    def _defer_stash(self, r: Request) -> None:
+        st = r.stash
+        if st is not None and not st.deferred:
+            st.deferred = True
+            st.group.nondeferred -= 1
 
     def _drop_stash(self, r: Request) -> None:
         st = r.stash
@@ -497,21 +590,113 @@ class ContinuousBatchingRuntime:
                 self._make_stash(r, group, cache=cache, logits=logits,
                                  row=i, start_pos=sp - 1)
                 r.state = RequestState.PREFILL
-                if r.budget is None and self.budget_fn is not None:
-                    r.budget = int(self.budget_fn(r, r.hidden))
-                if r.budget is not None:
-                    self._spawn_children(r)
+                self._run_plan(r)
         return taken
 
     def set_budget(self, request_id: int, budget: int) -> None:
-        """Resolve a deferred budget (batch-exact allocation path)."""
+        """Resolve a deferred budget (batch-exact allocation path): the
+        parked request's procedure re-plans with the budget now known."""
         r = self.requests[request_id]
         assert r.state == RequestState.PREFILL and r.stash is not None
         if r.stash.deferred:
             r.stash.deferred = False
             r.stash.group.nondeferred += 1
         r.budget = int(budget)
-        self._spawn_children(r)
+        self._run_plan(r)
+
+    # ----------------------------------------------------- procedure plan
+    def _run_plan(self, r: Request) -> None:
+        """Ask the request's procedure for its plan (probe prefill has
+        landed). None parks the request — the stash is marked deferred
+        and excluded from the prefill window until set_budget re-plans."""
+        plan = r.procedure.plan(r, r.hidden, self)
+        if plan is None:
+            self._defer_stash(r)
+            return
+        r.planned = True
+        self._apply_groups(r, list(plan.groups))
+
+    def _apply_groups(self, r: Request, groups: List[ChildGroup]) -> None:
+        """Turn procedure child-groups into work. Groups on the model
+        whose prefill stash is live spawn immediately (they share the
+        probe prefill, exactly the old fan-out); groups on other models —
+        or arriving after the stash was dropped — queue a prefill *phase*
+        on their model. An empty plan with no children is the paper's
+        b_i = 0: release everything and answer with the default."""
+        was_pending = bool(r.pending)   # already in the fanout deque
+        spawned = 0
+        for g in groups:
+            if r.stash is not None and g.model_id == r.model_id:
+                spawned += self._spawn_group(r, g)
+            else:
+                if g.model_id not in self.models:
+                    raise KeyError(f"plan names unregistered model "
+                                   f"{g.model_id!r}")
+                r.pending_phases.append(g)
+        if spawned:
+            r.state = RequestState.DECODE
+            # invariant: a request appears in self.fanout exactly once,
+            # iff it has pending children — an on_child_done escalation
+            # landing while earlier children still await admission must
+            # not enqueue a duplicate (the stale entry would outlive the
+            # first pop and crash the admission loop on empty pending)
+            if not was_pending:
+                self.fanout.append(r)
+        elif r.stash is not None:
+            # nothing rides the current stash: drop it (and the standing
+            # child reservation sized for a child that will never spawn)
+            if self.pool_kind == "paged":
+                self._release_prompt_table(r)
+                self.pool.unreserve(r.reserved)
+                r.reserved = 0
+            self._drop_stash(r)
+        if (not r.children and not r.pending_phases
+                and not r.pending):
+            self._finalize(r)               # empty plan: default response
+            return
+        self._maybe_start_next_phase(r)
+
+    def _spawn_group(self, r: Request, g: ChildGroup) -> int:
+        """Create g.n children on g.model_id sharing the live stash."""
+        mn = r.max_new if g.max_new is None else int(g.max_new)
+        if mn > r.max_new:
+            raise ValueError(
+                f"group max_new {mn} exceeds the request's {r.max_new}: "
+                "admission reservations are sized to the request")
+        for _ in range(int(g.n)):
+            c = ChildSeq(request_id=r.id, index=len(r.children),
+                         model_id=g.model_id, max_new=mn)
+            r.children.append(c)
+            r.pending.append(c)
+        return int(g.n)
+
+    def _maybe_start_next_phase(self, r: Request) -> None:
+        """Queue the next pending phase's prefill once the current
+        stash/table are gone and no children await admission (phases are
+        sequential per request; distinct requests' phases interleave
+        freely)."""
+        if (not r.pending_phases or r.pending or r.stash is not None
+                or r.state in (RequestState.QUEUED,
+                               RequestState.PREFILLING)):
+            return
+        r.model_id = r.pending_phases[0].model_id
+        r.state = RequestState.QUEUED
+        r.prefill_pos = 0
+        r.prefix_len = 0
+        self.queue.append(r)
+
+    def _on_prefill_complete(self, r: Request) -> None:
+        """Prefill landed (probe or phase): plan once, then spawn every
+        queued group this phase's model satisfies."""
+        r.state = RequestState.PREFILL
+        if not r.planned:
+            self._run_plan(r)
+            return
+        groups: List[ChildGroup] = []
+        while (r.pending_phases
+               and r.pending_phases[0].model_id == r.model_id):
+            groups.append(r.pending_phases.pop(0))
+        self._apply_groups(r, groups)
 
     def _gate_budget(self, r: Request, budget: int) -> int:
         """Paged streaming admission is gated on free *blocks*: cap the
@@ -530,28 +715,32 @@ class ContinuousBatchingRuntime:
         # free; over-granting is safe — the standing one-child
         # reservation guarantees progress and surplus children just wait
         # in the fan-out backlog
-        held = self.radix.held_blocks if self.radix is not None else 0
-        cap = guaranteed + ((self.pool.available_blocks + held)
+        cap = guaranteed + ((self.pool.available_blocks + self._radix_held)
                             // max(1, per_child))
         return max(1, min(budget, cap))
 
-    def _child_owned_blocks(self, r: Request) -> int:
+    def _child_owned_blocks(self, r: Request,
+                            max_new: Optional[int] = None) -> int:
         """Blocks a fan-out child may come to own privately: its COW copy
         of the partial boundary block plus its decode tail. Full prompt
         blocks are shared and stay the request's."""
         B = self.pool.block_size
+        mn = r.max_new if max_new is None else int(max_new)
         full = r.prompt_len // B
-        return self.pool.blocks_for(r.prompt_len + r.max_new) - full
+        return self.pool.blocks_for(r.prompt_len + mn) - full
 
     def _can_reserve_or_evict(self, k: int) -> bool:
-        """Admission headroom check that spends the radix cache first:
+        """Admission headroom check that spends the radix caches first:
         retired prompts' published blocks are a cache, not a commitment,
         so when a reservation cannot be met the LRU evictable leaves are
-        freed before giving up."""
+        freed — from every model's tree — before giving up."""
         if self.pool.can_reserve(k):
             return True
-        if self.radix is not None:
-            freed = self.radix.evict(k - self.pool.available_blocks)
+        for rx in self._radices.values():
+            need = k - self.pool.available_blocks
+            if need <= 0:
+                break
+            freed = rx.evict(need)
             if freed:
                 self.metrics.record_radix(evicted=freed)
         return self.pool.can_reserve(k)
@@ -560,23 +749,6 @@ class ContinuousBatchingRuntime:
         if r.table is not None:
             self.pool.release_table(r.table)
             r.table = None
-
-    def _spawn_children(self, r: Request) -> None:
-        if r.budget <= 0:
-            # paper: b_i = 0 answers with the default response
-            if self.pool_kind == "paged":
-                self._release_prompt_table(r)
-                self.pool.unreserve(r.reserved)   # standing child reserve
-                r.reserved = 0
-            self._drop_stash(r)
-            self._finalize(r)
-            return
-        for j in range(r.budget):
-            c = ChildSeq(request_id=r.id, index=j)
-            r.children.append(c)
-            r.pending.append(c)
-        r.state = RequestState.DECODE
-        self.fanout.append(r)
 
     # ------------------------------------------------------------- fanout
     def _try_fanout(self) -> int:
@@ -623,20 +795,24 @@ class ContinuousBatchingRuntime:
         B = self.pool.block_size
         while True:
             batch: List = []        # (request, child) admitted this round
-            copies = 0
+            copies: Dict[str, int] = {}
             while self.fanout and self.pool.n_free_slots:
                 r = self.fanout[0]
-                owned = self._child_owned_blocks(r)
+                c0 = r.pending[0]
+                owned = self._child_owned_blocks(r, c0.max_new)
                 if r.reserved:
                     # first child: consume the standing reservation made
-                    # at prefill admission (guaranteed progress)
-                    assert r.reserved == owned
+                    # at prefill admission (guaranteed progress; sized to
+                    # the request's max_new, so a group-capped child may
+                    # need less — the surplus is returned)
+                    assert r.reserved >= owned
                 elif not self._can_reserve_or_evict(owned):
                     self._fanout_blocked = True   # hold new prefills back
                     break
                 c = r.pending.pop(0)
                 slot = self.pool.alloc_slot()
                 if r.reserved:
+                    self.pool.unreserve(r.reserved - owned)
                     r.reserved = 0                # transfer to the child
                 else:
                     self.pool.reserve(owned)
@@ -649,11 +825,13 @@ class ContinuousBatchingRuntime:
                 if r.prompt_len % B:            # COW the boundary block
                     blk = self.pool.alloc_block()
                     c.reserved -= 1
-                    self.pool.copy_block(r.table[full], blk)
-                    copies += 1
+                    self.pool.copy_block(r.table[full], blk,
+                                         model_id=c.model_id)
+                    copies[c.model_id] = copies.get(c.model_id, 0) + 1
                     table.append(blk)
                 c.table = table
-                self.pool.restore_slot_state(r.stash.state, slot)
+                self.pool.restore_slot_state(r.stash.state, slot,
+                                             model_id=c.model_id)
                 c.slot = slot
                 self.slots[slot] = c
                 self._pos[slot] = r.prompt_len  # first decode position
@@ -662,40 +840,49 @@ class ContinuousBatchingRuntime:
                     self.fanout.popleft()
                     self._release_prompt_table(r)  # children hold refs
                     self._drop_stash(r)
+                    self._maybe_start_next_phase(r)
             if not batch:
                 break
-            m = len(batch)
-            # pad to the pool width so every admission batch size runs
-            # the SAME compiled program; padded rows sample garbage that
-            # the host drops, and their out-of-range slot index makes
-            # the keys scatter a documented no-op (jax drops OOB scatter
-            # updates by default)
+            # one admission program per model present (probe-logit rows
+            # have per-model vocab widths); the common case is one
             N = self.n_slots
-            pad = N - m
-            toks, self.keys = _admit_children(
-                tuple(st for _, _, st in batch) + (batch[0][2],) * pad,
-                self._base_key,
-                jnp.asarray([r.id for r, _, _ in batch] + [0] * pad,
-                            jnp.int32),
-                jnp.asarray([c.index for _, c, _ in batch] + [0] * pad,
-                            jnp.int32),
-                jnp.asarray([c.slot for _, c, _ in batch] + [N] * pad,
-                            jnp.int32),
-                self.keys, self.temperature, temperature_zero=tz)
-            self.metrics.record_dispatch(1 + copies)
-            toks_np = np.asarray(toks)          # one sync for the batch
-            self.metrics.record_sync()
-            self.metrics.record_first_token(m)
-            for (r, c, _), tok_i in zip(batch, toks_np):
-                tok_i = int(tok_i)
-                c.tokens.append(tok_i)
-                if self.eos_id is not None and tok_i == self.eos_id:
-                    c.eos = True
-                    self.metrics.record_eos(r.max_new - len(c.tokens))
-                self._tok[c.slot] = tok_i
-                if c.done(r.max_new):           # EOS/max_new=1 at admission
-                    self._retire_paged_child(c, r)
-            admitted += m
+            by_model: Dict[str, List] = {}
+            for entry in batch:
+                by_model.setdefault(entry[1].model_id, []).append(entry)
+            for mid in sorted(by_model):
+                sub = by_model[mid]
+                m = len(sub)
+                # pad to the pool width so every admission batch size
+                # runs the SAME compiled program; padded rows sample
+                # garbage that the host drops, and their out-of-range
+                # slot index makes the keys scatter a documented no-op
+                # (jax drops OOB scatter updates by default)
+                pad = N - m
+                toks, self.keys = _admit_children(
+                    tuple(st for _, _, st in sub) + (sub[0][2],) * pad,
+                    self._base_key,
+                    jnp.asarray([r.id for r, _, _ in sub] + [0] * pad,
+                                jnp.int32),
+                    jnp.asarray([c.index for _, c, _ in sub] + [0] * pad,
+                                jnp.int32),
+                    jnp.asarray([c.slot for _, c, _ in sub] + [N] * pad,
+                                jnp.int32),
+                    self.keys, self.temperature, temperature_zero=tz)
+                self.metrics.record_dispatch(1 + copies.get(mid, 0),
+                                             model=mid)
+                toks_np = np.asarray(toks)      # one sync per model batch
+                self.metrics.record_sync(model=mid)
+                self.metrics.record_first_token(m, model=mid)
+                for (r, c, _), tok_i in zip(sub, toks_np):
+                    tok_i = int(tok_i)
+                    c.tokens.append(tok_i)
+                    if self.eos_id is not None and tok_i == self.eos_id:
+                        c.eos = True
+                        self.metrics.record_eos(c.max_new - len(c.tokens))
+                    self._tok[c.slot] = tok_i
+                    if c.done():            # EOS/max_new=1 at admission
+                        self._retire_paged_child(c, r)
+                admitted += m
         return admitted
 
     def _admit_prefill_paged(self) -> int:
@@ -722,24 +909,35 @@ class ContinuousBatchingRuntime:
                and self._window_used() < self.prefill_window):
             self._reorder_queue_by_prefix()
             r = self.queue[0]
+            radix = self._radix_of(r.model_id)
             sp = r.prompt_len
             matched: List[int] = []
-            if self.radix is not None:
-                matched = self.radix.match(r.prompt)
+            if radix is not None:
+                matched = radix.match(r.prompt)
                 while len(matched) * B > sp - 1:
-                    self.radix.unmatch([matched.pop()])
+                    radix.unmatch([matched.pop()])
             m = len(matched)
             need = self.pool.blocks_for(sp) - m
-            # budget-deferred requests (no budget, no budget_fn — parked
-            # until set_budget) take no child reservation: they will not
-            # decode promptly, and pinning a tail per deferred request
-            # would let a deep batch-exact backlog reserve the whole pool
-            # (the facade sizes one block-row per request, not two)
-            child_need = (0 if r.budget is None and self.budget_fn is None
-                          else self._child_owned_blocks(r))
+            # plan-deferrable requests (BestOfK with no budget and no
+            # budget_fn — parked until set_budget) take no child
+            # reservation: they will not decode promptly, and pinning a
+            # tail per deferred request would let a deep batch-exact
+            # backlog reserve the whole pool (the facade sizes one
+            # block-row per request, not two). Procedures that always
+            # plan immediately (Single, Route) MUST keep the standing
+            # reservation — the procedure, not the budget fields, knows
+            # whether it can park. Phase prefills (already planned)
+            # reserve for their group's first child.
+            if not r.planned and r.procedure.may_defer(r, self):
+                child_need = 0
+            elif r.planned and r.pending_phases:
+                child_need = self._child_owned_blocks(
+                    r, r.pending_phases[0].max_new)
+            else:
+                child_need = self._child_owned_blocks(r)
             if not self._can_reserve_or_evict(need + child_need):
                 if matched:
-                    self.radix.unmatch(matched)
+                    radix.unmatch(matched)
                 break
             self.queue.popleft()
             self.pool.reserve(need + child_need)
@@ -771,14 +969,17 @@ class ContinuousBatchingRuntime:
         no-op), and `match_len` is a pure peek — no refcounts taken, no
         LRU clocks touched, so the scan itself cannot perturb eviction."""
         L = self.admission_lookahead
-        if self.radix is None or L <= 1 or len(self.queue) <= 1:
+        if not self._radices or L <= 1 or len(self.queue) <= 1:
             return
         B = self.pool.block_size
 
         def eff_hit(r: Request) -> int:
             # mirror admission's trim: the final prompt token is always
             # recomputed, so a full match drops back below sp - 1
-            m = self.radix.match_len(r.prompt)
+            radix = self._radix_of(r.model_id)
+            if radix is None:
+                return 0
+            m = radix.match_len(r.prompt)
             return min(m, ((r.prompt_len - 1) // B) * B)
 
         cand = list(self.queue)[:L]
@@ -827,11 +1028,15 @@ class ContinuousBatchingRuntime:
             r = self.requests[c.request_id]
             if self.eos_id is not None and t == self.eos_id:
                 c.eos = True
-                self.metrics.record_eos(r.max_new - len(c.tokens))
-            if c.done(r.max_new):
+                self.metrics.record_eos(c.max_new - len(c.tokens))
+            if c.done():
                 self.slots[s] = None
                 self.pool.release(s)
                 c.slot = None
+                more = r.procedure.on_child_done(r, c, self)
+                if more:
+                    raise ValueError("the slot pool cannot schedule "
+                                     "procedure escalations")
                 if r.all_children_done():
                     self._finalize(r)
         return True
@@ -847,67 +1052,68 @@ class ContinuousBatchingRuntime:
         B = self.pool.block_size
         C = self.prefill_chunk
         P = self.prefill_slots
-        pref_slots = sorted(self._pref)
-        toks = np.zeros((P, C), np.int32)
-        pos = np.zeros((P,), np.int32)
-        valid = np.zeros((P,), np.int32)
-        tables = np.zeros((P, self.pool.blocks_per_seq), np.int32)
-        take: Dict[int, int] = {}
-        for i, s in enumerate(pref_slots):
-            r = self._pref[s]
-            p = r.prefill_pos
-            L = min(C - p % C, r.prompt_len - p)
-            # allocate the blocks this chunk writes into up front
-            # (reservation-backed, like per-token growth)
-            while (p + L - 1) // B >= len(r.table):
-                r.table.append(self.pool.alloc_block())
-            toks[i, :L] = r.prompt[p:p + L]
-            pos[i] = p
-            valid[i] = L
-            tables[i, :len(r.table)] = r.table
-            take[s] = L
-        logits, hidden, cache = _paged_chunk_tick(
-            self.model, self.params, self.pool.cache, jnp.asarray(tables),
-            jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(valid))
-        self.pool.cache = cache
-        self.metrics.record_dispatch()
-        self.metrics.record_prefill(int(valid.sum()))
-        self.metrics.record_blocks(self.pool.blocks_in_use)
-        hidden_np = None
-        for i, s in enumerate(pref_slots):
-            r = self._pref[s]
-            L = take[s]
-            end = r.prefill_pos + L
-            if self.radix is not None:
-                created = self.radix.publish(r.prompt, r.table, end // B)
-                if created:
-                    self.metrics.record_radix(published=created)
-            if end == r.prompt_len:                 # probe complete
-                if hidden_np is None:
-                    hidden_np = np.asarray(hidden, np.float32)
-                    self.metrics.record_sync()
-                r.hidden = hidden_np[i, L - 1]
-                group = StashGroup()
-                # stash only this request's probe row (a (V,) copy —
-                # exactly what batched fan-out admission stacks):
-                # stashing the whole (P*C, V) tick tensor would pin
-                # prefill_chunk times PR-2's footprint until fan-out —
-                # indefinitely for budget-deferred requests
-                self._make_stash(r, group, cache=None,
-                                 logits=logits[i, L - 1], row=0,
-                                 start_pos=end - 1, state=None)
-                del self._pref[s]
-                self.pool.release_slot(s)
-                self._tok[s] = 0
-                self._pos[s] = 0
-                r.state = RequestState.PREFILL
-                if r.budget is None and self.budget_fn is not None:
-                    r.budget = self._gate_budget(
-                        r, int(self.budget_fn(r, r.hidden)))
-                if r.budget is not None:
-                    self._spawn_children(r)
-            else:
-                r.prefill_pos = end
+        by_model: Dict[str, List[int]] = {}
+        for s in sorted(self._pref):
+            by_model.setdefault(self._pref[s].model_id, []).append(s)
+        for mid in sorted(by_model):
+            pref_slots = by_model[mid]
+            toks = np.zeros((P, C), np.int32)
+            pos = np.zeros((P,), np.int32)
+            valid = np.zeros((P,), np.int32)
+            tables = np.zeros((P, self.pool.blocks_per_seq), np.int32)
+            take: Dict[int, int] = {}
+            for i, s in enumerate(pref_slots):
+                r = self._pref[s]
+                p = r.prefill_pos
+                L = min(C - p % C, r.prompt_len - p)
+                # allocate the blocks this chunk writes into up front
+                # (reservation-backed, like per-token growth)
+                while (p + L - 1) // B >= len(r.table):
+                    r.table.append(self.pool.alloc_block())
+                toks[i, :L] = r.prompt[p:p + L]
+                pos[i] = p
+                valid[i] = L
+                tables[i, :len(r.table)] = r.table
+                take[s] = L
+            logits, hidden, cache = _paged_chunk_tick(
+                self.models[mid], self.model_params[mid],
+                self.pool.caches[mid], jnp.asarray(tables),
+                jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(valid))
+            self.pool.caches[mid] = cache
+            self.metrics.record_dispatch(model=mid)
+            self.metrics.record_prefill(int(valid.sum()), model=mid)
+            self.metrics.record_blocks(self.pool.blocks_in_use)
+            radix = self._radix_of(mid)
+            hidden_np = None
+            for i, s in enumerate(pref_slots):
+                r = self._pref[s]
+                L = take[s]
+                end = r.prefill_pos + L
+                if radix is not None:
+                    created = radix.publish(r.prompt, r.table, end // B)
+                    if created:
+                        self.metrics.record_radix(published=created)
+                if end == r.prompt_len:                 # probe complete
+                    if hidden_np is None:
+                        hidden_np = np.asarray(hidden, np.float32)
+                        self.metrics.record_sync(model=mid)
+                    r.hidden = hidden_np[i, L - 1]
+                    group = StashGroup()
+                    # stash only this request's probe row (a (V,) copy —
+                    # exactly what batched fan-out admission stacks):
+                    # stashing the whole (P*C, V) tick tensor would pin
+                    # prefill_chunk times PR-2's footprint until fan-out —
+                    # indefinitely for budget-deferred requests
+                    self._make_stash(r, group, cache=None,
+                                     logits=logits[i, L - 1], row=0,
+                                     start_pos=end - 1, state=None)
+                    del self._pref[s]
+                    self.pool.release_slot(s)
+                    self._tok[s] = 0
+                    self._pos[s] = 0
+                    self._on_prefill_complete(r)
+                else:
+                    r.prefill_pos = end
         return True
 
     def _horizon_width(self, live_dec: List[int]) -> int:
@@ -921,22 +1127,24 @@ class ContinuousBatchingRuntime:
         program per width mid-run cost more wall-clock than fusion saved
         (measured on the Poisson bench: paged dropped to 0.7x the batch
         engine before quantization, 2x+ after)."""
-        rem = min(self.requests[self.slots[s].request_id].max_new
-                  - len(self.slots[s].tokens) for s in live_dec)
+        rem = min(self.slots[s].max_new - len(self.slots[s].tokens)
+                  for s in live_dec)
         H = max(1, min(self.horizon, rem))
         return 1 << (H.bit_length() - 1)
 
-    def _horizon_tick(self, live_dec: List[int], H: int) -> bool:
-        """Dispatch one horizon-fused scan over the live decode slots and
-        retire/advance from its (H, 2, n_slots) token/alive buffer — one
-        jitted dispatch and ONE blocking device->host sync for up to
-        H x len(live_dec) generated tokens. Retirement, fan-out, and
-        admission run between horizons (the caller's next step())."""
+    def _horizon_tick(self, mid: str, live_dec: List[int], H: int) -> bool:
+        """Dispatch one horizon-fused scan over model `mid`'s live decode
+        slots and retire/advance from its (H, 2, n_slots) token/alive
+        buffer — one jitted dispatch and ONE blocking device->host sync
+        for up to H x len(live_dec) generated tokens. Retirement,
+        fan-out, and admission run between horizons (the caller's next
+        step()). Slots of other registry models ride along frozen
+        (remaining 0: no token/pos/key advance; their writes land in
+        `mid`'s null block)."""
         remaining = np.zeros(self.n_slots, np.int32)
         for s in live_dec:
             c = self.slots[s]
-            r = self.requests[c.request_id]
-            remaining[s] = r.max_new - len(c.tokens)
+            remaining[s] = c.max_new - len(c.tokens)
             # extend the slot's table to cover the whole horizon up front
             # (reservation-backed), so tables are scan-invariant and
             # upload once per horizon instead of once per token
@@ -947,19 +1155,20 @@ class ContinuousBatchingRuntime:
             t = self.slots[s].table
             tables[s, :len(t)] = t
         emits, cache, keys = _paged_horizon_tick(
-            self.model, self.params, self.pool.cache, jnp.asarray(tables),
+            self.models[mid], self.model_params[mid], self.pool.caches[mid],
+            jnp.asarray(tables),
             jnp.asarray(self._tok), jnp.asarray(self._pos), self.keys,
             jnp.asarray(remaining), self.temperature, H=H,
             temperature_zero=(self.temperature == 0.0), eos_id=self.eos_id)
-        self.pool.cache = cache
+        self.pool.caches[mid] = cache
         self.keys = keys
-        self.metrics.record_dispatch()
+        self.metrics.record_dispatch(model=mid)
         # the dispatch above is asynchronous: host-side bookkeeping that
         # does not depend on the sampled tokens overlaps device compute,
         # and the buffer is forced in one transfer at the end
         self.metrics.record_blocks(self.pool.blocks_in_use)
         buf = np.asarray(emits)                 # (H, 2, N): [token; alive]
-        self.metrics.record_sync()
+        self.metrics.record_sync(model=mid)
         emitted = 0
         for s in live_dec:
             c = self.slots[s]
@@ -973,15 +1182,15 @@ class ContinuousBatchingRuntime:
                 took += 1
                 if self.eos_id is not None and t == self.eos_id:
                     c.eos = True
-                    self.metrics.record_eos(r.max_new - len(c.tokens))
+                    self.metrics.record_eos(c.max_new - len(c.tokens))
                     break
             emitted += took
-            if c.done(r.max_new):
+            if c.done():
                 self._retire_paged_child(c, r)
             else:                               # survivor: emitted all H
                 self._tok[s] = c.tokens[-1]
                 self._pos[s] = int(self._pos[s]) + took
-        self.metrics.record_horizon(len(live_dec), H, emitted)
+        self.metrics.record_horizon(len(live_dec), H, emitted, model=mid)
         return True
 
     def _step_paged(self) -> bool:
@@ -990,23 +1199,49 @@ class ContinuousBatchingRuntime:
         chunked = self.prefill_chunk > 1
         if chunked and self._pref:
             progressed = self._chunk_prefill_tick() or progressed
-        live_dec = [s for s, c in enumerate(self.slots) if c is not None]
+        # group live work per registry model: each model with live slots
+        # gets its own dispatch this tick (foreign slots masked to the
+        # null block and their RNG keys frozen) — single-model runs see
+        # exactly one group and the historical dispatch sequence
+        dec_by_model: Dict[str, List[int]] = {}
+        for s, c in enumerate(self.slots):
+            if c is not None:
+                dec_by_model.setdefault(c.model_id, []).append(s)
         # the per-token interleave (chunk 1: recurrent-state stacks) keeps
         # prefilling slots inside the decode tick; the chunk program above
         # owns them otherwise
-        live_pref = [] if chunked else list(self._pref.keys())
-        if not live_dec and not live_pref:
+        pref_by_model: Dict[str, List[int]] = {}
+        if not chunked:
+            for s, r in self._pref.items():
+                pref_by_model.setdefault(r.model_id, []).append(s)
+        if not dec_by_model and not pref_by_model:
             return progressed
-        # horizon-fused decode: engages only when decode has the device
-        # to itself (no prefill interleave in flight — admission and
-        # chunked prefill run between horizons) and the stack is
-        # stateless. H=1 would recompile the scan for nothing, so the
-        # per-token program below keeps that case.
-        if (self.horizon > 1 and live_dec and not self._pref
-                and not self.pool._has_state):
-            H = self._horizon_width(live_dec)
-            if H > 1:
-                return self._horizon_tick(live_dec, H)
+        n_live = sum(len(v) for v in dec_by_model.values())
+        if len(self.models) > 1:
+            self.metrics.record_live(n_live)
+        for mid in sorted(set(dec_by_model) | set(pref_by_model)):
+            live_dec = dec_by_model.get(mid, [])
+            live_pref = pref_by_model.get(mid, [])
+            # horizon-fused decode: engages only when decode has the
+            # device to itself (no prefill interleave in flight —
+            # admission and chunked prefill run between horizons) and
+            # the stack is stateless. H=1 would recompile the scan for
+            # nothing, so the per-token program below keeps that case.
+            if (self.horizon > 1 and live_dec and not self._pref
+                    and not self.pool._has_state):
+                H = self._horizon_width(live_dec)
+                if H > 1:
+                    self._horizon_tick(mid, live_dec, H)
+                    continue
+            self._token_tick(mid, live_dec, live_pref)
+        return True
+
+    def _token_tick(self, mid: str, live_dec: List[int],
+                    live_pref: List[int]) -> None:
+        """One per-token program over model `mid`'s slots (decode + the
+        chunk-1 prefill interleave). Slots belonging to other models run
+        through as dead rows: null tables, frozen keys, outputs
+        dropped."""
         B = self.pool.block_size
         # allocate blocks on demand before the tick's writes cross into
         # them (reservation-backed: can_reserve was checked at admission)
@@ -1026,46 +1261,47 @@ class ContinuousBatchingRuntime:
         for s in live_pref:
             t = self._pref[s].table
             tables[s, :len(t)] = t
+        advance = np.zeros((self.n_slots,), bool)
+        advance[live_dec] = True
         sampled, logits, hidden, cache, self.keys = _paged_tick(
-            self.model, self.params, self.pool.cache, jnp.asarray(tables),
+            self.models[mid], self.model_params[mid], self.pool.caches[mid],
+            jnp.asarray(tables),
             jnp.asarray(self._tok), jnp.asarray(self._pos), self.keys,
-            self.temperature, temperature_zero=(self.temperature == 0.0))
-        self.pool.cache = cache
-        self.metrics.record_dispatch()
+            jnp.asarray(advance), self.temperature,
+            temperature_zero=(self.temperature == 0.0))
+        self.pool.caches[mid] = cache
+        self.metrics.record_dispatch(model=mid)
         self.metrics.record_tick(len(live_dec) + len(live_pref),
-                                 n_sampled=len(live_dec))
+                                 n_sampled=len(live_dec), model=mid)
         self.metrics.record_blocks(self.pool.blocks_in_use)
         if live_pref:
-            self.metrics.record_prefill(len(live_pref))
+            self.metrics.record_prefill(len(live_pref), model=mid)
         sampled_np = np.asarray(sampled)
-        self.metrics.record_sync()
+        self.metrics.record_sync(model=mid)
         hidden_np = (np.asarray(hidden, np.float32) if live_pref else None)
         if live_pref:
-            self.metrics.record_sync()
+            self.metrics.record_sync(model=mid)
+        radix = self._radix_of(mid)
         for s in live_pref:
             r = self._pref[s]
             t = int(self._pos[s])
             if t == r.prompt_len - 1:           # probe complete
-                if self.radix is not None:
-                    created = self.radix.publish(r.prompt, r.table,
-                                                 r.prompt_len // B)
+                if radix is not None:
+                    created = radix.publish(r.prompt, r.table,
+                                            r.prompt_len // B)
                     if created:
                         self.metrics.record_radix(published=created)
                 r.hidden = hidden_np[s]
                 group = StashGroup()
                 self._make_stash(r, group, cache=None, logits=logits[s],
                                  row=0, start_pos=t,
-                                 state=self.pool.snapshot_slot_state(s))
+                                 state=self.pool.snapshot_slot_state(
+                                     s, model_id=mid))
                 del self._pref[s]
                 self.pool.release_slot(s)
                 self._tok[s] = 0
                 self._pos[s] = 0
-                r.state = RequestState.PREFILL
-                if r.budget is None and self.budget_fn is not None:
-                    r.budget = self._gate_budget(
-                        r, int(self.budget_fn(r, r.hidden)))
-                if r.budget is not None:
-                    self._spawn_children(r)
+                self._on_prefill_complete(r)
             else:
                 r.prefill_pos = t + 1
                 self._pos[s] = t + 1
@@ -1079,18 +1315,20 @@ class ContinuousBatchingRuntime:
             c.tokens.append(t)
             if self.eos_id is not None and t == self.eos_id:
                 c.eos = True
-                self.metrics.record_eos(r.max_new - len(c.tokens))
-            if c.done(r.max_new):
+                self.metrics.record_eos(c.max_new - len(c.tokens))
+            if c.done():
                 self._retire_paged_child(c, r)
             else:
                 self._tok[s] = t
                 self._pos[s] = int(self._pos[s]) + 1
-        return True
+        return
 
     def _retire_paged_child(self, c: ChildSeq, r: Request) -> None:
         """Free the child's slot, blocks (shared ones decref), and any
         unclaimed reservation — immediately, so EOS/short children return
-        memory to the pool the same tick they finish."""
+        memory to the pool the same tick they finish. The procedure's
+        `on_child_done` hook then gets a chance to spawn more work
+        (cascade escalation to another model, extra fan-out)."""
         slot = c.slot
         self.slots[slot] = None
         self.pool.release_slot(slot)
@@ -1101,22 +1339,20 @@ class ContinuousBatchingRuntime:
         c.table = None
         self.pool.unreserve(c.reserved)
         c.reserved = 0
+        more = r.procedure.on_child_done(r, c, self)
+        if more:
+            self._apply_groups(r, list(more))
         if r.all_children_done():
             self._finalize(r)
 
     def _finalize(self, r: Request) -> None:
         if r.children:
             r.state = RequestState.RERANK
-            rows = [c.output_tokens(self.eos_id) for c in r.children]
-            if self.reward_fn is not None:
-                scores = np.asarray(self.reward_fn(r.query, rows), np.float64)
-                j = int(scores.argmax())
-                r.response, r.reward = rows[j], float(scores[j])
-            else:
-                r.response = rows[0]
+            r.procedure.finalize(r, self)
         else:
-            # b_i = 0: the documented default response — an empty token
-            # row with zero reward (the paper's "answer with the default")
+            # empty plan (b_i = 0): the documented default response — an
+            # empty token row with zero reward (the paper's "answer with
+            # the default")
             r.response = np.zeros((0,), np.int32)
             r.reward = 0.0
             self.metrics.record_default()
@@ -1147,16 +1383,18 @@ class ContinuousBatchingRuntime:
         if self.fanout:
             head = self.fanout[0]
             if self.pool_kind == "paged":
-                held = self.radix.held_blocks if self.radix else 0
                 parts.append(
                     f"fan-out blocked for request {head.id} "
                     f"(free_slots={self.pool.n_free_slots}, "
                     f"free_blocks={self.pool.n_free_blocks}, "
                     f"reserved={self.pool._reserved}, "
-                    f"radix_held={held})")
+                    f"radix_held={self._radix_held})")
             else:
                 parts.append(f"fan-out blocked for request {head.id} "
                              f"(free_slots={self.pool.n_free})")
+        phased = [r.id for r in self.requests.values() if r.pending_phases]
+        if phased:
+            parts.append(f"requests with pending model phases: {phased}")
         return "; ".join(parts)
 
     def assert_ledger_balanced(self) -> None:
@@ -1187,8 +1425,8 @@ class ContinuousBatchingRuntime:
                     for blk in set(c.table):
                         refs[blk] += 1
                 reserved += c.reserved
-        if self.radix is not None:
-            stack = list(self.radix.root.values())
+        for radix in self._radices.values():
+            stack = list(radix.root.values())
             while stack:
                 n = stack.pop()
                 stack.extend(n.children.values())

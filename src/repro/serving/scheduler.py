@@ -15,6 +15,13 @@ Two backends:
       through a fixed slot pool, freed slots backfill immediately, and
       the whole batch runs under one compiled decode program regardless
       of the budget mix. Returns slot-occupancy/latency metrics.
+      Internally this is the procedure API's BestOfK path — requests
+      submit un-budgeted (the default BestOfK procedure parks them),
+      and set_budget() re-plans each once the batch-exact allocation is
+      known. New code should prefer submitting DecodeProcedure objects
+      to the runtime directly (see serving/procedure.py and the
+      migration table in docs/serving.md); this facade remains for the
+      paper's batch-synchronous allocation protocol.
 
   backend="batch"    the legacy batch-synchronous path, patched to
       prefill ONCE (the old code probe-prefilled, threw the cache away,

@@ -1,0 +1,485 @@
+"""Procedure-centric serving API: BestOfK back-compat (bitwise), the
+Route procedure end-to-end on a two-model shared paged pool, cascade
+escalation through on_child_done, per-model metrics attribution, and the
+module-level pool program cache."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.routing import eval_routing
+from repro.models import build_model
+from repro.serving import (AdaptiveScheduler, BestOfK, ChildGroup,
+                           ContinuousBatchingRuntime, DecodeProcedure, Plan,
+                           RequestState, Route, ServingEngine, Single)
+from repro.serving.paged_pool import PagedKVPool
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32", n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def strong():
+    """A second registry model sharing the tiny model's vocab (the
+    'strong' decoder of a routing pair — the roles are symbolic; what
+    matters is distinct weights and a distinct cache store). Params are
+    scaled up: at init scale, tied-embedding logits make every random
+    model greedily echo its last prompt token, so both decoders would
+    produce identical rows and a zero routing gap."""
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32", n_layers=1)
+    model = build_model(cfg)
+    params = jax.tree.map(lambda x: x * 3.0,
+                          model.init(jax.random.PRNGKey(99)))
+    return cfg, model, params
+
+
+def _prompts(cfg, n, rng, lo=5, hi=11):
+    return [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+            for L in rng.integers(lo, hi, size=n)]
+
+
+# --------------------------------------------------------------- back-compat
+@pytest.mark.parametrize("pool", ["paged", "slots"])
+def test_bestofk_procedure_bitwise_backcompat(tiny, pool):
+    """Old-style submit(budget=...) and an explicit BestOfK(k) procedure
+    produce token-bitwise identical children under greedy decode —
+    including EOS early termination, b_i = 0, and per-request max_new."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(3)
+    prompts = _prompts(cfg, 4, rng)
+    budgets = [2, 0, 3, 1]
+    max_news = [4, 4, 2, 3]
+
+    def run(style):
+        rt = ContinuousBatchingRuntime(
+            model, params, n_slots=3, max_len=16, max_new=4,
+            temperature=0.0, seed=0, pool=pool, block_size=4, eos_id=7)
+        ids = []
+        for p, b, mn in zip(prompts, budgets, max_news):
+            if style == "budget":
+                ids.append(rt.submit(p, budget=b, max_new=mn))
+            else:
+                ids.append(rt.submit(p, max_new=mn,
+                                     procedure=BestOfK(b)))
+        rt.drain()
+        return rt, ids
+
+    rt_a, ids_a = run("budget")
+    rt_b, ids_b = run("procedure")
+    for ra, rb in zip(ids_a, ids_b):
+        a, b = rt_a.result(ra), rt_b.result(rb)
+        assert a.state == b.state == RequestState.DONE
+        assert len(a.children) == len(b.children)
+        for ca, cb in zip(a.children, b.children):
+            assert ca.tokens == cb.tokens
+        np.testing.assert_array_equal(a.response, b.response)
+    assert rt_a.metrics.decode_tokens == rt_b.metrics.decode_tokens
+    assert rt_a.metrics.prefill_tokens == rt_b.metrics.prefill_tokens
+
+
+def test_submit_batch_backcompat_matches_procedure(tiny):
+    """submit_batch (budgets + per-request max_new) equals per-request
+    BestOfK(k) procedure submissions, bitwise."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(4)
+    prompts = np.stack(_prompts(cfg, 3, rng, lo=6, hi=7))
+    budgets, max_news = [2, 1, 2], [3, 4, 2]
+
+    rt_a = ContinuousBatchingRuntime(model, params, n_slots=3, max_len=16,
+                                     max_new=4, temperature=0.0, seed=0,
+                                     block_size=4)
+    ids_a = rt_a.submit_batch(prompts, budgets=budgets, max_new=max_news)
+    rt_a.drain()
+    rt_b = ContinuousBatchingRuntime(model, params, n_slots=3, max_len=16,
+                                     max_new=4, temperature=0.0, seed=0,
+                                     block_size=4)
+    ids_b = [rt_b.submit(prompts[i], max_new=max_news[i],
+                         procedure=BestOfK(budgets[i]))
+             for i in range(3)]
+    rt_b.drain()
+    for ra, rb in zip(ids_a, ids_b):
+        for ca, cb in zip(rt_a.result(ra).children,
+                          rt_b.result(rb).children):
+            assert ca.tokens == cb.tokens
+
+
+def test_scheduler_facade_matches_procedure_path(tiny):
+    """AdaptiveScheduler.serve_batch (the set_budget/deferred-plan shim)
+    equals explicit BestOfK(k) submissions at the same budgets."""
+    from repro.core import AdaptivePolicy
+    from repro.core.difficulty import init_mlp_probe
+
+    cfg, model, params = tiny
+    engine = ServingEngine(model, params, max_new=3, temperature=0.0)
+    probe = init_mlp_probe(jax.random.PRNGKey(4), cfg.d_model, 1)
+    policy = AdaptivePolicy(probe_params=probe, kind="bce", b_max=3,
+                            b_min=0)
+    reward = lambda q, rows: np.asarray([float(r.sum() % 53) for r in rows])
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(5), (4, 7),
+                                            0, cfg.vocab_size))
+    sched = AdaptiveScheduler(engine, policy, reward, seed=0, n_slots=3,
+                              block_size=4)
+    out = sched.serve_batch(list(range(4)), prompts, avg_budget=1.5)
+
+    rt = ContinuousBatchingRuntime(model, params, n_slots=3,
+                                   max_len=7 + 3 + 1, max_new=3,
+                                   temperature=0.0, seed=0, block_size=4,
+                                   reward_fn=reward)
+    ids = [rt.submit(prompts[i], query=i,
+                     procedure=BestOfK(int(out.budgets[i])))
+           for i in range(4)]
+    rt.drain()
+    for i, rid in enumerate(ids):
+        np.testing.assert_array_equal(out.responses[i],
+                                      rt.result(rid).response)
+        assert out.rewards[i] == rt.result(rid).reward
+
+
+def test_single_matches_budget_one(tiny):
+    cfg, model, params = tiny
+    rng = np.random.default_rng(5)
+    p = _prompts(cfg, 1, rng)[0]
+    rt_a = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=16,
+                                     max_new=4, temperature=0.0, seed=0,
+                                     block_size=4)
+    ra = rt_a.submit(p, budget=1)
+    rt_a.drain()
+    rt_b = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=16,
+                                     max_new=4, temperature=0.0, seed=0,
+                                     block_size=4)
+    rb = rt_b.submit(p, procedure=Single())
+    rt_b.drain()
+    np.testing.assert_array_equal(rt_a.result(ra).response,
+                                  rt_b.result(rb).response)
+
+
+# ------------------------------------------------------------ multi-model
+def test_route_end_to_end_two_models_one_pool(tiny, strong):
+    """Route serves a stream on a weak/strong pair sharing one paged
+    pool: strong-routed requests decode bitwise what a strong-only
+    runtime produces, the block ledger balances across both models'
+    tables, and every token/dispatch is attributed to its model."""
+    cfg, model, params = tiny
+    _, s_model, s_params = strong
+    rng = np.random.default_rng(6)
+    prompts = _prompts(cfg, 6, rng)
+    route_strong = {0, 2, 5}                    # by query id
+
+    rt = ContinuousBatchingRuntime(model, params, n_slots=4, max_len=16,
+                                   max_new=4, temperature=0.0, seed=0,
+                                   block_size=4)
+    rt.register_model("strong", s_model, s_params)
+    proc = Route(weak="default", strong="strong",
+                 predictor=lambda r, h: 1.0 if r.query in route_strong
+                 else -1.0, threshold=0.0)
+    ids = [rt.submit(p, query=i, procedure=proc)
+           for i, p in enumerate(prompts)]
+    rt.drain()
+    rt.assert_ledger_balanced()
+
+    # reference runs: weak-only and strong-only single-model runtimes
+    def reference(m, pr):
+        ref = ContinuousBatchingRuntime(m, pr, n_slots=4, max_len=16,
+                                        max_new=4, temperature=0.0, seed=0,
+                                        block_size=4)
+        rids = [ref.submit(p, budget=1) for p in prompts]
+        ref.drain()
+        return [list(ref.result(i).response) for i in rids]
+
+    weak_rows = reference(model, params)
+    strong_rows = reference(s_model, s_params)
+    n_strong_tokens = 0
+    for i, rid in enumerate(ids):
+        r = rt.result(rid)
+        assert r.state == RequestState.DONE
+        assert len(r.children) == 1
+        want_model = "strong" if i in route_strong else "default"
+        assert r.children[0].model_id == want_model
+        assert r.proc["route"] == ("strong" if i in route_strong
+                                   else "weak")
+        want = strong_rows[i] if i in route_strong else weak_rows[i]
+        assert list(r.response) == want
+        if i in route_strong:
+            n_strong_tokens += len(r.children[0].tokens)
+
+    # per-model attribution: the strong model's decode tokens are exactly
+    # the routed children's, and the per-model split sums to the totals
+    pm = rt.metrics.per_model
+    assert pm["strong"].children == len(route_strong)
+    assert pm["strong"].decode_tokens == n_strong_tokens
+    assert (sum(m.decode_tokens for m in pm.values())
+            == rt.metrics.decode_tokens)
+    assert (sum(m.prefill_tokens for m in pm.values())
+            == rt.metrics.prefill_tokens)
+    assert (sum(m.device_dispatches for m in pm.values())
+            == rt.metrics.device_dispatches)
+    assert (sum(m.host_syncs for m in pm.values())
+            == rt.metrics.host_syncs)
+    s = rt.metrics.summary()
+    assert s["model/strong/decode_tokens"] == n_strong_tokens
+    # strong-routed prompts prefilled on the strong model too
+    assert pm["strong"].prefill_tokens > 0
+
+
+def test_route_cascade_escalates_on_low_reward(tiny, strong):
+    """cascade=True decodes the weak child first and escalates through
+    on_child_done only when the weak answer scores low; the strong child
+    re-prefills the prompt as a second phase on the shared pool."""
+    cfg, model, params = tiny
+    _, s_model, s_params = strong
+    rng = np.random.default_rng(7)
+    prompts = _prompts(cfg, 3, rng)
+    bad = {1}                                   # weak answer scores 0 here
+
+    def reward(q, rows):
+        return [0.0 if q in bad else 1.0 for _ in rows]
+
+    rt = ContinuousBatchingRuntime(model, params, n_slots=3, max_len=16,
+                                   max_new=3, temperature=0.0, seed=0,
+                                   block_size=4, reward_fn=reward)
+    rt.register_model("strong", s_model, s_params)
+    proc = Route(weak="default", strong="strong",
+                 predictor=lambda r, h: 1.0, threshold=0.0,
+                 cascade=True, cascade_threshold=0.5)
+    ids = [rt.submit(p, query=i, procedure=proc)
+           for i, p in enumerate(prompts)]
+    rt.drain()
+    rt.assert_ledger_balanced()
+    for i, rid in enumerate(ids):
+        r = rt.result(rid)
+        models = [c.model_id for c in r.children]
+        if i in bad:
+            assert models == ["default", "strong"]
+            assert r.proc["escalated"]
+        else:
+            assert models == ["default"]
+    assert rt.metrics.per_model["strong"].children == len(bad)
+
+
+class _SpawnTwice(DecodeProcedure):
+    """Escalation on the SAME model: the second child arrives after the
+    probe stash is gone, so it must re-prefill as a phase (radix-hit)."""
+
+    def plan(self, request, probe_hidden, runtime):
+        return Plan([ChildGroup("default", 1)])
+
+    def on_child_done(self, request, child, runtime):
+        if len(request.children) == 1:
+            return [ChildGroup("default", 1)]
+        return None
+
+
+def test_same_model_escalation_rephases_through_radix(tiny):
+    cfg, model, params = tiny
+    rng = np.random.default_rng(8)
+    p = _prompts(cfg, 1, rng, lo=9, hi=10)[0]
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=16,
+                                   max_new=3, temperature=0.0, seed=0,
+                                   block_size=4)
+    rid = rt.submit(p, procedure=_SpawnTwice())
+    rt.drain()
+    rt.assert_ledger_balanced()
+    r = rt.result(rid)
+    assert len(r.children) == 2
+    # greedy: the re-phased child reproduces the first bitwise
+    assert r.children[0].tokens == r.children[1].tokens
+    # the second phase's prefill hit the radix cache (published by the
+    # first) instead of recomputing the full prompt
+    assert rt.metrics.prefix_hits >= 1
+
+
+def test_group_max_new_caps_child(tiny, strong):
+    cfg, model, params = tiny
+    _, s_model, s_params = strong
+    rng = np.random.default_rng(9)
+    p = _prompts(cfg, 1, rng)[0]
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=16,
+                                   max_new=5, temperature=0.0, seed=0,
+                                   block_size=4)
+    rt.register_model("strong", s_model, s_params)
+    proc = Route(weak="default", strong="strong",
+                 predictor=lambda r, h: 1.0, threshold=0.0,
+                 max_new_strong=2)
+    rid = rt.submit(p, procedure=proc)
+    rt.drain()
+    rt.assert_ledger_balanced()
+    c = rt.result(rid).children[0]
+    assert c.model_id == "strong" and len(c.tokens) == 2
+
+
+@pytest.mark.slow
+def test_adaptive_routing_dominates_random_baseline(tiny, strong):
+    """The acceptance sweep: over strong-fraction targets, online Route
+    with a gap predictor dominates core.routing's random baseline, and
+    the runtime's measured reward equals eval_routing's offline
+    prediction for the same mask (deterministic greedy pools)."""
+    cfg, model, params = tiny
+    _, s_model, s_params = strong
+    rng = np.random.default_rng(10)
+    prompts = _prompts(cfg, 8, rng)
+    n = len(prompts)
+
+    def reward(q, rows):
+        # deterministic, query-dependent score of a token row
+        return [float(((int(np.sum(r)) % 97) + 3 * q) % 13) for r in rows]
+
+    def single_run(m, pr):
+        rt = ContinuousBatchingRuntime(m, pr, n_slots=4, max_len=16,
+                                       max_new=4, temperature=0.0, seed=0,
+                                       block_size=4, reward_fn=reward)
+        ids = [rt.submit(p, query=i, procedure=Single())
+               for i, p in enumerate(prompts)]
+        rt.drain()
+        return np.asarray([rt.result(i).reward for i in ids])
+
+    rew_w = single_run(model, params)
+    rew_s = single_run(s_model, s_params)
+    gap = rew_s - rew_w                         # oracle routing statistic
+    pred = {i: float(gap[i]) for i in range(n)}
+
+    rng2 = np.random.default_rng(0)
+    for frac in (0.25, 0.5, 0.75):
+        thr = Route.calibrate_threshold(gap, frac)
+        rt = ContinuousBatchingRuntime(model, params, n_slots=4,
+                                       max_len=16, max_new=4,
+                                       temperature=0.0, seed=0,
+                                       block_size=4, reward_fn=reward)
+        rt.register_model("strong", s_model, s_params)
+        proc = Route(weak="default", strong="strong",
+                     predictor=lambda r, h: pred[r.query], threshold=thr)
+        ids = [rt.submit(p, query=i, procedure=proc)
+               for i, p in enumerate(prompts)]
+        rt.drain()
+        mask = np.asarray([rt.result(i).proc["route"] == "strong"
+                           for i in ids])
+        adaptive = float(np.mean([rt.result(i).reward for i in ids]))
+        # online == offline evaluation of the same mask on the same pools
+        assert adaptive == pytest.approx(
+            eval_routing(rew_w[:, None], rew_s[:, None], mask))
+        # random-mask baseline at the same strong fraction
+        k = int(mask.sum())
+        rnd_masks = []
+        for _ in range(16):
+            m = np.zeros(n, bool)
+            m[rng2.permutation(n)[:k]] = True
+            rnd_masks.append(eval_routing(rew_w[:, None], rew_s[:, None],
+                                          m))
+        assert adaptive >= np.mean(rnd_masks) - 1e-9
+    # the oracle statistic must dominate strictly somewhere unless the
+    # two models are reward-identical on every prompt
+    assert np.any(gap != 0)
+
+
+def test_single_holds_child_reservation_on_tight_pool(tiny):
+    """Non-parking procedures must keep the standing one-child block
+    reservation at prefill admission: on a pool too small to decode every
+    prompt at once, Single requests serialize through it instead of all
+    prefilling and then deadlocking on fan-out memory."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+               for _ in range(3)]
+    # 7 usable blocks; each request worst-cases 4 (2 prompt + 2 tail).
+    # Without the standing reservation all three prompts would prefill
+    # (6 blocks), leaving 1 < 2 for any child's tail — a permanent stall
+    rt = ContinuousBatchingRuntime(model, params, n_slots=3, max_len=16,
+                                   max_new=8, temperature=0.0, seed=0,
+                                   block_size=4, n_blocks=8,
+                                   prefix_cache=False)
+    ids = [rt.submit(p, procedure=Single()) for p in prompts]
+    rt.drain()                                  # must not stall
+    rt.assert_ledger_balanced()
+    one = ContinuousBatchingRuntime(model, params, n_slots=3, max_len=16,
+                                    max_new=8, temperature=0.0, seed=0,
+                                    block_size=4)
+    ref = [one.submit(p, budget=1) for p in prompts]
+    one.drain()
+    for rid, rr in zip(ids, ref):
+        np.testing.assert_array_equal(rt.result(rid).response,
+                                      one.result(rr).response)
+
+
+class _EscalateWhilePending(DecodeProcedure):
+    """plan() fans out two children; the first retirement escalates with
+    a third while the second still awaits admission — the request must
+    not be enqueued into the fanout deque twice."""
+
+    def plan(self, request, probe_hidden, runtime):
+        return Plan([ChildGroup("default", 2)])
+
+    def on_child_done(self, request, child, runtime):
+        if len(request.children) == 2:
+            return [ChildGroup("default", 1)]
+        return None
+
+
+def test_escalation_while_children_pending_no_duplicate_fanout(tiny):
+    cfg, model, params = tiny
+    rng = np.random.default_rng(12)
+    p = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    # find the first greedy token, then declare it EOS so the first
+    # child retires AT ADMISSION, while its sibling is still pending
+    # (n_slots=1 keeps the sibling un-admitted)
+    probe = ContinuousBatchingRuntime(model, params, n_slots=1, max_len=16,
+                                      max_new=2, temperature=0.0, seed=0,
+                                      block_size=4)
+    pid = probe.submit(p, budget=1)
+    probe.drain()
+    eos = int(probe.result(pid).response[0])
+
+    rt = ContinuousBatchingRuntime(model, params, n_slots=1, max_len=16,
+                                   max_new=2, temperature=0.0, seed=0,
+                                   block_size=4, eos_id=eos)
+    rid = rt.submit(p, procedure=_EscalateWhilePending())
+    rt.drain()                                  # IndexError without guard
+    rt.assert_ledger_balanced()
+    r = rt.result(rid)
+    assert len(r.children) == 3
+    assert all(c.done() for c in r.children)
+
+
+# --------------------------------------------------------- pool programs
+def test_pool_programs_shared_across_instances(tiny, strong):
+    """The jitted cache-IO helpers (copy_block et al.) are module-level,
+    keyed on cache structure: two pools — and the weak/strong pair —
+    share one program object instead of recompiling per instance."""
+    cfg, model, params = tiny
+    _, s_model, _ = strong
+    p1 = PagedKVPool(model, 2, 16, block_size=4)
+    p2 = PagedKVPool(model, 4, 32, block_size=8)
+    assert p1._progs["default"] is p2._progs["default"]
+    # layer count is a stacked axis, not pytree structure: the weak and
+    # strong stacks share the same cached program object too (distinct
+    # shapes just trace separately inside it)
+    p1.add_model("strong", s_model)
+    assert p1._progs["strong"] is p1._progs["default"]
+    p3 = PagedKVPool(s_model, 2, 16, block_size=4)
+    assert p3._progs["default"] is p1._progs["strong"]
+
+
+def test_register_model_rejects_slot_pool_and_dupes(tiny, strong):
+    cfg, model, params = tiny
+    _, s_model, s_params = strong
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=12,
+                                   max_new=2, temperature=0.0, seed=0,
+                                   pool="slots")
+    with pytest.raises(ValueError, match="paged"):
+        rt.register_model("strong", s_model, s_params)
+    rt2 = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=12,
+                                    max_new=2, temperature=0.0, seed=0,
+                                    block_size=4)
+    rt2.register_model("strong", s_model, s_params)
+    with pytest.raises(ValueError, match="already registered"):
+        rt2.register_model("strong", s_model, s_params)
+    with pytest.raises(KeyError, match="unregistered"):
+        rt2.submit(np.zeros(4, np.int32),
+                   procedure=Single("nonexistent"))
