@@ -44,6 +44,14 @@ perf trajectory is tracked across PRs.
     PYTHONPATH=src python benchmarks/bench_serving.py --smoke    # CI gate
     PYTHONPATH=src python benchmarks/bench_serving.py --smoke --prefix-heavy
     PYTHONPATH=src python benchmarks/bench_serving.py --smoke --horizon 16
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke --gauntlet
+
+Traffic gauntlet (`--gauntlet`): a seeded trace with bursty arrivals,
+mixed lengths, hot shared prefixes, a weak/strong mix, and tenant skew,
+replayed with the traffic subsystem (priority scheduling + radix-cheap
+preemption + SLO degradation) and strict FIFO. Gates: strictly higher
+goodput-under-SLO than FIFO, >= 1 preemption, ledger balanced after
+drain, and preempted-then-resumed requests bitwise identical.
 """
 from __future__ import annotations
 
@@ -53,7 +61,7 @@ from typing import List
 
 import numpy as np
 
-from benchmarks.common import emit, save_result
+from benchmarks.common import emit, merge_result, save_result, scaled_strong_lm
 
 
 def _make_workload(n: int, vocab: int, width: int, *, mean_gap: float,
@@ -284,21 +292,13 @@ def _routing_probe(model, params, vocab, *, n_req, sp_lo, sp_hi, max_new,
     Also reports the per-model compute split (`ServingMetrics.per_model`)
     so the strong fraction is visible in tokens, not just request
     counts."""
-    import dataclasses as _dc
-
-    import jax
-
     from repro.core.routing import eval_routing
-    from repro.models import build_model
     from repro.serving import ContinuousBatchingRuntime, Route, Single
 
-    s_cfg = _dc.replace(model.cfg, n_layers=1)
-    s_model = build_model(s_cfg)
-    # scale params: at init scale every random tiny model greedily echoes
-    # its last prompt token (tied-embedding logit dominance), making the
-    # weak/strong reward gap identically zero
-    s_params = jax.tree.map(lambda x: x * 3.0,
-                            s_model.init(jax.random.PRNGKey(seed + 7)))
+    # shared fixture (benchmarks/common.py -> repro.models.fixtures): the
+    # ×3 param scaling breaks the tied-embedding greedy-echo degeneracy
+    # that would zero the weak/strong reward gap
+    _, s_model, s_params = scaled_strong_lm(n_layers=1, seed=seed + 7)
     rng = np.random.default_rng(seed)
     prompts = [rng.integers(0, vocab, (L,)).astype(np.int32)
                for L in rng.integers(sp_lo, sp_hi, size=n_req)]
@@ -359,10 +359,134 @@ def _routing_probe(model, params, vocab, *, n_req, sp_lo, sp_hi, max_new,
                 per_model_last=pm)
 
 
+def _traffic_gauntlet(model, params, vocab, *, seed=0, n_bulk=10, n_acme=6,
+                      n_misc=4, smoke=False):
+    """Trace-replay gauntlet for the traffic subsystem: one seeded trace
+    with bursty arrivals, mixed prompt/output lengths, hot shared
+    prefixes, a weak/strong procedure mix, and tenant skew — replayed
+    twice through the SAME runtime shape, once with the traffic subsystem
+    (priority + preemption + SLO degradation) and once strict-FIFO.
+
+    The trace: a 'bulk' tenant floods priority-0 best-of-k work at t=0
+    (resolved via budget_fn, so SLO degradation can shave it), an 'acme'
+    tenant sends priority-2 requests sharing a hot 2-block prefix
+    shortly after (the latency-sensitive class), and a 'misc' tenant
+    sends priority-1 Single('strong') requests (the weak/strong mix).
+
+    Goodput-under-SLO is scored post hoc: every acme request's deadline
+    is 0.6x its OWN latency under the FIFO replay (bulk/misc get
+    effectively-infinite deadlines). SLOs never influence scheduling, so
+    this is a pure relative gate — 'priority scheduling + preemption must
+    cut high-priority latency under overload by >= 40% vs FIFO' — robust
+    to machine speed: arrivals are scheduler-tick based (deterministic
+    schedules) and the deadline scale comes from the FIFO run itself.
+
+    Correctness rides along: both replays drain with the block ledger
+    audited exactly, and every (request, child-index) pair present in
+    both runs must be token-bitwise identical under greedy — preemption
+    and degradation may change child COUNTS, never common children."""
+    from repro.serving import (ContinuousBatchingRuntime, Single,
+                               TrafficConfig)
+
+    rng = np.random.default_rng(seed)
+    hot = rng.integers(0, vocab, size=(8,)).astype(np.int32)
+    # arrivals are in SCHEDULER TICKS, not wall seconds — the replay is
+    # bitwise deterministic across machine speeds (a wall-clock replay
+    # made preemption counts flaky: a fast box drained the burst before
+    # the high-priority tenant ever arrived). Wall time is only measured.
+    trace = []                  # (arrival_tick, tenant, priority, kwargs)
+    for i in range(n_bulk):     # burst at tick 0: longer outputs, fan-out
+        p = rng.integers(0, vocab, size=(int(rng.integers(6, 12)),))
+        trace.append((0, "bulk", 0,
+                      dict(prompt=p.astype(np.int32), max_new=8)))
+    for i in range(n_acme):     # hot shared prefix, short tails + outputs
+        tail = rng.integers(0, vocab, size=(int(rng.integers(2, 4)),))
+        p = np.concatenate([hot, tail.astype(np.int32)])
+        trace.append((6 + 2 * i, "acme", 2,
+                      dict(prompt=p, max_new=4, budget=1)))
+    for i in range(n_misc):     # strong-model singles, mid priority
+        p = rng.integers(0, vocab, size=(int(rng.integers(4, 8)),))
+        trace.append((8 + 4 * i, "misc", 1,
+                      dict(prompt=p.astype(np.int32), max_new=4,
+                           procedure=Single("strong"))))
+    trace.sort(key=lambda e: e[0])
+    _, s_model, s_params = scaled_strong_lm(n_layers=1, seed=seed + 7)
+
+    def replay(traffic):
+        rt = ContinuousBatchingRuntime(
+            model, params, n_slots=4, max_len=24, max_new=8,
+            temperature=0.0, seed=0, pool="paged", block_size=4,
+            n_blocks=30, prefill_window=4, horizon=2,
+            budget_fn=lambda r, h: 3, traffic=traffic)
+        rt.register_model("strong", s_model, s_params)
+        ids, meta = [], []
+        i = tick = 0
+        while i < len(trace) or rt.pending():
+            while i < len(trace) and trace[i][0] <= tick:
+                _, tenant, pri, kw = trace[i]
+                sub_t = time.perf_counter()
+                ids.append(rt.submit(tenant=tenant, priority=pri,
+                                     procedure=kw.get("procedure"),
+                                     prompt=kw["prompt"],
+                                     max_new=kw["max_new"],
+                                     budget=kw.get("budget")))
+                meta.append((sub_t, tenant))
+                i += 1
+            if rt.pending():
+                rt.step()
+            tick += 1
+        rt.assert_ledger_balanced()
+        lat = {rid: rt.requests[rid].done_t - sub_t
+               for rid, (sub_t, _) in zip(ids, meta)}
+        kids = {rid: [list(c.tokens) for c in rt.requests[rid].children]
+                for rid in ids}
+        return dict(ids=ids, meta=meta, lat=lat, kids=kids,
+                    summary=rt.metrics.summary(),
+                    queue_waits=list(rt.metrics.queue_waits),
+                    ttfts=list(rt.metrics.ttfts))
+
+    fifo = replay(None)
+    traf = replay(TrafficConfig(target_load=0.5, min_horizon=1,
+                                weight_base=4.0))
+
+    # post-hoc SLOs from the FIFO replay (see docstring)
+    slo = {rid: (0.6 * fifo["lat"][rid] if tenant == "acme" else 1e6)
+           for rid, (_, tenant) in zip(fifo["ids"], fifo["meta"])}
+    goodput_fifo = sum(fifo["lat"][r] <= slo[r] for r in fifo["ids"])
+    goodput_traf = sum(traf["lat"][r] <= slo[r] for r in traf["ids"])
+    acme = [r for r, (_, t) in zip(fifo["ids"], fifo["meta"])
+            if t == "acme"]
+    bitwise = all(
+        fifo["kids"][r][j] == traf["kids"][r][j]
+        for r in fifo["ids"]
+        for j in range(min(len(fifo["kids"][r]), len(traf["kids"][r]))))
+    s = traf["summary"]
+
+    def pct(xs, q):
+        return float(np.percentile(xs, q)) if xs else float("nan")
+
+    out = dict(
+        n_requests=len(trace), seed=seed,
+        goodput_under_slo=goodput_traf, goodput_fifo=goodput_fifo,
+        acme_latency_fifo_p50=pct([fifo["lat"][r] for r in acme], 50),
+        acme_latency_traffic_p50=pct([traf["lat"][r] for r in acme], 50),
+        queue_wait_p50_s=pct(traf["queue_waits"], 50),
+        queue_wait_p99_s=pct(traf["queue_waits"], 99),
+        ttft_p50_s=pct(traf["ttfts"], 50),
+        ttft_p99_s=pct(traf["ttfts"], 99),
+        preemptions=int(s["preemptions"]),
+        preempted_blocks_freed=int(s["preempted_blocks_freed"]),
+        degraded_requests=int(s["degraded_requests"]),
+        degraded_share=float(s["degraded_share"]),
+        bitwise_equal=bool(bitwise), smoke=smoke)
+    return out
+
+
 def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
         n_slots: int = 8, mean_gap: float = 0.05, seed: int = 0,
         smoke: bool = False, prefix_only: bool = False,
-        routing_only: bool = False, horizon: int = 8) -> None:
+        routing_only: bool = False, gauntlet_only: bool = False,
+        horizon: int = 8) -> None:
     import jax
 
     from repro.configs import get_config
@@ -402,6 +526,38 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
                                              ro["curve"]["random"])) > 0, \
                 ro["curve"]
             print("# routing smoke OK")
+        return
+
+    if gauntlet_only:
+        # the traffic-subsystem gate: priority + preemption + SLO
+        # degradation vs strict FIFO on one seeded trace
+        tg = _traffic_gauntlet(
+            model, params, cfg.vocab_size, seed=seed,
+            n_bulk=10 if smoke else 16, n_acme=6 if smoke else 10,
+            n_misc=4 if smoke else 8, smoke=smoke)
+        emit("serving/gauntlet/goodput", float(tg["goodput_under_slo"]),
+             f"fifo {tg['goodput_fifo']}")
+        emit("serving/gauntlet/preemptions", float(tg["preemptions"]),
+             f"{tg['preempted_blocks_freed']} blocks freed")
+        emit("serving/gauntlet/acme_p50",
+             tg["acme_latency_traffic_p50"] * 1e6,
+             f"fifo {tg['acme_latency_fifo_p50']*1e3:.0f}ms")
+        save_result("bench_serving_gauntlet", tg)
+        # merge into the CI artifact (the main smoke run writes the rest)
+        merge_result("BENCH_serving", {"traffic_gauntlet": tg})
+        print(f"# gauntlet: goodput-under-SLO {tg['goodput_under_slo']} vs "
+              f"FIFO {tg['goodput_fifo']} on {tg['n_requests']} requests; "
+              f"acme p50 {tg['acme_latency_traffic_p50']*1e3:.0f}ms vs "
+              f"{tg['acme_latency_fifo_p50']*1e3:.0f}ms FIFO; "
+              f"{tg['preemptions']} preemptions, degraded share "
+              f"{tg['degraded_share']:.2f}, "
+              f"bitwise_equal={tg['bitwise_equal']}")
+        if smoke:
+            assert tg["bitwise_equal"], \
+                "preemption/degradation perturbed greedy tokens"
+            assert tg["goodput_under_slo"] > tg["goodput_fifo"], tg
+            assert tg["preemptions"] >= 1, tg
+            print("# gauntlet smoke OK")
         return
 
     if prefix_only:
@@ -587,9 +743,16 @@ if __name__ == "__main__":
     ap.add_argument("--routing", action="store_true",
                     help="run only the weak/strong routing probe "
                          "(two-model shared pool, procedure API)")
+    ap.add_argument("--gauntlet", action="store_true",
+                    help="run only the traffic-subsystem trace-replay "
+                         "gauntlet (priority + preemption + SLO vs FIFO)")
     ap.add_argument("--horizon", type=int, default=8,
                     help="horizon-fused decode width for the decode-heavy "
                          "probe (1 disables fusion)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for the arrival/length/budget RNGs (makes "
+                         "runs and the --smoke gates reproducible)")
     args = ap.parse_args()
     run(smoke=args.smoke, prefix_only=args.prefix_heavy,
-        routing_only=args.routing, horizon=args.horizon)
+        routing_only=args.routing, gauntlet_only=args.gauntlet,
+        horizon=args.horizon, seed=args.seed)

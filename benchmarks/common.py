@@ -35,6 +35,39 @@ def save_result(name: str, obj) -> None:
         json.dump(obj, f, indent=1, default=float)
 
 
+def merge_result(name: str, patch: dict) -> None:
+    """Merge keys into an existing result JSON (or create it). Lets two
+    bench modes (e.g. the serving smoke and the traffic gauntlet) share
+    one artifact without the later run clobbering the earlier one."""
+    import json
+
+    path = RESULTS / f"{name}.json"
+    obj = {}
+    if path.exists():
+        with open(path) as f:
+            obj = json.load(f)
+    obj.update(patch)
+    save_result(name, obj)
+
+
+# canonical weak/strong tiny-model pair (single source, shared with
+# tests/conftest.py — see repro.models.fixtures for the greedy-echo
+# rationale behind the ×3 scaling)
+def tiny_lm(*args, **kwargs):
+    from repro.models.fixtures import tiny_lm as fn
+    return fn(*args, **kwargs)
+
+
+def scaled_strong_lm(*args, **kwargs):
+    from repro.models.fixtures import scaled_strong_lm as fn
+    return fn(*args, **kwargs)
+
+
+def weak_strong_pair(*args, **kwargs):
+    from repro.models.fixtures import weak_strong_pair as fn
+    return fn(*args, **kwargs)
+
+
 # ---------------------------------------------------------------------------
 # shared experiment fixture: trained tiny LM + labeled query pools
 # ---------------------------------------------------------------------------

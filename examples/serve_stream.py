@@ -11,12 +11,18 @@ barrier, no second prefill).
                           the strong model, and the metrics report the
                           per-model compute split
     --procedure single    one child per request (uniform b=1 floor)
+    --stream              async token-by-token delivery: mixed-priority
+                          requests through the traffic subsystem's
+                          AsyncTokenStreamer, tokens printed the tick
+                          they decode (high-priority tokens interleave
+                          ahead of earlier low-priority submissions)
 
 Run:  PYTHONPATH=src python examples/serve_stream.py [--procedure route]
 (~1 min on CPU; untrained weights — the demo shows the serving machinery,
 not model quality.)
 """
 import argparse
+import asyncio
 import dataclasses
 
 import jax
@@ -27,16 +33,55 @@ from repro.core import AdaptivePolicy
 from repro.core.difficulty import init_mlp_probe
 from repro.models import build_model
 from repro.serving import (ContinuousBatchingRuntime, Route, ServingEngine,
-                           Single)
+                           Single, TrafficConfig)
+from repro.serving.traffic import AsyncTokenStreamer
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--procedure", choices=("bestofk", "route", "single"),
                 default="bestofk")
 ap.add_argument("--strong-frac", type=float, default=0.4,
                 help="route: targeted strong-model fraction")
+ap.add_argument("--stream", action="store_true",
+                help="async token-by-token streaming over the traffic "
+                     "subsystem (priority classes + SLO plumbing)")
 args = ap.parse_args()
 
 rng = np.random.default_rng(0)
+
+if args.stream:
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
+                              dtype="float32", n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rt = ContinuousBatchingRuntime(
+        model, params, n_slots=4, max_len=32, max_new=8, temperature=0.0,
+        seed=0, traffic=TrafficConfig())
+    streamer = AsyncTokenStreamer(rt)
+    jobs = []                               # (rid, tenant, priority)
+    for i, L in enumerate(rng.integers(6, 16, size=6)):
+        tenant = "acme" if i % 3 == 0 else "bulk"
+        pri = 2 if tenant == "acme" else 0
+        rid = streamer.submit(rng.integers(0, cfg.vocab_size, size=(L,)),
+                              budget=1, tenant=tenant, priority=pri,
+                              slo=5.0)
+        jobs.append((rid, tenant, pri))
+
+    async def consume(rid, tenant, pri):
+        async for tok in streamer.tokens(rid):
+            print(f"  req {rid} [{tenant}/p{pri}] -> {tok}")
+        r = rt.result(rid)
+        print(f"req {rid} done: {len(r.children[0].tokens)} tokens "
+              f"latency={r.latency*1e3:.0f}ms met_slo={r.met_slo()}")
+
+    async def main():
+        server = asyncio.ensure_future(streamer.serve())
+        await asyncio.gather(*[consume(*j) for j in jobs])
+        await server
+
+    asyncio.run(main())
+    print("metrics:",
+          {k: round(v, 3) for k, v in rt.metrics.summary().items()})
+    raise SystemExit(0)
 
 if args.procedure == "route":
     # two model-zoo configs, one shared paged pool

@@ -1,0 +1,64 @@
+"""Canonical tiny weak/strong model pair for tests and benchmarks.
+
+Every routing/traffic fixture needs two registry models with a *nonzero*
+greedy reward gap, and there is exactly one gotcha in building them from
+random init: at init scale, tied-embedding logit dominance makes every
+random tiny model greedily echo its last prompt token — two such models
+produce identical rows and the weak/strong gap collapses to zero (a
+routing test passes vacuously). The fix, shipped with the procedure API,
+is scaling one side's params away from init scale (×3 by default).
+
+That fixture used to live copy-pasted in ``tests/test_procedure.py`` and
+``benchmarks/bench_serving.py``; this module is the single source, so a
+future routing test cannot silently reintroduce a zero gap by rebuilding
+the pair from raw init. Imports are lazy: pulling in the fixture helper
+must not drag jax into collection-time paths that do not use it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+def tiny_lm(arch: str = "qwen2-0.5b", *, n_layers: int = 2, seed: int = 0,
+            dtype: str = "float32"):
+    """Reduced tiny LM at init scale: (cfg, model, params)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype=dtype,
+                              n_layers=n_layers)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(seed))
+
+
+def scaled_strong_lm(arch: str = "qwen2-0.5b", *, n_layers: int = 1,
+                     seed: int = 99, scale: float = 3.0,
+                     dtype: str = "float32"):
+    """The 'strong' half of a routing pair: (cfg, model, params) with
+    params scaled ×``scale`` off init — breaks the tied-embedding
+    greedy-echo degeneracy so the weak/strong reward gap is nonzero.
+    The roles are symbolic; what matters is distinct weights and a
+    distinct KV store on the shared pool."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype=dtype,
+                              n_layers=n_layers)
+    model = build_model(cfg)
+    params = jax.tree.map(lambda x: x * scale,
+                          model.init(jax.random.PRNGKey(seed)))
+    return cfg, model, params
+
+
+def weak_strong_pair(arch: str = "qwen2-0.5b", *, weak_seed: int = 0,
+                     strong_seed: int = 99, scale: float = 3.0,
+                     dtype: str = "float32"):
+    """Both halves at once: ((cfg_w, model_w, params_w),
+    (cfg_s, model_s, params_s))."""
+    return (tiny_lm(arch, seed=weak_seed, dtype=dtype),
+            scaled_strong_lm(arch, seed=strong_seed, scale=scale,
+                             dtype=dtype))

@@ -8,3 +8,5 @@ from repro.serving.radix_cache import RadixCache  # noqa: F401
 from repro.serving.request import ChildSeq, Request, RequestState  # noqa: F401
 from repro.serving.runtime import ContinuousBatchingRuntime  # noqa: F401
 from repro.serving.scheduler import AdaptiveScheduler, ServeBatchResult  # noqa: F401
+from repro.serving.traffic import (AsyncTokenStreamer, PriorityClassQueues,  # noqa: F401
+                                   TrafficConfig, TrafficController)

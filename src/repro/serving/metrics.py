@@ -68,6 +68,12 @@ class ServingMetrics:
     horizon_fused_steps: int = 0    # decode steps executed inside horizons
     per_model: Dict[str, ModelMetrics] = field(default_factory=dict)
     latencies: List[float] = field(default_factory=list)
+    queue_waits: List[float] = field(default_factory=list)  # submit->admit
+    ttfts: List[float] = field(default_factory=list)    # submit->1st token
+    preemptions: int = 0            # traffic: victims evicted + requeued
+    preempted_blocks_freed: int = 0  # blocks released by preemption
+    degraded_requests: int = 0      # budgets shaved by the load price
+    degraded_budget_children: int = 0   # Σ children shaved off
     start_t: Optional[float] = None
     end_t: Optional[float] = None
 
@@ -174,6 +180,27 @@ class ServingMetrics:
         self._touch()
         self.default_responses += 1
 
+    def record_queue_wait(self, wait: float) -> None:
+        """Seconds from submit() to the admission pop that starts the
+        request's first prefill (requeues do not re-stamp)."""
+        self._touch()
+        self.queue_waits.append(float(wait))
+
+    def record_ttft(self, ttft: float) -> None:
+        """Seconds from submit() to the request's first sampled token."""
+        self._touch()
+        self.ttfts.append(float(ttft))
+
+    def record_preemption(self, blocks_freed: int = 0) -> None:
+        self._touch()
+        self.preemptions += 1
+        self.preempted_blocks_freed += max(0, int(blocks_freed))
+
+    def record_degraded(self, children_shaved: int) -> None:
+        self._touch()
+        self.degraded_requests += 1
+        self.degraded_budget_children += max(0, int(children_shaved))
+
     def record_done(self, latency: Optional[float]) -> None:
         self._touch()
         self.requests_done += 1
@@ -247,4 +274,13 @@ class ServingMetrics:
             "tokens_per_sec": self.tokens_per_sec,
             "latency_p50_s": percentile(self.latencies, 50),
             "latency_p95_s": percentile(self.latencies, 95),
+            "queue_wait_p50_s": percentile(self.queue_waits, 50),
+            "queue_wait_p95_s": percentile(self.queue_waits, 95),
+            "ttft_p50_s": percentile(self.ttfts, 50),
+            "ttft_p95_s": percentile(self.ttfts, 95),
+            "preemptions": self.preemptions,
+            "preempted_blocks_freed": self.preempted_blocks_freed,
+            "degraded_requests": self.degraded_requests,
+            "degraded_share": (self.degraded_requests
+                               / max(self.requests_done, 1)),
         }

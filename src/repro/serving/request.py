@@ -139,6 +139,14 @@ class Request:
     reward: float = 0.0
     submit_t: float = field(default_factory=time.perf_counter)
     done_t: Optional[float] = None
+    # --- traffic subsystem (priority scheduling / preemption / SLO) ---
+    tenant: str = "default"                 # admission-budget accounting key
+    priority: int = 1                       # higher = served first
+    slo: Optional[float] = None             # deadline in seconds from submit
+    admit_t: Optional[float] = None         # first pop from the queue
+    first_token_t: Optional[float] = None   # first sampled token (TTFT)
+    preemptions: int = 0                    # times evicted and requeued
+    degraded: bool = False                  # budget shaved under load
 
     @property
     def prompt_len(self) -> int:
@@ -147,6 +155,14 @@ class Request:
     @property
     def latency(self) -> Optional[float]:
         return None if self.done_t is None else self.done_t - self.submit_t
+
+    def met_slo(self) -> Optional[bool]:
+        """True/False once finished against a deadline; None when no SLO
+        is set or the request is still in flight."""
+        lat = self.latency
+        if self.slo is None or lat is None:
+            return None
+        return lat <= self.slo
 
     def all_children_done(self) -> bool:
         """No child (live or queued) and no phase awaiting a prefill —

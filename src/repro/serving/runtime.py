@@ -85,6 +85,7 @@ from repro.serving.procedure import (BestOfK, ChildGroup, DecodeProcedure,
 from repro.serving.radix_cache import RadixCache
 from repro.serving.request import (ChildSeq, PrefillStash, Request,
                                    RequestState, StashGroup)
+from repro.serving.traffic.controller import TrafficConfig, TrafficController
 
 
 # cache/logits/pos/keys are donated: the caller rebinds all four every tick,
@@ -327,7 +328,8 @@ class ContinuousBatchingRuntime:
                  prefix_cache: bool = True,
                  prefill_chunk: Optional[int] = None,
                  horizon: int = 8,
-                 admission_lookahead: int = 4):
+                 admission_lookahead: int = 4,
+                 traffic: Optional[TrafficConfig] = None):
         assert pool in ("paged", "slots")
         if pool == "paged" and not supports_paging(model, max_len):
             pool = "slots"          # sliding-window wrap: paged is inexact
@@ -359,7 +361,19 @@ class ContinuousBatchingRuntime:
         V = model.lm.vocab_padded
         self.keys = jnp.zeros((n_slots, 2), jnp.uint32)
         self.slots: List[Optional[ChildSeq]] = [None] * n_slots
-        self.queue: deque = deque()       # Requests awaiting prefill
+        # traffic subsystem: priority scheduling + preemption + SLO-aware
+        # degradation (serving/traffic/). The scheduler replaces the FIFO
+        # deque behind the same peek/pop protocol, so every admission path
+        # below is policy-agnostic.
+        self.traffic: Optional[TrafficController] = None
+        if traffic is not None:
+            if pool != "paged":
+                raise ValueError(
+                    "the traffic subsystem needs the paged pool "
+                    "(preemption is a block-ledger operation)")
+            self.traffic = TrafficController(traffic)
+        self.queue = (deque() if self.traffic is None
+                      else self.traffic.make_queue())  # awaiting prefill
         self.fanout: deque = deque()      # Requests with un-slotted children
         self.requests: Dict[int, Request] = {}
         self._next_id = 0
@@ -384,6 +398,7 @@ class ContinuousBatchingRuntime:
             self._tok = np.zeros(n_slots, np.int32)   # next input token
             self._pos = np.zeros(n_slots, np.int32)   # its decode position
             self._fanout_blocked = False
+            self._prefill_blocked = False   # admission starved (traffic)
             # multi-token chunked prefill: up to `prefill_chunk` prompt
             # tokens per prefilling slot per tick under one compiled
             # varlen program. Recurrent-state stacks advance state one
@@ -459,11 +474,16 @@ class ContinuousBatchingRuntime:
     # ------------------------------------------------------------- submit
     def submit(self, prompt: np.ndarray, *, budget: Optional[int] = None,
                query: Any = None, max_new: Optional[int] = None,
-               procedure: Optional[DecodeProcedure] = None) -> int:
+               procedure: Optional[DecodeProcedure] = None,
+               tenant: str = "default", priority: int = 1,
+               slo: Optional[float] = None) -> int:
         """Enqueue one request. ``procedure`` drives its lifecycle (see
         serving/procedure.py); omitted, the runtime's default ``BestOfK``
         reproduces the historical budget/fan-out semantics exactly —
-        ``budget=``/``budget_fn``/``set_budget`` all still work."""
+        ``budget=``/``budget_fn``/``set_budget`` all still work.
+        ``tenant``/``priority``/``slo`` feed the traffic subsystem
+        (serving/traffic/): without ``traffic=`` they are recorded but
+        scheduling stays strict FIFO."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         mn = self.max_new if max_new is None else int(max_new)
         if len(prompt) + mn > self.pool.max_len:
@@ -490,9 +510,13 @@ class ContinuousBatchingRuntime:
                 raise ValueError(
                     f"request needs up to {worst} blocks but the pool has "
                     f"{self.pool.n_blocks - 1} usable")
+        if slo is None and self.traffic is not None:
+            slo = self.traffic.cfg.default_slo
         r = Request(id=self._next_id, prompt=prompt, query=query,
                     budget=None if budget is None else int(budget),
-                    max_new=mn, procedure=proc, model_id=probe)
+                    max_new=mn, procedure=proc, model_id=probe,
+                    tenant=str(tenant), priority=int(priority),
+                    slo=None if slo is None else float(slo))
         self._next_id += 1
         self.requests[r.id] = r
         self.queue.append(r)
@@ -576,6 +600,9 @@ class ContinuousBatchingRuntime:
         taken = 0
         while self.queue and (limit is None or taken < limit):
             r = self.queue.popleft()
+            if r.admit_t is None:
+                r.admit_t = time.perf_counter()
+                self.metrics.record_queue_wait(r.admit_t - r.submit_t)
             by_len.setdefault(r.prompt_len, []).append(r)
             taken += 1
         for sp, reqs in by_len.items():
@@ -642,9 +669,12 @@ class ContinuousBatchingRuntime:
             # first pop and crash the admission loop on empty pending)
             if not was_pending:
                 self.fanout.append(r)
-        elif r.stash is not None:
+        elif r.stash is not None and not r.pending:
             # nothing rides the current stash: drop it (and the standing
-            # child reservation sized for a child that will never spawn)
+            # child reservation sized for a child that will never spawn).
+            # `not r.pending` guards the preemption-resume path — there
+            # the fresh stash/table/reservation belong to the evicted
+            # children about to re-admit, even when no NEW group spawned
             if self.pool_kind == "paged":
                 self._release_prompt_table(r)
                 self.pool.unreserve(r.reserved)
@@ -692,6 +722,14 @@ class ContinuousBatchingRuntime:
         if not r.planned:
             self._run_plan(r)
             return
+        if r.pending:
+            # preemption resume: the evicted children are back in
+            # ``pending`` and this fresh prefill is their prompt — re-enter
+            # the fan-out backlog (the append is safe: preemption removed
+            # the request from ``fanout``, and a request is never preempted
+            # twice without an intervening resume)
+            r.state = RequestState.DECODE
+            self.fanout.append(r)
         groups: List[ChildGroup] = []
         while (r.pending_phases
                and r.pending_phases[0].model_id == r.model_id):
@@ -707,6 +745,12 @@ class ContinuousBatchingRuntime:
         the degenerate no-reservation path."""
         if self.pool_kind != "paged" or budget <= 0:
             return budget
+        if self.traffic is not None:
+            # SLO-aware degradation: under load, shave the ask to what
+            # clears the load price *before* gating on free memory —
+            # degrade deliberately (priority-weighted) rather than letting
+            # the memory gate clip everyone equally
+            budget = self.traffic.degrade_budget(self, r, budget)
         per_child = self._child_owned_blocks(r)
         guaranteed = 1 if r.reserved else 0
         # radix-held blocks are a cache, not a commitment: fan-out
@@ -876,6 +920,10 @@ class ContinuousBatchingRuntime:
                 for (r, c, _), tok_i in zip(sub, toks_np):
                     tok_i = int(tok_i)
                     c.tokens.append(tok_i)
+                    if r.first_token_t is None:
+                        r.first_token_t = time.perf_counter()
+                        self.metrics.record_ttft(r.first_token_t
+                                                 - r.submit_t)
                     if self.eos_id is not None and tok_i == self.eos_id:
                         c.eos = True
                         self.metrics.record_eos(c.max_new - len(c.tokens))
@@ -903,6 +951,7 @@ class ContinuousBatchingRuntime:
         fully-matched prompt drops its last matched block."""
         admitted = 0
         B = self.pool.block_size
+        self._prefill_blocked = False
         while (self.queue and not self._fanout_blocked
                and len(self._pref) < self.prefill_slots
                and self.pool.n_free_slots > 0
@@ -930,6 +979,12 @@ class ContinuousBatchingRuntime:
             # reserve for their group's first child.
             if not r.planned and r.procedure.may_defer(r, self):
                 child_need = 0
+            elif r.pending:
+                # preemption resume: the first re-admitted child is
+                # pending[0], so the standing reservation is sized to it
+                # (not to a future phase's group)
+                child_need = self._child_owned_blocks(
+                    r, r.pending[0].max_new)
             elif r.planned and r.pending_phases:
                 child_need = self._child_owned_blocks(
                     r, r.pending_phases[0].max_new)
@@ -938,8 +993,12 @@ class ContinuousBatchingRuntime:
             if not self._can_reserve_or_evict(need + child_need):
                 if matched:
                     radix.unmatch(matched)
+                self._prefill_blocked = True    # preemption-addressable
                 break
             self.queue.popleft()
+            if r.admit_t is None:
+                r.admit_t = time.perf_counter()
+                self.metrics.record_queue_wait(r.admit_t - r.submit_t)
             self.pool.reserve(need + child_need)
             r.reserved = child_need
             slot = self.pool.alloc_slot()
@@ -956,6 +1015,13 @@ class ContinuousBatchingRuntime:
             self._tok[slot] = int(r.prompt[m * B])
             self._pos[slot] = m * B
             admitted += 1
+        if (self.queue and not self._fanout_blocked
+                and len(self._pref) < self.prefill_slots
+                and self._window_used() < self.prefill_window
+                and self.pool.n_free_slots == 0):
+            # queue starved on *slots* (not the prefill-slot cap or the
+            # stash window): evicting a resident would unblock it
+            self._prefill_blocked = True
         return admitted
 
     def _reorder_queue_by_prefix(self) -> None:
@@ -1026,6 +1092,9 @@ class ContinuousBatchingRuntime:
             t = int(tok_np[s])
             c.tokens.append(t)
             r = self.requests[c.request_id]
+            if r.first_token_t is None:
+                r.first_token_t = time.perf_counter()
+                self.metrics.record_ttft(r.first_token_t - r.submit_t)
             if self.eos_id is not None and t == self.eos_id:
                 c.eos = True
                 self.metrics.record_eos(c.max_new - len(c.tokens))
@@ -1193,9 +1262,93 @@ class ContinuousBatchingRuntime:
         self.metrics.record_horizon(len(live_dec), H, emitted, model=mid)
         return True
 
+    # --------------------------------------------------------- preemption
+    def _preempt_request(self, r: Request) -> int:
+        """Evict a resident request and requeue it through the existing
+        phase/QUEUED re-entry path; returns blocks freed.
+
+        The eviction is radix-cheap: before any block is released, the
+        request's full prompt blocks are published into the model's radix
+        tree (idempotent — chunked prefill usually already did), so the
+        tree's refcounts keep the prompt KV alive across the eviction and
+        the resumed request re-prefills near-free (adopting the published
+        blocks at admission, recomputing only the final prompt token).
+        Live children are reset to token 0; their per-child RNG streams
+        (``fold_in(fold_in(seed, id), index)``) restart from scratch on
+        re-admission, so the regenerated sequences — and the request's
+        final response — are bitwise identical to an unpreempted run.
+        Already-retired children (EOS / budget done) keep their tokens."""
+        pool = self.pool
+        B = pool.block_size
+        free_before = pool.available_blocks
+        live = [c for c in r.children if c.slot is not None]
+        model = live[0].model_id if live else r.model_id
+        radix = self._radix_of(model)
+        table = r.table if r.table is not None else (
+            live[0].table if live else None)
+        full = r.prompt_len // B
+        if radix is not None and table is not None and len(table) >= full:
+            created = radix.publish(r.prompt, table, full)
+            if created:
+                self.metrics.record_radix(published=created)
+        for c in live:
+            s = c.slot
+            self.slots[s] = None
+            pool.release_slot(s)
+            self._tok[s] = 0
+            self._pos[s] = 0
+            c.slot = None
+            pool.release_table(c.table)
+            c.table = None
+            pool.unreserve(c.reserved)
+            c.reserved = 0
+            c.tokens = []
+            c.eos = False
+        try:
+            self.fanout.remove(r)       # mid-fanout victim (rare)
+        except ValueError:
+            pass
+        # evicted children rejoin any never-slotted ones in index order so
+        # re-admission replays the original fan-out sequence
+        merged = {c.index: c for c in r.pending}
+        merged.update({c.index: c for c in live})
+        r.pending = [merged[i] for i in sorted(merged)]
+        self._drop_stash(r)
+        self._release_prompt_table(r)
+        pool.unreserve(r.reserved)
+        r.reserved = 0
+        r.hidden = None                 # recomputed (identically) on resume
+        r.model_id = model
+        r.state = RequestState.QUEUED
+        r.prefill_pos = 0
+        r.prefix_len = 0
+        r.preemptions += 1
+        self.queue.append(r)
+        freed = pool.available_blocks - free_before
+        self.metrics.record_preemption(freed)
+        return freed
+
+    def _preempt_for(self, beneficiary: Request) -> bool:
+        """Pick (policy: TrafficController.choose_victim) and evict one
+        resident request strictly below ``beneficiary``'s priority."""
+        victim = self.traffic.choose_victim(self, beneficiary)
+        if victim is None:
+            return False
+        self._preempt_request(victim)
+        return True
+
     def _step_paged(self) -> bool:
         progressed = bool(self._try_fanout_paged())
+        traffic = self.traffic
+        preempt = traffic is not None and traffic.cfg.preempt
+        if (preempt and self._fanout_blocked and self.fanout
+                and self._preempt_for(self.fanout[0])):
+            # freed blocks belong to the backlog head: retry immediately
+            progressed = bool(self._try_fanout_paged()) or True
         progressed = bool(self._admit_prefill_paged()) or progressed
+        if (preempt and self._prefill_blocked and self.queue
+                and self._preempt_for(self.queue[0])):
+            progressed = bool(self._admit_prefill_paged()) or True
         chunked = self.prefill_chunk > 1
         if chunked and self._pref:
             progressed = self._chunk_prefill_tick() or progressed
@@ -1230,6 +1383,11 @@ class ContinuousBatchingRuntime:
             if (self.horizon > 1 and live_dec and not self._pref
                     and not self.pool._has_state):
                 H = self._horizon_width(live_dec)
+                if self.traffic is not None:
+                    # load shedding: shorter horizon leases return freed
+                    # slots/blocks to admission sooner under pressure
+                    # (halving preserves the power-of-two quantization)
+                    H = self.traffic.effective_horizon(self, H)
                 if H > 1:
                     self._horizon_tick(mid, live_dec, H)
                     continue

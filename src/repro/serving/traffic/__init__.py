@@ -1,0 +1,18 @@
+"""Production traffic subsystem: priority scheduling, radix-cheap
+preemption policy, SLO-aware degradation, and async streaming.
+
+Layered on :class:`~repro.serving.runtime.ContinuousBatchingRuntime`
+via its ``traffic=TrafficConfig(...)`` constructor knob — the runtime
+owns the ledger mechanics (preempt/requeue/resume); this package owns
+the policy (who goes first, who gets evicted, how much to degrade).
+"""
+from repro.serving.traffic.controller import TrafficConfig, TrafficController
+from repro.serving.traffic.scheduler import PriorityClassQueues
+from repro.serving.traffic.stream import AsyncTokenStreamer
+
+__all__ = [
+    "TrafficConfig",
+    "TrafficController",
+    "PriorityClassQueues",
+    "AsyncTokenStreamer",
+]

@@ -1,0 +1,167 @@
+"""Traffic control policy: load-responsive pricing, SLO-aware
+degradation, preemption victim selection, and tenant budget pricing.
+
+The paper's allocation story is a price dual: a request deserves its
+``i``-th child while the marginal value ``w/(i)`` clears the price
+``lambda``. This module reuses exactly that machinery
+(``core/allocator.py``'s :func:`allocate_at_price` /
+:func:`price_for_budget`) for serving economics:
+
+* **Load price.** ``price()`` maps block-pool pressure (resident +
+  queued demand over capacity) to a scalar ``lambda >= 0`` — zero below
+  ``target_load``, rising linearly above it.
+* **Budget degradation.** Under load, a request's best-of-``b`` ask is
+  shaved to the longest prefix of its harmonic marginal-value row
+  ``weight / (j+1)`` that clears the price — high-priority requests
+  (larger ``weight``) keep more children at the same price, exactly the
+  paper's adaptive ``b_i`` but driven by load instead of predicted
+  difficulty. Never below ``b_min``: degrade, don't starve.
+* **Horizon degradation.** The fused decode horizon halves per unit of
+  price down to ``min_horizon`` — shorter host-sync leases return freed
+  blocks faster when the pool is tight (greedy tokens are horizon-
+  invariant, so this is latency-shaping, not output-shaping).
+* **Tenant budgets.** Each tenant's share of a sliding admission window
+  is an ``allocate_at_price`` split of the window across tenant-weight
+  harmonic rows — weighted max-min fairness from the same dual.
+* **Victims.** Preemption picks the cheapest-to-kill resident:
+  lowest priority first, then fewest generated tokens (least sunk
+  decode work to regenerate), id as the deterministic tie-break.
+
+Pure policy: no pool mutation happens here (the runtime's
+``_preempt_request`` owns the ledger dance).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.allocator import allocate_at_price, price_for_budget
+from repro.serving.request import Request, RequestState
+from repro.serving.traffic.scheduler import PriorityClassQueues
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    """Knobs for the traffic subsystem (all optional; defaults give
+    priority scheduling + preemption + degradation)."""
+
+    weight_base: float = 4.0        # class weight = weight_base ** priority
+    tenant_window: int = 32         # sliding admission window (requests)
+    b_min: int = 1                  # degradation floor for best-of-b
+    b_max: int = 32                 # longest harmonic row we price
+    preempt: bool = True            # evict under block/slot pressure
+    max_preemptions: int = 4        # per-request cap (no livelock)
+    degrade: bool = True            # shave budgets/horizons under load
+    target_load: float = 0.75       # pool load where the price lifts off
+    price_gain: float = 8.0         # d(price)/d(load) above target
+    min_horizon: int = 2            # floor for degraded fused horizon
+    default_slo: Optional[float] = None  # seconds; per-request slo wins
+
+
+class TrafficController:
+    """Stateless-ish policy object the runtime consults; see module doc."""
+
+    def __init__(self, cfg: TrafficConfig):
+        self.cfg = cfg
+
+    # ---------------------------------------------------------- scheduler
+    def make_queue(self) -> PriorityClassQueues:
+        return PriorityClassQueues(weight_base=self.cfg.weight_base,
+                                   window=self.cfg.tenant_window,
+                                   budget_fn=self.tenant_budgets)
+
+    def tenant_budgets(self, tenant_weights: Dict[str, float],
+                       window: int) -> Dict[str, int]:
+        """Split a ``window``-admission budget across tenants by pricing
+        their weight-scaled harmonic rows at the dual that spends exactly
+        the window — weighted fair shares, never below 1 (every tenant
+        always gets *some* service)."""
+        tenants = sorted(tenant_weights)
+        if not tenants:
+            return {}
+        if len(tenants) == 1:
+            return {tenants[0]: window}
+        rows = np.stack([tenant_weights[t] / np.arange(1, window + 1)
+                         for t in tenants])
+        price = price_for_budget(rows, window / len(tenants), b_min=1,
+                                 iron=False)
+        shares = allocate_at_price(rows, price, b_min=1, iron=False)
+        return {t: int(s) for t, s in zip(tenants, shares)}
+
+    # --------------------------------------------------------------- load
+    def load(self, rt) -> float:
+        """Pool pressure in [0, inf): blocks resident plus worst-case
+        queued demand, over usable capacity."""
+        pool = rt.pool
+        capacity = max(1, pool.n_blocks - 1)        # minus the null block
+        used = capacity - pool.available_blocks
+        queued = sum(pool.blocks_for(r.prompt_len + r.max_new)
+                     for r in rt.queue)
+        return (used + queued) / capacity
+
+    def price(self, rt) -> float:
+        return max(0.0, self.cfg.price_gain * (self.load(rt)
+                                               - self.cfg.target_load))
+
+    # --------------------------------------------------------- degradation
+    def degrade_budget(self, rt, r: Request, budget: int) -> int:
+        """Shave a best-of-``budget`` ask to what clears the load price.
+        Returns the (possibly smaller) budget; flags the request and
+        records the shave when it bites."""
+        if not self.cfg.degrade or budget <= self.cfg.b_min:
+            return budget
+        price = self.price(rt)
+        if price <= 0.0:
+            return budget
+        width = min(budget, self.cfg.b_max)
+        row = (self.cfg.weight_base ** r.priority) / np.arange(1, width + 1)
+        b = int(allocate_at_price(row[None, :], price,
+                                  b_min=self.cfg.b_min, iron=False)[0])
+        b = min(budget, max(self.cfg.b_min, b))
+        if b < budget:
+            r.degraded = True
+            rt.metrics.record_degraded(budget - b)
+        return b
+
+    def effective_horizon(self, rt, horizon: int) -> int:
+        """Halve the fused horizon once per whole unit of price, floored
+        at ``min_horizon`` — cheap load shedding with bitwise-identical
+        greedy output."""
+        if not self.cfg.degrade or horizon <= self.cfg.min_horizon:
+            return horizon
+        h = horizon >> min(int(self.price(rt)), 30)
+        return max(self.cfg.min_horizon, h)
+
+    # ----------------------------------------------------------- victims
+    def choose_victim(self, rt, beneficiary: Request) -> Optional[Request]:
+        """Cheapest resident request strictly below the beneficiary's
+        priority, eligible for (another) preemption. Requests mid-fanout
+        or spanning models are skipped — their ledger state is transient
+        and not worth the complexity of unwinding."""
+        best, best_key = None, None
+        seen = set()
+        for c in rt.slots:
+            if c is None or c.request_id in seen:
+                continue
+            seen.add(c.request_id)
+            r = rt.requests[c.request_id]
+            if r is beneficiary or r.priority >= beneficiary.priority:
+                continue
+            if r.state is not RequestState.DECODE:
+                continue
+            if r.preemptions >= self.cfg.max_preemptions:
+                continue
+            live = [c for c in r.children if c.slot is not None]
+            if not live:
+                continue
+            models = {c.model_id for c in live} | {c.model_id
+                                                   for c in r.pending}
+            if len(models) != 1:
+                continue
+            sunk = sum(len(ch.tokens) for ch in live)
+            key = (r.priority, sunk, -r.id)
+            if best_key is None or key < best_key:
+                best, best_key = r, key
+        return best

@@ -1,0 +1,168 @@
+"""Priority scheduler: per-(tenant, priority-class) queues behind the
+runtime's queue protocol.
+
+The runtime's admission loop was written against ``collections.deque``
+(``[0]`` peek, ``popleft``, ``append``, ``appendleft``, iteration,
+``del q[j]``). :class:`PriorityClassQueues` keeps that exact protocol —
+so the radix-aware admission lookahead (``_reorder_queue_by_prefix``)
+keeps working unchanged as the tie-break — while replacing FIFO order
+with a smooth weighted-round-robin pick over per-class queues:
+
+* every request lands in the deque for its ``(tenant, priority)`` class;
+* each pick, every eligible class earns credit equal to its weight
+  (``weight_base ** priority``) and the class with the most credit wins
+  (ties: higher priority, then tenant name) and pays back the total —
+  classic smooth WRR, so service is proportional to weight, higher
+  classes go first under contention, and no class starves;
+* a tenant whose share of the last ``window`` admissions has exhausted
+  its token budget (priced by the price-dual allocator — see
+  ``TrafficController.tenant_budgets``) is skipped until the window
+  rolls, unless every queued tenant is over budget (work-conserving);
+* ``appendleft`` (used by the radix lookahead to pull a prefix-cache hit
+  forward, and nothing else) bypasses the pick: a dedicated front slot
+  is always served first, so peek-then-popleft stays coherent.
+
+Everything is deterministic: no RNG, no wall clock — same submissions,
+same pick order, every run.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+ClassKey = Tuple[str, int]                      # (tenant, priority)
+
+
+class PriorityClassQueues:
+    """Deque-compatible multi-class queue; see module docstring.
+
+    ``budget_fn(tenant_weights, window) -> {tenant: admissions}`` prices
+    each tenant's share of a ``window``-admission sliding window; None
+    disables tenant budgets (every tenant unlimited).
+    """
+
+    def __init__(self, *, weight_base: float = 4.0, window: int = 32,
+                 budget_fn: Optional[Callable[[Dict[str, float], int],
+                                              Dict[str, int]]] = None):
+        self.weight_base = float(weight_base)
+        self._front: deque = deque()            # appendleft'd: always first
+        self._classes: Dict[ClassKey, deque] = {}
+        self._credit: Dict[ClassKey, float] = {}
+        self._recent: deque = deque(maxlen=max(1, int(window)))
+        self._budget_fn = budget_fn
+        self._budgets: Dict[str, int] = {}
+        self._tenant_w: Dict[str, float] = {}
+
+    # ------------------------------------------------------------ weights
+    def weight(self, key: ClassKey) -> float:
+        return self.weight_base ** key[1]
+
+    def _refresh_budgets(self) -> None:
+        if self._budget_fn is None:
+            self._budgets = {t: 1 << 30 for t in self._tenant_w}
+        else:
+            self._budgets = dict(
+                self._budget_fn(dict(self._tenant_w), self._recent.maxlen))
+
+    # ---------------------------------------------------- deque protocol
+    def append(self, r) -> None:
+        key = (str(getattr(r, "tenant", "default")),
+               int(getattr(r, "priority", 1)))
+        q = self._classes.get(key)
+        if q is None:
+            q = self._classes[key] = deque()
+            self._credit.setdefault(key, 0.0)
+        w = self.weight(key)
+        if w > self._tenant_w.get(key[0], 0.0) or key[0] not in self._budgets:
+            # a tenant's budget weight is the strongest class it has ever
+            # queued (sticky, so budgets don't flap per request)
+            self._tenant_w[key[0]] = max(w, self._tenant_w.get(key[0], 0.0))
+            self._refresh_budgets()
+        q.append(r)
+
+    def appendleft(self, r) -> None:
+        self._front.appendleft(r)
+
+    def popleft(self):
+        if self._front:
+            return self._front.popleft()
+        key = self._pick(self._classes, self._credit, self._recent)
+        if key is None:
+            raise IndexError("pop from an empty PriorityClassQueues")
+        r = self._classes[key].popleft()
+        self._recent.append(key[0])
+        return r
+
+    def remove(self, r) -> None:
+        if r in self._front:
+            self._front.remove(r)
+            return
+        for q in self._classes.values():
+            if r in q:
+                q.remove(r)
+                return
+        raise ValueError("request not queued")
+
+    def __len__(self) -> int:
+        return len(self._front) + sum(len(q) for q in self._classes.values())
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+    def __iter__(self):
+        return iter(self._order())
+
+    def __getitem__(self, i: int):
+        if i == 0 and self._front:              # fast path: peek the head
+            return self._front[0]
+        return self._order()[i]
+
+    def __delitem__(self, i: int) -> None:
+        self.remove(self._order()[i])
+
+    # --------------------------------------------------------------- pick
+    def _spent(self, recent, tenant: str) -> int:
+        return sum(1 for t in recent if t == tenant)
+
+    def _pick(self, classes: Dict[ClassKey, deque],
+              credit: Dict[ClassKey, float], recent) -> Optional[ClassKey]:
+        """One smooth-WRR pick over the nonempty classes (mutates the
+        passed credit dict — callers simulate by passing copies)."""
+        keys = [k for k, q in classes.items() if q]
+        if not keys:
+            return None
+        budgets = self._budgets
+        elig = [k for k in keys
+                if self._spent(recent, k[0]) < budgets.get(k[0], 1 << 30)]
+        if not elig:                            # work-conserving fallback
+            elig = keys
+        total = 0.0
+        for k in elig:
+            credit[k] += self.weight(k)
+            total += self.weight(k)
+        best = max(elig, key=lambda k: (credit[k], k[1], k[0]))
+        credit[best] -= total
+        return best
+
+    def _order(self) -> List:
+        """The exact sequence successive popleft() calls would return,
+        computed by simulating the pick on copies of the scheduler state.
+        The admission lookahead indexes/iterates through this — so what
+        it peeks is what it gets."""
+        out = list(self._front)
+        classes = {k: deque(q) for k, q in self._classes.items() if q}
+        credit = dict(self._credit)
+        recent = deque(self._recent, maxlen=self._recent.maxlen)
+        while True:
+            key = self._pick(classes, credit, recent)
+            if key is None:
+                return out
+            out.append(classes[key].popleft())
+            recent.append(key[0])
+
+    # ---------------------------------------------------------- introspect
+    def class_depths(self) -> Dict[ClassKey, int]:
+        return {k: len(q) for k, q in self._classes.items() if q}
+
+    def tenant_budget(self, tenant: str) -> int:
+        return self._budgets.get(tenant, 1 << 30)

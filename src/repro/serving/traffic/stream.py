@@ -1,0 +1,95 @@
+"""Async token-by-token streaming over the runtime's step loop.
+
+The runtime is deliberately synchronous — one thread, one ``step()``
+tick. This surface adds streaming without changing that: a single
+``serve()`` coroutine ticks the runtime and, after every tick, pumps
+newly decoded tokens of each subscribed request into per-request asyncio
+queues; ``tokens(rid)`` is an async generator a client awaits.
+
+Preemption-safe by construction: emission tracks a per-request
+``emitted`` watermark over child 0's token list. A preempted request's
+children restart from their per-child RNG streams
+(``fold_in(fold_in(seed, rid), j)``), so the regenerated prefix is
+bitwise identical to what was already streamed — the watermark simply
+waits for the replay to catch back up, and the client never sees a
+duplicate or a divergent token.
+"""
+from __future__ import annotations
+
+import asyncio
+from dataclasses import dataclass, field
+from typing import Any, AsyncIterator, Dict, Optional
+
+from repro.serving.request import RequestState
+
+_DONE = object()
+
+
+@dataclass
+class _Session:
+    queue: "asyncio.Queue" = field(default_factory=asyncio.Queue)
+    emitted: int = 0
+    finished: bool = False
+
+
+class AsyncTokenStreamer:
+    """Wraps a runtime; see module docstring.
+
+    Usage::
+
+        streamer = AsyncTokenStreamer(rt)
+        rid = streamer.submit(prompt, max_new=16, priority=2)
+        server = asyncio.ensure_future(streamer.serve())
+        async for tok in streamer.tokens(rid):
+            ...
+        await server
+    """
+
+    def __init__(self, runtime):
+        self.rt = runtime
+        self._sessions: Dict[int, _Session] = {}
+
+    def submit(self, prompt, **kwargs) -> int:
+        rid = self.rt.submit(prompt, **kwargs)
+        self._sessions[rid] = _Session()
+        return rid
+
+    # ------------------------------------------------------------- serving
+    async def serve(self) -> None:
+        """Tick until the runtime drains, pumping tokens between ticks
+        and yielding to the event loop so consumers run interleaved."""
+        while self.rt.pending():
+            self.rt.step()
+            self._pump()
+            await asyncio.sleep(0)
+        self._pump()
+
+    def _pump(self) -> None:
+        for rid, s in self._sessions.items():
+            if s.finished:
+                continue
+            r = self.rt.requests.get(rid)
+            if r is None:
+                continue
+            child = r.children[0] if r.children else None
+            if child is not None and len(child.tokens) > s.emitted:
+                for tok in child.tokens[s.emitted:]:
+                    s.queue.put_nowait(int(tok))
+                s.emitted = len(child.tokens)
+            if r.state is RequestState.DONE:
+                s.finished = True
+                s.queue.put_nowait(_DONE)
+
+    async def tokens(self, rid: int) -> AsyncIterator[int]:
+        """Yield request ``rid``'s first-child tokens as they decode;
+        terminates when the request completes."""
+        s = self._sessions[rid]
+        while True:
+            item = await s.queue.get()
+            if item is _DONE:
+                return
+            yield item
+
+    def response(self, rid: int) -> Optional[Any]:
+        r = self.rt.requests.get(rid)
+        return None if r is None else r.response

@@ -5,8 +5,30 @@ property-based tests skip gracefully (instead of failing collection) when
 hypothesis isn't installed — it is a dev-only dependency, see
 requirements-dev.txt. Test modules fall back to these via
 ``from conftest import given, settings, st``.
+
+Also hosts the canonical weak/strong tiny-model pair (``tiny`` /
+``strong``) used by the procedure, routing, and traffic tests — single
+source in ``repro.models.fixtures`` so no test can rebuild the pair from
+raw init and silently reintroduce the zero routing gap (tied-embedding
+greedy echo; see that module's docstring).
 """
 import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny():
+    """Reduced 2-layer qwen2 at init scale: (cfg, model, params)."""
+    from repro.models.fixtures import tiny_lm
+    return tiny_lm(n_layers=2, seed=0)
+
+
+@pytest.fixture(scope="session")
+def strong():
+    """The 'strong' half of a routing pair: 1 layer, params ×3 off init
+    so the weak/strong greedy gap is nonzero (the roles are symbolic —
+    what matters is distinct weights and a distinct cache store)."""
+    from repro.models.fixtures import scaled_strong_lm
+    return scaled_strong_lm(n_layers=1, seed=99, scale=3.0)
 
 
 def given(*_args, **_kwargs):

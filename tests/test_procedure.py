@@ -1,45 +1,19 @@
 """Procedure-centric serving API: BestOfK back-compat (bitwise), the
 Route procedure end-to-end on a two-model shared paged pool, cascade
 escalation through on_child_done, per-model metrics attribution, and the
-module-level pool program cache."""
-import dataclasses
+module-level pool program cache.
 
+The weak/strong model pair comes from the shared ``tiny``/``strong``
+fixtures in conftest.py (single source: ``repro.models.fixtures``)."""
 import jax
 import numpy as np
 import pytest
 
-from repro.configs import get_config
 from repro.core.routing import eval_routing
-from repro.models import build_model
 from repro.serving import (AdaptiveScheduler, BestOfK, ChildGroup,
                            ContinuousBatchingRuntime, DecodeProcedure, Plan,
                            RequestState, Route, ServingEngine, Single)
 from repro.serving.paged_pool import PagedKVPool
-
-
-@pytest.fixture(scope="module")
-def tiny():
-    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
-                              dtype="float32", n_layers=2)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    return cfg, model, params
-
-
-@pytest.fixture(scope="module")
-def strong():
-    """A second registry model sharing the tiny model's vocab (the
-    'strong' decoder of a routing pair — the roles are symbolic; what
-    matters is distinct weights and a distinct cache store). Params are
-    scaled up: at init scale, tied-embedding logits make every random
-    model greedily echo its last prompt token, so both decoders would
-    produce identical rows and a zero routing gap."""
-    cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
-                              dtype="float32", n_layers=1)
-    model = build_model(cfg)
-    params = jax.tree.map(lambda x: x * 3.0,
-                          model.init(jax.random.PRNGKey(99)))
-    return cfg, model, params
 
 
 def _prompts(cfg, n, rng, lo=5, hi=11):
