@@ -240,6 +240,97 @@ def _horizon_probe(base_cfg, *, horizon, n_req=4, sp=6, max_new=33,
                 bitwise_equal=(rows_h == rows_1))
 
 
+def _mixed_probe(base_cfg, *, horizon=8, n_req=8, sp=40, max_new=25,
+                 n_slots=4, block_size=4, seed=0):
+    """Prefill/decode-interference probe for the fused mixed tick: a
+    deterministic scheduler-tick arrival rule (submit the next request
+    the moment no prefill is in flight) keeps a prompt streaming through
+    chunked prefill for nearly the whole run, so resident decodes face
+    continuous interference. Replayed three ways on the same tiny
+    1-layer dispatch-bound model as `_horizon_probe`, warm wave first:
+
+    * fused   — fuse_prefill=True: prefill rows ride the horizon scan
+      (the mixed program); the pre-refactor whole-pool fallback never
+      fires (`fallback_ticks == 0` on attention stacks);
+    * fallback — fuse_prefill=False: the pre-refactor behavior, decode
+      dropping to per-token dispatch whenever any slot prefills;
+    * floor   — each request submitted only after the previous drained:
+      zero overlap ever, so decode runs pure horizon ticks with the
+      same per-request probe/admission overheads. Its syncs/token is
+      the no-interference floor the fused run must stay within 1.2x of.
+
+    Greedy outputs are (seed, request, child)-determined, so all three
+    replays must be token-bitwise identical."""
+    import dataclasses as _dc
+    import time as _time
+
+    import jax
+
+    from repro.models import build_model
+    from repro.serving import ContinuousBatchingRuntime
+
+    cfg = _dc.replace(base_cfg, dtype="float32", n_layers=1, d_model=128,
+                      n_heads=2, n_kv_heads=2, d_ff=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    waves = [[rng.integers(0, cfg.vocab_size, (sp,)).astype(np.int32)
+              for _ in range(n_req)] for _ in range(2)]
+
+    def replay(fuse, serial=False):
+        rt = ContinuousBatchingRuntime(
+            model, params, n_slots=n_slots, max_len=sp + max_new + 1,
+            max_new=max_new, temperature=0.0, seed=0, pool="paged",
+            block_size=block_size, horizon=horizon, prefix_cache=False,
+            fuse_prefill=fuse, prefill_chunk=block_size)
+
+        def wave(prompts):
+            ids, i = [], 0
+            while i < len(prompts) or rt.pending():
+                if i < len(prompts) and not rt._pref and not rt.queue:
+                    if serial and rt.pending():
+                        pass            # strictly one request at a time
+                    else:
+                        ids.append(rt.submit(prompts[i], budget=1))
+                        i += 1
+                if rt.pending():
+                    rt.step()
+            return ids
+
+        wave(waves[0])                  # warm: compiles land off-clock
+        m = rt.metrics
+        base = (m.host_syncs, m.decode_tokens, m.mixed_ticks,
+                m.fallback_ticks, m.prefill_decode_overlap_tokens,
+                m.horizon_ticks)
+        t0 = _time.perf_counter()
+        ids = wave(waves[1])
+        wall = _time.perf_counter() - t0
+        rows = [list(rt.result(i).response) for i in ids]
+        rt.assert_ledger_balanced()
+        toks = m.decode_tokens - base[1]
+        fb = m.fallback_ticks - base[3]
+        fused_ticks = (m.mixed_ticks - base[2]) + (m.horizon_ticks - base[5])
+        return rows, dict(
+            tokens_per_sec=toks / wall, wall_s=wall, decode_tokens=toks,
+            syncs_per_token=(m.host_syncs - base[0]) / toks,
+            mixed_ticks=m.mixed_ticks - base[2],
+            fallback_ticks=fb,
+            fallback_fraction=fb / max(1, fb + fused_ticks),
+            overlap_tokens=m.prefill_decode_overlap_tokens - base[4])
+
+    replay(True)                        # cross-runtime jit warm
+    rows_f, fused = replay(True)
+    rows_u, fallback = replay(False)
+    rows_s, floor = replay(True, serial=True)
+    return dict(
+        horizon=horizon, fused=fused, fallback=fallback, floor=floor,
+        speedup=fused["tokens_per_sec"]
+        / max(fallback["tokens_per_sec"], 1e-9),
+        sync_ratio=fused["syncs_per_token"]
+        / max(floor["syncs_per_token"], 1e-9),
+        bitwise_equal=(rows_f == rows_u == rows_s))
+
+
 def _prefix_heavy_probe(model, params, vocab, *, n_req, pre_len, tail_len,
                         max_new, n_slots, block_size, seed=0):
     """Replay one greedy prefix-heavy stream (shared preamble, distinct
@@ -482,11 +573,26 @@ def _traffic_gauntlet(model, params, vocab, *, seed=0, n_bulk=10, n_acme=6,
     return out
 
 
+def _assert_mixed(mx) -> None:
+    """The --mixed acceptance gate: under continuous prefill/decode
+    interference the fused pipeline never drops to the pre-refactor
+    per-token fallback, beats it by >= 1.5x tokens/sec, and keeps
+    syncs/token within 1.2x of the no-overlap pure-horizon floor — all
+    token-bitwise identical to both baselines."""
+    assert mx["bitwise_equal"], "mixed fused tick perturbed greedy tokens"
+    assert mx["fused"]["fallback_ticks"] == 0, mx
+    assert mx["fused"]["mixed_ticks"] >= 1, mx
+    assert mx["fused"]["overlap_tokens"] > 0, mx
+    assert mx["fallback"]["fallback_ticks"] >= 1, mx["fallback"]
+    assert mx["speedup"] >= 1.5, mx
+    assert mx["sync_ratio"] <= 1.2, mx
+
+
 def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
         n_slots: int = 8, mean_gap: float = 0.05, seed: int = 0,
         smoke: bool = False, prefix_only: bool = False,
         routing_only: bool = False, gauntlet_only: bool = False,
-        horizon: int = 8) -> None:
+        mixed_only: bool = False, horizon: int = 8) -> None:
     import jax
 
     from repro.configs import get_config
@@ -560,6 +666,33 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
             print("# gauntlet smoke OK")
         return
 
+    if mixed_only:
+        # the standalone fused-mixed-tick gate: prefill/decode
+        # interference must no longer pay the pre-refactor whole-pool
+        # per-token fallback tax
+        mx = _mixed_probe(get_config("qwen2-0.5b").reduced(),
+                          horizon=max(2, horizon), seed=seed)
+        emit("serving/mixed/speedup", float(mx["speedup"]),
+             f"{mx['speedup']:.2f}x tokens/sec under interference")
+        emit("serving/mixed/syncs_per_token",
+             float(mx["fused"]["syncs_per_token"]),
+             f"{mx['sync_ratio']:.2f}x the no-overlap floor")
+        save_result("bench_serving_mixed", mx)
+        merge_result("BENCH_serving", {"mixed": mx})
+        print(f"# mixed H={mx['horizon']}: {mx['speedup']:.2f}x tokens/sec "
+              f"vs pre-refactor fallback under continuous prefill "
+              f"interference; fused fallback_ticks="
+              f"{mx['fused']['fallback_ticks']}, mixed_ticks="
+              f"{mx['fused']['mixed_ticks']}, overlap_tokens="
+              f"{mx['fused']['overlap_tokens']}; syncs/token "
+              f"{mx['fused']['syncs_per_token']:.3f} = "
+              f"{mx['sync_ratio']:.2f}x the pure-decode floor; "
+              f"bitwise_equal={mx['bitwise_equal']}")
+        if smoke:
+            _assert_mixed(mx)
+            print("# mixed smoke OK")
+        return
+
     if prefix_only:
         # the standalone prefix-heavy gate (CI runs this twice: XLA and
         # REPRO_DECODE_KERNEL=pallas interpret mode)
@@ -621,6 +754,9 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
     hz = _horizon_probe(get_config("qwen2-0.5b").reduced(), horizon=horizon,
                         seed=seed)
 
+    mx = _mixed_probe(get_config("qwen2-0.5b").reduced(),
+                      horizon=max(2, horizon), seed=seed)
+
     ro = _routing_probe(
         model, params, cfg.vocab_size, n_req=8 if smoke else 16,
         sp_lo=5, sp_hi=11, max_new=4 if smoke else max_new,
@@ -649,6 +785,11 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
     emit("serving/horizon/syncs_per_token",
          float(hz["fused"]["syncs_per_token"]),
          f"vs {hz['unfused']['syncs_per_token']:.2f} unfused")
+    emit("serving/mixed/speedup", float(mx["speedup"]),
+         f"{mx['speedup']:.2f}x tokens/sec under prefill interference")
+    emit("serving/mixed/syncs_per_token",
+         float(mx["fused"]["syncs_per_token"]),
+         f"{mx['sync_ratio']:.2f}x the no-overlap floor")
     mid_i = len(ro["curve"]["frac"]) // 2
     emit("serving/routing/adaptive_mid",
          float(ro["curve"]["adaptive"][mid_i]),
@@ -656,7 +797,7 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
          f"{ro['curve']['frac'][mid_i]:.2f}")
     save_result("bench_serving", dict(
         batch=batch, paged=paged, slots=slots, capacity=cap,
-        prefix_heavy=pf, horizon=hz, routing=ro,
+        prefix_heavy=pf, horizon=hz, mixed=mx, routing=ro,
         n_requests=n_requests, width=width, max_new=max_new,
         n_slots=n_slots, mean_gap=mean_gap,
         budgets_mean=float(np.mean(budgets)), speedup_vs_batch=speedup,
@@ -675,6 +816,12 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
         fused_dispatches_per_token=hz["fused"]["dispatches_per_token"],
         unfused_dispatches_per_token=hz["unfused"]["dispatches_per_token"],
         bitwise_equal=hz["bitwise_equal"],
+        mixed_speedup=mx["speedup"],
+        mixed_sync_ratio=mx["sync_ratio"],
+        mixed_fallback_ticks=mx["fused"]["fallback_ticks"],
+        mixed_fallback_fraction=mx["fused"]["fallback_fraction"],
+        mixed_overlap_tokens=mx["fused"]["overlap_tokens"],
+        mixed_bitwise_equal=mx["bitwise_equal"],
         stream_tokens_per_sec=paged["tokens_per_sec"],
         stream_latency_p50_s=paged["latency_p50_s"],
         speedup_vs_batch=speedup, smoke=smoke,
@@ -692,6 +839,13 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
           f"{hz['unfused']['syncs_per_token']:.3f} "
           f"({hz['sync_reduction']:.1f}x fewer), "
           f"bitwise_equal={hz['bitwise_equal']}")
+    print(f"# mixed H={mx['horizon']}: {mx['speedup']:.2f}x tokens/sec vs "
+          f"pre-refactor fallback under continuous prefill interference; "
+          f"fused fallback_ticks={mx['fused']['fallback_ticks']}, "
+          f"fallback_fraction={mx['fused']['fallback_fraction']:.2f}, "
+          f"syncs/token {mx['fused']['syncs_per_token']:.3f} = "
+          f"{mx['sync_ratio']:.2f}x the pure-decode floor; "
+          f"bitwise_equal={mx['bitwise_equal']}")
     print(f"# routing: weak-only {ro['weak_only']:.3f}, strong-only "
           f"{ro['strong_only']:.3f}; adaptive/random by frac: "
           + ", ".join(f"{f:.2f}:{a:.2f}/{r:.2f}" for f, a, r in
@@ -708,6 +862,9 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
             assert hz["speedup"] >= 1.5, hz
             assert (hz["fused"]["syncs_per_token"]
                     <= 1.0 / hz["effective_horizon"]), hz
+        # fused-mixed-tick acceptance: no fallback tax under continuous
+        # prefill/decode interference
+        _assert_mixed(mx)
         # CI regression gate for the throughput path (fixed seeds, tiny
         # model): correctness is pytest's job, this guards the *runtime*
         # plumbing — all three drivers drain, the paged pool strictly
@@ -746,6 +903,10 @@ if __name__ == "__main__":
     ap.add_argument("--gauntlet", action="store_true",
                     help="run only the traffic-subsystem trace-replay "
                          "gauntlet (priority + preemption + SLO vs FIFO)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="run only the fused mixed-tick probe (continuous "
+                         "prefill/decode interference vs the pre-refactor "
+                         "per-token fallback)")
     ap.add_argument("--horizon", type=int, default=8,
                     help="horizon-fused decode width for the decode-heavy "
                          "probe (1 disables fusion)")
@@ -755,4 +916,4 @@ if __name__ == "__main__":
     args = ap.parse_args()
     run(smoke=args.smoke, prefix_only=args.prefix_heavy,
         routing_only=args.routing, gauntlet_only=args.gauntlet,
-        horizon=args.horizon, seed=args.seed)
+        mixed_only=args.mixed, horizon=args.horizon, seed=args.seed)

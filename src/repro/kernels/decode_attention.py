@@ -245,15 +245,21 @@ def paged_decode_attention(q: jnp.ndarray, k_blocks: jnp.ndarray,
     g = H // KV
     kernel = functools.partial(_paged_kernel, block_b=B, groups=g,
                                sm_scale=1.0 / math.sqrt(hd))
+    # clamp the gather to the row's last live block: index maps feed the
+    # DMA pipeline regardless of the kernel's @pl.when compute skip, so
+    # without the clamp every grid step past `pos` still streamed a
+    # (B, KV, hd) tile — table padding and the horizon path's
+    # preallocated-but-unwritten blocks. Skipped steps never read the
+    # fetched tile, so re-fetching the live block is value-identical.
+    kv_map = lambda bi, ti, tbl, p: (tbl[bi, jnp.minimum(ti, p[bi] // B)],
+                                     0, 0, 0)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                  # tables, pos
         grid=(b, T),
         in_specs=[
             pl.BlockSpec((1, H, hd), lambda bi, ti, tbl, p: (bi, 0, 0)),
-            pl.BlockSpec((1, B, KV, hd),
-                         lambda bi, ti, tbl, p: (tbl[bi, ti], 0, 0, 0)),
-            pl.BlockSpec((1, B, KV, hd),
-                         lambda bi, ti, tbl, p: (tbl[bi, ti], 0, 0, 0)),
+            pl.BlockSpec((1, B, KV, hd), kv_map),
+            pl.BlockSpec((1, B, KV, hd), kv_map),
         ],
         out_specs=pl.BlockSpec((1, H, hd), lambda bi, ti, tbl, p: (bi, 0, 0)),
         scratch_shapes=[
@@ -293,15 +299,17 @@ def paged_chunk_attention(q: jnp.ndarray, k_blocks: jnp.ndarray,
     g = H // KV
     kernel = functools.partial(_chunk_kernel, block_b=B, groups=g,
                                chunk=C, sm_scale=1.0 / math.sqrt(hd))
+    # same DMA clamp as paged_decode_attention, against the last block
+    # any query row of the chunk can see (the compute guard's bound)
+    kv_map = lambda bi, ti, tbl, p: (
+        tbl[bi, jnp.minimum(ti, (p[bi] + C - 1) // B)], 0, 0, 0)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                  # tables, pos
         grid=(b, T),
         in_specs=[
             pl.BlockSpec((1, C, H, hd), lambda bi, ti, tbl, p: (bi, 0, 0, 0)),
-            pl.BlockSpec((1, B, KV, hd),
-                         lambda bi, ti, tbl, p: (tbl[bi, ti], 0, 0, 0)),
-            pl.BlockSpec((1, B, KV, hd),
-                         lambda bi, ti, tbl, p: (tbl[bi, ti], 0, 0, 0)),
+            pl.BlockSpec((1, B, KV, hd), kv_map),
+            pl.BlockSpec((1, B, KV, hd), kv_map),
         ],
         out_specs=pl.BlockSpec((1, C, H, hd),
                                lambda bi, ti, tbl, p: (bi, 0, 0, 0)),

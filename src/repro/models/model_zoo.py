@@ -104,14 +104,16 @@ class Model:
                                     valid, block_tables=block_tables)
 
     def decode_horizon(self, params, token, cache, pos, aux, H, transition,
-                       block_tables=None):
+                       block_tables=None, xs=None):
         """H decode steps fused into one lax.scan; see
         TransformerLM.decode_horizon. `transition` owns sampling/masking
-        (a serving-policy concern), the model owns threading its cache and
-        positions through the scan."""
+        and per-row roles (serving-policy concerns), the model owns
+        threading its cache and positions through the scan; `xs` is the
+        optional per-step scan input (e.g. the mixed program's prefetched
+        fed-token buffer)."""
         return self.lm.decode_horizon(params["lm"], token, cache, pos, aux,
                                       H, transition,
-                                      block_tables=block_tables)
+                                      block_tables=block_tables, xs=xs)
 
     @property
     def supports_chunked_prefill(self) -> bool:

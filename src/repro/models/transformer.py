@@ -467,15 +467,17 @@ class TransformerLM:
 
     def decode_horizon(self, params, token: jnp.ndarray, cache,
                        pos: jnp.ndarray, aux, H: int, transition,
-                       block_tables: Optional[jnp.ndarray] = None):
+                       block_tables: Optional[jnp.ndarray] = None,
+                       xs=None):
         """Fuse `H` decode steps into one `jax.lax.scan` program.
 
         Each scan iteration runs exactly the per-token :meth:`decode_step`
         (same traced computation, so greedy tokens are bitwise identical
         to H separate tick dispatches) and then hands the fresh next-token
-        logits to the caller-supplied ``transition``:
+        logits AND hidden state to the caller-supplied ``transition``:
 
-            transition(logits (b,V), token (b,), pos (b,), aux)
+            transition(logits (b,V), hidden (b,d), token (b,), pos (b,),
+                       aux, x)
                 -> (next_token, next_pos, next_aux, emit)
 
         The serving runtime's transition samples on device, freezes
@@ -484,18 +486,30 @@ class TransformerLM:
         horizon. `aux` is an arbitrary pytree carried across steps (RNG
         keys, remaining-token counters); `block_tables` is scan-invariant,
         which is why the caller must pre-extend every live sequence's
-        table to cover the whole horizon before dispatch. Returns
-        ``(token, pos, cache, aux, emits)`` with ``emits`` stacked over
-        the H steps."""
-        def step(carry, _):
+        table to cover the whole horizon before dispatch.
+
+        ``xs`` is an optional pytree of per-step scan inputs (leading
+        axis H), delivered to ``transition`` as ``x`` (None when ``xs``
+        is None). The serving runtime's *mixed* program threads a
+        prefetched ``(H, b)`` fed-token buffer through it so prefill
+        rows consume queued prompt tokens while decode rows feed back
+        their samples — the per-row role mask lives in the transition,
+        the model only threads cache and positions. ``hidden`` lets the
+        transition capture a prefill row's probe state the step its last
+        prompt token lands; callers that ignore it cost nothing (dead
+        code under XLA). Returns ``(token, pos, cache, aux, emits)``
+        with ``emits`` stacked over the H steps."""
+        def step(carry, x):
             tok, p, cch, ax = carry
-            logits, _, cch = self.decode_step(params, tok[:, None], cch, p,
-                                              block_tables=block_tables)
-            tok, p, ax, emit = transition(logits[:, 0], tok, p, ax)
+            logits, hidden, cch = self.decode_step(params, tok[:, None],
+                                                   cch, p,
+                                                   block_tables=block_tables)
+            tok, p, ax, emit = transition(logits[:, 0], hidden[:, 0],
+                                          tok, p, ax, x)
             return (tok, p, cch, ax), emit
 
         (token, pos, cache, aux), emits = jax.lax.scan(
-            step, (token, pos, cache, aux), None, length=H)
+            step, (token, pos, cache, aux), xs, length=H)
         return token, pos, cache, aux, emits
 
     def decode_chunk(self, params, tokens: jnp.ndarray, cache,

@@ -2,6 +2,7 @@ from repro.serving.engine import GenerationResult, ServingEngine, prefill  # noq
 from repro.serving.kv_pool import SlotKVPool  # noqa: F401
 from repro.serving.metrics import ModelMetrics, ServingMetrics  # noqa: F401
 from repro.serving.paged_pool import PagedKVPool  # noqa: F401
+from repro.serving.plan import ProgramPlan, TickPlan, plan_tick  # noqa: F401
 from repro.serving.procedure import (BestOfK, ChildGroup, DecodeProcedure,  # noqa: F401
                                      Plan, Route, Single)
 from repro.serving.radix_cache import RadixCache  # noqa: F401

@@ -66,6 +66,11 @@ class ServingMetrics:
     host_syncs: int = 0             # blocking device->host transfers
     horizon_ticks: int = 0          # fused multi-step scan dispatches
     horizon_fused_steps: int = 0    # decode steps executed inside horizons
+    mixed_ticks: int = 0            # fused dispatches carrying prefill rows
+    fallback_ticks: int = 0         # decode forced per-token by a prefill
+    prefill_decode_overlap_tokens: int = 0  # prompt tokens fed inside scans
+    fused_dispatches: int = 0       # horizon + mixed dispatches
+    fused_rows_sum: int = 0         # Σ rows carried by fused dispatches
     per_model: Dict[str, ModelMetrics] = field(default_factory=dict)
     latencies: List[float] = field(default_factory=list)
     queue_waits: List[float] = field(default_factory=list)  # submit->admit
@@ -156,6 +161,36 @@ class ServingMetrics:
         self.peak_children = max(self.peak_children, int(n_live))
         self.horizon_ticks += 1
         self.horizon_fused_steps += int(width)
+        self.fused_dispatches += 1
+        self.fused_rows_sum += int(n_live)
+
+    def record_mixed(self, n_dec: int, n_pref: int, width: int,
+                     n_emitted: int, pref_tokens: int,
+                     model: str = "default") -> None:
+        """One mixed fused dispatch: `width` scan steps carried `n_dec`
+        decode rows (emitting `n_emitted` sampled tokens) AND `n_pref`
+        prefill rows (consuming `pref_tokens` queued prompt tokens) in a
+        single program — the overlap the pre-refactor fallback threw
+        away. Tick/occupancy accounting mirrors record_horizon, with the
+        prefill rows' consumed tokens counted active (they occupied real
+        scan rows); prefill-token totals are recorded separately by the
+        caller via record_prefill."""
+        self._touch()
+        self.ticks += width
+        self.active_sum += int(n_emitted) + int(pref_tokens)
+        self.decode_tokens += int(n_emitted)
+        self.model(model).decode_tokens += int(n_emitted)
+        self.peak_children = max(self.peak_children, int(n_dec))
+        self.horizon_fused_steps += int(width)
+        self.mixed_ticks += 1
+        self.prefill_decode_overlap_tokens += int(pref_tokens)
+        self.fused_dispatches += 1
+        self.fused_rows_sum += int(n_dec) + int(n_pref)
+
+    def record_fallback(self, model: str = "default") -> None:
+        """Decode dropped to per-token dispatch because a prefill was in
+        flight and fusion was off — the tax the mixed program removes."""
+        self.fallback_ticks += 1
 
     def record_dispatch(self, n: int = 1, model: str = "default") -> None:
         self.device_dispatches += int(n)
@@ -270,6 +305,18 @@ class ServingMetrics:
             "dispatches_per_token": self.dispatches_per_token,
             "horizon_ticks": self.horizon_ticks,
             "horizon_fused_steps": self.horizon_fused_steps,
+            "mixed_ticks": self.mixed_ticks,
+            "fallback_ticks": self.fallback_ticks,
+            "fallback_fraction": (
+                self.fallback_ticks
+                / max(1, self.fallback_ticks + self.horizon_ticks
+                      + self.mixed_ticks)),
+            "prefill_decode_overlap_tokens":
+                self.prefill_decode_overlap_tokens,
+            "fused_row_occupancy": (
+                self.fused_rows_sum
+                / max(1, self.fused_dispatches * self.n_slots)
+                if self.n_slots else 0.0),
             "wall_s": self.wall,
             "tokens_per_sec": self.tokens_per_sec,
             "latency_p50_s": percentile(self.latencies, 50),

@@ -41,6 +41,7 @@ from typing import Any, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.serving.kv_pool import FreeList
 
@@ -302,6 +303,17 @@ class PagedKVPool:
         for _ in range(need):
             table.append(self.alloc_block(from_reservation=from_reservation))
         return max(0, need)
+
+    def dense_tables(self, tables) -> np.ndarray:
+        """Pack per-slot block tables (``{slot: [block, ...]}``) into the
+        ``(n_slots, blocks_per_seq)`` int32 operand every paged tick
+        program takes. Absent slots (and the tail past each table) stay
+        on the reserved null block 0 — dead rows compute harmless garbage
+        there, which is what lets every dispatch run one static shape."""
+        out = np.zeros((self.n_slots, self.blocks_per_seq), np.int32)
+        for s, t in tables.items():
+            out[s, :len(t)] = t
+        return out
 
     def incref(self, blk: int) -> None:
         assert 0 < blk < self.n_blocks and self._ref[blk] > 0

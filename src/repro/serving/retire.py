@@ -1,0 +1,495 @@
+"""Retirement layer of the serving tick pipeline (plan -> dispatch ->
+retire).
+
+Everything that happens to a request AFTER a device program returns
+lives here: consuming each program's host buffers (token appends, EOS
+and max_new accounting, prefill-probe stashes), radix publishing, slot
+and block frees, the procedure lifecycle (``plan`` / ``on_child_done``
+/ ``finalize`` routing and phase scheduling), preemption, streaming
+emit hooks, and the block-ledger audits. The runtime keeps thin
+delegates for the names tests and procedures reach for
+(``_preempt_request``, ``assert_ledger_balanced``, ``_run_plan``);
+all state still lives on the runtime — this class is behavior, not
+storage, so the pieces stay individually readable and the runtime
+module stays a scheduler.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.procedure import ChildGroup
+from repro.serving.request import (ChildSeq, Request, RequestState,
+                                   StashGroup)
+
+
+class Retirement:
+    """Host-side consumer of every tick program's results; owns the
+    request/child lifecycle from token to DONE. Holds only the runtime
+    reference."""
+
+    def __init__(self, rt):
+        self.rt = rt
+
+    # ------------------------------------------------- procedure routing
+    def run_plan(self, r: Request) -> None:
+        """Ask the request's procedure for its plan (probe prefill has
+        landed). None parks the request — the stash is marked deferred
+        and excluded from the prefill window until set_budget re-plans."""
+        rt = self.rt
+        plan = r.procedure.plan(r, r.hidden, rt)
+        if plan is None:
+            rt._defer_stash(r)
+            return
+        r.planned = True
+        self.apply_groups(r, list(plan.groups))
+
+    def apply_groups(self, r: Request, groups: List[ChildGroup]) -> None:
+        """Turn procedure child-groups into work. Groups on the model
+        whose prefill stash is live spawn immediately (they share the
+        probe prefill, exactly the old fan-out); groups on other models —
+        or arriving after the stash was dropped — queue a prefill *phase*
+        on their model. An empty plan with no children is the paper's
+        b_i = 0: release everything and answer with the default."""
+        rt = self.rt
+        was_pending = bool(r.pending)   # already in the fanout deque
+        spawned = 0
+        for g in groups:
+            if r.stash is not None and g.model_id == r.model_id:
+                spawned += self._spawn_group(r, g)
+            else:
+                if g.model_id not in rt.models:
+                    raise KeyError(f"plan names unregistered model "
+                                   f"{g.model_id!r}")
+                r.pending_phases.append(g)
+        if spawned:
+            r.state = RequestState.DECODE
+            # invariant: a request appears in rt.fanout exactly once,
+            # iff it has pending children — an on_child_done escalation
+            # landing while earlier children still await admission must
+            # not enqueue a duplicate (the stale entry would outlive the
+            # first pop and crash the admission loop on empty pending)
+            if not was_pending:
+                rt.fanout.append(r)
+        elif r.stash is not None and not r.pending:
+            # nothing rides the current stash: drop it (and the standing
+            # child reservation sized for a child that will never spawn).
+            # `not r.pending` guards the preemption-resume path — there
+            # the fresh stash/table/reservation belong to the evicted
+            # children about to re-admit, even when no NEW group spawned
+            if rt.pool_kind == "paged":
+                rt._release_prompt_table(r)
+                rt.pool.unreserve(r.reserved)
+                r.reserved = 0
+            rt._drop_stash(r)
+        if not r.children and not r.pending_phases and not r.pending:
+            self.finalize(r)            # empty plan: default response
+            return
+        self.maybe_start_next_phase(r)
+
+    def _spawn_group(self, r: Request, g: ChildGroup) -> int:
+        """Create g.n children on g.model_id sharing the live stash."""
+        mn = r.max_new if g.max_new is None else int(g.max_new)
+        if mn > r.max_new:
+            raise ValueError(
+                f"group max_new {mn} exceeds the request's {r.max_new}: "
+                "admission reservations are sized to the request")
+        for _ in range(int(g.n)):
+            c = ChildSeq(request_id=r.id, index=len(r.children),
+                         model_id=g.model_id, max_new=mn)
+            r.children.append(c)
+            r.pending.append(c)
+        return int(g.n)
+
+    def maybe_start_next_phase(self, r: Request) -> None:
+        """Queue the next pending phase's prefill once the current
+        stash/table are gone and no children await admission (phases are
+        sequential per request; distinct requests' phases interleave
+        freely)."""
+        if (not r.pending_phases or r.pending or r.stash is not None
+                or r.state in (RequestState.QUEUED,
+                               RequestState.PREFILLING)):
+            return
+        r.model_id = r.pending_phases[0].model_id
+        r.state = RequestState.QUEUED
+        r.prefill_pos = 0
+        r.prefix_len = 0
+        self.rt.queue.append(r)
+
+    def on_prefill_complete(self, r: Request) -> None:
+        """Prefill landed (probe or phase): plan once, then spawn every
+        queued group this phase's model satisfies."""
+        rt = self.rt
+        r.state = RequestState.PREFILL
+        if not r.planned:
+            self.run_plan(r)
+            return
+        if r.pending:
+            # preemption resume: the evicted children are back in
+            # ``pending`` and this fresh prefill is their prompt — re-enter
+            # the fan-out backlog (the append is safe: preemption removed
+            # the request from ``fanout``, and a request is never preempted
+            # twice without an intervening resume)
+            r.state = RequestState.DECODE
+            rt.fanout.append(r)
+        groups: List[ChildGroup] = []
+        while (r.pending_phases
+               and r.pending_phases[0].model_id == r.model_id):
+            groups.append(r.pending_phases.pop(0))
+        self.apply_groups(r, groups)
+
+    # ------------------------------------------- program result consumers
+    def _append_token(self, r: Request, c: ChildSeq, t: int) -> None:
+        c.tokens.append(t)
+        rt = self.rt
+        if rt.eos_id is not None and t == rt.eos_id:
+            c.eos = True
+            rt.metrics.record_eos(c.max_new - len(c.tokens))
+
+    def _finish_probe(self, s: int, r: Request, logits_row, hidden_row,
+                      state=None) -> None:
+        """A prefill slot computed its final prompt token: publishable
+        blocks are already in the radix tree (the caller published), so
+        stash the probe row, free the slot, and route to the
+        procedure."""
+        rt = self.rt
+        r.hidden = hidden_row
+        group = StashGroup()
+        # stash only this request's probe row (a (V,) device row —
+        # exactly what batched fan-out admission stacks): stashing the
+        # whole tick tensor would pin the full dispatch footprint until
+        # fan-out — indefinitely for budget-deferred requests
+        rt._make_stash(r, group, cache=None, logits=logits_row, row=0,
+                       start_pos=r.prompt_len - 1, state=state)
+        del rt._pref[s]
+        rt.pool.release_slot(s)
+        rt._tok[s] = 0
+        rt._pos[s] = 0
+        self.on_prefill_complete(r)
+
+    def retire_token(self, pp, sampled_np, logits, hidden_np) -> None:
+        """Consume a per-token dispatch: advance the chunk-1 prefill
+        interleave and append each decode slot's sampled token."""
+        rt = self.rt
+        B = rt.pool.block_size
+        radix = rt._radix_of(pp.model_id)
+        for s in pp.prefill_slots:
+            r = rt._pref[s]
+            t = int(rt._pos[s])
+            if t == r.prompt_len - 1:           # probe complete
+                if radix is not None:
+                    created = radix.publish(r.prompt, r.table,
+                                            r.prompt_len // B)
+                    if created:
+                        rt.metrics.record_radix(published=created)
+                self._finish_probe(
+                    s, r, logits[s], hidden_np[s],
+                    state=rt.pool.snapshot_slot_state(
+                        s, model_id=pp.model_id))
+            else:
+                r.prefill_pos = t + 1
+                rt._pos[s] = t + 1
+                rt._tok[s] = int(r.prompt[t + 1])
+        for s in pp.decode_slots:
+            c = rt.slots[s]
+            if c is None:
+                continue
+            r = rt.requests[c.request_id]
+            self._append_token(r, c, int(sampled_np[s]))
+            rt._notify_emit(r, c)
+            if c.done():
+                self.retire_child(c, r)
+            else:
+                rt._tok[s] = c.tokens[-1]
+                rt._pos[s] = int(rt._pos[s]) + 1
+
+    def retire_chunk(self, pp, logits, hidden, take: Dict[int, int]) -> None:
+        """Consume a chunked-prefill dispatch: publish whole blocks the
+        chunk finished into the radix tree immediately (not at probe
+        completion), and stash completed probes."""
+        rt = self.rt
+        radix = rt._radix_of(pp.model_id)
+        hidden_np = None
+        for i, s in enumerate(pp.prefill_slots):
+            r = rt._pref[s]
+            L = take[s]
+            end = r.prefill_pos + L
+            if radix is not None:
+                created = radix.publish(r.prompt, r.table,
+                                        end // rt.pool.block_size)
+                if created:
+                    rt.metrics.record_radix(published=created)
+            if end == r.prompt_len:             # probe complete
+                if hidden_np is None:
+                    hidden_np = np.asarray(hidden, np.float32)
+                    rt.metrics.record_sync(model=pp.model_id)
+                self._finish_probe(s, r, logits[i, L - 1],
+                                   hidden_np[i, L - 1])
+            else:
+                r.prefill_pos = end
+                # keep the slot's scan-entry state in sync: a later tick
+                # may pick this row up in the MIXED program, which seeds
+                # its scan from _tok/_pos (the chunk dispatcher itself
+                # reads the prompt directly and ignores these)
+                rt._tok[s] = int(r.prompt[end])
+                rt._pos[s] = end
+
+    def _drain_decode_rows(self, pp, buf) -> int:
+        """Append each decode slot's horizon tokens from the (H, 2, N)
+        [token; alive] buffer until its row froze (EOS / budget), retire
+        finished children, and return how many tokens were emitted."""
+        rt = self.rt
+        emitted = 0
+        for s in pp.decode_slots:
+            c = rt.slots[s]
+            r = rt.requests[c.request_id]
+            took = 0
+            for h in range(pp.horizon):
+                if not buf[h, 1, s]:            # frozen: EOS'd earlier
+                    break
+                t = int(buf[h, 0, s])
+                c.tokens.append(t)
+                took += 1
+                if rt.eos_id is not None and t == rt.eos_id:
+                    c.eos = True
+                    rt.metrics.record_eos(c.max_new - len(c.tokens))
+                    break
+            emitted += took
+            rt._notify_emit(r, c)
+            if c.done():
+                self.retire_child(c, r)
+            else:                               # survivor: emitted all H
+                rt._tok[s] = c.tokens[-1]
+                rt._pos[s] = int(rt._pos[s]) + took
+        return emitted
+
+    def retire_horizon(self, pp, buf) -> None:
+        """Consume a pure-decode horizon dispatch."""
+        emitted = self._drain_decode_rows(pp, buf)
+        self.rt.metrics.record_horizon(len(pp.decode_slots), pp.horizon,
+                                       emitted, model=pp.model_id)
+
+    def retire_mixed(self, pp, buf, probe_lg, probe_hid,
+                     consumed: Dict[int, int]) -> None:
+        """Consume a fused mixed dispatch: decode rows get exactly the
+        horizon retirement; each prefill row advances by the prompt
+        tokens its role consumed, publishing finished whole blocks, and
+        a row whose LAST prompt token landed mid-horizon stashes its
+        captured probe logits/hidden rows — same values the chunk
+        program would have produced at those positions."""
+        rt = self.rt
+        B = rt.pool.block_size
+        emitted = self._drain_decode_rows(pp, buf)
+        radix = rt._radix_of(pp.model_id)
+        hid_np = None
+        pref_tokens = 0
+        for s in pp.prefill_slots:
+            r = rt._pref[s]
+            took = consumed[s]
+            pref_tokens += took
+            end = r.prefill_pos + took
+            if radix is not None:
+                created = radix.publish(r.prompt, r.table, end // B)
+                if created:
+                    rt.metrics.record_radix(published=created)
+            if end == r.prompt_len:             # probe landed mid-scan
+                if hid_np is None:
+                    hid_np = np.asarray(probe_hid, np.float32)
+                    rt.metrics.record_sync(model=pp.model_id)
+                self._finish_probe(s, r, probe_lg[s], hid_np[s])
+            else:
+                r.prefill_pos = end
+                rt._tok[s] = int(r.prompt[end])
+                rt._pos[s] = end
+        rt.metrics.record_prefill(pref_tokens, model=pp.model_id)
+        rt.metrics.record_mixed(len(pp.decode_slots),
+                                len(pp.prefill_slots), pp.horizon,
+                                emitted, pref_tokens, model=pp.model_id)
+
+    # -------------------------------------------------- child / request
+    def retire_child(self, c: ChildSeq, r: Request) -> None:
+        """Free the child's slot, blocks (shared ones decref), and any
+        unclaimed reservation — immediately, so EOS/short children return
+        memory to the pool the same tick they finish. The procedure's
+        `on_child_done` hook then gets a chance to spawn more work
+        (cascade escalation to another model, extra fan-out)."""
+        rt = self.rt
+        slot = c.slot
+        rt.slots[slot] = None
+        rt.pool.release_slot(slot)
+        rt._tok[slot] = 0
+        rt._pos[slot] = 0
+        c.slot = None
+        rt.pool.release_table(c.table)
+        c.table = None
+        rt.pool.unreserve(c.reserved)
+        c.reserved = 0
+        more = r.procedure.on_child_done(r, c, rt)
+        if more:
+            self.apply_groups(r, list(more))
+        if r.all_children_done():
+            self.finalize(r)
+
+    def finalize(self, r: Request) -> None:
+        rt = self.rt
+        if r.children:
+            r.state = RequestState.RERANK
+            r.procedure.finalize(r, rt)
+        else:
+            # empty plan (b_i = 0): the documented default response — an
+            # empty token row with zero reward (the paper's "answer with
+            # the default")
+            r.response = np.zeros((0,), np.int32)
+            r.reward = 0.0
+            rt.metrics.record_default()
+        r.state = RequestState.DONE
+        r.done_t = time.perf_counter()
+        rt.metrics.record_done(r.latency)
+
+    # --------------------------------------------------------- preemption
+    def preempt_request(self, r: Request) -> int:
+        """Evict a resident request and requeue it through the existing
+        phase/QUEUED re-entry path; returns blocks freed.
+
+        The eviction is radix-cheap: before any block is released, the
+        request's full prompt blocks are published into the model's radix
+        tree (idempotent — chunked prefill usually already did), so the
+        tree's refcounts keep the prompt KV alive across the eviction and
+        the resumed request re-prefills near-free (adopting the published
+        blocks at admission, recomputing only the final prompt token).
+        Live children are reset to token 0; their per-child RNG streams
+        (``fold_in(fold_in(seed, id), index)``) restart from scratch on
+        re-admission, so the regenerated sequences — and the request's
+        final response — are bitwise identical to an unpreempted run.
+        Already-retired children (EOS / budget done) keep their tokens."""
+        rt = self.rt
+        pool = rt.pool
+        free_before = pool.available_blocks
+        live = [c for c in r.children if c.slot is not None]
+        model = live[0].model_id if live else r.model_id
+        radix = rt._radix_of(model)
+        table = r.table if r.table is not None else (
+            live[0].table if live else None)
+        full = r.prompt_len // pool.block_size
+        if radix is not None and table is not None and len(table) >= full:
+            created = radix.publish(r.prompt, table, full)
+            if created:
+                rt.metrics.record_radix(published=created)
+        for c in live:
+            s = c.slot
+            rt.slots[s] = None
+            pool.release_slot(s)
+            rt._tok[s] = 0
+            rt._pos[s] = 0
+            c.slot = None
+            pool.release_table(c.table)
+            c.table = None
+            pool.unreserve(c.reserved)
+            c.reserved = 0
+            c.tokens = []
+            c.eos = False
+        try:
+            rt.fanout.remove(r)         # mid-fanout victim (rare)
+        except ValueError:
+            pass
+        # evicted children rejoin any never-slotted ones in index order so
+        # re-admission replays the original fan-out sequence
+        merged = {c.index: c for c in r.pending}
+        merged.update({c.index: c for c in live})
+        r.pending = [merged[i] for i in sorted(merged)]
+        rt._drop_stash(r)
+        rt._release_prompt_table(r)
+        pool.unreserve(r.reserved)
+        r.reserved = 0
+        r.hidden = None             # recomputed (identically) on resume
+        r.model_id = model
+        r.state = RequestState.QUEUED
+        r.prefill_pos = 0
+        r.prefix_len = 0
+        r.preemptions += 1
+        rt.queue.append(r)
+        freed = pool.available_blocks - free_before
+        rt.metrics.record_preemption(freed)
+        return freed
+
+    def preempt_for(self, beneficiary: Request) -> bool:
+        """Pick (policy: TrafficController.choose_victim) and evict one
+        resident request strictly below ``beneficiary``'s priority."""
+        victim = self.rt.traffic.choose_victim(self.rt, beneficiary)
+        if victim is None:
+            return False
+        self.preempt_request(victim)
+        return True
+
+    # ------------------------------------------------------------- audits
+    def stall_report(self, ctx: str = "drain") -> str:
+        rt = self.rt
+        parts = [f"runtime stalled in {ctx}"]
+        deferred = [r.id for r in rt.requests.values()
+                    if r.state is RequestState.PREFILL
+                    and r.stash is not None and r.stash.deferred]
+        if deferred:
+            parts.append(f"requests awaiting set_budget(): {deferred}")
+        if rt.queue:
+            parts.append(
+                f"queued, cannot prefill: {[r.id for r in rt.queue]}")
+        if rt.fanout:
+            head = rt.fanout[0]
+            if rt.pool_kind == "paged":
+                parts.append(
+                    f"fan-out blocked for request {head.id} "
+                    f"(free_slots={rt.pool.n_free_slots}, "
+                    f"free_blocks={rt.pool.n_free_blocks}, "
+                    f"reserved={rt.pool._reserved}, "
+                    f"radix_held={rt._radix_held})")
+            else:
+                parts.append(f"fan-out blocked for request {head.id} "
+                             f"(free_slots={rt.pool.n_free})")
+        phased = [r.id for r in rt.requests.values() if r.pending_phases]
+        if phased:
+            parts.append(f"requests with pending model phases: {phased}")
+        return "; ".join(parts)
+
+    def assert_ledger_balanced(self) -> None:
+        """Block-ledger balance: every refcount is explained by a live
+        owner (request prompt tables, child tables, radix nodes) and the
+        pool's reservation counter equals the live owners' unclaimed
+        worst cases. Valid at any step boundary. A leak — e.g. an EOS
+        retirement dropping blocks but not its remaining reservation —
+        fails here loudly instead of silently shrinking
+        ``available_blocks`` until admission starves."""
+        rt = self.rt
+        if rt.pool_kind != "paged":
+            return
+        pool = rt.pool
+        pool.check_conservation()
+        refs = [0] * pool.n_blocks
+        reserved = 0
+        for r in rt.requests.values():
+            if r.table is not None:
+                for blk in set(r.table):
+                    refs[blk] += 1
+            reserved += r.reserved
+            if r.state is RequestState.PREFILLING:
+                # remaining prompt-growth reservation is implicit: the
+                # blocks the prompt still needs beyond its current table
+                reserved += pool.blocks_for(r.prompt_len) - len(r.table)
+            for c in r.children:
+                if c.table is not None:
+                    for blk in set(c.table):
+                        refs[blk] += 1
+                reserved += c.reserved
+        for radix in rt._radices.values():
+            stack = list(radix.root.values())
+            while stack:
+                n = stack.pop()
+                stack.extend(n.children.values())
+                refs[n.block] += 1
+        assert refs == pool._ref, (
+            "block refcount leak: owners "
+            f"{[(i, a, b) for i, (a, b) in enumerate(zip(refs, pool._ref)) if a != b]}")
+        assert reserved == pool._reserved, (
+            f"reservation leak: owners hold {reserved}, "
+            f"pool ledger says {pool._reserved}")

@@ -1,72 +1,43 @@
 """Continuous-batching decode runtime with in-flight adaptive fan-out.
 
-Replaces the batch-synchronous serve loop (same-length prompts, full-batch
-barriers, double prefill) with a fixed pool of decode slots that variable-
-length, variable-budget requests stream through:
+A fixed pool of decode slots that variable-length, variable-budget
+requests stream through (vs the batch engine's full-batch barriers):
 
 * **At most one prefill per request — often less.** The probe prefill
-  that feeds the difficulty predictor IS the generation prefill. In the
-  default **paged** pool the prompt's KV blocks are shared copy-on-write
-  across the b_i children AND deduped across requests through a radix
-  prefix cache (`serving/radix_cache.py`): a prompt whose full-block
-  prefix was already prefilled — by a live or recently retired request —
-  adopts those blocks and starts prefill at `pos = matched_len`. In the
-  **slot** pool the prefill cache row is replicated per child
-  (`SlotKVPool.write_row`). Either way the paper's "free" probe stays
-  free at serving time.
-* **Statically-shaped programs, compiled once.** Decode runs one jitted
-  step per tick over the whole pool; prefill advances every prefilling
-  slot by up to `prefill_chunk` prompt tokens per tick through one
-  varlen chunk program at static shape (prefill_slots, prefill_chunk)
-  (`_paged_chunk_tick`; recurrent-state stacks fall back to the PR-2
-  one-token-per-tick interleave inside the decode tick). No
-  per-(group, prompt_len) recompiles anywhere. (The slot pool keeps the
-  legacy batched prefill.)
-* **Memory tracks actual sequence length.** Paged-pool blocks are
-  allocated on demand as `pos` crosses block boundaries and freed the
-  moment a child retires (or hits EOS), so the adaptive policy's saved
-  budget becomes saved memory, not just saved ticks. A worst-case
-  reservation ledger makes on-demand growth deadlock-free.
-* **Immediate slot reclamation.** A child that finishes frees its slot
-  (and blocks) at the end of the tick; queued fan-out backfills it on the
-  next tick, so saved budget becomes saved wall-clock.
-* **Horizon-fused decode, one host sync per horizon.** When no slot is
-  prefilling, the paged pool runs up to `horizon` decode steps inside a
-  single jitted `lax.scan` (`_paged_horizon_tick`): sampling, EOS
-  detection, and budget exhaustion stay on device (per-slot `remaining`
-  counters freeze finished slots mid-horizon), block tables are extended
-  for the whole horizon up front (`PagedKVPool.preallocate`) and
-  uploaded once, and the host reads back one (H, 2, n_slots)
-  token/alive buffer — 1 dispatch + 1 blocking sync where the per-token
-  tick paid H of each. Greedy outputs are bitwise identical to the
-  per-token tick (same traced step, same fold_in RNG streams);
-  recurrent-state stacks and ticks with prefill in flight fall back to
-  the per-token program.
-
-* **Procedure-centric, multi-model.** The runtime serves pluggable
-  :class:`DecodeProcedure` objects (``serving/procedure.py``): a
-  procedure plans which registry model(s) decode a request and how many
-  children each fans out, reacts to finished children (escalation /
-  cascades), and finalizes the response. ``register_model`` adds models
-  (a weak/strong routing pair) sharing ONE paged pool — one block
-  ledger, per-model KV stores and radix caches — and each tick groups
-  slots per model: one dispatch per model with live work, foreign slots
-  masked to the null block (and their RNG keys frozen), so any model mix
-  runs the same statically-shaped programs. ``submit(prompt,
-  budget=...)`` remains as a thin shim over the default ``BestOfK``
-  procedure and is token-bitwise identical to the pre-procedure runtime
-  under greedy decode.
+  that feeds the difficulty predictor IS the generation prefill: KV
+  blocks shared copy-on-write across children and deduped across
+  requests via a radix prefix cache (paged pool), or the prefill row
+  replicated per child (slot pool).
+* **Statically-shaped programs compiled once**, block-granular memory
+  tracking actual sequence length, deadlock-free worst-case
+  reservation ledger, immediate slot reclamation.
+* **A unified tick pipeline: plan -> dispatch -> retire.** Each paged
+  tick a pure planner (`serving/plan.py`) partitions live slots per
+  model into static-shape device programs; the program layer
+  (`serving/tick_programs.py`) launches compiled dispatches; the
+  retirement layer (`serving/retire.py`) consumes the host buffers.
+  Decode runs up to `horizon` steps per `lax.scan` dispatch (one host
+  sync per horizon), and when prefill is in flight the scan carries
+  the prefill rows too (`mixed_program`): prefill rows consume queued
+  prompt tokens under a per-row role mask while decode rows sample, so
+  an arriving request no longer drops resident decodes to per-token
+  dispatch. The per-token interleave survives for recurrent-state
+  stacks and `horizon=1`; `fuse_prefill=False` restores the
+  pre-refactor fallback (decode per-token while any slot prefills).
+* **Procedure-centric, multi-model.** Pluggable
+  :class:`DecodeProcedure` objects plan which registry model(s) decode
+  a request and how many children fan out; ``register_model`` adds
+  models sharing ONE paged pool, one dispatch per model with live work
+  per tick.
 
 Sampling uses per-child RNG streams — ``fold_in(fold_in(seed, request_id),
-child_index)`` — so outputs are a function of (seed, request, child) only,
-independent of slot placement, pool backend, model mix, and of what else
-is in flight. Greedy decoding (temperature 0) is bitwise-reproducible
-across paged pool, slot pool, and the batch engine (see
-tests/test_runtime.py, tests/test_paged_pool.py).
+child_index)`` — so outputs depend only on (seed, request, child):
+greedy decoding is bitwise-reproducible across paged pool, slot pool,
+the batch engine, and fused vs unfused ticks (tests/test_runtime.py,
+tests/test_paged_pool.py, tests/test_tick_pipeline.py).
 """
 from __future__ import annotations
 
-import functools
 import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Sequence
@@ -76,243 +47,42 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model_zoo import Model
+from repro.serving import tick_programs
 from repro.serving.engine import prefill
 from repro.serving.kv_pool import SlotKVPool
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged_pool import PagedKVPool, cdiv, supports_paging
-from repro.serving.procedure import (BestOfK, ChildGroup, DecodeProcedure,
-                                     Plan)
+from repro.serving.plan import plan_tick
+from repro.serving.procedure import BestOfK, DecodeProcedure
 from repro.serving.radix_cache import RadixCache
 from repro.serving.request import (ChildSeq, PrefillStash, Request,
                                    RequestState, StashGroup)
+from repro.serving.retire import Retirement
 from repro.serving.traffic.controller import TrafficConfig, TrafficController
-
-
-# cache/logits/pos/keys are donated: the caller rebinds all four every tick,
-# and without donation XLA would copy the whole slot-pool KV cache per token.
-@functools.partial(jax.jit, static_argnames=("model", "temperature_zero"),
-                   donate_argnums=(2, 3, 4, 5))
-def _pool_tick(model: Model, params, cache, logits, pos, keys, active,
-               temperature, *, temperature_zero: bool):
-    """One slot-pool decode tick over every slot.
-
-    Sample a token from each slot's current next-token logits, advance
-    active slots' positions, and run one decode step over the whole pool.
-    Inactive slots still flow through the model (their rows are unused and
-    row-independent) but their pos/logits are frozen so admission state
-    stays intact.
-    """
-    if temperature_zero:
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        new_keys = keys
-    else:
-        split = jax.vmap(jax.random.split)(keys)            # (N, 2, 2)
-        new_keys = split[:, 0]
-        tok = jax.vmap(jax.random.categorical)(
-            split[:, 1], logits.astype(jnp.float32) / temperature
-        ).astype(jnp.int32)
-    new_pos = jnp.where(active, pos + 1, pos)
-    new_logits, _, cache = model.decode_step(params, tok[:, None], cache,
-                                             new_pos)
-    logits = jnp.where(active[:, None], new_logits[:, 0], logits)
-    return tok, logits, cache, new_pos, new_keys
-
-
-@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
-def _admit_slot(logits, pos, keys, src_logits, src_row, slot, start_pos,
-                child_key):
-    """Point a freshly allocated slot at a prefilled sequence: install its
-    next-token logits, start position, and RNG stream."""
-    lrow = jax.lax.dynamic_index_in_dim(src_logits, src_row, axis=0,
-                                        keepdims=False)
-    logits = jax.lax.dynamic_update_index_in_dim(logits, lrow, slot, axis=0)
-    pos = jax.lax.dynamic_update_index_in_dim(
-        pos, jnp.asarray(start_pos, pos.dtype), slot, axis=0)
-    keys = jax.lax.dynamic_update_index_in_dim(keys, child_key, slot, axis=0)
-    return logits, pos, keys
-
-
-@functools.partial(jax.jit, static_argnames=("model", "temperature_zero"),
-                   donate_argnums=(2, 6))
-def _paged_tick(model: Model, params, cache, tables, tokens, pos, keys,
-                advance, temperature, *, temperature_zero: bool):
-    """One paged-pool tick: decode every slot's current token at its
-    position through the block tables, then sample each slot's next token.
-
-    The same program serves chunked prefill and decode: a prefilling slot's
-    input token is the next *prompt* token (its sampled output is simply
-    not used by the host), a decoding slot's input is its last sampled
-    token. Dead slots point at the reserved null block and compute
-    harmless garbage — no per-slot control flow, one compile total.
-
-    `advance` flags the slots whose RNG streams this tick owns (this
-    model's live decode children). Other slots still sample — their rows
-    are unused garbage, vmapped counter-based threefry is element-wise so
-    they cannot perturb the advancing rows — but their keys are frozen:
-    with several models sharing the pool, another model's tick must never
-    burn a live foreign child's stream.
-    """
-    logits, hidden, cache = model.decode_step(params, tokens[:, None], cache,
-                                              pos, block_tables=tables)
-    lg = logits[:, 0]
-    if temperature_zero:
-        sampled = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        new_keys = keys
-    else:
-        split = jax.vmap(jax.random.split)(keys)            # (N, 2, 2)
-        new_keys = jnp.where(advance[:, None], split[:, 0], keys)
-        sampled = jax.vmap(jax.random.categorical)(
-            split[:, 1], lg.astype(jnp.float32) / temperature
-        ).astype(jnp.int32)
-    return sampled, lg, hidden[:, 0], cache, new_keys
-
-
-@functools.partial(jax.jit, static_argnames=("model",), donate_argnums=(2,))
-def _paged_chunk_tick(model: Model, params, cache, tables, tokens, pos,
-                      valid):
-    """One varlen chunked-prefill program: every prefilling slot advances
-    by up to C prompt tokens (its own `valid` count) in a single compiled
-    step. Shapes are static — (prefill_slots, prefill_chunk) — so mixed
-    prompt lengths, partial tail chunks, and idle prefill slots (valid 0,
-    null tables) all run the same program; there is exactly one compile
-    for the whole runtime, like the decode tick."""
-    logits, hidden, cache = model.decode_chunk(params, tokens, cache, pos,
-                                               valid, block_tables=tables)
-    return logits, hidden, cache
-
-
-@functools.partial(jax.jit, static_argnames=("temperature_zero",))
-def _sample_first(logits, row, key, temperature, *, temperature_zero: bool):
-    """Sample a fan-out child's first token from its request's stashed
-    probe logits. Performs exactly the split/categorical sequence the
-    slot-pool tick would, so per-child RNG streams are identical across
-    pool backends. (The paged runtime admits through the vmapped
-    `_admit_children`, which is this program batched over children —
-    kept as the single-child reference the tests compare against.)"""
-    lrow = jax.lax.dynamic_index_in_dim(logits, row, axis=0, keepdims=False)
-    if temperature_zero:
-        return jnp.argmax(lrow).astype(jnp.int32), key
-    split = jax.random.split(key)
-    tok = jax.random.categorical(
-        split[1], lrow.astype(jnp.float32) / temperature).astype(jnp.int32)
-    return tok, split[0]
-
-
-@functools.partial(jax.jit, static_argnames=("temperature_zero",),
-                   donate_argnums=(5,))
-def _admit_children(lrows, base_key, rids, idxs, slots, keys, temperature,
-                    *, temperature_zero: bool):
-    """Batched fan-out admission: derive every child's RNG stream
-    (fold_in(fold_in(seed, request), child)), sample each first token
-    from its request's stashed probe logits, and install the advanced
-    keys into the pool rows — all children spawned this tick in ONE
-    program, where the per-child path paid one jit dispatch for the
-    fold_ins, one for the sample, and one `keys.at[slot].set` device op
-    per child. The caller pads every argument to the pool width with
-    out-of-range slot indices (scatter drops them), so exactly one
-    program compiles regardless of how many children a tick admits.
-    vmap of fold_in/split/categorical is element-wise (counter-based
-    threefry), so per-child streams are bitwise the per-child
-    program's."""
-    lg = jnp.stack(lrows)                                   # (m, V)
-    ck = jax.vmap(lambda r, j: jax.random.fold_in(
-        jax.random.fold_in(base_key, r), j))(rids, idxs)    # (m, 2)
-    if temperature_zero:
-        toks = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        nk = ck
-    else:
-        split = jax.vmap(jax.random.split)(ck)              # (m, 2, 2)
-        nk = split[:, 0]
-        toks = jax.vmap(jax.random.categorical)(
-            split[:, 1], lg.astype(jnp.float32) / temperature
-        ).astype(jnp.int32)
-    keys = keys.at[slots].set(nk)
-    return toks, keys
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("model", "H", "temperature_zero",
-                                    "eos_id"),
-                   donate_argnums=(2, 6))
-def _paged_horizon_tick(model: Model, params, cache, tables, tok, pos, keys,
-                        remaining, temperature, *, H: int,
-                        temperature_zero: bool, eos_id: Optional[int]):
-    """H decode steps fused into one compiled `lax.scan` program — the
-    horizon tick. Per scan step this is exactly `_paged_tick`'s
-    decode-then-sample sequence (greedy tokens are bitwise identical),
-    but sampling, EOS detection, and budget exhaustion all stay on
-    device: each slot carries a `remaining` counter, and a slot whose
-    counter hits zero (EOS sampled, or max_new reached) is frozen mid-
-    horizon — its token/pos stop advancing and its masked steps write
-    garbage K/V at its frozen position, which lands in the finished
-    child's private block and is never read. The host gets one
-    (H, 2, n_slots) [token; alive] buffer per horizon — a single
-    device->host sync where the per-token loop paid H.
-
-    Block tables are scan-invariant: the caller pre-extends every live
-    slot's table to cover the whole horizon (`PagedKVPool.preallocate`),
-    so tables upload once per horizon. Unwritten preallocated blocks sit
-    above each slot's current position and are masked by the `idx <= pos`
-    validity rule, contributing exact zeros — values are unchanged.
-
-    Slots outside this model's group (remaining = 0 at entry — dead, or
-    live under ANOTHER registry model) never advance their keys: a
-    member slot's stream evolves exactly as the per-token tick's, a
-    foreign live child's stream is untouched by this model's horizon."""
-    member = remaining > 0                  # this model's live slots
-
-    def transition(lg, tok, pos, aux):
-        keys, remaining = aux
-        if temperature_zero:
-            sampled = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-            new_keys = keys
-        else:
-            split = jax.vmap(jax.random.split)(keys)        # (N, 2, 2)
-            new_keys = jnp.where(member[:, None], split[:, 0], keys)
-            sampled = jax.vmap(jax.random.categorical)(
-                split[:, 1], lg.astype(jnp.float32) / temperature
-            ).astype(jnp.int32)
-        alive = remaining > 0
-        new_rem = jnp.maximum(remaining - 1, 0)
-        if eos_id is not None:
-            new_rem = jnp.where(sampled == eos_id, 0, new_rem)
-        tok = jnp.where(alive, sampled, tok)
-        pos = jnp.where(alive, pos + 1, pos)
-        emit = jnp.stack([sampled, alive.astype(jnp.int32)])  # (2, N)
-        return tok, pos, (new_keys, new_rem), emit
-
-    tok, pos, cache, (keys, remaining), emits = model.decode_horizon(
-        params, tok, cache, pos, (keys, remaining), H, transition,
-        block_tables=tables)
-    return emits, cache, keys
 
 
 class ContinuousBatchingRuntime:
     """Pooled decode runtime; see module docstring.
 
-    pool="paged" (default) stores KV in block-granular pages with COW
-    prompt sharing, a cross-request radix prefix cache
-    (prefix_cache=True; stateless stacks only), varlen multi-token
-    chunked prefill (prefill_chunk, default block_size; recurrent-state
-    stacks use the per-token interleave), and horizon-fused decode
-    (horizon, default 8: that many decode steps per compiled dispatch
-    and per host sync, H=min(horizon, min remaining) per dispatch);
-    pool="slots" keeps the PR-1 full-row slot pool (used by the
-    bitwise-equivalence tests and as the fallback for sliding-window
-    configs whose cache would wrap). admission_lookahead bounds the
-    radix-aware admission scan that pulls the longest prefix-cache hit
-    to the front of the prefill queue.
+    pool="paged" (default): block-granular pages with COW prompt
+    sharing, a radix prefix cache (prefix_cache=True; stateless stacks
+    only), chunked prefill (prefill_chunk, default block_size), and
+    horizon-fused decode (horizon, default 8 scan steps per dispatch
+    and host sync); fuse_prefill (default True) lets the horizon scan
+    carry prefill rows alongside decode instead of dropping decode to
+    per-token dispatch while any slot prefills. pool="slots" keeps the
+    PR-1 full-row pool (bitwise-equivalence tests; sliding-window
+    fallback). admission_lookahead bounds the radix-aware admission
+    scan that pulls the longest prefix-cache hit forward.
 
     budget_fn(request, hidden) -> int resolves budgets at admission
-    (streaming mode, e.g. ``AdaptivePolicy.allocate_streaming`` at a
-    calibrated price); in paged mode the result is additionally gated on
-    free *blocks* (not free slots), so difficulty-driven fan-out cannot
-    over-commit memory. Leave it None and call :meth:`set_budget` for
-    batch-exact allocation (the AdaptiveScheduler facade does this).
-    reward_fn(query, rows) -> scores reranks a request's children when the
-    last one finishes; None keeps child 0. eos_id terminates a child
-    early when sampled, immediately freeing its slot/blocks and excluding
-    post-EOS tokens from the reranker input.
+    (streaming mode); in paged mode the result is additionally gated on
+    free *blocks*, so difficulty-driven fan-out cannot over-commit
+    memory. Leave it None and call :meth:`set_budget` for batch-exact
+    allocation (the AdaptiveScheduler facade does this).
+    reward_fn(query, rows) -> scores reranks a request's children when
+    the last one finishes; None keeps child 0. eos_id terminates a
+    child early, freeing its slot/blocks immediately.
     """
 
     def __init__(self, model: Model, params, *, n_slots: int = 8,
@@ -328,6 +98,7 @@ class ContinuousBatchingRuntime:
                  prefix_cache: bool = True,
                  prefill_chunk: Optional[int] = None,
                  horizon: int = 8,
+                 fuse_prefill: bool = True,
                  admission_lookahead: int = 4,
                  traffic: Optional[TrafficConfig] = None):
         assert pool in ("paged", "slots")
@@ -361,6 +132,12 @@ class ContinuousBatchingRuntime:
         V = model.lm.vocab_padded
         self.keys = jnp.zeros((n_slots, 2), jnp.uint32)
         self.slots: List[Optional[ChildSeq]] = [None] * n_slots
+        self.retire = Retirement(self)      # host-side retirement layer
+        # streaming emit hooks: fn(request, child) fired whenever a
+        # child's token list grows (admission, token/horizon/mixed
+        # retirement) — AsyncTokenStreamer subscribes so clients see
+        # per-token progress even while internal drain loops run
+        self._emit_hooks: List[Callable] = []
         # traffic subsystem: priority scheduling + preemption + SLO-aware
         # degradation (serving/traffic/). The scheduler replaces the FIFO
         # deque behind the same peek/pop protocol, so every admission path
@@ -379,6 +156,7 @@ class ContinuousBatchingRuntime:
         self._next_id = 0
         self._prefix_cache = False
         self._radices: Dict[str, RadixCache] = {}
+        self.fuse_prefill = bool(fuse_prefill)
         if pool == "paged":
             if n_blocks is None:
                 # in-flight children worst case + one stashed-window's
@@ -420,10 +198,10 @@ class ContinuousBatchingRuntime:
                 self._radices["default"] = RadixCache(self.pool)
             # horizon-fused decode: up to `horizon` decode steps per
             # compiled dispatch (one host sync per horizon instead of
-            # one per token). Engages only when no slot is prefilling
-            # (the per-token interleave owns prefill for chunk-1 stacks)
-            # and the stack is stateless; recurrent-state pools stay on
-            # the per-token tick. horizon=1 disables fusion entirely.
+            # one per token); the planner (serving/plan.py) picks the
+            # per-dispatch width and whether prefill rows ride along.
+            # Recurrent-state pools stay on the per-token tick;
+            # horizon=1 disables fusion entirely.
             self.horizon = max(1, int(horizon))
             if self.pool._has_state:
                 self.horizon = 1
@@ -552,7 +330,7 @@ class ContinuousBatchingRuntime:
 
     def _make_stash(self, r: Request, group: StashGroup, **kw) -> None:
         # stashes start non-deferred; a plan() returning None (BestOfK
-        # awaiting set_budget) flips the flag in _run_plan
+        # awaiting set_budget) flips the flag in run_plan
         r.stash = PrefillStash(group=group, deferred=False, **kw)
         group.size += 1
         group.rows += 1             # pinned until the whole group dies
@@ -577,6 +355,21 @@ class ContinuousBatchingRuntime:
         if g.size == 0:
             self._groups.discard(g)
 
+    # -------------------------------------------------- streaming hooks
+    def add_emit_hook(self, fn: Callable) -> None:
+        """Register ``fn(request, child)`` to run whenever a child's
+        token list grows — at fan-out admission (first token) and at
+        every token/horizon/mixed retirement. Hooks fire inside step(),
+        so streaming consumers observe per-token progress even when the
+        runtime is driven by internal drain loops; they must be cheap
+        and must tolerate a child's token list SHRINKING between calls
+        (preemption resets live children to replay bitwise)."""
+        self._emit_hooks.append(fn)
+
+    def _notify_emit(self, r: Request, c: ChildSeq) -> None:
+        for fn in self._emit_hooks:
+            fn(r, c)
+
     # ------------------------------------------------------------ prefill
     def prefill_queued(self, limit: Optional[int] = None) -> int:
         """Prefill up to `limit` queued requests (all of them when None)
@@ -585,9 +378,9 @@ class ContinuousBatchingRuntime:
         distinct (group, prompt_len) shape; each row it stashes counts
         against the prefill window until its group dies). Paged pool:
         drive the chunked prefill to completion for those requests by
-        running ticks (the varlen chunk program, or the decode-tick
-        interleave for recurrent-state stacks). Resolves budgets via
-        budget_fn when present."""
+        running ticks (the varlen chunk program, the fused mixed scan,
+        or the decode-tick interleave for recurrent-state stacks).
+        Resolves budgets via budget_fn when present."""
         if self.pool_kind == "paged":
             n = len(self.queue) if limit is None else min(int(limit),
                                                           len(self.queue))
@@ -631,111 +424,41 @@ class ContinuousBatchingRuntime:
         r.budget = int(budget)
         self._run_plan(r)
 
-    # ----------------------------------------------------- procedure plan
+    # -------------------------------------- retirement-layer delegations
+    # (thin names kept on the runtime: procedures and tests reach for
+    # them, and pre-split call sites — _gate_budget, _preempt_request —
+    # are documented API surface)
     def _run_plan(self, r: Request) -> None:
-        """Ask the request's procedure for its plan (probe prefill has
-        landed). None parks the request — the stash is marked deferred
-        and excluded from the prefill window until set_budget re-plans."""
-        plan = r.procedure.plan(r, r.hidden, self)
-        if plan is None:
-            self._defer_stash(r)
-            return
-        r.planned = True
-        self._apply_groups(r, list(plan.groups))
+        self.retire.run_plan(r)
 
-    def _apply_groups(self, r: Request, groups: List[ChildGroup]) -> None:
-        """Turn procedure child-groups into work. Groups on the model
-        whose prefill stash is live spawn immediately (they share the
-        probe prefill, exactly the old fan-out); groups on other models —
-        or arriving after the stash was dropped — queue a prefill *phase*
-        on their model. An empty plan with no children is the paper's
-        b_i = 0: release everything and answer with the default."""
-        was_pending = bool(r.pending)   # already in the fanout deque
-        spawned = 0
-        for g in groups:
-            if r.stash is not None and g.model_id == r.model_id:
-                spawned += self._spawn_group(r, g)
-            else:
-                if g.model_id not in self.models:
-                    raise KeyError(f"plan names unregistered model "
-                                   f"{g.model_id!r}")
-                r.pending_phases.append(g)
-        if spawned:
-            r.state = RequestState.DECODE
-            # invariant: a request appears in self.fanout exactly once,
-            # iff it has pending children — an on_child_done escalation
-            # landing while earlier children still await admission must
-            # not enqueue a duplicate (the stale entry would outlive the
-            # first pop and crash the admission loop on empty pending)
-            if not was_pending:
-                self.fanout.append(r)
-        elif r.stash is not None and not r.pending:
-            # nothing rides the current stash: drop it (and the standing
-            # child reservation sized for a child that will never spawn).
-            # `not r.pending` guards the preemption-resume path — there
-            # the fresh stash/table/reservation belong to the evicted
-            # children about to re-admit, even when no NEW group spawned
-            if self.pool_kind == "paged":
-                self._release_prompt_table(r)
-                self.pool.unreserve(r.reserved)
-                r.reserved = 0
-            self._drop_stash(r)
-        if (not r.children and not r.pending_phases
-                and not r.pending):
-            self._finalize(r)               # empty plan: default response
-            return
-        self._maybe_start_next_phase(r)
-
-    def _spawn_group(self, r: Request, g: ChildGroup) -> int:
-        """Create g.n children on g.model_id sharing the live stash."""
-        mn = r.max_new if g.max_new is None else int(g.max_new)
-        if mn > r.max_new:
-            raise ValueError(
-                f"group max_new {mn} exceeds the request's {r.max_new}: "
-                "admission reservations are sized to the request")
-        for _ in range(int(g.n)):
-            c = ChildSeq(request_id=r.id, index=len(r.children),
-                         model_id=g.model_id, max_new=mn)
-            r.children.append(c)
-            r.pending.append(c)
-        return int(g.n)
+    def _apply_groups(self, r: Request, groups) -> None:
+        self.retire.apply_groups(r, groups)
 
     def _maybe_start_next_phase(self, r: Request) -> None:
-        """Queue the next pending phase's prefill once the current
-        stash/table are gone and no children await admission (phases are
-        sequential per request; distinct requests' phases interleave
-        freely)."""
-        if (not r.pending_phases or r.pending or r.stash is not None
-                or r.state in (RequestState.QUEUED,
-                               RequestState.PREFILLING)):
-            return
-        r.model_id = r.pending_phases[0].model_id
-        r.state = RequestState.QUEUED
-        r.prefill_pos = 0
-        r.prefix_len = 0
-        self.queue.append(r)
+        self.retire.maybe_start_next_phase(r)
 
     def _on_prefill_complete(self, r: Request) -> None:
-        """Prefill landed (probe or phase): plan once, then spawn every
-        queued group this phase's model satisfies."""
-        r.state = RequestState.PREFILL
-        if not r.planned:
-            self._run_plan(r)
-            return
-        if r.pending:
-            # preemption resume: the evicted children are back in
-            # ``pending`` and this fresh prefill is their prompt — re-enter
-            # the fan-out backlog (the append is safe: preemption removed
-            # the request from ``fanout``, and a request is never preempted
-            # twice without an intervening resume)
-            r.state = RequestState.DECODE
-            self.fanout.append(r)
-        groups: List[ChildGroup] = []
-        while (r.pending_phases
-               and r.pending_phases[0].model_id == r.model_id):
-            groups.append(r.pending_phases.pop(0))
-        self._apply_groups(r, groups)
+        self.retire.on_prefill_complete(r)
 
+    def _retire_paged_child(self, c: ChildSeq, r: Request) -> None:
+        self.retire.retire_child(c, r)
+
+    def _finalize(self, r: Request) -> None:
+        self.retire.finalize(r)
+
+    def _preempt_request(self, r: Request) -> int:
+        return self.retire.preempt_request(r)
+
+    def _preempt_for(self, beneficiary: Request) -> bool:
+        return self.retire.preempt_for(beneficiary)
+
+    def _stall_report(self, ctx: str = "drain") -> str:
+        return self.retire.stall_report(ctx)
+
+    def assert_ledger_balanced(self) -> None:
+        self.retire.assert_ledger_balanced()
+
+    # --------------------------------------------------- admission gates
     def _gate_budget(self, r: Request, budget: int) -> int:
         """Paged streaming admission is gated on free *blocks*: cap the
         resolved budget at what unreserved memory can eventually carry.
@@ -808,7 +531,7 @@ class ContinuousBatchingRuntime:
             self.pool.write_row(st.cache, st.row, slot)
             ck = jax.random.fold_in(
                 jax.random.fold_in(self._base_key, r.id), c.index)
-            self.logits, self.pos, self.keys = _admit_slot(
+            self.logits, self.pos, self.keys = tick_programs.admit_slot(
                 self.logits, self.pos, self.keys, st.logits, st.row, slot,
                 st.start_pos, ck)
             c.slot = slot
@@ -826,13 +549,13 @@ class ContinuousBatchingRuntime:
         first tokens from the stashed probe logits.
 
         All children spawned in the same tick are admitted through ONE
-        vmapped program (`_admit_children`): host bookkeeping (slots,
-        tables, reservations) is collected first, then a single dispatch
-        derives every child's RNG stream, samples every first token, and
-        scatters the advanced keys — the per-child path paid ~3 device
-        ops per child. The outer loop re-runs collection when an
-        admission-time retirement (EOS / max_new=1) frees slots that more
-        pending children can take within the same tick."""
+        vmapped program (`tick_programs.admit_program`): host bookkeeping
+        (slots, tables, reservations) is collected first, then a single
+        dispatch derives every child's RNG stream, samples every first
+        token, and scatters the advanced keys — the per-child path paid
+        ~3 device ops per child. The outer loop re-runs collection when
+        an admission-time retirement (EOS / max_new=1) frees slots that
+        more pending children can take within the same tick."""
         admitted = 0
         self._fanout_blocked = False
         tz = self.temperature == 0.0
@@ -902,7 +625,7 @@ class ContinuousBatchingRuntime:
                 # slot index makes the keys scatter a documented no-op
                 # (jax drops OOB scatter updates by default)
                 pad = N - m
-                toks, self.keys = _admit_children(
+                toks, self.keys = tick_programs.admit_program(tz)(
                     tuple(st for _, _, st in sub) + (sub[0][2],) * pad,
                     self._base_key,
                     jnp.asarray([r.id for r, _, _ in sub] + [0] * pad,
@@ -911,7 +634,7 @@ class ContinuousBatchingRuntime:
                                 jnp.int32),
                     jnp.asarray([c.slot for _, c, _ in sub] + [N] * pad,
                                 jnp.int32),
-                    self.keys, self.temperature, temperature_zero=tz)
+                    self.keys, self.temperature)
                 self.metrics.record_dispatch(1 + copies.get(mid, 0),
                                              model=mid)
                 toks_np = np.asarray(toks)      # one sync per model batch
@@ -928,6 +651,7 @@ class ContinuousBatchingRuntime:
                         c.eos = True
                         self.metrics.record_eos(c.max_new - len(c.tokens))
                     self._tok[c.slot] = tok_i
+                    self._notify_emit(r, c)
                     if c.done():            # EOS/max_new=1 at admission
                         self._retire_paged_child(c, r)
                 admitted += m
@@ -1059,8 +783,9 @@ class ContinuousBatchingRuntime:
 
     # --------------------------------------------------------------- step
     def step(self) -> bool:
-        """One scheduler tick: admit work, run one jitted decode step over
-        the pool, retire finished children. Returns True on progress."""
+        """One scheduler tick: admit work, plan this tick's device
+        programs, dispatch them, retire finished children. Returns True
+        on progress."""
         if self.pool_kind == "paged":
             return self._step_paged()
         return self._step_slots()
@@ -1079,10 +804,11 @@ class ContinuousBatchingRuntime:
             return progressed
         active = np.zeros(self.pool.n_slots, bool)
         active[active_idx] = True
-        tok, self.logits, self.pool.cache, self.pos, self.keys = _pool_tick(
-            self.model, self.params, self.pool.cache, self.logits, self.pos,
-            self.keys, jnp.asarray(active), self.temperature,
-            temperature_zero=(self.temperature == 0.0))
+        tok, self.logits, self.pool.cache, self.pos, self.keys = \
+            tick_programs.pool_tick(
+                self.model, self.params, self.pool.cache, self.logits,
+                self.pos, self.keys, jnp.asarray(active), self.temperature,
+                temperature_zero=(self.temperature == 0.0))
         self.metrics.record_dispatch()
         self.metrics.record_tick(len(active_idx))
         tok_np = np.asarray(tok)
@@ -1098,6 +824,7 @@ class ContinuousBatchingRuntime:
             if self.eos_id is not None and t == self.eos_id:
                 c.eos = True
                 self.metrics.record_eos(c.max_new - len(c.tokens))
+            self._notify_emit(r, c)
             if c.done():
                 self.slots[s] = None
                 self.pool.release(s)
@@ -1110,234 +837,11 @@ class ContinuousBatchingRuntime:
                     self._finalize(r)
         return True
 
-    def _chunk_prefill_tick(self) -> bool:
-        """Advance every prefilling slot by up to `prefill_chunk` prompt
-        tokens through the varlen chunk program. Chunk ends are aligned to
-        the absolute C-grid, so a prefix-cache hit (which starts prefill
-        mid-prompt) computes every remaining position in exactly the batch
-        shape a cold run would — the hit path stays bitwise identical.
-        Whole blocks finished by the chunk are published into the radix
-        tree immediately, not at probe completion."""
-        B = self.pool.block_size
-        C = self.prefill_chunk
-        P = self.prefill_slots
-        by_model: Dict[str, List[int]] = {}
-        for s in sorted(self._pref):
-            by_model.setdefault(self._pref[s].model_id, []).append(s)
-        for mid in sorted(by_model):
-            pref_slots = by_model[mid]
-            toks = np.zeros((P, C), np.int32)
-            pos = np.zeros((P,), np.int32)
-            valid = np.zeros((P,), np.int32)
-            tables = np.zeros((P, self.pool.blocks_per_seq), np.int32)
-            take: Dict[int, int] = {}
-            for i, s in enumerate(pref_slots):
-                r = self._pref[s]
-                p = r.prefill_pos
-                L = min(C - p % C, r.prompt_len - p)
-                # allocate the blocks this chunk writes into up front
-                # (reservation-backed, like per-token growth)
-                while (p + L - 1) // B >= len(r.table):
-                    r.table.append(self.pool.alloc_block())
-                toks[i, :L] = r.prompt[p:p + L]
-                pos[i] = p
-                valid[i] = L
-                tables[i, :len(r.table)] = r.table
-                take[s] = L
-            logits, hidden, cache = _paged_chunk_tick(
-                self.models[mid], self.model_params[mid],
-                self.pool.caches[mid], jnp.asarray(tables),
-                jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(valid))
-            self.pool.caches[mid] = cache
-            self.metrics.record_dispatch(model=mid)
-            self.metrics.record_prefill(int(valid.sum()), model=mid)
-            self.metrics.record_blocks(self.pool.blocks_in_use)
-            radix = self._radix_of(mid)
-            hidden_np = None
-            for i, s in enumerate(pref_slots):
-                r = self._pref[s]
-                L = take[s]
-                end = r.prefill_pos + L
-                if radix is not None:
-                    created = radix.publish(r.prompt, r.table, end // B)
-                    if created:
-                        self.metrics.record_radix(published=created)
-                if end == r.prompt_len:                 # probe complete
-                    if hidden_np is None:
-                        hidden_np = np.asarray(hidden, np.float32)
-                        self.metrics.record_sync(model=mid)
-                    r.hidden = hidden_np[i, L - 1]
-                    group = StashGroup()
-                    # stash only this request's probe row (a (V,) copy —
-                    # exactly what batched fan-out admission stacks):
-                    # stashing the whole (P*C, V) tick tensor would pin
-                    # prefill_chunk times PR-2's footprint until fan-out —
-                    # indefinitely for budget-deferred requests
-                    self._make_stash(r, group, cache=None,
-                                     logits=logits[i, L - 1], row=0,
-                                     start_pos=end - 1, state=None)
-                    del self._pref[s]
-                    self.pool.release_slot(s)
-                    self._tok[s] = 0
-                    self._pos[s] = 0
-                    self._on_prefill_complete(r)
-                else:
-                    r.prefill_pos = end
-        return True
-
-    def _horizon_width(self, live_dec: List[int]) -> int:
-        """H = min(horizon, min remaining over live slots), quantized
-        down to a power of two. min-remaining means no slot can outrun
-        its budget inside the scan (the only mid-horizon freeze left is
-        EOS) and a fused dispatch never computes steps every slot has
-        already finished. The quantization bounds distinct compiled scan
-        programs to log2(horizon)+1: on a staggered stream min-remaining
-        takes nearly every value in [1, horizon], and compiling a fresh
-        program per width mid-run cost more wall-clock than fusion saved
-        (measured on the Poisson bench: paged dropped to 0.7x the batch
-        engine before quantization, 2x+ after)."""
-        rem = min(self.slots[s].max_new - len(self.slots[s].tokens)
-                  for s in live_dec)
-        H = max(1, min(self.horizon, rem))
-        return 1 << (H.bit_length() - 1)
-
-    def _horizon_tick(self, mid: str, live_dec: List[int], H: int) -> bool:
-        """Dispatch one horizon-fused scan over model `mid`'s live decode
-        slots and retire/advance from its (H, 2, n_slots) token/alive
-        buffer — one jitted dispatch and ONE blocking device->host sync
-        for up to H x len(live_dec) generated tokens. Retirement,
-        fan-out, and admission run between horizons (the caller's next
-        step()). Slots of other registry models ride along frozen
-        (remaining 0: no token/pos/key advance; their writes land in
-        `mid`'s null block)."""
-        remaining = np.zeros(self.n_slots, np.int32)
-        for s in live_dec:
-            c = self.slots[s]
-            remaining[s] = c.max_new - len(c.tokens)
-            # extend the slot's table to cover the whole horizon up front
-            # (reservation-backed), so tables are scan-invariant and
-            # upload once per horizon instead of once per token
-            c.reserved -= self.pool.preallocate(c.table,
-                                                int(self._pos[s]) + H)
-        tables = np.zeros((self.n_slots, self.pool.blocks_per_seq), np.int32)
-        for s in live_dec:
-            t = self.slots[s].table
-            tables[s, :len(t)] = t
-        emits, cache, keys = _paged_horizon_tick(
-            self.models[mid], self.model_params[mid], self.pool.caches[mid],
-            jnp.asarray(tables),
-            jnp.asarray(self._tok), jnp.asarray(self._pos), self.keys,
-            jnp.asarray(remaining), self.temperature, H=H,
-            temperature_zero=(self.temperature == 0.0), eos_id=self.eos_id)
-        self.pool.caches[mid] = cache
-        self.keys = keys
-        self.metrics.record_dispatch(model=mid)
-        # the dispatch above is asynchronous: host-side bookkeeping that
-        # does not depend on the sampled tokens overlaps device compute,
-        # and the buffer is forced in one transfer at the end
-        self.metrics.record_blocks(self.pool.blocks_in_use)
-        buf = np.asarray(emits)                 # (H, 2, N): [token; alive]
-        self.metrics.record_sync(model=mid)
-        emitted = 0
-        for s in live_dec:
-            c = self.slots[s]
-            r = self.requests[c.request_id]
-            took = 0
-            for h in range(H):
-                if not buf[h, 1, s]:            # frozen: EOS'd earlier
-                    break
-                t = int(buf[h, 0, s])
-                c.tokens.append(t)
-                took += 1
-                if self.eos_id is not None and t == self.eos_id:
-                    c.eos = True
-                    self.metrics.record_eos(c.max_new - len(c.tokens))
-                    break
-            emitted += took
-            if c.done():
-                self._retire_paged_child(c, r)
-            else:                               # survivor: emitted all H
-                self._tok[s] = c.tokens[-1]
-                self._pos[s] = int(self._pos[s]) + took
-        self.metrics.record_horizon(len(live_dec), H, emitted, model=mid)
-        return True
-
-    # --------------------------------------------------------- preemption
-    def _preempt_request(self, r: Request) -> int:
-        """Evict a resident request and requeue it through the existing
-        phase/QUEUED re-entry path; returns blocks freed.
-
-        The eviction is radix-cheap: before any block is released, the
-        request's full prompt blocks are published into the model's radix
-        tree (idempotent — chunked prefill usually already did), so the
-        tree's refcounts keep the prompt KV alive across the eviction and
-        the resumed request re-prefills near-free (adopting the published
-        blocks at admission, recomputing only the final prompt token).
-        Live children are reset to token 0; their per-child RNG streams
-        (``fold_in(fold_in(seed, id), index)``) restart from scratch on
-        re-admission, so the regenerated sequences — and the request's
-        final response — are bitwise identical to an unpreempted run.
-        Already-retired children (EOS / budget done) keep their tokens."""
-        pool = self.pool
-        B = pool.block_size
-        free_before = pool.available_blocks
-        live = [c for c in r.children if c.slot is not None]
-        model = live[0].model_id if live else r.model_id
-        radix = self._radix_of(model)
-        table = r.table if r.table is not None else (
-            live[0].table if live else None)
-        full = r.prompt_len // B
-        if radix is not None and table is not None and len(table) >= full:
-            created = radix.publish(r.prompt, table, full)
-            if created:
-                self.metrics.record_radix(published=created)
-        for c in live:
-            s = c.slot
-            self.slots[s] = None
-            pool.release_slot(s)
-            self._tok[s] = 0
-            self._pos[s] = 0
-            c.slot = None
-            pool.release_table(c.table)
-            c.table = None
-            pool.unreserve(c.reserved)
-            c.reserved = 0
-            c.tokens = []
-            c.eos = False
-        try:
-            self.fanout.remove(r)       # mid-fanout victim (rare)
-        except ValueError:
-            pass
-        # evicted children rejoin any never-slotted ones in index order so
-        # re-admission replays the original fan-out sequence
-        merged = {c.index: c for c in r.pending}
-        merged.update({c.index: c for c in live})
-        r.pending = [merged[i] for i in sorted(merged)]
-        self._drop_stash(r)
-        self._release_prompt_table(r)
-        pool.unreserve(r.reserved)
-        r.reserved = 0
-        r.hidden = None                 # recomputed (identically) on resume
-        r.model_id = model
-        r.state = RequestState.QUEUED
-        r.prefill_pos = 0
-        r.prefix_len = 0
-        r.preemptions += 1
-        self.queue.append(r)
-        freed = pool.available_blocks - free_before
-        self.metrics.record_preemption(freed)
-        return freed
-
-    def _preempt_for(self, beneficiary: Request) -> bool:
-        """Pick (policy: TrafficController.choose_victim) and evict one
-        resident request strictly below ``beneficiary``'s priority."""
-        victim = self.traffic.choose_victim(self, beneficiary)
-        if victim is None:
-            return False
-        self._preempt_request(victim)
-        return True
-
     def _step_paged(self) -> bool:
+        """One paged tick: admission (fan-out first, so decode children
+        reclaim freed slots before new prompts), then the unified
+        pipeline — plan the tick's device programs, dispatch each, and
+        hand its host buffers to the retirement layer."""
         progressed = bool(self._try_fanout_paged())
         traffic = self.traffic
         preempt = traffic is not None and traffic.cfg.preempt
@@ -1349,174 +853,27 @@ class ContinuousBatchingRuntime:
         if (preempt and self._prefill_blocked and self.queue
                 and self._preempt_for(self.queue[0])):
             progressed = bool(self._admit_prefill_paged()) or True
-        chunked = self.prefill_chunk > 1
-        if chunked and self._pref:
-            progressed = self._chunk_prefill_tick() or progressed
-        # group live work per registry model: each model with live slots
-        # gets its own dispatch this tick (foreign slots masked to the
-        # null block and their RNG keys frozen) — single-model runs see
-        # exactly one group and the historical dispatch sequence
-        dec_by_model: Dict[str, List[int]] = {}
-        for s, c in enumerate(self.slots):
-            if c is not None:
-                dec_by_model.setdefault(c.model_id, []).append(s)
-        # the per-token interleave (chunk 1: recurrent-state stacks) keeps
-        # prefilling slots inside the decode tick; the chunk program above
-        # owns them otherwise
-        pref_by_model: Dict[str, List[int]] = {}
-        if not chunked:
-            for s, r in self._pref.items():
-                pref_by_model.setdefault(r.model_id, []).append(s)
-        if not dec_by_model and not pref_by_model:
+        plan = plan_tick(self)
+        if not plan.programs:
             return progressed
-        n_live = sum(len(v) for v in dec_by_model.values())
         if len(self.models) > 1:
-            self.metrics.record_live(n_live)
-        for mid in sorted(set(dec_by_model) | set(pref_by_model)):
-            live_dec = dec_by_model.get(mid, [])
-            live_pref = pref_by_model.get(mid, [])
-            # horizon-fused decode: engages only when decode has the
-            # device to itself (no prefill interleave in flight —
-            # admission and chunked prefill run between horizons) and
-            # the stack is stateless. H=1 would recompile the scan for
-            # nothing, so the per-token program below keeps that case.
-            if (self.horizon > 1 and live_dec and not self._pref
-                    and not self.pool._has_state):
-                H = self._horizon_width(live_dec)
-                if self.traffic is not None:
-                    # load shedding: shorter horizon leases return freed
-                    # slots/blocks to admission sooner under pressure
-                    # (halving preserves the power-of-two quantization)
-                    H = self.traffic.effective_horizon(self, H)
-                if H > 1:
-                    self._horizon_tick(mid, live_dec, H)
-                    continue
-            self._token_tick(mid, live_dec, live_pref)
+            self.metrics.record_live(plan.n_live)
+        for pp in plan.programs:
+            if pp.kind == "horizon":
+                self.retire.retire_horizon(
+                    pp, tick_programs.dispatch_horizon(self, pp))
+            elif pp.kind == "mixed":
+                self.retire.retire_mixed(
+                    pp, *tick_programs.dispatch_mixed(self, pp))
+            elif pp.kind == "chunk":
+                self.retire.retire_chunk(
+                    pp, *tick_programs.dispatch_chunk(self, pp))
+            else:
+                if pp.fallback:
+                    self.metrics.record_fallback(model=pp.model_id)
+                self.retire.retire_token(
+                    pp, *tick_programs.dispatch_token(self, pp))
         return True
-
-    def _token_tick(self, mid: str, live_dec: List[int],
-                    live_pref: List[int]) -> None:
-        """One per-token program over model `mid`'s slots (decode + the
-        chunk-1 prefill interleave). Slots belonging to other models run
-        through as dead rows: null tables, frozen keys, outputs
-        dropped."""
-        B = self.pool.block_size
-        # allocate blocks on demand before the tick's writes cross into
-        # them (reservation-backed: can_reserve was checked at admission)
-        for s in live_dec:
-            c = self.slots[s]
-            if self._pos[s] // B == len(c.table):
-                c.table.append(self.pool.alloc_block())
-                c.reserved -= 1
-        for s in live_pref:
-            r = self._pref[s]
-            if self._pos[s] // B == len(r.table):
-                r.table.append(self.pool.alloc_block())
-        tables = np.zeros((self.n_slots, self.pool.blocks_per_seq), np.int32)
-        for s in live_dec:
-            t = self.slots[s].table
-            tables[s, :len(t)] = t
-        for s in live_pref:
-            t = self._pref[s].table
-            tables[s, :len(t)] = t
-        advance = np.zeros((self.n_slots,), bool)
-        advance[live_dec] = True
-        sampled, logits, hidden, cache, self.keys = _paged_tick(
-            self.models[mid], self.model_params[mid], self.pool.caches[mid],
-            jnp.asarray(tables),
-            jnp.asarray(self._tok), jnp.asarray(self._pos), self.keys,
-            jnp.asarray(advance), self.temperature,
-            temperature_zero=(self.temperature == 0.0))
-        self.pool.caches[mid] = cache
-        self.metrics.record_dispatch(model=mid)
-        self.metrics.record_tick(len(live_dec) + len(live_pref),
-                                 n_sampled=len(live_dec), model=mid)
-        self.metrics.record_blocks(self.pool.blocks_in_use)
-        if live_pref:
-            self.metrics.record_prefill(len(live_pref), model=mid)
-        sampled_np = np.asarray(sampled)
-        self.metrics.record_sync(model=mid)
-        hidden_np = (np.asarray(hidden, np.float32) if live_pref else None)
-        if live_pref:
-            self.metrics.record_sync(model=mid)
-        radix = self._radix_of(mid)
-        for s in live_pref:
-            r = self._pref[s]
-            t = int(self._pos[s])
-            if t == r.prompt_len - 1:           # probe complete
-                if radix is not None:
-                    created = radix.publish(r.prompt, r.table,
-                                            r.prompt_len // B)
-                    if created:
-                        self.metrics.record_radix(published=created)
-                r.hidden = hidden_np[s]
-                group = StashGroup()
-                self._make_stash(r, group, cache=None, logits=logits[s],
-                                 row=0, start_pos=t,
-                                 state=self.pool.snapshot_slot_state(
-                                     s, model_id=mid))
-                del self._pref[s]
-                self.pool.release_slot(s)
-                self._tok[s] = 0
-                self._pos[s] = 0
-                self._on_prefill_complete(r)
-            else:
-                r.prefill_pos = t + 1
-                self._pos[s] = t + 1
-                self._tok[s] = int(r.prompt[t + 1])
-        for s in live_dec:
-            c = self.slots[s]
-            if c is None:
-                continue
-            r = self.requests[c.request_id]
-            t = int(sampled_np[s])
-            c.tokens.append(t)
-            if self.eos_id is not None and t == self.eos_id:
-                c.eos = True
-                self.metrics.record_eos(c.max_new - len(c.tokens))
-            if c.done():
-                self._retire_paged_child(c, r)
-            else:
-                self._tok[s] = t
-                self._pos[s] = int(self._pos[s]) + 1
-        return
-
-    def _retire_paged_child(self, c: ChildSeq, r: Request) -> None:
-        """Free the child's slot, blocks (shared ones decref), and any
-        unclaimed reservation — immediately, so EOS/short children return
-        memory to the pool the same tick they finish. The procedure's
-        `on_child_done` hook then gets a chance to spawn more work
-        (cascade escalation to another model, extra fan-out)."""
-        slot = c.slot
-        self.slots[slot] = None
-        self.pool.release_slot(slot)
-        self._tok[slot] = 0
-        self._pos[slot] = 0
-        c.slot = None
-        self.pool.release_table(c.table)
-        c.table = None
-        self.pool.unreserve(c.reserved)
-        c.reserved = 0
-        more = r.procedure.on_child_done(r, c, self)
-        if more:
-            self._apply_groups(r, list(more))
-        if r.all_children_done():
-            self._finalize(r)
-
-    def _finalize(self, r: Request) -> None:
-        if r.children:
-            r.state = RequestState.RERANK
-            r.procedure.finalize(r, self)
-        else:
-            # empty plan (b_i = 0): the documented default response — an
-            # empty token row with zero reward (the paper's "answer with
-            # the default")
-            r.response = np.zeros((0,), np.int32)
-            r.reward = 0.0
-            self.metrics.record_default()
-        r.state = RequestState.DONE
-        r.done_t = time.perf_counter()
-        self.metrics.record_done(r.latency)
 
     # ---------------------------------------------------------------- run
     @property
@@ -1527,74 +884,6 @@ class ContinuousBatchingRuntime:
         prefilling = self.pool_kind == "paged" and bool(self._pref)
         return bool(self.queue or self.fanout or self.n_inflight
                     or prefilling)
-
-    def _stall_report(self, ctx: str = "drain") -> str:
-        parts = [f"runtime stalled in {ctx}"]
-        deferred = [r.id for r in self.requests.values()
-                    if r.state is RequestState.PREFILL and r.stash is not None
-                    and r.stash.deferred]
-        if deferred:
-            parts.append(f"requests awaiting set_budget(): {deferred}")
-        if self.queue:
-            parts.append(
-                f"queued, cannot prefill: {[r.id for r in self.queue]}")
-        if self.fanout:
-            head = self.fanout[0]
-            if self.pool_kind == "paged":
-                parts.append(
-                    f"fan-out blocked for request {head.id} "
-                    f"(free_slots={self.pool.n_free_slots}, "
-                    f"free_blocks={self.pool.n_free_blocks}, "
-                    f"reserved={self.pool._reserved}, "
-                    f"radix_held={self._radix_held})")
-            else:
-                parts.append(f"fan-out blocked for request {head.id} "
-                             f"(free_slots={self.pool.n_free})")
-        phased = [r.id for r in self.requests.values() if r.pending_phases]
-        if phased:
-            parts.append(f"requests with pending model phases: {phased}")
-        return "; ".join(parts)
-
-    def assert_ledger_balanced(self) -> None:
-        """Block-ledger balance: every refcount is explained by a live
-        owner (request prompt tables, child tables, radix nodes) and the
-        pool's reservation counter equals the live owners' unclaimed
-        worst cases. Valid at any step boundary. A leak — e.g. an EOS
-        retirement dropping blocks but not its remaining reservation —
-        fails here loudly instead of silently shrinking
-        ``available_blocks`` until admission starves."""
-        if self.pool_kind != "paged":
-            return
-        pool = self.pool
-        pool.check_conservation()
-        refs = [0] * pool.n_blocks
-        reserved = 0
-        for r in self.requests.values():
-            if r.table is not None:
-                for blk in set(r.table):
-                    refs[blk] += 1
-            reserved += r.reserved
-            if r.state is RequestState.PREFILLING:
-                # remaining prompt-growth reservation is implicit: the
-                # blocks the prompt still needs beyond its current table
-                reserved += pool.blocks_for(r.prompt_len) - len(r.table)
-            for c in r.children:
-                if c.table is not None:
-                    for blk in set(c.table):
-                        refs[blk] += 1
-                reserved += c.reserved
-        for radix in self._radices.values():
-            stack = list(radix.root.values())
-            while stack:
-                n = stack.pop()
-                stack.extend(n.children.values())
-                refs[n.block] += 1
-        assert refs == pool._ref, (
-            "block refcount leak: owners "
-            f"{[(i, a, b) for i, (a, b) in enumerate(zip(refs, pool._ref)) if a != b]}")
-        assert reserved == pool._reserved, (
-            f"reservation leak: owners hold {reserved}, "
-            f"pool ledger says {pool._reserved}")
 
     def drain(self) -> None:
         """Run until every runnable request is DONE. Requests still waiting

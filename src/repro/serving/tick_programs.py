@@ -1,0 +1,501 @@
+"""Device tick programs for the serving runtime.
+
+This is the middle layer of the tick pipeline (plan -> dispatch ->
+retire, see serving/plan.py and serving/retire.py): every compiled
+program a scheduler tick can launch lives here, hoisted out of the
+runtime into module-level builders so programs are shared across
+runtime instances and testable in isolation.
+
+Paged programs are ``functools.lru_cache``d builders keyed on the model
+(hashable) plus the static sampling/shape flags, returning ONE jitted
+closure per key — the ``pool_programs_for`` idiom from paged_pool.py.
+This is equivalent to the old module-level ``jax.jit(...,
+static_argnames=("model", ...))`` functions (jit caches per static-arg
+tuple either way) but makes the compilation key explicit and keeps
+donation indices local to each builder.
+
+The ``dispatch_*`` functions are the host half of a dispatch: they take
+the runtime and one :class:`~repro.serving.plan.ProgramPlan`, build the
+static-shape operands (allocating reservation-backed blocks where the
+program's writes will land), launch the program, rebind the donated
+cache/keys buffers, and return the host-visible results for the
+retirement layer to consume. They mutate only device buffers and block
+tables — token/EOS/stash accounting belongs to retirement.
+
+The headline program is :func:`mixed_program`: a ``lax.scan`` horizon
+that carries *prefill rows alongside decode rows*. Per-row ``roles``
+masks extend the advance-mask machinery — a prefill row's next input
+token comes from a prefetched ``(H, n_slots)`` fed-token buffer (its
+queued prompt) instead of its sample, its RNG key never advances, and
+the step its last prompt token lands its logits/hidden rows are
+captured into carried probe buffers for the fan-out stash. Decode rows
+run the exact pure-horizon transition, so their greedy tokens stay
+bitwise identical whether or not a neighbor slot is prefilling — this
+is what removes the old whole-pool per-token fallback whenever any
+slot prefilled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import Model
+
+
+# ----------------------------------------------------------- slot pool
+# cache/logits/pos/keys are donated: the caller rebinds all four every tick,
+# and without donation XLA would copy the whole slot-pool KV cache per token.
+@functools.partial(jax.jit, static_argnames=("model", "temperature_zero"),
+                   donate_argnums=(2, 3, 4, 5))
+def pool_tick(model: Model, params, cache, logits, pos, keys, active,
+              temperature, *, temperature_zero: bool):
+    """One slot-pool decode tick over every slot.
+
+    Sample a token from each slot's current next-token logits, advance
+    active slots' positions, and run one decode step over the whole pool.
+    Inactive slots still flow through the model (their rows are unused and
+    row-independent) but their pos/logits are frozen so admission state
+    stays intact.
+    """
+    if temperature_zero:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        new_keys = keys
+    else:
+        split = jax.vmap(jax.random.split)(keys)            # (N, 2, 2)
+        new_keys = split[:, 0]
+        tok = jax.vmap(jax.random.categorical)(
+            split[:, 1], logits.astype(jnp.float32) / temperature
+        ).astype(jnp.int32)
+    new_pos = jnp.where(active, pos + 1, pos)
+    new_logits, _, cache = model.decode_step(params, tok[:, None], cache,
+                                             new_pos)
+    logits = jnp.where(active[:, None], new_logits[:, 0], logits)
+    return tok, logits, cache, new_pos, new_keys
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def admit_slot(logits, pos, keys, src_logits, src_row, slot, start_pos,
+               child_key):
+    """Point a freshly allocated slot at a prefilled sequence: install its
+    next-token logits, start position, and RNG stream."""
+    lrow = jax.lax.dynamic_index_in_dim(src_logits, src_row, axis=0,
+                                        keepdims=False)
+    logits = jax.lax.dynamic_update_index_in_dim(logits, lrow, slot, axis=0)
+    pos = jax.lax.dynamic_update_index_in_dim(
+        pos, jnp.asarray(start_pos, pos.dtype), slot, axis=0)
+    keys = jax.lax.dynamic_update_index_in_dim(keys, child_key, slot, axis=0)
+    return logits, pos, keys
+
+
+@functools.partial(jax.jit, static_argnames=("temperature_zero",))
+def sample_first(logits, row, key, temperature, *, temperature_zero: bool):
+    """Sample a fan-out child's first token from its request's stashed
+    probe logits. Performs exactly the split/categorical sequence the
+    slot-pool tick would, so per-child RNG streams are identical across
+    pool backends. (The paged runtime admits through the vmapped
+    admit_program, which is this program batched over children — kept as
+    the single-child reference the tests compare against.)"""
+    lrow = jax.lax.dynamic_index_in_dim(logits, row, axis=0, keepdims=False)
+    if temperature_zero:
+        return jnp.argmax(lrow).astype(jnp.int32), key
+    split = jax.random.split(key)
+    tok = jax.random.categorical(
+        split[1], lrow.astype(jnp.float32) / temperature).astype(jnp.int32)
+    return tok, split[0]
+
+
+# ------------------------------------------------- paged program builders
+@functools.lru_cache(maxsize=None)
+def token_program(model: Model, temperature_zero: bool):
+    """One paged-pool tick: decode every slot's current token at its
+    position through the block tables, then sample each slot's next token.
+
+    The same program serves chunked prefill and decode: a prefilling slot's
+    input token is the next *prompt* token (its sampled output is simply
+    not used by the host), a decoding slot's input is its last sampled
+    token. Dead slots point at the reserved null block and compute
+    harmless garbage — no per-slot control flow, one compile total.
+
+    `advance` flags the slots whose RNG streams this tick owns (this
+    model's live decode children). Other slots still sample — their rows
+    are unused garbage, vmapped counter-based threefry is element-wise so
+    they cannot perturb the advancing rows — but their keys are frozen:
+    with several models sharing the pool, another model's tick must never
+    burn a live foreign child's stream.
+    """
+    @functools.partial(jax.jit, donate_argnums=(1, 5))   # cache, keys
+    def run(params, cache, tables, tokens, pos, keys, advance, temperature):
+        logits, hidden, cache = model.decode_step(params, tokens[:, None],
+                                                  cache, pos,
+                                                  block_tables=tables)
+        lg = logits[:, 0]
+        if temperature_zero:
+            sampled = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            new_keys = keys
+        else:
+            split = jax.vmap(jax.random.split)(keys)        # (N, 2, 2)
+            new_keys = jnp.where(advance[:, None], split[:, 0], keys)
+            sampled = jax.vmap(jax.random.categorical)(
+                split[:, 1], lg.astype(jnp.float32) / temperature
+            ).astype(jnp.int32)
+        return sampled, lg, hidden[:, 0], cache, new_keys
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def chunk_program(model: Model):
+    """One varlen chunked-prefill program: every prefilling slot advances
+    by up to C prompt tokens (its own `valid` count) in a single compiled
+    step. Shapes are static — (prefill_slots, prefill_chunk) — so mixed
+    prompt lengths, partial tail chunks, and idle prefill slots (valid 0,
+    null tables) all run the same program; there is exactly one compile
+    for the whole runtime, like the decode tick."""
+    @functools.partial(jax.jit, donate_argnums=(1,))     # cache
+    def run(params, cache, tables, tokens, pos, valid):
+        logits, hidden, cache = model.decode_chunk(params, tokens, cache,
+                                                   pos, valid,
+                                                   block_tables=tables)
+        return logits, hidden, cache
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def admit_program(temperature_zero: bool):
+    """Batched fan-out admission: derive every child's RNG stream
+    (fold_in(fold_in(seed, request), child)), sample each first token
+    from its request's stashed probe logits, and install the advanced
+    keys into the pool rows — all children spawned this tick in ONE
+    program, where the per-child path paid one jit dispatch for the
+    fold_ins, one for the sample, and one `keys.at[slot].set` device op
+    per child. The caller pads every argument to the pool width with
+    out-of-range slot indices (scatter drops them), so exactly one
+    program compiles regardless of how many children a tick admits.
+    vmap of fold_in/split/categorical is element-wise (counter-based
+    threefry), so per-child streams are bitwise the per-child
+    program's."""
+    @functools.partial(jax.jit, donate_argnums=(5,))     # keys
+    def run(lrows, base_key, rids, idxs, slots, keys, temperature):
+        lg = jnp.stack(lrows)                               # (m, V)
+        ck = jax.vmap(lambda r, j: jax.random.fold_in(
+            jax.random.fold_in(base_key, r), j))(rids, idxs)    # (m, 2)
+        if temperature_zero:
+            toks = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            nk = ck
+        else:
+            split = jax.vmap(jax.random.split)(ck)          # (m, 2, 2)
+            nk = split[:, 0]
+            toks = jax.vmap(jax.random.categorical)(
+                split[:, 1], lg.astype(jnp.float32) / temperature
+            ).astype(jnp.int32)
+        keys = keys.at[slots].set(nk)
+        return toks, keys
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def horizon_program(model: Model, H: int, temperature_zero: bool,
+                    eos_id: Optional[int]):
+    """H decode steps fused into one compiled `lax.scan` program — the
+    horizon tick. Per scan step this is exactly the token program's
+    decode-then-sample sequence (greedy tokens are bitwise identical),
+    but sampling, EOS detection, and budget exhaustion all stay on
+    device: each slot carries a `remaining` counter, and a slot whose
+    counter hits zero (EOS sampled, or max_new reached) is frozen mid-
+    horizon — its token/pos stop advancing and its masked steps write
+    garbage K/V at its frozen position, which lands in the finished
+    child's private block and is never read. The host gets one
+    (H, 2, n_slots) [token; alive] buffer per horizon — a single
+    device->host sync where the per-token loop paid H.
+
+    Block tables are scan-invariant: the caller pre-extends every live
+    slot's table to cover the whole horizon (`PagedKVPool.preallocate`),
+    so tables upload once per horizon. Unwritten preallocated blocks sit
+    above each slot's current position and are masked by the `idx <= pos`
+    validity rule, contributing exact zeros — values are unchanged.
+
+    Slots outside this model's group (remaining = 0 at entry — dead, or
+    live under ANOTHER registry model) never advance their keys: a
+    member slot's stream evolves exactly as the per-token tick's, a
+    foreign live child's stream is untouched by this model's horizon."""
+    @functools.partial(jax.jit, donate_argnums=(1, 5))   # cache, keys
+    def run(params, cache, tables, tok, pos, keys, remaining, temperature):
+        member = remaining > 0              # this model's live slots
+
+        def transition(lg, hid, tok, pos, aux, x):
+            keys, remaining = aux
+            if temperature_zero:
+                sampled = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                new_keys = keys
+            else:
+                split = jax.vmap(jax.random.split)(keys)    # (N, 2, 2)
+                new_keys = jnp.where(member[:, None], split[:, 0], keys)
+                sampled = jax.vmap(jax.random.categorical)(
+                    split[:, 1], lg.astype(jnp.float32) / temperature
+                ).astype(jnp.int32)
+            alive = remaining > 0
+            new_rem = jnp.maximum(remaining - 1, 0)
+            if eos_id is not None:
+                new_rem = jnp.where(sampled == eos_id, 0, new_rem)
+            tok = jnp.where(alive, sampled, tok)
+            pos = jnp.where(alive, pos + 1, pos)
+            emit = jnp.stack([sampled, alive.astype(jnp.int32)])  # (2, N)
+            return tok, pos, (new_keys, new_rem), emit
+
+        tok, pos, cache, (keys, remaining), emits = model.decode_horizon(
+            params, tok, cache, pos, (keys, remaining), H, transition,
+            block_tables=tables)
+        return emits, cache, keys
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def mixed_program(model: Model, H: int, temperature_zero: bool,
+                  eos_id: Optional[int]):
+    """The fused mixed tick: one `lax.scan` horizon carrying prefill rows
+    alongside decode rows, so chunked prefill and H-step decode run in
+    ONE dispatch with one host sync — an arriving request no longer
+    drops every resident decode to per-token dispatch.
+
+    Per-row ``roles`` (True = prefill) extend the horizon program's
+    member mask. Decode rows run its exact transition — sample, advance,
+    freeze on EOS/budget — so their greedy tokens are bitwise identical
+    to a pure-decode horizon (sampling is element-wise counter-based
+    threefry; the extra rows cannot perturb it). Prefill rows:
+
+    * feed the next *prompt* token from the prefetched ``fed`` (H, N)
+      buffer instead of their sample (their sampled output is garbage
+      the host drops, exactly as in the per-token interleave);
+    * never advance their RNG key (``member = remaining > 0 & ~roles``);
+    * ignore EOS (a prompt may legitimately contain the EOS token);
+    * count down ``remaining`` = prompt tokens left to compute, and the
+      step the LAST prompt token lands, capture that step's logits and
+      hidden rows into carried probe buffers — the fan-out stash and the
+      difficulty probe, identical values to what the chunk program's
+      final row would have produced (same positions, same cache).
+
+    A prefill row that finishes mid-horizon freezes like an EOS'd decode
+    row; its masked steps write garbage K/V at position ``prompt_len``,
+    which lands either in the row's partial boundary block — overwritten
+    by each fan-out child's first decode write before any read, and
+    never published (the radix tree takes full blocks only) — or, when
+    the prompt ends exactly on a block edge, in the null block. Returns
+    ``(emits (H, 2, N), cache, keys, probe_lg (N, V), probe_hid (N, d))``.
+    """
+    @functools.partial(jax.jit, donate_argnums=(1, 5))   # cache, keys
+    def run(params, cache, tables, tok, pos, keys, remaining, roles, fed,
+            temperature):
+        member = (remaining > 0) & ~roles   # this model's live decode rows
+
+        def transition(lg, hid, tok, pos, aux, fed_tok):
+            keys, remaining, plg, phid = aux
+            if temperature_zero:
+                sampled = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                new_keys = keys
+            else:
+                split = jax.vmap(jax.random.split)(keys)    # (N, 2, 2)
+                new_keys = jnp.where(member[:, None], split[:, 0], keys)
+                sampled = jax.vmap(jax.random.categorical)(
+                    split[:, 1], lg.astype(jnp.float32) / temperature
+                ).astype(jnp.int32)
+            alive = remaining > 0
+            new_rem = jnp.maximum(remaining - 1, 0)
+            if eos_id is not None:      # EOS retires decode rows only
+                new_rem = jnp.where(~roles & (sampled == eos_id), 0,
+                                    new_rem)
+            done_probe = roles & alive & (new_rem == 0)
+            plg = jnp.where(done_probe[:, None], lg.astype(plg.dtype), plg)
+            phid = jnp.where(done_probe[:, None], hid.astype(phid.dtype),
+                             phid)
+            nxt = jnp.where(roles, fed_tok, sampled)
+            tok = jnp.where(alive, nxt, tok)
+            pos = jnp.where(alive, pos + 1, pos)
+            emit = jnp.stack([sampled, alive.astype(jnp.int32)])  # (2, N)
+            return tok, pos, (new_keys, new_rem, plg, phid), emit
+
+        N = tok.shape[0]
+        plg0 = jnp.zeros((N, model.lm.vocab_padded), model.lm.dtype)
+        phid0 = jnp.zeros((N, model.cfg.d_model), model.lm.dtype)
+        (tok, pos, cache, (keys, remaining, plg, phid), emits
+         ) = model.decode_horizon(
+            params, tok, cache, pos, (keys, remaining, plg0, phid0), H,
+            transition, block_tables=tables, xs=fed)
+        return emits, cache, keys, plg, phid
+    return run
+
+
+# ------------------------------------------------------------ dispatchers
+def dispatch_token(rt, pp):
+    """Per-token program over one model's slots (decode + the chunk-1
+    prefill interleave): allocate on-demand blocks the tick's writes
+    cross into, build operands, launch, return (sampled_np, logits,
+    hidden_np) for retirement. Slots belonging to other models run
+    through as dead rows: null tables, frozen keys, outputs dropped."""
+    pool = rt.pool
+    B = pool.block_size
+    tables: Dict[int, List[int]] = {}
+    for s in pp.decode_slots:
+        c = rt.slots[s]
+        if rt._pos[s] // B == len(c.table):
+            c.table.append(pool.alloc_block())
+            c.reserved -= 1
+        tables[s] = c.table
+    for s in pp.prefill_slots:
+        r = rt._pref[s]
+        if rt._pos[s] // B == len(r.table):
+            r.table.append(pool.alloc_block())
+        tables[s] = r.table
+    advance = np.zeros((rt.n_slots,), bool)
+    advance[list(pp.decode_slots)] = True
+    run = token_program(rt.models[pp.model_id], rt.temperature == 0.0)
+    sampled, logits, hidden, cache, rt.keys = run(
+        rt.model_params[pp.model_id], pool.caches[pp.model_id],
+        jnp.asarray(pool.dense_tables(tables)),
+        jnp.asarray(rt._tok), jnp.asarray(rt._pos), rt.keys,
+        jnp.asarray(advance), rt.temperature)
+    pool.caches[pp.model_id] = cache
+    rt.metrics.record_dispatch(model=pp.model_id)
+    rt.metrics.record_tick(len(pp.decode_slots) + len(pp.prefill_slots),
+                           n_sampled=len(pp.decode_slots),
+                           model=pp.model_id)
+    rt.metrics.record_blocks(pool.blocks_in_use)
+    if pp.prefill_slots:
+        rt.metrics.record_prefill(len(pp.prefill_slots), model=pp.model_id)
+    sampled_np = np.asarray(sampled)
+    rt.metrics.record_sync(model=pp.model_id)
+    hidden_np = None
+    if pp.prefill_slots:
+        hidden_np = np.asarray(hidden, np.float32)
+        rt.metrics.record_sync(model=pp.model_id)
+    return sampled_np, logits, hidden_np
+
+
+def dispatch_chunk(rt, pp):
+    """Varlen chunked-prefill program over one model's prefilling slots:
+    advance each by up to `prefill_chunk` prompt tokens. Chunk ends are
+    aligned to the absolute C-grid, so a prefix-cache hit (which starts
+    prefill mid-prompt) computes every remaining position in exactly the
+    batch shape a cold run would — the hit path stays bitwise identical.
+    Returns (logits, hidden, take) for retirement."""
+    pool = rt.pool
+    B, C, P = pool.block_size, rt.prefill_chunk, rt.prefill_slots
+    toks = np.zeros((P, C), np.int32)
+    pos = np.zeros((P,), np.int32)
+    valid = np.zeros((P,), np.int32)
+    tables = np.zeros((P, pool.blocks_per_seq), np.int32)
+    take: Dict[int, int] = {}
+    for i, s in enumerate(pp.prefill_slots):
+        r = rt._pref[s]
+        p = r.prefill_pos
+        L = min(C - p % C, r.prompt_len - p)
+        # allocate the blocks this chunk writes into up front
+        # (reservation-backed, like per-token growth)
+        while (p + L - 1) // B >= len(r.table):
+            r.table.append(pool.alloc_block())
+        toks[i, :L] = r.prompt[p:p + L]
+        pos[i] = p
+        valid[i] = L
+        tables[i, :len(r.table)] = r.table
+        take[s] = L
+    run = chunk_program(rt.models[pp.model_id])
+    logits, hidden, cache = run(
+        rt.model_params[pp.model_id], pool.caches[pp.model_id],
+        jnp.asarray(tables), jnp.asarray(toks), jnp.asarray(pos),
+        jnp.asarray(valid))
+    pool.caches[pp.model_id] = cache
+    rt.metrics.record_dispatch(model=pp.model_id)
+    rt.metrics.record_prefill(int(valid.sum()), model=pp.model_id)
+    rt.metrics.record_blocks(pool.blocks_in_use)
+    return logits, hidden, take
+
+
+def dispatch_horizon(rt, pp):
+    """Horizon-fused scan over one model's live decode slots: ONE jitted
+    dispatch and ONE blocking device->host sync for up to H x n_live
+    generated tokens. Returns the (H, 2, n_slots) token/alive buffer.
+    Slots of other registry models ride along frozen (remaining 0: no
+    token/pos/key advance; their writes land in this model's null
+    block)."""
+    pool = rt.pool
+    H = pp.horizon
+    remaining = np.zeros(rt.n_slots, np.int32)
+    tables: Dict[int, List[int]] = {}
+    for s in pp.decode_slots:
+        c = rt.slots[s]
+        remaining[s] = c.max_new - len(c.tokens)
+        # extend the slot's table to cover the whole horizon up front
+        # (reservation-backed), so tables are scan-invariant and
+        # upload once per horizon instead of once per token
+        c.reserved -= pool.preallocate(c.table, int(rt._pos[s]) + H)
+        tables[s] = c.table
+    run = horizon_program(rt.models[pp.model_id], H,
+                          rt.temperature == 0.0, rt.eos_id)
+    emits, cache, rt.keys = run(
+        rt.model_params[pp.model_id], pool.caches[pp.model_id],
+        jnp.asarray(pool.dense_tables(tables)),
+        jnp.asarray(rt._tok), jnp.asarray(rt._pos), rt.keys,
+        jnp.asarray(remaining), rt.temperature)
+    pool.caches[pp.model_id] = cache
+    rt.metrics.record_dispatch(model=pp.model_id)
+    # the dispatch above is asynchronous: host-side bookkeeping that
+    # does not depend on the sampled tokens overlaps device compute,
+    # and the buffer is forced in one transfer at the end
+    rt.metrics.record_blocks(pool.blocks_in_use)
+    buf = np.asarray(emits)                 # (H, 2, N): [token; alive]
+    rt.metrics.record_sync(model=pp.model_id)
+    return buf
+
+
+def dispatch_mixed(rt, pp):
+    """The fused mixed tick (see :func:`mixed_program`): decode rows get
+    the horizon treatment (remaining counters, table preallocation to
+    pos + H), prefill rows get their remaining-prompt counts, role
+    flags, table preallocation to min(prompt_len, pos + H), and an
+    (H, n_slots) fed-token buffer of their queued prompt tokens. One
+    dispatch, one sync. Returns (buf, probe_lg, probe_hid, consumed)
+    where consumed maps each prefill slot to the prompt tokens this
+    horizon computes for it."""
+    pool = rt.pool
+    H = pp.horizon
+    remaining = np.zeros(rt.n_slots, np.int32)
+    roles = np.zeros(rt.n_slots, bool)
+    fed = np.zeros((H, rt.n_slots), np.int32)
+    tables: Dict[int, List[int]] = {}
+    for s in pp.decode_slots:
+        c = rt.slots[s]
+        remaining[s] = c.max_new - len(c.tokens)
+        c.reserved -= pool.preallocate(c.table, int(rt._pos[s]) + H)
+        tables[s] = c.table
+    consumed: Dict[int, int] = {}
+    for s in pp.prefill_slots:
+        r = rt._pref[s]
+        p0 = r.prefill_pos
+        left = r.prompt_len - p0
+        roles[s] = True
+        remaining[s] = left
+        # prompt growth draws the request's implicit prefill reservation
+        pool.preallocate(r.table, min(r.prompt_len, p0 + H))
+        tables[s] = r.table
+        # feed positions p0+1 .. : the row's step-h input is prompt[p0+h];
+        # a row that finishes its prompt mid-horizon freezes, so the zero
+        # padding past the last prompt token is never consumed
+        feed = r.prompt[p0 + 1:p0 + min(H, left)]
+        fed[:len(feed), s] = feed
+        consumed[s] = min(H, left)
+    run = mixed_program(rt.models[pp.model_id], H,
+                        rt.temperature == 0.0, rt.eos_id)
+    emits, cache, rt.keys, probe_lg, probe_hid = run(
+        rt.model_params[pp.model_id], pool.caches[pp.model_id],
+        jnp.asarray(pool.dense_tables(tables)),
+        jnp.asarray(rt._tok), jnp.asarray(rt._pos), rt.keys,
+        jnp.asarray(remaining), jnp.asarray(roles), jnp.asarray(fed),
+        rt.temperature)
+    pool.caches[pp.model_id] = cache
+    rt.metrics.record_dispatch(model=pp.model_id)
+    rt.metrics.record_blocks(pool.blocks_in_use)
+    buf = np.asarray(emits)                 # (H, 2, N): [token; alive]
+    rt.metrics.record_sync(model=pp.model_id)
+    return buf, probe_lg, probe_hid, consumed

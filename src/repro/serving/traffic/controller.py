@@ -128,7 +128,10 @@ class TrafficController:
     def effective_horizon(self, rt, horizon: int) -> int:
         """Halve the fused horizon once per whole unit of price, floored
         at ``min_horizon`` — cheap load shedding with bitwise-identical
-        greedy output."""
+        greedy output. The tick planner (serving/plan.py:horizon_width)
+        re-reads this at EVERY dispatch, never latching it at admission:
+        a runtime crossing into overload mid-request shrinks the very
+        next horizon lease of already-resident work."""
         if not self.cfg.degrade or horizon <= self.cfg.min_horizon:
             return horizon
         h = horizon >> min(int(self.price(rt)), 30)

@@ -6,13 +6,24 @@ tick. This surface adds streaming without changing that: a single
 newly decoded tokens of each subscribed request into per-request asyncio
 queues; ``tokens(rid)`` is an async generator a client awaits.
 
+Under fused ticks a single runtime ``step()`` can retire a whole
+horizon of tokens — and drain loops inside the runtime
+(``prefill_queued``, ``drain``) can run many steps before control
+returns here. So the streamer also subscribes to the runtime's emit
+hooks (``runtime.add_emit_hook``): every token append anywhere in the
+tick pipeline pushes straight through the watermark, giving clients
+per-token progress regardless of who is driving the step loop. The
+post-tick ``_pump`` remains as the completion path (DONE sentinel) and
+as a safety net for runtimes without hooks.
+
 Preemption-safe by construction: emission tracks a per-request
 ``emitted`` watermark over child 0's token list. A preempted request's
 children restart from their per-child RNG streams
 (``fold_in(fold_in(seed, rid), j)``), so the regenerated prefix is
 bitwise identical to what was already streamed — the watermark simply
-waits for the replay to catch back up, and the client never sees a
-duplicate or a divergent token.
+waits for the replay to catch back up (token lists shorter than the
+watermark are a no-op), and the client never sees a duplicate or a
+divergent token.
 """
 from __future__ import annotations
 
@@ -48,6 +59,24 @@ class AsyncTokenStreamer:
     def __init__(self, runtime):
         self.rt = runtime
         self._sessions: Dict[int, _Session] = {}
+        hook = getattr(runtime, "add_emit_hook", None)
+        if hook is not None:
+            hook(self._on_emit)
+
+    def _on_emit(self, r, child) -> None:
+        """Runtime emit hook: push child 0's fresh tokens through the
+        watermark the moment they are appended — inside fused-tick
+        retirement, admission, or any internal drain loop. Replayed
+        prefixes (preemption) land below the watermark and no-op."""
+        if child.index != 0:
+            return
+        s = self._sessions.get(r.id)
+        if s is None or s.finished:
+            return
+        if len(child.tokens) > s.emitted:
+            for tok in child.tokens[s.emitted:]:
+                s.queue.put_nowait(int(tok))
+            s.emitted = len(child.tokens)
 
     def submit(self, prompt, **kwargs) -> int:
         rid = self.rt.submit(prompt, **kwargs)

@@ -1,0 +1,330 @@
+"""Unified tick pipeline (plan -> dispatch -> retire) tests.
+
+The refactor's contract: greedy outputs are token-bitwise identical to
+the batch engine across every (horizon, prefill_chunk, prefill-overlap)
+combination — the fused mixed program, which carries prefill rows inside
+the decode horizon scan, must be invisible in the tokens. Plus the
+planner's scheduling decisions (program kinds, per-dispatch horizon
+re-degradation under load), retirement edge cases (mid-horizon EOS
+while a neighbor prefills, radix hits feeding the fused path), ledger
+integrity under randomized churn, and the streaming emit hooks that
+give clients per-token progress under fused ticks.
+"""
+import asyncio
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.serving import (AsyncTokenStreamer, ContinuousBatchingRuntime,
+                           ServingEngine, TrafficConfig)
+from repro.serving.plan import ProgramPlan, TickPlan, plan_tick
+
+BLOCK = 4
+PROMPT_LENS = (5, 8, 7, 12)      # includes a block-aligned prompt: the
+                                 # mixed program's frozen-row garbage
+                                 # write lands in the null block there
+BUDGETS = (2, 1, 3, 1)
+
+
+@pytest.fixture(scope="module")
+def workload(tiny):
+    """Prompts plus the batch-engine greedy reference per request."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in PROMPT_LENS]
+    engine = ServingEngine(model, params, max_new=6, temperature=0.0)
+    refs = [engine.generate(p[None], n_samples=1, seed=0,
+                            temperature=0.0).tokens[0] for p in prompts]
+    return prompts, refs
+
+
+def _mk(model, params, **kw):
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("max_len", 24)
+    kw.setdefault("max_new", 6)
+    kw.setdefault("temperature", 0.0)
+    kw.setdefault("seed", 0)
+    kw.setdefault("pool", "paged")
+    kw.setdefault("block_size", BLOCK)
+    return ContinuousBatchingRuntime(model, params, **kw)
+
+
+def _run(model, params, prompts, budgets, *, stagger, **kw):
+    """Drain the workload; stagger=True submits the second half only
+    after the first half is decoding, forcing prefill/decode overlap."""
+    rt = _mk(model, params, **kw)
+    half = len(prompts) // 2 if stagger else len(prompts)
+    ids = [rt.submit(p, budget=b)
+           for p, b in zip(prompts[:half], budgets[:half])]
+    if stagger:
+        guard = 0
+        while not any(c is not None for c in rt.slots):
+            assert rt.step(), "stalled before any decode started"
+            guard += 1
+            assert guard < 100
+        ids += [rt.submit(p, budget=b)
+                for p, b in zip(prompts[half:], budgets[half:])]
+    rt.drain()
+    return rt, ids
+
+
+# ------------------------------------------------------ bitwise invariance
+@pytest.mark.slow
+@pytest.mark.parametrize("horizon", [1, 4, 8])
+@pytest.mark.parametrize("chunk", [1, BLOCK])
+@pytest.mark.parametrize("stagger", [False, True])
+def test_bitwise_invariance_cross_product(tiny, workload, horizon, chunk,
+                                          stagger):
+    """Every (H, prefill_chunk, overlap) combination reproduces the
+    batch engine's greedy tokens bitwise, for every child."""
+    cfg, model, params = tiny
+    prompts, refs = workload
+    rt, ids = _run(model, params, prompts, BUDGETS, stagger=stagger,
+                   horizon=horizon, prefill_chunk=chunk)
+    for rid, ref in zip(ids, refs):
+        r = rt.result(rid)
+        assert r.children, f"request {rid} spawned no children"
+        for c in r.children:
+            np.testing.assert_array_equal(np.asarray(c.tokens), ref)
+    rt.assert_ledger_balanced()
+    if stagger and horizon > 1:
+        # overlap + fusion available: the mixed program must have run and
+        # the pre-refactor fallback must not have
+        assert rt.metrics.mixed_ticks >= 1
+        assert rt.metrics.fallback_ticks == 0
+
+
+@pytest.mark.slow
+def test_fused_matches_unfused_exactly(tiny, workload):
+    """fuse_prefill on/off is output-invisible on the same staggered
+    workload — and only the unfused run pays fallback ticks."""
+    cfg, model, params = tiny
+    prompts, _ = workload
+    rt_f, ids_f = _run(model, params, prompts, BUDGETS, stagger=True,
+                       horizon=8, prefill_chunk=BLOCK, fuse_prefill=True)
+    rt_u, ids_u = _run(model, params, prompts, BUDGETS, stagger=True,
+                       horizon=8, prefill_chunk=BLOCK, fuse_prefill=False)
+    for a, b in zip(ids_f, ids_u):
+        ca, cb = rt_f.result(a).children, rt_u.result(b).children
+        assert len(ca) == len(cb)
+        for x, y in zip(ca, cb):
+            assert x.tokens == y.tokens
+    assert rt_f.metrics.fallback_ticks == 0
+    assert rt_u.metrics.mixed_ticks == 0
+    assert rt_u.metrics.fallback_ticks >= 1
+    assert rt_u.metrics.summary()["fallback_fraction"] > 0.0
+    # the fused run saw real overlap and reported it
+    assert rt_f.metrics.prefill_decode_overlap_tokens > 0
+    assert 0.0 < rt_f.metrics.summary()["fused_row_occupancy"] <= 1.0
+
+
+# --------------------------------------------------------- retirement edges
+def test_mid_horizon_eos_while_neighbor_prefills(tiny, workload):
+    """A decode row EOSing inside the mixed scan freezes mid-horizon
+    while a neighbor row is still consuming prompt tokens; both retire
+    correctly and the ledger balances."""
+    cfg, model, params = tiny
+    prompts, refs = workload
+    eos = int(refs[0][1])           # request 0 EOSes on its 2nd token
+
+    def truncate(ref):
+        out = []
+        for t in ref:
+            out.append(int(t))
+            if t == eos:
+                break
+        return out
+
+    rt, ids = _run(model, params, prompts, BUDGETS, stagger=True,
+                   horizon=8, prefill_chunk=BLOCK, eos_id=eos)
+    assert rt.metrics.mixed_ticks >= 1
+    for rid, ref in zip(ids, refs):
+        for c in rt.result(rid).children:
+            assert c.tokens == truncate(ref)
+    assert len(rt.result(ids[0]).children[0].tokens) < 6
+    rt.assert_ledger_balanced()
+
+
+def test_radix_hit_feeds_fused_path(tiny):
+    """A prompt adopting radix-published prefix blocks prefills its tail
+    inside the mixed scan; outputs match a cold cache-off run."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(23)
+    shared = rng.integers(0, cfg.vocab_size, (12,)).astype(np.int32)
+    donor = np.concatenate([shared, rng.integers(
+        0, cfg.vocab_size, (4,)).astype(np.int32)])
+    hitter = np.concatenate([shared, rng.integers(
+        0, cfg.vocab_size, (3,)).astype(np.int32)])
+    decoy = rng.integers(0, cfg.vocab_size, (9,)).astype(np.int32)
+
+    rt = _mk(model, params, horizon=8, prefill_chunk=BLOCK)
+    rt.drain()  # no-op; establishes programs
+    a = rt.submit(donor, budget=1)
+    rt.drain()
+    b = rt.submit(hitter, budget=1)
+    guard = 0
+    while not any(c is not None for c in rt.slots):
+        assert rt.step() and (guard := guard + 1) < 100
+    d = rt.submit(decoy, budget=1)
+    rt.drain()
+    assert rt.metrics.prefix_hit_tokens > 0
+
+    cold = _mk(model, params, horizon=8, prefill_chunk=BLOCK,
+               prefix_cache=False)
+    ids = [cold.submit(p, budget=1) for p in (donor, hitter, decoy)]
+    cold.drain()
+    for rid, cid in zip((a, b, d), ids):
+        assert (rt.result(rid).children[0].tokens
+                == cold.result(cid).children[0].tokens)
+    rt.assert_ledger_balanced()
+
+
+@pytest.mark.slow
+def test_randomized_churn_ledger_audit(tiny):
+    """Randomized arrivals/budgets/lengths churning through the fused
+    pipeline: the block ledger balances at every audited step boundary
+    and at drain, with zero fallback ticks."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(7)
+    rt = _mk(model, params, max_len=24, horizon=4, prefill_chunk=BLOCK)
+    ids = []
+    for wave in range(4):
+        for _ in range(3):
+            L = int(rng.integers(3, 15))
+            p = rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+            ids.append(rt.submit(p, budget=int(rng.integers(1, 4)),
+                                 max_new=int(rng.integers(2, 7))))
+        for _ in range(int(rng.integers(1, 6))):
+            rt.step()
+        rt.assert_ledger_balanced()
+    rt.drain()
+    assert rt.metrics.fallback_ticks == 0
+    for rid in ids:
+        r = rt.result(rid)
+        assert r.children and r.response is not None
+        for c in r.children:
+            assert 0 < len(c.tokens) <= c.max_new
+
+
+# ----------------------------------------------------------------- planner
+def test_plan_is_pure_and_slot_disjoint(tiny, workload):
+    """plan_tick mutates nothing, is idempotent, and assigns every live
+    slot to exactly one program."""
+    cfg, model, params = tiny
+    prompts, _ = workload
+    # max_new big enough that decode budget can't collapse to 1 before
+    # the overlap window (H = pow2floor(min remaining) must stay > 1)
+    rt = _mk(model, params, max_len=48, max_new=32, horizon=8,
+             prefill_chunk=BLOCK)
+    ids = [rt.submit(p, budget=b) for p, b in zip(prompts[:2], BUDGETS[:2])]
+    guard = 0
+    while not any(c is not None for c in rt.slots):
+        assert rt.step() and (guard := guard + 1) < 100
+    ids += [rt.submit(p, budget=b) for p, b in zip(prompts[2:], BUDGETS[2:])]
+    while not (any(c is not None for c in rt.slots) and rt._pref):
+        assert rt.step() and (guard := guard + 1) < 100
+    plan = plan_tick(rt)
+    assert plan == plan_tick(rt)
+    assert isinstance(plan, TickPlan)
+    seen = []
+    for pp in plan.programs:
+        assert isinstance(pp, ProgramPlan)
+        seen += list(pp.decode_slots) + list(pp.prefill_slots)
+    assert sorted(seen) == sorted(
+        [s for s, c in enumerate(rt.slots) if c is not None]
+        + list(rt._pref))
+    assert len(seen) == len(set(seen))
+    # decode + prefill both live on an attention stack with fusion on:
+    # ONE mixed program, never the fallback split
+    kinds = [pp.kind for pp in plan.programs]
+    assert kinds == ["mixed"]
+    rt.drain()
+
+
+def test_overload_shrinks_next_horizon_mid_request(tiny, workload,
+                                                   monkeypatch):
+    """Traffic degradation is re-read per dispatch: load arriving while
+    a request is already decoding shrinks its very next horizon lease
+    (power-of-two quantized, floored at min_horizon)."""
+    cfg, model, params = tiny
+    prompts, _ = workload
+    rt = _mk(model, params, max_len=32, max_new=16, horizon=8,
+             traffic=TrafficConfig(preempt=False))
+    rt.submit(prompts[0], budget=1)
+    guard = 0
+    while not any(c is not None for c in rt.slots):
+        assert rt.step() and (guard := guard + 1) < 100
+    plan0 = plan_tick(rt)
+    assert plan0.programs[0].kind == "horizon"
+    # the admitting step already ran one full-width dispatch, so the
+    # next unloaded lease is bounded by remaining budget — read it from
+    # the plan rather than hardcoding, then require room to shrink
+    h0 = plan0.programs[0].horizon
+    assert h0 > rt.traffic.cfg.min_horizon
+    # overload hits mid-request: the SAME resident request's next
+    # dispatch plans a shorter lease, nothing re-admitted
+    monkeypatch.setattr(rt.traffic, "price", lambda _rt: 2.0)
+    plan1 = plan_tick(rt)
+    h1 = plan1.programs[0].horizon
+    assert h1 == max(rt.traffic.cfg.min_horizon, h0 >> 2)
+    assert h1 < h0
+    rt.drain()
+
+
+# --------------------------------------------------------------- streaming
+def test_emit_hooks_stream_through_fused_ticks(tiny, workload):
+    """The streamer's emit-hook path delivers every token even when the
+    runtime is driven by bare step()/drain() loops (no _pump between
+    ticks) and whole horizons retire at once."""
+    cfg, model, params = tiny
+    prompts, refs = workload
+    rt = _mk(model, params, horizon=8, prefill_chunk=BLOCK)
+    streamer = AsyncTokenStreamer(rt)
+    rid = streamer.submit(prompts[0], budget=2)
+    rt.drain()                      # streamer.serve never runs
+    session = streamer._sessions[rid]
+    got = []
+    while not session.queue.empty():
+        got.append(session.queue.get_nowait())
+    assert got == list(refs[0])     # child 0, in order, none dropped
+    # watermark tolerates shrinkage (preemption replay): re-notifying
+    # with a shorter list must not re-emit
+    child = rt.result(rid).children[0]
+    streamer._on_emit(rt.result(rid), child)
+    assert session.queue.empty()
+
+
+def test_streamer_end_to_end_under_fused_ticks(tiny, workload):
+    """Full async path on a fused runtime: tokens arrive per-token and
+    match child 0 exactly."""
+    cfg, model, params = tiny
+    prompts, refs = workload
+    rt = _mk(model, params, horizon=8, prefill_chunk=BLOCK)
+    streamer = AsyncTokenStreamer(rt)
+    rids = [streamer.submit(p, budget=1) for p in prompts[:2]]
+
+    async def main():
+        server = asyncio.ensure_future(streamer.serve())
+        outs = await asyncio.gather(*[collect(r) for r in rids])
+        await server
+        return outs
+
+    async def collect(rid):
+        return [t async for t in streamer.tokens(rid)]
+
+    outs = asyncio.run(main())
+    for rid, ref, out in zip(rids, refs, outs):
+        assert out == rt.requests[rid].children[0].tokens
+        assert out == list(ref)
+
+
+# ------------------------------------------------------------------- meta
+def test_serving_modules_stay_under_line_budget():
+    """The refactor's point: no serving module grows back into a
+    monolith. Hard cap 900 lines per module."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    for f in sorted((root / "src/repro/serving").rglob("*.py")):
+        n = len(f.read_text().splitlines())
+        assert n <= 900, f"{f.relative_to(root)} has {n} lines (cap 900)"
