@@ -11,7 +11,6 @@ the TRUE variance because we control the generator.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import numpy as np
 

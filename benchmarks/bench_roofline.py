@@ -16,7 +16,6 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-import numpy as np
 
 ARTIFACTS = Path(__file__).resolve().parents[1] / "experiments" / "artifacts"
 

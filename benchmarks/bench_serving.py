@@ -680,8 +680,8 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
         save_result("bench_serving_mixed", mx)
         merge_result("BENCH_serving", {"mixed": mx})
         print(f"# mixed H={mx['horizon']}: {mx['speedup']:.2f}x tokens/sec "
-              f"vs pre-refactor fallback under continuous prefill "
-              f"interference; fused fallback_ticks="
+              "vs pre-refactor fallback under continuous prefill "
+              "interference; fused fallback_ticks="
               f"{mx['fused']['fallback_ticks']}, mixed_ticks="
               f"{mx['fused']['mixed_ticks']}, overlap_tokens="
               f"{mx['fused']['overlap_tokens']}; syncs/token "
@@ -834,13 +834,13 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
           f"{cap['slots']['peak_children']} concurrent children; "
           f"prefix-heavy: {pf['reduction']*100:.0f}% fewer prefill tokens")
     print(f"# horizon H={horizon}: {hz['speedup']:.2f}x tokens/sec on the "
-          f"decode-heavy probe, syncs/token "
+          "decode-heavy probe, syncs/token "
           f"{hz['fused']['syncs_per_token']:.3f} vs "
           f"{hz['unfused']['syncs_per_token']:.3f} "
           f"({hz['sync_reduction']:.1f}x fewer), "
           f"bitwise_equal={hz['bitwise_equal']}")
     print(f"# mixed H={mx['horizon']}: {mx['speedup']:.2f}x tokens/sec vs "
-          f"pre-refactor fallback under continuous prefill interference; "
+          "pre-refactor fallback under continuous prefill interference; "
           f"fused fallback_ticks={mx['fused']['fallback_ticks']}, "
           f"fallback_fraction={mx['fused']['fallback_fraction']:.2f}, "
           f"syncs/token {mx['fused']['syncs_per_token']:.3f} = "

@@ -1,0 +1,29 @@
+"""Static hot-path auditor for the serving runtime.
+
+Three passes over the repo, none of which execute the serving stack,
+each turning a bug class the git history paid for once into a
+machine-checked invariant:
+
+* :mod:`repro.analysis.syncs` — AST host-sync lint over
+  ``src/repro/serving/`` + ``src/repro/kernels/``: implicit
+  device->host transfers (``float``/``int``/``bool``/``len``/
+  ``np.asarray``/``.item``/iteration on values dataflow-reachable from
+  jax arrays), host callbacks inside jitted builders, and Python
+  branching on traced values. Per-line ``# analysis: allow(sync)``
+  suppressions; committed baseline for accepted cold-path uses.
+* :mod:`repro.analysis.recompiles` — compile-cache cardinality:
+  ``jax.jit``/``pallas_call`` bound to instance state is a hard error
+  (the per-instance-jit gotcha), every tick-program builder must be
+  module-level ``lru_cache``d, and the static-arg key space reachable
+  from ``plan.py`` is enumerated into a worst-case compile-count table.
+* :mod:`repro.analysis.blockspecs` — Pallas BlockSpec bounds: every
+  registered kernel index map is evaluated concretely over its full
+  grid (including ``@pl.when``-skipped iterations, which still feed the
+  DMA pipeline) against block-table extents with poisoned dead entries.
+* :mod:`repro.analysis.programs` — the dynamic complement (still no
+  serving stack): lowers the tick programs for a tiny model and proves
+  the one-sync-per-horizon contract on the jaxpr and optimized HLO.
+
+CLI: ``python -m repro.analysis --check`` (see ``__main__.py``).
+"""
+from repro.analysis.common import Finding  # noqa: F401  (public API)

@@ -1,0 +1,129 @@
+"""CLI for the static hot-path auditor.
+
+    python -m repro.analysis --check
+    python -m repro.analysis --check --baseline experiments/analysis_baseline.json
+    python -m repro.analysis --update-baseline
+
+Exit status: 0 when every finding is suppressed or baselined, 1 when
+new findings exist (CI gates on this), 2 on bad usage.
+
+``--root`` points the file-scanning passes (syncs, recompiles) at a
+different tree — used by the tests to run them over seeded-violation
+fixtures; the repo-bound passes (blockspecs, programs) skip themselves
+when the root is not this repo. ``--skip PASS`` disables a pass by
+name (``programs`` is the only one that compiles anything; the other
+three are pure AST/eval and run in milliseconds).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+from repro.analysis import blockspecs, common, programs, recompiles, syncs
+
+PASSES = {
+    "syncs": syncs.run,
+    "recompiles": recompiles.run,
+    "blockspecs": blockspecs.run,
+    "programs": programs.run,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static hot-path auditor (host syncs, compile-cache "
+                    "cardinality, BlockSpec bounds, one-sync contract)")
+    ap.add_argument("--check", action="store_true",
+                    help="run all passes; exit non-zero on new findings "
+                         "(default action)")
+    ap.add_argument("--baseline", type=Path,
+                    default=Path("experiments/analysis_baseline.json"),
+                    help="accepted-findings file (repo-relative)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current findings")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="tree to scan (default: this repo)")
+    ap.add_argument("--skip", action="append", default=[],
+                    choices=sorted(PASSES),
+                    help="skip a pass (repeatable)")
+    ap.add_argument("--table", action="store_true",
+                    help="print the worst-case compile-count table")
+    args = ap.parse_args(argv)
+
+    root = (args.root or common.repo_root()).resolve()
+    baseline_path = args.baseline if args.baseline.is_absolute() \
+        else root / args.baseline
+
+    results: List[common.PassResult] = []
+    for name, fn in PASSES.items():
+        if name in args.skip:
+            continue
+        results.append(fn(root))
+
+    findings = [f for r in results for f in r.findings]
+    if args.update_baseline:
+        common.write_baseline(baseline_path, findings)
+        print(f"baseline: wrote {sum(not f.suppressed for f in findings)} "
+              f"finding(s) to {baseline_path}")
+        return 0
+
+    baseline = common.load_baseline(baseline_path)
+    new = [f for f in findings
+           if not f.suppressed and f.key not in baseline]
+    stale = sorted(set(baseline)
+                   - {f.key for f in findings if not f.suppressed})
+
+    n_suppressed = sum(f.suppressed for f in findings)
+    n_baselined = len(findings) - n_suppressed - len(new)
+    for r in results:
+        extra = ""
+        if r.report and r.pass_id == "blockspec":
+            extra = (f" ({r.report.get('audits', 0)} maps, "
+                     f"{r.report.get('grid_points', 0)} grid points)")
+        print(f"pass {r.pass_id:<9} findings: "
+              f"{sum(1 for f in r.findings if not f.suppressed):>3}"
+              f"{extra}")
+    print(f"total: {len(findings)} finding(s) — {n_suppressed} allowed "
+          f"inline, {n_baselined} baselined, {len(new)} new")
+
+    sync_report: Dict = next((r.report for r in results
+                              if r.pass_id == "program"), {})
+    if sync_report:
+        one_sync = all(
+            sync_report.get(fn, {}).get("fetch_sites") == 1
+            for fn in ("dispatch_horizon", "dispatch_mixed"))
+        hidden = sum(v.get("jaxpr_callbacks", 0) + v.get("hlo_host_ops", 0)
+                     for v in sync_report.values() if isinstance(v, dict))
+        print("one-sync contract: dispatcher fetch sites "
+              f"{'OK' if one_sync else 'VIOLATED'}, hidden host "
+              f"ops in compiled programs: {hidden}")
+
+    if args.table:
+        table = next((r.report.get("compile_table") for r in results
+                      if r.pass_id == "recompile"), None)
+        if table:
+            print(json.dumps({"compile_table": table}, indent=1))
+
+    if stale:
+        print(f"note: {len(stale)} stale baseline entr"
+              f"{'y' if len(stale) == 1 else 'ies'} (fixed findings); "
+              "refresh with --update-baseline:")
+        for k in stale:
+            print(f"  - {k}")
+    if new:
+        print(f"\n{len(new)} new finding(s):")
+        for f in sorted(new, key=lambda f: (f.path, f.line)):
+            print(f"  {f.render()}")
+        print("\nfix the finding, add `# analysis: allow(<category>)` "
+              "on the line if it is accounted, or accept it with "
+              "--update-baseline.")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

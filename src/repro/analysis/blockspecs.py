@@ -1,0 +1,120 @@
+"""Pallas BlockSpec bounds checker.
+
+A BlockSpec index map computes the DMA source coordinates for EVERY
+grid iteration — including the iterations the kernel body skips with
+``@pl.when``. The compute guard gates MXU work, not the prefetch
+pipeline, so an index map that walks past a row's live data still
+streams those blocks through VMEM. That was the PR 7 kernel bug: the
+paged decode kernel's k/v gather indexed ``tbl[bi, ti]`` for all T
+table entries, pulling table padding and the horizon path's
+preallocated-but-unwritten blocks through the DMA engine on every tick;
+the fix clamps to the row's last live block
+(``jnp.minimum(ti, pos // B)``).
+
+This pass makes that fix a regression class: every kernel in
+``src/repro/kernels/`` registers its production index maps (module
+level, the same objects ``pl.pallas_call`` receives) in
+``kernels/registry.py`` together with a toy grid, scalar-prefetch
+arguments whose dead block-table entries are POISON ids, and per-axis
+extents. The checker evaluates each map concretely over the FULL grid
+and fails on any coordinate outside its extent — a missing clamp
+fetches a poison id, which is out of bounds by construction.
+
+Coverage is itself checked: the pass AST-scans the kernels package for
+functions that invoke ``pl.pallas_call`` and fails if any is missing
+from ``registry.AUDITED_KERNELS``.
+"""
+from __future__ import annotations
+
+import ast
+import itertools
+import math
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis.common import (Finding, PassResult, assign_occurrences,
+                                   iter_sources, rel)
+
+PASS_ID = "blockspec"
+KERNELS_DIR = "src/repro/kernels"
+
+
+def check_audit(audit) -> List[Finding]:
+    """Evaluate one registry entry's index map over its full grid."""
+    findings: List[Finding] = []
+    path = f"{KERNELS_DIR}/registry.py"
+    for ids in itertools.product(*[range(n) for n in audit.grid]):
+        coords = audit.index_map(*ids, *audit.scalar_args)
+        if len(coords) != len(audit.extents):
+            findings.append(Finding(
+                PASS_ID, "arity", path, 0,
+                f"{audit.kernel}:{audit.operand}",
+                f"index map returned {len(coords)} coords for "
+                f"{len(audit.extents)} extents"))
+            return findings
+        for axis, (c, extent) in enumerate(zip(coords, audit.extents)):
+            ci = int(c)
+            if not 0 <= ci < extent:
+                findings.append(Finding(
+                    PASS_ID, "out-of-bounds", path, 0,
+                    f"{audit.kernel}:{audit.operand}",
+                    f"grid point {ids}: axis {axis} block coord {ci} "
+                    f"outside [0, {extent}) — a @pl.when skip does NOT "
+                    "stop this DMA; the map must clamp to the row's "
+                    "last live block"))
+                return findings      # one hit per (kernel, operand)
+    return findings
+
+
+def _pallas_wrappers(tree: ast.Module) -> List[str]:
+    """Module-level function names whose body (closures included) calls
+    pl.pallas_call."""
+    out = []
+    for stmt in tree.body:
+        if not isinstance(stmt, ast.FunctionDef):
+            continue
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call):
+                name = _dotted(node.func) or ""
+                if name.endswith("pallas_call"):
+                    out.append(stmt.name)
+                    break
+    return out
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def run(root: Path) -> PassResult:
+    result = PassResult(PASS_ID)
+    kdir = root / KERNELS_DIR
+    if not kdir.is_dir():
+        return result               # fixture tree: nothing to audit
+    from repro.kernels import registry
+    audits = registry.default_audits()
+    for audit in audits:
+        result.findings += check_audit(audit)
+    # coverage: every pallas_call wrapper in the package must be audited
+    for path in iter_sources(root, (KERNELS_DIR,)):
+        wrappers = _pallas_wrappers(ast.parse(path.read_text()))
+        for name in wrappers:
+            if name.startswith("_"):
+                continue            # kernel bodies / private helpers
+            if name not in registry.AUDITED_KERNELS:
+                result.findings.append(Finding(
+                    PASS_ID, "unregistered-kernel", rel(path, root), 0,
+                    name,
+                    f"`{name}` wraps pl.pallas_call but registers no "
+                    "IndexMapAudit in kernels/registry.py"))
+    result.report["audits"] = len(audits)
+    result.report["grid_points"] = sum(math.prod(a.grid) for a in audits)
+    assign_occurrences(result.findings)
+    return result

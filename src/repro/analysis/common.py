@@ -1,0 +1,131 @@
+"""Shared finding / suppression / baseline plumbing for the passes.
+
+A :class:`Finding` is one pass hit. Its `key` deliberately excludes the
+line number — ``pass:code:path:scope:occurrence`` — so the committed
+baseline survives unrelated edits that shift lines, while a *new*
+occurrence of the same code in the same function still shows up as new.
+
+Suppression is per-line: a ``# analysis: allow(<category>)`` comment on
+the offending line accepts that single site forever (used for accounted
+syncs — the dispatcher fetch that `record_sync` meters). The baseline
+(``experiments/analysis_baseline.json``) accepts existing cold-path
+findings without editing them; CI fails only on findings that are
+neither suppressed nor baselined.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional
+
+_ALLOW_RE = re.compile(r"#\s*analysis:\s*allow\(([a-z0-9_,\s-]+)\)")
+
+
+@dataclass
+class Finding:
+    pass_id: str            # "sync" | "recompile" | "blockspec" | "program"
+    code: str               # short slug, e.g. "asarray", "bound-jit"
+    path: str               # repo-relative posix path
+    line: int
+    scope: str              # enclosing function qualname ("" = module)
+    message: str
+    suppressed: bool = False
+    occurrence: int = 0     # index among same (pass, code, path, scope)
+
+    @property
+    def key(self) -> str:
+        return (f"{self.pass_id}:{self.code}:{self.path}:"
+                f"{self.scope}:{self.occurrence}")
+
+    def render(self) -> str:
+        where = f"{self.path}:{self.line}"
+        scope = f" [{self.scope}]" if self.scope else ""
+        return f"{where}: {self.pass_id}/{self.code}{scope}: {self.message}"
+
+
+def assign_occurrences(findings: List[Finding]) -> List[Finding]:
+    """Number findings within each (pass, code, path, scope) group in
+    line order, making keys stable and unique."""
+    counts: Dict[str, int] = {}
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.code)):
+        group = f"{f.pass_id}:{f.code}:{f.path}:{f.scope}"
+        f.occurrence = counts.get(group, 0)
+        counts[group] = f.occurrence + 1
+    return findings
+
+
+def line_suppressions(text: str) -> Dict[int, set]:
+    """1-based line -> set of allowed categories on that line."""
+    out: Dict[int, set] = {}
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _ALLOW_RE.search(line)
+        if m:
+            out[i] = {c.strip() for c in m.group(1).split(",") if c.strip()}
+    return out
+
+
+def apply_suppressions(findings: Iterable[Finding], text: str,
+                       category: str) -> List[Finding]:
+    """Mark findings whose line carries an allow(<category>) comment."""
+    allowed = line_suppressions(text)
+    out = []
+    for f in findings:
+        if category in allowed.get(f.line, ()):
+            f.suppressed = True
+        out.append(f)
+    return out
+
+
+def load_baseline(path: Path) -> Dict[str, str]:
+    """key -> message of accepted findings; {} if the file is absent."""
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text())
+    return dict(data.get("findings", {}))
+
+
+def write_baseline(path: Path, findings: Iterable[Finding]) -> None:
+    entries = {f.key: f.message for f in findings if not f.suppressed}
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(
+        {"version": 1,
+         "note": "accepted findings; regenerate with "
+                 "`python -m repro.analysis --update-baseline`",
+         "findings": dict(sorted(entries.items()))}, indent=1) + "\n")
+
+
+@dataclass
+class PassResult:
+    """One pass's findings plus any free-form report payload (e.g. the
+    compile-count table) the CLI prints."""
+    pass_id: str
+    findings: List[Finding] = field(default_factory=list)
+    report: Dict = field(default_factory=dict)
+
+
+def repo_root(start: Optional[Path] = None) -> Path:
+    """The repo checkout containing this package (…/src/repro/analysis)."""
+    here = (start or Path(__file__)).resolve()
+    return here.parents[3]
+
+
+def iter_sources(root: Path, subdirs: Iterable[str]) -> List[Path]:
+    """Python sources under root/<subdir> for each subdir that exists;
+    if none exist (fixture trees in tests), every .py under root."""
+    files: List[Path] = []
+    for sub in subdirs:
+        d = root / sub
+        if d.is_dir():
+            files += sorted(d.rglob("*.py"))
+    if not files:
+        files = sorted(root.rglob("*.py"))
+    return files
+
+
+def rel(path: Path, root: Path) -> str:
+    try:
+        return path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()

@@ -1,0 +1,210 @@
+"""One-sync-per-horizon contract, proven on the compiled artifacts.
+
+The serving runtime's headline systems claim is that a horizon (or
+mixed) tick costs ONE jitted dispatch and ONE blocking device->host
+transfer for up to H x n_slots tokens. The host half of that contract
+is the dispatcher's single ``np.asarray(emits)``; this pass verifies
+the *device* half — that nothing inside the compiled program talks to
+the host behind the dispatcher's back — without executing the serving
+stack:
+
+1. **jaxpr audit**: each tick program from ``tick_programs.BUILDERS``
+   is traced with abstract operands (a 1-layer fixtures model, the
+   paged cache structure from ``jax.eval_shape`` — no device memory)
+   and every equation, sub-jaxprs included, is checked against the
+   callback primitives (``io_callback`` / ``pure_callback`` /
+   ``debug_callback``): a `jax.debug.print` left in a builder would
+   compile a per-step host round-trip into the scan.
+2. **HLO audit**: the same lowering is compiled and the optimized HLO
+   walked through :func:`repro.launch.hlo_analysis.find_host_ops` —
+   the call-graph parser counts infeed/outfeed/send/recv and
+   host-callback custom-calls over every computation reachable from
+   the entry, loop bodies included. The count must be zero: the
+   program's only host contact is the dispatcher's fetch of its
+   result buffers.
+3. **dispatcher budget**: the AST sync auditor counts the actual fetch
+   sites in each ``dispatch_*`` function (suppression comments do not
+   hide them) against ``tick_programs.DISPATCH_SYNC_BUDGET`` —
+   horizon and mixed must have exactly one.
+
+Together: exactly one host fetch per horizon/mixed tick, statically.
+"""
+from __future__ import annotations
+
+import warnings
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+from repro.analysis.common import Finding, PassResult
+
+PASS_ID = "program"
+
+#: jaxpr primitives that re-enter the host mid-program
+CALLBACK_PRIMS = {"io_callback", "pure_callback", "debug_callback",
+                  "outside_call"}
+
+#: horizon width used for the scan-carrying programs' abstract trace
+AUDIT_H = 4
+_N, _P, _C = 4, 2, 4          # slots, prefill rows, prefill chunk
+
+
+def _collect_primitives(jaxpr, out: set) -> set:
+    for eqn in jaxpr.eqns:
+        out.add(eqn.primitive.name)
+        for v in eqn.params.values():
+            sub = getattr(v, "jaxpr", None)
+            if sub is not None:
+                _collect_primitives(sub, out)
+            elif hasattr(v, "eqns"):
+                _collect_primitives(v, out)
+            elif isinstance(v, (list, tuple)):
+                for w in v:
+                    if hasattr(w, "jaxpr"):
+                        _collect_primitives(w.jaxpr, out)
+                    elif hasattr(w, "eqns"):
+                        _collect_primitives(w, out)
+    return out
+
+
+def _abstract_operands(model, params):
+    """ShapeDtypeStructs for every tick-program operand family, plus the
+    paged cache structure WITHOUT materializing it (eval_shape)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serving.paged_pool import _paged_leaf_flags
+
+    n_blocks, B = _N * 4 + 1, 4
+    flags = _paged_leaf_flags(model)
+    cache = jax.eval_shape(lambda: jax.tree.map(
+        lambda f, p, s: p if f else s, flags,
+        model.init_cache(n_blocks, B),
+        model.init_cache(_N, 1)))
+    sds = jax.ShapeDtypeStruct
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    return dict(
+        params=params, cache=cache,
+        tables=sds((_N, 8), jnp.int32),
+        tok=sds((_N,), jnp.int32),
+        pos=sds((_N,), jnp.int32),
+        keys=sds((_N,) + key.shape, key.dtype),
+        key=key,
+        advance=sds((_N,), jnp.bool_),
+        remaining=sds((_N,), jnp.int32),
+        roles=sds((_N,), jnp.bool_),
+        fed=sds((AUDIT_H, _N), jnp.int32),
+        temp=sds((), jnp.float32),
+        ptables=sds((_P, 8), jnp.int32),
+        ptoks=sds((_P, _C), jnp.int32),
+        ppos=sds((_P,), jnp.int32),
+        pvalid=sds((_P,), jnp.int32),
+        lrows=[sds((model.lm.vocab_padded,), model.lm.dtype)] * 2,
+        rids=sds((2,), jnp.int32),
+        idxs=sds((2,), jnp.int32),
+        slots=sds((2,), jnp.int32),
+    )
+
+
+def _program_operands(model, params) -> Dict[str, Tuple]:
+    """kind -> positional operands for the builder's `run`."""
+    o = _abstract_operands(model, params)
+    return {
+        "token": (o["params"], o["cache"], o["tables"], o["tok"], o["pos"],
+                  o["keys"], o["advance"], o["temp"]),
+        "chunk": (o["params"], o["cache"], o["ptables"], o["ptoks"],
+                  o["ppos"], o["pvalid"]),
+        "horizon": (o["params"], o["cache"], o["tables"], o["tok"],
+                    o["pos"], o["keys"], o["remaining"], o["temp"]),
+        "mixed": (o["params"], o["cache"], o["tables"], o["tok"], o["pos"],
+                  o["keys"], o["remaining"], o["roles"], o["fed"],
+                  o["temp"]),
+        "admit": (o["lrows"], o["key"], o["rids"], o["idxs"], o["slots"],
+                  o["keys"], o["temp"]),
+    }
+
+
+def _builders(model):
+    from repro.serving import tick_programs as tp
+    tz, eos = True, 2
+    return {
+        "token": tp.token_program(model, tz),
+        "chunk": tp.chunk_program(model),
+        "horizon": tp.horizon_program(model, AUDIT_H, tz, eos),
+        "mixed": tp.mixed_program(model, AUDIT_H, tz, eos),
+        "admit": tp.admit_program(tz),
+    }
+
+
+def audit_tick_programs() -> PassResult:
+    """Trace + compile every tick program for a tiny fixtures model and
+    prove the zero-hidden-host-contact contract."""
+    import jax
+    from repro.launch.hlo_analysis import find_host_ops
+    from repro.models.fixtures import tiny_lm
+
+    result = PassResult(PASS_ID)
+    _, model, params = tiny_lm(n_layers=1)
+    operands = _program_operands(model, params)
+    tp_path = "src/repro/serving/tick_programs.py"
+    for kind, run in _builders(model).items():
+        args = operands[kind]
+        prims = _collect_primitives(jax.make_jaxpr(run)(*args).jaxpr, set())
+        callbacks = sorted(prims & CALLBACK_PRIMS)
+        for prim in callbacks:
+            result.findings.append(Finding(
+                PASS_ID, "callback-in-program", tp_path, 0, kind,
+                f"{kind} program jaxpr contains `{prim}`: a host "
+                "round-trip compiled into the tick"))
+        with warnings.catch_warnings():
+            # CPU backend warns that donated buffers go unused; the
+            # donation is real on TPU
+            warnings.simplefilter("ignore")
+            hlo = run.lower(*args).compile().as_text()
+        host_ops = find_host_ops(hlo)
+        for comp, opcode, opname in host_ops:
+            result.findings.append(Finding(
+                PASS_ID, "host-op-in-hlo", tp_path, 0, kind,
+                f"{kind} program HLO op `{opname}` ({opcode}) in "
+                f"computation `{comp}` transfers to the host "
+                "mid-program"))
+        result.report[kind] = {
+            "jaxpr_callbacks": len(callbacks),
+            "hlo_host_ops": len(host_ops),
+        }
+    return result
+
+
+def audit_dispatcher_budget(root: Path) -> List[Finding]:
+    """Static fetch-site counts per dispatcher vs DISPATCH_SYNC_BUDGET."""
+    from repro.analysis import syncs
+    from repro.serving.tick_programs import DISPATCH_SYNC_BUDGET
+
+    tp_path = root / "src/repro/serving/tick_programs.py"
+    text = tp_path.read_text()
+    findings: List[Finding] = []
+    for fn, (lo, hi) in sorted(DISPATCH_SYNC_BUDGET.items()):
+        n = syncs.count_fetch_sites(text, fn)
+        if not lo <= n <= hi:
+            findings.append(Finding(
+                PASS_ID, "sync-budget", "src/repro/serving/tick_programs.py",
+                0, fn,
+                f"{fn} has {n} device->host fetch sites; budget is "
+                f"[{lo}, {hi}] — a new fetch breaks the one-sync "
+                "contract, a removed one means the budget should "
+                "tighten"))
+    return findings
+
+
+def run(root: Path) -> PassResult:
+    if not (root / "src/repro/serving/tick_programs.py").exists():
+        return PassResult(PASS_ID)      # fixture tree
+    result = audit_tick_programs()
+    result.findings += audit_dispatcher_budget(root)
+    for fn in ("dispatch_horizon", "dispatch_mixed"):
+        result.report[fn] = {"fetch_sites": __fetch_count(root, fn)}
+    return result
+
+
+def __fetch_count(root: Path, fn: str) -> int:
+    from repro.analysis import syncs
+    text = (root / "src/repro/serving/tick_programs.py").read_text()
+    return syncs.count_fetch_sites(text, fn)

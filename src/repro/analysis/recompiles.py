@@ -1,0 +1,250 @@
+"""Compile-cache cardinality analyzer.
+
+The serving runtime's compile story rests on two disciplines the git
+history shows being violated once each:
+
+* ``jax.jit`` (or ``pl.pallas_call``) must never bind instance state.
+  A jitted helper created per runtime/pool instance recompiles per
+  instance — the PR 4/5 gotcha that made the second benchmark pool pay
+  full XLA compilation again. Hard error here, in four AST shapes:
+  a ``@jax.jit``-decorated method, ``self.f = jax.jit(...)``,
+  ``jax.jit(self.method)``, and a non-memoized ``jax.jit`` call inside
+  a method body (immediately-invoked ``jax.jit(fn)(args)`` is exempt —
+  that is construction-time, once, and XLA caches by function object
+  only within the expression).
+
+* every tick-program builder must be a module-level ``lru_cache``d
+  function (the ``pool_programs_for`` idiom): the cache key is the
+  model + static flags, so programs are shared across runtime
+  instances. Verified both syntactically (any module-level function
+  that returns a locally-defined jitted closure must carry
+  ``functools.lru_cache``) and at runtime against
+  ``tick_programs.BUILDERS`` (every registered builder has
+  ``cache_info``).
+
+The pass also enumerates the static-arg key space reachable from
+``plan.py``'s TickPlan — kind x pow2 horizon width x model — via
+``plan.compile_cardinality`` and emits the worst-case compile-count
+table per config, asserting the bound
+``n_models * (2 + 2 * log2(horizon)) + 1 + n_models`` the pow2
+quantization exists to guarantee.
+"""
+from __future__ import annotations
+
+import ast
+import math
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis.common import (Finding, PassResult, apply_suppressions,
+                                   assign_occurrences, iter_sources, rel)
+
+PASS_ID = "recompile"
+CATEGORY = "recompile"          # allow(recompile)
+
+SUBDIRS = ("src/repro/serving", "src/repro/kernels", "src/repro/models")
+
+#: worst-case configs for the compile-count table
+TABLE_CONFIGS = ((1, 1), (8, 1), (8, 2), (16, 2))   # (horizon, n_models)
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_expr(node: ast.AST) -> Optional[str]:
+    """'jax.jit' / 'pl.pallas_call' (or partial(...) of one) when `node`
+    creates a fresh compiled callable, else None."""
+    if not isinstance(node, ast.Call):
+        return None
+    name = _dotted(node.func) or ""
+    if name.endswith("partial") and node.args:
+        return _is_jit_expr(node.args[0]) or _is_jit_name(node.args[0])
+    return _is_jit_name(node.func)
+
+
+def _is_jit_name(node: ast.AST) -> Optional[str]:
+    name = _dotted(node) or ""
+    if name.endswith("jit") or name.endswith("pallas_call"):
+        return name
+    return None
+
+
+def _decorators(fn) -> List[str]:
+    out = []
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = _dotted(target)
+        if name:
+            out.append(name)
+        if isinstance(dec, ast.Call) and dec.args:
+            inner = _dotted(dec.args[0])
+            if inner:
+                out.append(inner)
+    return out
+
+
+def _returns_jitted_closure(fn: ast.FunctionDef) -> bool:
+    """Module-level builder pattern: defines a nested function that is
+    jit-decorated and returns it."""
+    jitted_locals = set()
+    for stmt in fn.body:
+        if isinstance(stmt, ast.FunctionDef) and any(
+                n.endswith("jit") or n.endswith("pallas_call")
+                for n in _decorators(stmt)):
+            jitted_locals.add(stmt.name)
+        if isinstance(stmt, ast.Assign) and _is_jit_expr(stmt.value):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    jitted_locals.add(t.id)
+    if not jitted_locals:
+        return False
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Name) \
+                and node.value.id in jitted_locals:
+            return True
+    return False
+
+
+def _audit_module(tree: ast.Module, relpath: str) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def flag(node, code, msg):
+        findings.append(Finding(PASS_ID, code, relpath, node.lineno,
+                                scope, msg))
+
+    def is_method(fn) -> bool:
+        args = fn.args.posonlyargs + fn.args.args
+        return bool(args) and args[0].arg in ("self", "cls")
+
+    def visit(node, prefix: str, in_method: bool):
+        nonlocal scope
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                visit(child, f"{prefix}.{child.name}" if prefix
+                      else child.name, in_method)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}.{child.name}" if prefix else child.name
+                scope = q
+                meth = is_method(child) and isinstance(node, ast.ClassDef)
+                if meth and any(n.endswith("jit") or n.endswith("pallas_call")
+                                for n in _decorators(child)):
+                    flag(child, "bound-jit",
+                         "jit-decorated method: the compiled callable "
+                         "binds instance state, so every instance "
+                         "recompiles (module-level lru_cached builders "
+                         "are the supported idiom)")
+                visit(child, q, in_method or meth)
+            else:
+                scope_stack = scope
+                _scan_stmt(child, in_method)
+                scope = scope_stack
+                visit(child, prefix, in_method)
+
+    def _scan_stmt(stmt, in_method: bool):
+        if isinstance(stmt, ast.Assign):
+            jname = _is_jit_expr(stmt.value)
+            for t in stmt.targets:
+                if isinstance(t, ast.Attribute) and \
+                        isinstance(t.value, ast.Name) and \
+                        t.value.id == "self" and jname:
+                    flag(stmt, "bound-jit",
+                         f"`self.{t.attr} = {jname}(...)` creates a "
+                         "per-instance compile cache; hoist to a "
+                         "module-level lru_cached builder")
+        if not isinstance(stmt, (ast.Expr, ast.Assign, ast.Return,
+                                 ast.AugAssign)):
+            return
+        for call in [n for n in ast.walk(stmt) if isinstance(n, ast.Call)]:
+            jname = _is_jit_name(call.func)
+            if not jname:
+                continue
+            # jax.jit(self.method): the bound method hashes per instance
+            for a in call.args:
+                adn = _dotted(a) or ""
+                if adn.startswith("self."):
+                    flag(call, "bound-jit",
+                         f"{jname}({adn}) compiles a bound method — "
+                         "cache key includes the instance")
+
+    scope = ""
+    visit(tree, "", False)
+
+    # module-level builders returning jitted closures must be lru_cached
+    for stmt in tree.body:
+        if isinstance(stmt, ast.FunctionDef) and \
+                _returns_jitted_closure(stmt):
+            decs = _decorators(stmt)
+            if not any(n.endswith("lru_cache") or n.endswith("cache")
+                       for n in decs):
+                scope = stmt.name
+                findings.append(Finding(
+                    PASS_ID, "uncached-builder", relpath, stmt.lineno,
+                    stmt.name,
+                    f"builder `{stmt.name}` returns a jitted closure but "
+                    "is not lru_cached: every call creates a fresh "
+                    "compile cache"))
+    return findings
+
+
+def _audit_registry() -> List[Finding]:
+    """Runtime half: the builder registry really is memoized, and covers
+    exactly the kinds the planner can emit."""
+    findings: List[Finding] = []
+    from repro.serving import plan, tick_programs
+    for kind, builder in tick_programs.BUILDERS.items():
+        if not hasattr(builder, "cache_info"):
+            findings.append(Finding(
+                PASS_ID, "uncached-builder", "src/repro/serving/tick_programs.py",
+                0, kind,
+                f"BUILDERS[{kind!r}] is not lru_cached"))
+    missing = set(plan.PROGRAM_KINDS) - set(tick_programs.BUILDERS)
+    for kind in sorted(missing):
+        findings.append(Finding(
+            PASS_ID, "unregistered-kind", "src/repro/serving/plan.py", 0,
+            "PROGRAM_KINDS",
+            f"plan can emit kind {kind!r} with no registered builder"))
+    return findings
+
+
+def compile_table() -> dict:
+    """Worst-case compile counts per TABLE_CONFIGS entry, with the bound
+    each must satisfy."""
+    from repro.serving import plan
+    rows = {}
+    for horizon, n_models in TABLE_CONFIGS:
+        counts = plan.compile_cardinality(horizon, n_models=n_models)
+        bound = (n_models * (2 + 2 * int(math.log2(max(horizon, 1))))
+                 + 1 + n_models)
+        rows[f"H={horizon},models={n_models}"] = {
+            **counts, "bound": bound, "ok": counts["total"] <= bound}
+    return rows
+
+
+def run(root: Path) -> PassResult:
+    result = PassResult(PASS_ID)
+    for path in iter_sources(root, SUBDIRS):
+        text = path.read_text()
+        findings = _audit_module(ast.parse(text), rel(path, root))
+        result.findings += apply_suppressions(findings, text, CATEGORY)
+    in_repo = (root / "src/repro/serving/tick_programs.py").exists()
+    if in_repo:
+        result.findings += _audit_registry()
+        table = compile_table()
+        result.report["compile_table"] = table
+        for cfg, row in table.items():
+            if not row["ok"]:
+                result.findings.append(Finding(
+                    PASS_ID, "cardinality", "src/repro/serving/plan.py", 0,
+                    "compile_cardinality",
+                    f"config {cfg}: worst-case {row['total']} compiles "
+                    f"exceeds the bound {row['bound']}"))
+    assign_occurrences(result.findings)
+    return result

@@ -1,0 +1,335 @@
+"""Host-sync auditor: AST taint pass for implicit device->host pulls.
+
+Every blocking device->host transfer on the tick path is scheduler
+overhead the horizon fusion exists to amortize (one sync per horizon,
+not per token). This pass finds the *implicit* ones — the innocuous
+Python that secretly forces a transfer:
+
+* ``float(x)`` / ``int(x)`` / ``bool(x)`` on a device value  (scalar-pull)
+* ``len(x)`` on a device value                               (len)
+* ``np.asarray(x)`` / ``np.array(x)`` / np scalar casts      (asarray)
+* ``x.item()`` / ``x.tolist()``                              (item)
+* ``for _ in x`` iterating a device value                    (iterate)
+* ``if x:`` branching on a device value in host code         (branch)
+
+and, inside jitted program builders, host re-entry that should never
+compile into a tick program:
+
+* ``jax.debug.print`` / ``jax.debug.callback``          (debug-callback)
+* ``io_callback`` / ``pure_callback``                   (callback)
+* ``if x:`` on a traced value (a trace error in waiting) (traced-branch)
+
+Device values are found by forward dataflow within each function:
+results of ``jax.*`` / ``jnp.*`` calls, results of calling a tick
+program (``*_program`` builders and their returned closures, plus the
+module-jitted helpers in tick_programs), parameters with
+device-conventional names (``logits``/``hidden``/``cache``/``keys``/…),
+and attribute reads of those names (``rt.keys``, ``pool.caches``).
+Taint propagates through assignment, tuple unpacking, subscripts and
+arithmetic. The pass is intentionally shallow-but-sound-enough: it is a
+lint with a baseline, not an alias analysis — accounted fetches carry
+``# analysis: allow(sync)``, accepted cold-path pulls live in the
+committed baseline, and anything new fails CI.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Set
+
+from repro.analysis.common import (Finding, PassResult, apply_suppressions,
+                                   assign_occurrences, iter_sources, rel)
+
+PASS_ID = "sync"
+CATEGORY = "sync"               # allow(sync)
+
+#: scan targets relative to the repo root
+SUBDIRS = ("src/repro/serving", "src/repro/kernels")
+
+#: parameters assumed to carry device arrays (the runtime's naming
+#: conventions — see tick_programs.py / retire.py signatures)
+DEVICE_PARAMS = {"logits", "hidden", "lg", "hid", "lrow", "lrows",
+                 "probe_lg", "probe_hid", "emits", "cache", "keys",
+                 "src_logits", "child_key", "base_key"}
+
+#: attribute names that hold device arrays on runtime/pool objects
+DEVICE_ATTRS = {"keys", "caches", "logits", "probe_lg", "probe_hid"}
+
+#: module-level device helpers callable by bare / dotted name
+DEVICE_FNS = {"pool_tick", "admit_slot", "sample_first", "prefill",
+              "decode_step", "decode_chunk", "decode_horizon"}
+
+#: builder suffix: `token_program(model, tz)` returns a jitted closure;
+#: both the builder call result and the closure's call result are device
+BUILDER_SUFFIX = "_program"
+
+#: sink codes that are *fetch sites* (count toward the dispatcher sync
+#: budget in repro.analysis.programs, suppressed or not)
+FETCH_CODES = ("scalar-pull", "len", "asarray", "item", "iterate")
+
+_NP_SINKS = {"asarray", "array", "float32", "float64", "int32", "int64",
+             "ascontiguousarray"}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jitted(fn: ast.AST) -> bool:
+    """Decorated with jax.jit, functools.partial(jax.jit, ...), or a
+    pallas_call wrapper."""
+    for dec in getattr(fn, "decorator_list", []):
+        target = dec.args[0] if (isinstance(dec, ast.Call) and dec.args) \
+            else dec
+        name = _dotted(target.func if isinstance(target, ast.Call)
+                       else target) or ""
+        if name.endswith("jit") or name.endswith("pallas_call"):
+            return True
+    return False
+
+
+class _FunctionAuditor:
+    """Linear forward taint scan of one function body (two passes, so
+    loop-carried taint converges; findings recorded on the last)."""
+
+    def __init__(self, fn, qualname: str, relpath: str, jitted: bool):
+        self.fn = fn
+        self.qualname = qualname
+        self.relpath = relpath
+        self.jitted = jitted
+        self.tainted: Set[str] = set()
+        self.device_fns: Set[str] = set(DEVICE_FNS)
+        self.findings: List[Finding] = []
+        self.record = False
+        args = fn.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            if a.arg in DEVICE_PARAMS:
+                self.tainted.add(a.arg)
+
+    # ---------------------------------------------------------- taint
+    def _call_is_device(self, call: ast.Call) -> bool:
+        func = call.func
+        if isinstance(func, ast.Call):            # builder()(...) chains
+            return self._call_is_device(func)
+        name = _dotted(func)
+        if name is None:
+            return False
+        root, leaf = name.split(".", 1)[0], name.rsplit(".", 1)[-1]
+        if root in ("jnp", "jax"):
+            # host-side jax helpers that never return device buffers
+            return leaf not in ("eval_shape", "make_jaxpr",
+                                "tree_structure")
+        return (leaf in self.device_fns or name in self.device_fns
+                or leaf.endswith(BUILDER_SUFFIX))
+
+    def _tainted_expr(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in ("shape", "dtype", "ndim", "size"):
+                return False    # array metadata lives on the host
+            return node.attr in DEVICE_ATTRS or self._tainted_expr(node.value)
+        if isinstance(node, ast.Call):
+            return self._call_is_device(node)
+        if isinstance(node, ast.Subscript):
+            return self._tainted_expr(node.value)
+        if isinstance(node, ast.BinOp):
+            return (self._tainted_expr(node.left)
+                    or self._tainted_expr(node.right))
+        if isinstance(node, ast.UnaryOp):
+            return self._tainted_expr(node.operand)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False    # identity checks never transfer
+            tainted = self._tainted_expr(node.left)
+            for op, cmp in zip(node.ops, node.comparators):
+                if isinstance(op, (ast.In, ast.NotIn)) and \
+                        isinstance(cmp, ast.Attribute) and \
+                        cmp.attr in DEVICE_ATTRS:
+                    # membership in a host dict OF device values
+                    # (e.g. `model_id in pool.caches`)
+                    continue
+                tainted = tainted or self._tainted_expr(cmp)
+            return tainted
+        if isinstance(node, ast.BoolOp):
+            return any(self._tainted_expr(v) for v in node.values)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self._tainted_expr(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return (self._tainted_expr(node.body)
+                    or self._tainted_expr(node.orelse))
+        if isinstance(node, ast.Starred):
+            return self._tainted_expr(node.value)
+        return False
+
+    def _taint_target(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            self.tainted.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._taint_target(e)
+        elif isinstance(target, ast.Starred):
+            self._taint_target(target.value)
+        # attribute/subscript targets: the base object's taint is
+        # name-conventional (DEVICE_ATTRS), not tracked per instance
+
+    def _untaint_target(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._untaint_target(e)
+
+    # -------------------------------------------------------- findings
+    def _flag(self, node: ast.AST, code: str, message: str) -> None:
+        if self.record:
+            self.findings.append(Finding(
+                PASS_ID, code, self.relpath, node.lineno, self.qualname,
+                message))
+
+    def _check_call(self, call: ast.Call) -> None:
+        name = _dotted(call.func) or ""
+        leaf = name.rsplit(".", 1)[-1]
+        args_tainted = any(self._tainted_expr(a) for a in call.args)
+        if name in ("float", "int", "bool") and args_tainted:
+            self._flag(call, "scalar-pull",
+                       f"{name}() on a device value forces a blocking "
+                       "device->host transfer of one scalar")
+        elif name == "len" and args_tainted:
+            self._flag(call, "len",
+                       "len() on a device value blocks on the device")
+        elif name.startswith("np.") and leaf in _NP_SINKS and args_tainted:
+            self._flag(call, "asarray",
+                       f"{name}() on a device value is a blocking "
+                       "device->host transfer")
+        elif isinstance(call.func, ast.Attribute) and \
+                call.func.attr in ("item", "tolist") and \
+                self._tainted_expr(call.func.value):
+            self._flag(call, "item",
+                       f".{call.func.attr}() forces a device->host "
+                       "transfer")
+        if self.jitted:
+            if name.startswith("jax.debug."):
+                self._flag(call, "debug-callback",
+                           f"{name} compiles a host callback into a "
+                           "jitted tick program")
+            elif leaf in ("io_callback", "pure_callback"):
+                self._flag(call, "callback",
+                           f"{leaf} re-enters Python on the host from "
+                           "inside a jitted program")
+            elif name.startswith("np.") and args_tainted:
+                self._flag(call, "numpy-in-jit",
+                           f"{name} on a traced value inside a jitted "
+                           "function forces concretization")
+
+    # ------------------------------------------------------------ walk
+    def _scan_stmt(self, stmt: ast.stmt) -> None:
+        # check calls in this statement's own expressions only; nested
+        # statements are visited by the recursion below (once each)
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                for call in ast.walk(child):
+                    if isinstance(call, ast.Call):
+                        self._check_call(call)
+        if isinstance(stmt, ast.Assign):
+            dev = self._tainted_expr(stmt.value)
+            for t in stmt.targets:
+                (self._taint_target if dev else self._untaint_target)(t)
+            # `run = token_program(...)`: the bound closure is a device fn
+            if isinstance(stmt.value, ast.Call):
+                name = _dotted(stmt.value.func) or ""
+                if name.rsplit(".", 1)[-1].endswith(BUILDER_SUFFIX):
+                    for t in stmt.targets:
+                        if isinstance(t, ast.Name):
+                            self.device_fns.add(t.id)
+        elif isinstance(stmt, ast.AugAssign):
+            if self._tainted_expr(stmt.value):
+                self._taint_target(stmt.target)
+        elif isinstance(stmt, ast.For):
+            if self._tainted_expr(stmt.iter):
+                self._flag(stmt, "iterate",
+                           "iterating a device value transfers it "
+                           "element-by-element")
+                self._taint_target(stmt.target)
+        elif isinstance(stmt, (ast.If, ast.While)):
+            if self._tainted_expr(stmt.test):
+                if self.jitted:
+                    self._flag(stmt, "traced-branch",
+                               "Python branch on a traced value inside "
+                               "a jitted function (trace error / "
+                               "implicit concretization)")
+                else:
+                    self._flag(stmt, "branch",
+                               "Python branch on a device value blocks "
+                               "on the device")
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.stmt) and not isinstance(
+                    child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+                self._scan_stmt(child)
+
+    def run(self) -> List[Finding]:
+        for final in (False, True):
+            self.record = final
+            for stmt in self.fn.body:
+                if not isinstance(stmt, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef,
+                                         ast.ClassDef)):
+                    self._scan_stmt(stmt)
+        return self.findings
+
+
+def _walk_functions(tree: ast.Module):
+    """Yield (fn_node, qualname, enclosing_jitted) for every function,
+    nested included."""
+    def visit(node, prefix: str, jitted: bool):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}.{child.name}" if prefix else child.name
+                j = jitted or _is_jitted(child)
+                yield child, q, j
+                yield from visit(child, q, j)
+            elif isinstance(child, ast.ClassDef):
+                yield from visit(child, f"{prefix}.{child.name}"
+                                 if prefix else child.name, jitted)
+            else:
+                yield from visit(child, prefix, jitted)
+    yield from visit(tree, "", False)
+
+
+def audit_source(text: str, relpath: str) -> List[Finding]:
+    """All sync findings in one file; `allow(sync)` sites are returned
+    with ``suppressed=True`` (the budget count still sees them)."""
+    tree = ast.parse(text)
+    findings: List[Finding] = []
+    for fn, qualname, jitted in _walk_functions(tree):
+        findings += _FunctionAuditor(fn, qualname, relpath, jitted).run()
+    findings = apply_suppressions(findings, text, CATEGORY)
+    return assign_occurrences(findings)
+
+
+def count_fetch_sites(text: str, func_name: str) -> int:
+    """Device->host fetch sites (FETCH_CODES) inside top-level
+    `func_name`, counting suppressed sites too — the static side of the
+    dispatcher sync budget."""
+    return sum(1 for f in audit_source(text, "<mem>")
+               if f.code in FETCH_CODES
+               and (f.scope == func_name
+                    or f.scope.startswith(func_name + ".")))
+
+
+def run(root: Path) -> PassResult:
+    result = PassResult(PASS_ID)
+    for path in iter_sources(root, SUBDIRS):
+        findings = audit_source(path.read_text(), rel(path, root))
+        result.findings += findings
+    result.report["files"] = len(iter_sources(root, SUBDIRS))
+    return result

@@ -7,7 +7,6 @@ placed with `jax.device_put(x, sharding)` leaf-wise.
 from __future__ import annotations
 
 import json
-import os
 import re
 from pathlib import Path
 from typing import Any, Dict, Optional

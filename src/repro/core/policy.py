@@ -8,13 +8,13 @@ serving scheduler calls per batch. Supports:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Optional
 
 import numpy as np
 
 from repro.core import allocator as alloc
 from repro.core import marginal
-from repro.core.difficulty import mlp_probe_apply, probe_predict
+from repro.core.difficulty import probe_predict
 
 
 @dataclass

@@ -19,6 +19,16 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
+def tile_index_map(ri, vi):
+    """logits tile: (block_rows, block_v) at (row block ri, vocab blk vi)."""
+    return (ri, vi)
+
+
+def row_index_map(ri, vi):
+    """labels / loss tiles: (block_rows,), constant across the vocab loop."""
+    return (ri,)
+
+
 def _ce_kernel(logits_ref, labels_ref, loss_ref, m_scr, l_scr, gold_scr, *,
                block_v: int, vocab: int):
     vi = pl.program_id(1)
@@ -66,10 +76,10 @@ def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, *,
         kernel,
         grid=(nr, nv),
         in_specs=[
-            pl.BlockSpec((block_rows, block_v), lambda ri, vi: (ri, vi)),
-            pl.BlockSpec((block_rows,), lambda ri, vi: (ri,)),
+            pl.BlockSpec((block_rows, block_v), tile_index_map),
+            pl.BlockSpec((block_rows,), row_index_map),
         ],
-        out_specs=pl.BlockSpec((block_rows,), lambda ri, vi: (ri,)),
+        out_specs=pl.BlockSpec((block_rows,), row_index_map),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
         scratch_shapes=[
             pltpu.VMEM((block_rows,), jnp.float32),

@@ -38,6 +38,58 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
+# dense decode maps (grid (b, n_kv_blocks))
+def dense_pos_index_map(bi, ki):
+    return (bi,)
+
+
+def dense_q_index_map(bi, ki):
+    """q / output: one (H, hd) tile per batch row, resident across k."""
+    return (bi, 0, 0)
+
+
+def dense_kv_index_map(bi, ki):
+    """k / v: the ki-th (block_k, KV, hd) tile of batch row bi."""
+    return (bi, ki, 0, 0)
+
+
+# paged maps (grid (b, T), scalar-prefetch (tables, pos))
+def paged_q_index_map(bi, ti, tbl, p):
+    return (bi, 0, 0)
+
+
+def paged_chunk_q_index_map(bi, ti, tbl, p):
+    return (bi, 0, 0, 0)
+
+
+def paged_kv_index_map(block_size: int):
+    """Block-table gather map for `paged_decode_attention`'s k/v specs.
+
+    Clamps the gather to the row's last live block: index maps feed the
+    DMA pipeline regardless of the kernel's @pl.when compute skip, so
+    without the clamp every grid step past `pos` still streamed a
+    (B, KV, hd) tile — table padding and the horizon path's
+    preallocated-but-unwritten blocks. Skipped steps never read the
+    fetched tile, so re-fetching the live block is value-identical.
+
+    Module-level (not a closure in the wrapper) so the static auditor
+    (`repro.analysis.blockspecs`) can evaluate the exact production map
+    over the full grid against poisoned block tables.
+    """
+    def kv_map(bi, ti, tbl, p):
+        return (tbl[bi, jnp.minimum(ti, p[bi] // block_size)], 0, 0, 0)
+    return kv_map
+
+
+def chunk_kv_index_map(block_size: int, chunk: int):
+    """Same DMA clamp as `paged_kv_index_map`, against the last block
+    any query row of the chunk can see (the compute guard's bound)."""
+    def kv_map(bi, ti, tbl, p):
+        return (tbl[bi, jnp.minimum(ti, (p[bi] + chunk - 1) // block_size)],
+                0, 0, 0)
+    return kv_map
+
+
 def _dec_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
                 *, block_k: int, groups: int, sm_scale: float, seq_k: int):
     ki = pl.program_id(1)
@@ -104,14 +156,12 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         kernel,
         grid=(b, nk),
         in_specs=[
-            pl.BlockSpec((1,), lambda bi, ki: (bi,)),             # pos
-            pl.BlockSpec((1, H, hd), lambda bi, ki: (bi, 0, 0)),  # q
-            pl.BlockSpec((1, block_k, KV, hd),
-                         lambda bi, ki: (bi, ki, 0, 0)),
-            pl.BlockSpec((1, block_k, KV, hd),
-                         lambda bi, ki: (bi, ki, 0, 0)),
+            pl.BlockSpec((1,), dense_pos_index_map),
+            pl.BlockSpec((1, H, hd), dense_q_index_map),
+            pl.BlockSpec((1, block_k, KV, hd), dense_kv_index_map),
+            pl.BlockSpec((1, block_k, KV, hd), dense_kv_index_map),
         ],
-        out_specs=pl.BlockSpec((1, H, hd), lambda bi, ki: (bi, 0, 0)),
+        out_specs=pl.BlockSpec((1, H, hd), dense_q_index_map),
         out_shape=jax.ShapeDtypeStruct((b, H, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((H,), jnp.float32),
@@ -245,23 +295,16 @@ def paged_decode_attention(q: jnp.ndarray, k_blocks: jnp.ndarray,
     g = H // KV
     kernel = functools.partial(_paged_kernel, block_b=B, groups=g,
                                sm_scale=1.0 / math.sqrt(hd))
-    # clamp the gather to the row's last live block: index maps feed the
-    # DMA pipeline regardless of the kernel's @pl.when compute skip, so
-    # without the clamp every grid step past `pos` still streamed a
-    # (B, KV, hd) tile — table padding and the horizon path's
-    # preallocated-but-unwritten blocks. Skipped steps never read the
-    # fetched tile, so re-fetching the live block is value-identical.
-    kv_map = lambda bi, ti, tbl, p: (tbl[bi, jnp.minimum(ti, p[bi] // B)],
-                                     0, 0, 0)
+    kv_map = paged_kv_index_map(B)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                  # tables, pos
         grid=(b, T),
         in_specs=[
-            pl.BlockSpec((1, H, hd), lambda bi, ti, tbl, p: (bi, 0, 0)),
+            pl.BlockSpec((1, H, hd), paged_q_index_map),
             pl.BlockSpec((1, B, KV, hd), kv_map),
             pl.BlockSpec((1, B, KV, hd), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, H, hd), lambda bi, ti, tbl, p: (bi, 0, 0)),
+        out_specs=pl.BlockSpec((1, H, hd), paged_q_index_map),
         scratch_shapes=[
             pltpu.VMEM((H,), jnp.float32),
             pltpu.VMEM((H,), jnp.float32),
@@ -299,20 +342,16 @@ def paged_chunk_attention(q: jnp.ndarray, k_blocks: jnp.ndarray,
     g = H // KV
     kernel = functools.partial(_chunk_kernel, block_b=B, groups=g,
                                chunk=C, sm_scale=1.0 / math.sqrt(hd))
-    # same DMA clamp as paged_decode_attention, against the last block
-    # any query row of the chunk can see (the compute guard's bound)
-    kv_map = lambda bi, ti, tbl, p: (
-        tbl[bi, jnp.minimum(ti, (p[bi] + C - 1) // B)], 0, 0, 0)
+    kv_map = chunk_kv_index_map(B, C)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                  # tables, pos
         grid=(b, T),
         in_specs=[
-            pl.BlockSpec((1, C, H, hd), lambda bi, ti, tbl, p: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, C, H, hd), paged_chunk_q_index_map),
             pl.BlockSpec((1, B, KV, hd), kv_map),
             pl.BlockSpec((1, B, KV, hd), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, C, H, hd),
-                               lambda bi, ti, tbl, p: (bi, 0, 0, 0)),
+        out_specs=pl.BlockSpec((1, C, H, hd), paged_chunk_q_index_map),
         scratch_shapes=[
             pltpu.VMEM((C * H,), jnp.float32),
             pltpu.VMEM((C * H,), jnp.float32),

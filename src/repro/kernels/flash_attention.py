@@ -24,6 +24,21 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
+def q_index_map(bi, hi, qi, ki):
+    """q / output tiles: one (block_q, hd) tile per (batch, head, q block);
+    constant in ki so the tile stays resident across the k loop."""
+    return (bi, hi, qi, 0)
+
+
+def gqa_kv_index_map(group: int):
+    """k/v tiles under GQA: query head h reads kv head h // group, so the
+    KV tensor is never repeated in HBM. Module-level (audited by
+    `repro.analysis.blockspecs` over the full grid)."""
+    def kv_map(bi, hi, qi, ki):
+        return (bi, hi // group, ki, 0)
+    return kv_map
+
+
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                block_q: int, block_k: int, sm_scale: float, causal: bool,
                window: int, seq_k: int):
@@ -110,15 +125,11 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         kernel,
         grid=(b, H, nq, nk),
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, hd),
-                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
-            pl.BlockSpec((1, 1, block_k, hd),
-                         lambda bi, hi, qi, ki, g=g: (bi, hi // g, ki, 0)),
-            pl.BlockSpec((1, 1, block_k, hd),
-                         lambda bi, hi, qi, ki, g=g: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_q, hd), q_index_map),
+            pl.BlockSpec((1, 1, block_k, hd), gqa_kv_index_map(g)),
+            pl.BlockSpec((1, 1, block_k, hd), gqa_kv_index_map(g)),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, hd),
-                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), q_index_map),
         out_shape=jax.ShapeDtypeStruct((b, H, sq, hd), q.dtype),
         scratch_shapes=[
             pltpu_vmem((block_q,), jnp.float32),

@@ -12,7 +12,6 @@ import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.cross_entropy import cross_entropy as _ce

@@ -1,0 +1,166 @@
+"""Audit registry for the Pallas kernels in this package.
+
+Every kernel wrapper registers its grid and its *production* BlockSpec
+index maps (the same module-level functions `pl.pallas_call` receives)
+together with toy-but-representative grid extents and scalar-prefetch
+arguments. `repro.analysis.blockspecs` evaluates each map concretely
+over the FULL grid — including iterations the kernel body skips with
+`@pl.when`, because index maps feed the DMA pipeline whether or not the
+compute runs — and fails if any returned block coordinate falls outside
+its legal extent.
+
+For block-table gathers (the paged kernels) the registry plants POISON
+physical block ids in every table entry past the row's live length.
+The legal extent of the gathered axis is set below POISON, so a map
+that forgets the `jnp.minimum(ti, live_last_block)` clamp fetches a
+poison id and trips the checker: the unclamped-index-map bug (dead
+horizon blocks streaming through the DMA pipeline) is a regression
+class here, not a memory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from . import cross_entropy as _ce
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import ssm_scan as _ssm
+
+# any physical block id >= POISON marks a table entry the row does not
+# own live data in (padding, or preallocated-but-unwritten horizon
+# blocks). A correct gather map must never return one.
+POISON = 1_000_000
+
+
+@dataclass(frozen=True)
+class IndexMapAudit:
+    """One (kernel, operand) BlockSpec index map plus the toy grid to
+    evaluate it over. `extents[k]` bounds returned coordinate k:
+    0 <= coord < extent. For gathered axes the extent is POISON, so
+    poison table entries are out of bounds by construction."""
+    kernel: str
+    operand: str
+    grid: Tuple[int, ...]
+    index_map: Callable
+    extents: Tuple[int, ...]
+    scalar_args: Tuple = ()
+    notes: str = ""
+
+
+def poison_tables(live_blocks, n_table: int) -> np.ndarray:
+    """Block tables (b, n_table): row i owns `live_blocks[i]` live
+    physical blocks (distinct small ids); every later entry is poison."""
+    rows = []
+    next_id = 1                      # id 0 is the pool's null block
+    for n_live in live_blocks:
+        row = []
+        for j in range(n_table):
+            if j < n_live:
+                row.append(next_id)
+                next_id += 1
+            else:
+                row.append(POISON + j)
+        rows.append(row)
+    return np.asarray(rows, dtype=np.int32)
+
+
+def default_audits() -> List[IndexMapAudit]:
+    """The shipped kernels' index maps over representative toy grids."""
+    audits: List[IndexMapAudit] = []
+
+    # --- paged_decode_attention: grid (b, T), scalars (tables, pos) ---
+    B, T = 4, 5
+    pos = np.asarray([0, 5, 19], dtype=np.int32)       # live blocks 1, 2, 5
+    tables = poison_tables([int(p) // B + 1 for p in pos], T)
+    audits += [
+        IndexMapAudit("paged_decode_attention", "k/v",
+                      grid=(len(pos), T),
+                      index_map=_dec.paged_kv_index_map(B),
+                      extents=(POISON, 1, 1, 1),
+                      scalar_args=(tables, pos),
+                      notes="block-table gather; must clamp to the row's "
+                            "last live block (pos // B)"),
+        IndexMapAudit("paged_decode_attention", "q/out",
+                      grid=(len(pos), T),
+                      index_map=_dec.paged_q_index_map,
+                      extents=(len(pos), 1, 1),
+                      scalar_args=(tables, pos)),
+    ]
+
+    # --- paged_chunk_attention: grid (b, T), scalars (tables, pos) ---
+    C = 3
+    cpos = np.asarray([0, 2, 9], dtype=np.int32)   # last query pos + C - 1
+    ctables = poison_tables([(int(p) + C - 1) // B + 1 for p in cpos], T)
+    audits += [
+        IndexMapAudit("paged_chunk_attention", "k/v",
+                      grid=(len(cpos), T),
+                      index_map=_dec.chunk_kv_index_map(B, C),
+                      extents=(POISON, 1, 1, 1),
+                      scalar_args=(ctables, cpos),
+                      notes="gather bound is the last block any chunk row "
+                            "can see ((pos + C - 1) // B)"),
+        IndexMapAudit("paged_chunk_attention", "q/out",
+                      grid=(len(cpos), T),
+                      index_map=_dec.paged_chunk_q_index_map,
+                      extents=(len(cpos), 1, 1, 1),
+                      scalar_args=(ctables, cpos)),
+    ]
+
+    # --- decode_attention (dense): grid (b, n_kv_blocks) ---
+    b, nk = 2, 4
+    audits += [
+        IndexMapAudit("decode_attention", "pos", (b, nk),
+                      _dec.dense_pos_index_map, (b,)),
+        IndexMapAudit("decode_attention", "q/out", (b, nk),
+                      _dec.dense_q_index_map, (b, 1, 1)),
+        IndexMapAudit("decode_attention", "k/v", (b, nk),
+                      _dec.dense_kv_index_map, (b, nk, 1, 1)),
+    ]
+
+    # --- flash_attention: grid (b, H, nq, nk), GQA group g ---
+    fb, H, KV, nq, fnk = 2, 4, 2, 3, 3
+    g = H // KV
+    audits += [
+        IndexMapAudit("flash_attention", "q/out", (fb, H, nq, fnk),
+                      _fa.q_index_map, (fb, H, nq, 1)),
+        IndexMapAudit("flash_attention", "k/v", (fb, H, nq, fnk),
+                      _fa.gqa_kv_index_map(g), (fb, KV, fnk, 1),
+                      notes="GQA: head h reads kv head h // g; the kv-head "
+                            "extent is KV, not H"),
+    ]
+
+    # --- ssm_scan: grid (bsz, nd, nc) ---
+    bsz, nd, nc = 2, 3, 4
+    audits += [
+        IndexMapAudit("ssm_scan", "dt/x/y", (bsz, nd, nc),
+                      _ssm.chan_index_map, (bsz, nc, nd)),
+        IndexMapAudit("ssm_scan", "A", (bsz, nd, nc),
+                      _ssm.a_index_map, (nd, 1)),
+        IndexMapAudit("ssm_scan", "B/C", (bsz, nd, nc),
+                      _ssm.state_seq_index_map, (bsz, nc, 1)),
+        IndexMapAudit("ssm_scan", "hT", (bsz, nd, nc),
+                      _ssm.state_out_index_map, (bsz, nd, 1)),
+    ]
+
+    # --- cross_entropy: grid (nr, nv) ---
+    nr, nv = 2, 3
+    audits += [
+        IndexMapAudit("cross_entropy", "logits", (nr, nv),
+                      _ce.tile_index_map, (nr, nv)),
+        IndexMapAudit("cross_entropy", "labels/loss", (nr, nv),
+                      _ce.row_index_map, (nr,)),
+    ]
+    return audits
+
+
+#: kernel wrapper names the audits above cover; `repro.analysis.blockspecs`
+#: cross-checks this against every `pl.pallas_call`-wrapping function it
+#: finds in the package source, so adding a kernel without registering an
+#: audit is itself a finding.
+AUDITED_KERNELS = (
+    "decode_attention", "paged_decode_attention", "paged_chunk_attention",
+    "flash_attention", "ssm_scan", "cross_entropy",
+)

@@ -20,6 +20,28 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+# BlockSpec index maps, module-level so `repro.analysis.blockspecs` can
+# evaluate the production maps over the full grid against array extents.
+def chan_index_map(bi, di, ci):
+    """dt / x / y tiles: (1, chunk, d_block) at (batch, chunk ci, d blk di)."""
+    return (bi, ci, di)
+
+
+def a_index_map(bi, di, ci):
+    """A tile: (d_block, n) — per d block, constant over batch and chunks."""
+    return (di, 0)
+
+
+def state_seq_index_map(bi, di, ci):
+    """B / C tiles: (1, chunk, n) — full state width every chunk."""
+    return (bi, ci, 0)
+
+
+def state_out_index_map(bi, di, ci):
+    """hT output: (1, d_block, n) — constant in ci (written on last chunk)."""
+    return (bi, di, 0)
+
+
 def _ssm_kernel(dt_ref, a_ref, b_ref, c_ref, x_ref, y_ref, hT_ref, h_scr, *,
                 chunk: int):
     ci = pl.program_id(2)
@@ -66,15 +88,15 @@ def ssm_scan(dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
         kernel,
         grid=(bsz, nd, nc),
         in_specs=[
-            pl.BlockSpec((1, chunk, d_block), lambda bi, di, ci: (bi, ci, di)),
-            pl.BlockSpec((d_block, n), lambda bi, di, ci: (di, 0)),
-            pl.BlockSpec((1, chunk, n), lambda bi, di, ci: (bi, ci, 0)),
-            pl.BlockSpec((1, chunk, n), lambda bi, di, ci: (bi, ci, 0)),
-            pl.BlockSpec((1, chunk, d_block), lambda bi, di, ci: (bi, ci, di)),
+            pl.BlockSpec((1, chunk, d_block), chan_index_map),
+            pl.BlockSpec((d_block, n), a_index_map),
+            pl.BlockSpec((1, chunk, n), state_seq_index_map),
+            pl.BlockSpec((1, chunk, n), state_seq_index_map),
+            pl.BlockSpec((1, chunk, d_block), chan_index_map),
         ],
         out_specs=[
-            pl.BlockSpec((1, chunk, d_block), lambda bi, di, ci: (bi, ci, di)),
-            pl.BlockSpec((1, d_block, n), lambda bi, di, ci: (bi, di, 0)),
+            pl.BlockSpec((1, chunk, d_block), chan_index_map),
+            pl.BlockSpec((1, d_block, n), state_out_index_map),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((bsz, s, d), x.dtype),

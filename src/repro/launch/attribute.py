@@ -11,7 +11,7 @@ import sys
 from collections import defaultdict
 from pathlib import Path
 
-from repro.launch.hlo_analysis import (COLLECTIVES, Computation, Op,
+from repro.launch.hlo_analysis import (COLLECTIVES,
                                        _FUSIBLE_OPS, _SKIP_BYTES_OPS,
                                        _UPDATE_OPS, _WINDOW_OPS,
                                        _fusion_bytes, _parse_trip_count,

@@ -69,7 +69,6 @@ def parse_collective_bytes(hlo: str, loop_mult: dict) -> dict:
     counts = {c: 0 for c in COLLECTIVES}
     current_comp = ""
     for line in hlo.splitlines():
-        mc = re.match(r"\s*%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$", line)
         if line and not line.startswith(" ") and "{" in line:
             mh = re.search(r"(?:ENTRY\s+)?%?([\w\.\-]+)", line)
             if mh:

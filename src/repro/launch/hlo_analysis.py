@@ -249,15 +249,37 @@ _FUSIBLE_OPS = {"add", "subtract", "multiply", "divide", "maximum",
                 "bitcast-convert", "copy", "concatenate"}
 
 
-def analyze(text: str) -> Dict:
-    comps = parse_hlo(text)
-    entry = next((c for c in comps.values() if c.is_entry), None)
-    if entry is None:
-        return {"flops": 0, "bytes": 0, "collectives": {}}
+@dataclass
+class CallGraph:
+    """Loop-aware call graph of one HLO module: BFS `order` from the
+    entry computation, per-computation trip-count `mult`ipliers, and a
+    `fusion_ctx` flag marking computations only reachable through fusion
+    bodies (their ops are register/VMEM traffic, not HBM). This used to
+    be inlined in :func:`analyze`; it is the reusable half — the static
+    hot-path auditor (`repro.analysis`) walks the same graph to look for
+    host-transfer ops in compiled tick programs."""
+    comps: Dict[str, Computation]
+    entry: Optional[Computation]
+    order: List[str]
+    mult: Dict[str, float]
+    fusion_ctx: Dict[str, bool]
 
-    # accumulate multipliers by BFS over the call graph
+    def reachable(self):
+        """Reachable computations in BFS order (skips dangling refs)."""
+        for cname in self.order:
+            comp = self.comps.get(cname)
+            if comp is not None:
+                yield comp
+
+
+def build_call_graph(comps: Dict[str, Computation]) -> CallGraph:
+    """Accumulate loop multipliers by BFS over calls= / to_apply= /
+    body= / condition= edges, scaling by `known_trip_count`."""
+    entry = next((c for c in comps.values() if c.is_entry), None)
     mult: Dict[str, float] = defaultdict(float)
     fusion_ctx: Dict[str, bool] = defaultdict(bool)   # inside a fusion body?
+    if entry is None:
+        return CallGraph(comps, None, [], mult, fusion_ctx)
     mult[entry.name] = 1.0
     order = [entry.name]
     seen = {entry.name}
@@ -294,6 +316,43 @@ def analyze(text: str) -> Dict:
                 if callee not in seen:
                     seen.add(callee)
                     order.append(callee)
+    return CallGraph(comps, entry, order, mult, fusion_ctx)
+
+
+# HLO opcodes that move data between device and host (or between
+# devices) outside the normal result buffer: any of these inside a tick
+# program would be a hidden round-trip the dispatcher cannot account.
+HOST_TRANSFER_OPS = ("outfeed", "infeed", "send", "recv",
+                     "send-done", "recv-done")
+# custom-call targets that re-enter Python on the host mid-program
+# (io_callback / pure_callback / jax.debug lower to these)
+_HOST_CALLBACK_RE = re.compile(r"callback|host", re.IGNORECASE)
+
+
+def find_host_ops(text: str) -> List[Tuple[str, str, str]]:
+    """Scan every computation reachable from the entry for ops that
+    talk to the host: (computation, opcode, op name) triples. Used by
+    the one-sync-per-horizon audit — a compiled tick program must have
+    ZERO of these (its only host contact is the dispatcher's single
+    fetch of the result buffer)."""
+    graph = build_call_graph(parse_hlo(text))
+    out: List[Tuple[str, str, str]] = []
+    for comp in graph.reachable():
+        for op in comp.ops:
+            if op.opcode in HOST_TRANSFER_OPS:
+                out.append((comp.name, op.opcode, op.name))
+            elif op.opcode == "custom-call" and \
+                    _HOST_CALLBACK_RE.search(op.attrs):
+                out.append((comp.name, op.opcode, op.name))
+    return out
+
+
+def analyze(text: str) -> Dict:
+    comps = parse_hlo(text)
+    graph = build_call_graph(comps)
+    if graph.entry is None:
+        return {"flops": 0, "bytes": 0, "collectives": {}}
+    mult, fusion_ctx, order = graph.mult, graph.fusion_ctx, graph.order
 
     flops = 0.0
     transcend = 0.0

@@ -12,11 +12,9 @@ from __future__ import annotations
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.models.model_zoo import Model
 from repro.optim import adamw_update, clip_by_global_norm
-from repro.sharding import lshard
 
 
 def make_train_step(model: Model, *, lr: float = 1e-4, grad_clip: float = 1.0,

@@ -13,7 +13,6 @@ import argparse
 import dataclasses
 import time
 
-import numpy as np
 
 
 def main(argv=None):

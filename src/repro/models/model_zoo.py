@@ -10,16 +10,14 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import modules as nn
 from repro.models.encdec import AudioEncoder
 from repro.models.transformer import TransformerLM
-from repro.sharding import lshard
 
 
 def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,

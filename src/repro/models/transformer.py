@@ -15,7 +15,6 @@ to apply uniformly. Caches mirror the same (repeat-stacked) structure.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
@@ -555,9 +554,9 @@ class TransformerLM:
                     nc["kv"] = kv
                 else:
                     raise NotImplementedError(
-                        f"chunked prefill does not support mixer "
+                        "chunked prefill does not support mixer "
                         f"'{desc.mixer}' (recurrent state advances "
-                        f"per-token; the runtime gates on this)")
+                        "per-token; the runtime gates on this)")
                 x = x + h
                 if desc.ffn != "none":
                     h = nn.apply_norm(p["norm2"], x, kind=cfg.norm,

@@ -217,10 +217,8 @@ def mlstm_decode(p, x: jnp.ndarray, cache: dict, cfg: ModelConfig, tp: int
                  ) -> Tuple[jnp.ndarray, dict]:
     """Single-token recurrent mLSTM step. x (b,1,d)."""
     Hp, d_in, hd = mlstm_dims(cfg, tp)
-    b = x.shape[0]
     xi = nn.linear(p["wx"], x)[:, 0]                         # (b,Hp,hd)
     z = nn.linear(p["wz"], x)[:, 0]
-    d_conv = p["conv_w"].shape[0]
     hist = jnp.concatenate([cache["conv"].astype(x.dtype), xi[:, None]], axis=1)
     xc = jnp.einsum("bjhd,jhd->bhd", hist, p["conv_w"].astype(x.dtype))
     xc = jax.nn.silu(xc + p["conv_b"][None].astype(x.dtype))

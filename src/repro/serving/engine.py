@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +52,6 @@ def generate_from_cache(model: Model, params, cache, first_logits,
                         temperature: float = 1.0,
                         temperature_zero: bool = False):
     """Sample max_new tokens continuing from a prefilled cache."""
-    b = first_logits.shape[0]
 
     def sample(logits, k):
         if temperature_zero:

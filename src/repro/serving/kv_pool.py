@@ -24,7 +24,6 @@ import heapq
 from typing import Any, List
 
 import jax
-import jax.numpy as jnp
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))   # pool is rebound by caller

@@ -14,13 +14,79 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import numpy as np
 
 
-def percentile(xs: List[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+def percentile(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+
+
+class Series:
+    """Append-only metric series with numpy-side accumulation.
+
+    Retirement bookkeeping appends one value per retired request. The
+    old ``List[float]`` + ``append(float(x))`` pattern forces a blocking
+    device->host transfer *per value* whenever the value is a device
+    scalar (e.g. plucked from a batched latency buffer) — exactly the
+    per-scalar pull the host-sync auditor (`repro.analysis.syncs`)
+    flags. Here host numbers land directly in a growable numpy buffer,
+    while device values are parked in a pending list and converted in
+    ONE batched transfer at the next read (len / iter / asarray), so
+    record paths never touch the device one scalar at a time.
+    """
+    __slots__ = ("_buf", "_n", "_pending")
+
+    def __init__(self, values=()):
+        self._buf = np.empty(16, np.float64)
+        self._n = 0
+        self._pending: list = []
+        for v in values:
+            self.append(v)
+
+    def append(self, value) -> None:
+        host = isinstance(value, (int, float, np.integer, np.floating))
+        if host and not self._pending:
+            if self._n == len(self._buf):
+                self._buf = np.concatenate(
+                    [self._buf, np.empty(len(self._buf), np.float64)])
+            self._buf[self._n] = value
+            self._n += 1
+        else:
+            # device scalar: defer — flushed in one batched transfer.
+            # (Host values queue behind any pending device value so the
+            # series stays insertion-ordered.)
+            self._pending.append(value)
+
+    def _flush(self) -> None:
+        if not self._pending:
+            return
+        import jax.numpy as jnp     # lazy: only if device values recorded
+        vals = np.asarray(             # analysis: allow(sync)
+            jnp.stack([jnp.asarray(v) for v in self._pending]), np.float64)
+        self._pending.clear()
+        for v in vals.ravel():
+            self.append(float(v))
+
+    def __len__(self) -> int:
+        return self._n + len(self._pending)
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+    def __iter__(self):
+        self._flush()
+        return iter(self._buf[:self._n])
+
+    def __array__(self, dtype=None, copy=None):
+        self._flush()
+        out = self._buf[:self._n]
+        return out.astype(dtype) if dtype is not None else np.array(out)
+
+    def __repr__(self) -> str:
+        self._flush()
+        return f"Series({self._buf[:self._n].tolist()!r})"
 
 
 @dataclass
@@ -72,9 +138,9 @@ class ServingMetrics:
     fused_dispatches: int = 0       # horizon + mixed dispatches
     fused_rows_sum: int = 0         # Σ rows carried by fused dispatches
     per_model: Dict[str, ModelMetrics] = field(default_factory=dict)
-    latencies: List[float] = field(default_factory=list)
-    queue_waits: List[float] = field(default_factory=list)  # submit->admit
-    ttfts: List[float] = field(default_factory=list)    # submit->1st token
+    latencies: Series = field(default_factory=Series)
+    queue_waits: Series = field(default_factory=Series)  # submit->admit
+    ttfts: Series = field(default_factory=Series)       # submit->1st token
     preemptions: int = 0            # traffic: victims evicted + requeued
     preempted_blocks_freed: int = 0  # blocks released by preemption
     degraded_requests: int = 0      # budgets shaved by the load price
@@ -217,14 +283,16 @@ class ServingMetrics:
 
     def record_queue_wait(self, wait: float) -> None:
         """Seconds from submit() to the admission pop that starts the
-        request's first prefill (requeues do not re-stamp)."""
+        request's first prefill (requeues do not re-stamp). Appends into
+        the numpy-side Series: a device-scalar wait is deferred and
+        batch-converted at read time, never pulled here."""
         self._touch()
-        self.queue_waits.append(float(wait))
+        self.queue_waits.append(wait)
 
     def record_ttft(self, ttft: float) -> None:
         """Seconds from submit() to the request's first sampled token."""
         self._touch()
-        self.ttfts.append(float(ttft))
+        self.ttfts.append(ttft)
 
     def record_preemption(self, blocks_freed: int = 0) -> None:
         self._touch()
@@ -240,7 +308,7 @@ class ServingMetrics:
         self._touch()
         self.requests_done += 1
         if latency is not None:
-            self.latencies.append(float(latency))
+            self.latencies.append(latency)
 
     @property
     def occupancy(self) -> float:

@@ -60,8 +60,58 @@ class TickPlan:
     n_live: int = 0          # live decode children across all models
 
 
+#: every program kind a ProgramPlan can carry. The static auditor
+#: (`repro.analysis.recompiles`) cross-checks this against the builder
+#: registry in tick_programs.py — a kind the planner can emit without a
+#: registered lru_cached builder is a finding.
+PROGRAM_KINDS = ("token", "chunk", "horizon", "mixed")
+
+
 def _pow2_floor(h: int) -> int:
     return 1 << (max(1, int(h)).bit_length() - 1)
+
+
+def horizon_widths(horizon: int) -> Tuple[int, ...]:
+    """Every width :func:`horizon_width` can emit for a configured max
+    `horizon` — the pow2 quantization lattice {1, 2, 4, ..., floor}.
+    This IS the static-arg key space of the scan-carrying builders: on a
+    staggered stream min-remaining takes nearly every value in
+    [1, horizon], and each distinct width is a fresh XLA compile, so the
+    compiled-variant bound (log2(horizon)+1) only holds because dispatch
+    quantizes through this lattice."""
+    out, w = [], 1
+    top = _pow2_floor(horizon)
+    while w <= top:
+        out.append(w)
+        w *= 2
+    return tuple(out)
+
+
+def compile_cardinality(horizon: int, *, n_models: int = 1,
+                        chunked: bool = True,
+                        fuse_prefill: bool = True) -> Dict[str, int]:
+    """Worst-case compile counts per builder kind for one runtime
+    config — the key space reachable from :func:`plan_tick`'s TickPlan:
+    kind x pow2 horizon width x model. Widths > 1 are the scan
+    programs (horizon / mixed); width 1 falls back to the token
+    program, so the scan kinds each contribute len(widths) - 1 entries.
+    `admit` (sampling the first token of an admitted prompt) is
+    model-independent; the per-model cache plumbing programs
+    (paged_pool's gather/scatter jits) key on the cache *structure*, at
+    most one treedef per model. The total is the number the recompile
+    auditor bounds and the table the CLI prints."""
+    widths = horizon_widths(horizon)
+    scan_widths = len([w for w in widths if w > 1])
+    per_kind = {
+        "token": n_models,
+        "chunk": n_models if chunked else 0,
+        "horizon": n_models * scan_widths,
+        "mixed": n_models * scan_widths if (chunked and fuse_prefill) else 0,
+        "admit": 1,
+        "pool": n_models,
+    }
+    per_kind["total"] = sum(per_kind.values())
+    return per_kind
 
 
 def horizon_width(rt, decode_slots) -> int:

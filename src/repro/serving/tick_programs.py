@@ -364,11 +364,11 @@ def dispatch_token(rt, pp):
     rt.metrics.record_blocks(pool.blocks_in_use)
     if pp.prefill_slots:
         rt.metrics.record_prefill(len(pp.prefill_slots), model=pp.model_id)
-    sampled_np = np.asarray(sampled)
+    sampled_np = np.asarray(sampled)        # analysis: allow(sync)
     rt.metrics.record_sync(model=pp.model_id)
     hidden_np = None
     if pp.prefill_slots:
-        hidden_np = np.asarray(hidden, np.float32)
+        hidden_np = np.asarray(hidden, np.float32)  # analysis: allow(sync)
         rt.metrics.record_sync(model=pp.model_id)
     return sampled_np, logits, hidden_np
 
@@ -444,7 +444,8 @@ def dispatch_horizon(rt, pp):
     # does not depend on the sampled tokens overlaps device compute,
     # and the buffer is forced in one transfer at the end
     rt.metrics.record_blocks(pool.blocks_in_use)
-    buf = np.asarray(emits)                 # (H, 2, N): [token; alive]
+    # (H, 2, N): [token; alive]
+    buf = np.asarray(emits)                 # analysis: allow(sync)
     rt.metrics.record_sync(model=pp.model_id)
     return buf
 
@@ -496,6 +497,41 @@ def dispatch_mixed(rt, pp):
     pool.caches[pp.model_id] = cache
     rt.metrics.record_dispatch(model=pp.model_id)
     rt.metrics.record_blocks(pool.blocks_in_use)
-    buf = np.asarray(emits)                 # (H, 2, N): [token; alive]
+    # (H, 2, N): [token; alive]
+    buf = np.asarray(emits)                 # analysis: allow(sync)
     rt.metrics.record_sync(model=pp.model_id)
     return buf, probe_lg, probe_hid, consumed
+
+
+# --------------------------------------------------------------- registry
+#: every lru_cached program builder, keyed by the ProgramPlan `kind` that
+#: launches it (plus "admit", launched by fan-out admission rather than a
+#: plan). `repro.analysis.recompiles` walks this registry to verify each
+#: builder is module-level and memoized, and cross-checks coverage
+#: against plan.PROGRAM_KINDS — a kind the planner can emit without a
+#: registered builder (or vice versa) is a finding.
+BUILDERS = {
+    "token": token_program,
+    "chunk": chunk_program,
+    "horizon": horizon_program,
+    "mixed": mixed_program,
+    "admit": admit_program,
+}
+
+#: accounted device->host fetches per dispatcher, as (min, max) sync
+#: *sites* in the function body — the statically-verified half of the
+#: one-sync-per-horizon contract. `repro.analysis.programs` counts the
+#: actual np.asarray/scalar-pull sites in each dispatcher's AST
+#: (suppression comments don't hide them from this count) and fails on
+#: drift in either direction: a new fetch breaks the budget, and a
+#: removed one means the budget (and this table) should tighten.
+#: dispatch_token is (1, 2): sampled always, hidden only under the
+#: chunk-1 prefill interleave. dispatch_chunk is (0, 0): its hidden
+#: fetch belongs to retirement (retire_chunk syncs lazily, only when a
+#: slot actually finished its prompt this chunk).
+DISPATCH_SYNC_BUDGET = {
+    "dispatch_token": (1, 2),
+    "dispatch_chunk": (0, 0),
+    "dispatch_horizon": (1, 1),
+    "dispatch_mixed": (1, 1),
+}

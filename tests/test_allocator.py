@@ -4,7 +4,6 @@ import itertools
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st

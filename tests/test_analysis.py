@@ -1,0 +1,315 @@
+"""Static hot-path auditor: each pass catches its seeded violation class,
+the repo itself is clean, and the one-sync contract holds on the compiled
+tick programs."""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import blockspecs, common, recompiles, syncs
+from repro.analysis.__main__ import main
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# sync pass
+# ---------------------------------------------------------------------------
+
+SYNC_BAD = textwrap.dedent("""\
+    import numpy as np
+
+    def dispatch_token(self, logits):
+        x = float(logits[0])            # scalar pull
+        y = np.asarray(logits)          # bulk pull
+        n = len(logits)                 # shape via host
+        return x, y, n
+""")
+
+SYNC_ALLOWED = textwrap.dedent("""\
+    import numpy as np
+
+    def dispatch_token(self, logits):
+        buf = np.asarray(logits)  # analysis: allow(sync)
+        return buf
+""")
+
+
+def test_sync_pass_flags_seeded_pulls(tmp_path):
+    (tmp_path / "bad.py").write_text(SYNC_BAD)
+    result = syncs.run(tmp_path)
+    codes = sorted(f.code for f in result.findings if not f.suppressed)
+    assert "scalar-pull" in codes
+    assert "asarray" in codes
+    assert "len" in codes
+
+
+def test_sync_pass_honours_allow_comment(tmp_path):
+    (tmp_path / "ok.py").write_text(SYNC_ALLOWED)
+    result = syncs.run(tmp_path)
+    assert all(f.suppressed for f in result.findings)
+    assert any(f.code == "asarray" for f in result.findings)
+
+
+def test_sync_pass_traced_branch(tmp_path):
+    (tmp_path / "branch.py").write_text(textwrap.dedent("""\
+        def horizon_program(model):
+            pass
+
+        def tick(self, logits):
+            run = horizon_program(self)
+            out = run(logits)
+            if out > 0:                 # branch on a device value
+                return 1
+            return 0
+    """))
+    result = syncs.run(tmp_path)
+    assert any(f.code == "branch" for f in result.findings)
+
+
+def test_count_fetch_sites_sees_through_suppressions():
+    # suppression comments must not hide fetch sites from the budget
+    n = syncs.count_fetch_sites(SYNC_ALLOWED, "dispatch_token")
+    assert n == 1
+
+
+def test_repo_sync_findings_all_accounted():
+    result = syncs.run(REPO)
+    baseline = common.load_baseline(REPO / "experiments/analysis_baseline.json")
+    new = [f for f in result.findings
+           if not f.suppressed and f.key not in baseline]
+    assert new == [], [f.render() for f in new]
+
+
+# ---------------------------------------------------------------------------
+# recompile pass
+# ---------------------------------------------------------------------------
+
+RECOMPILE_BAD = textwrap.dedent("""\
+    import jax
+
+    class Runtime:
+        @jax.jit
+        def step(self, x):              # jit-decorated method
+            return x
+
+        def __init__(self):
+            self.f = jax.jit(lambda x: x)       # per-instance cache
+            g = jax.jit(self.step)              # bound method
+
+    def token_program(model):
+        @jax.jit
+        def run(x):
+            return x
+        return run                      # builder without lru_cache
+""")
+
+
+def test_recompile_pass_flags_all_shapes(tmp_path):
+    (tmp_path / "bad.py").write_text(RECOMPILE_BAD)
+    result = recompiles.run(tmp_path)
+    codes = [f.code for f in result.findings]
+    assert codes.count("bound-jit") == 3
+    assert codes.count("uncached-builder") == 1
+
+
+def test_recompile_pass_accepts_lru_cached_builder(tmp_path):
+    (tmp_path / "ok.py").write_text(textwrap.dedent("""\
+        import functools
+        import jax
+
+        @functools.lru_cache(maxsize=None)
+        def token_program(model):
+            @jax.jit
+            def run(x):
+                return x
+            return run
+    """))
+    result = recompiles.run(tmp_path)
+    assert result.findings == []
+
+
+def test_builder_registry_is_memoized():
+    from repro.serving import plan, tick_programs
+    for kind in plan.PROGRAM_KINDS:
+        assert kind in tick_programs.BUILDERS
+        assert hasattr(tick_programs.BUILDERS[kind], "cache_info")
+
+
+def test_compile_table_bound_tight():
+    table = recompiles.compile_table()
+    assert table and all(row["ok"] for row in table.values())
+    # pow2 quantization makes the bound exactly tight, not just safe
+    assert all(row["total"] == row["bound"] for row in table.values())
+
+
+def test_horizon_widths_pow2():
+    from repro.serving.plan import horizon_widths
+    assert horizon_widths(1) == (1,)
+    assert horizon_widths(8) == (1, 2, 4, 8)
+    assert horizon_widths(12) == (1, 2, 4, 8)   # floor to pow2
+
+
+# ---------------------------------------------------------------------------
+# blockspec pass
+# ---------------------------------------------------------------------------
+
+def _toy_audit(index_map):
+    from repro.kernels import registry
+    B, T, n_table = 4, 5, 8
+    pos = [0, 5, 19]
+    live = [(p + B) // B for p in pos]          # blocks holding [0, pos]
+    tables = registry.poison_tables(live, n_table)
+    return registry.IndexMapAudit(
+        kernel="toy", operand="k", grid=(len(pos), T),
+        index_map=index_map, extents=(registry.POISON, 1, 1, 1),
+        scalar_args=(tables, pos))
+
+
+def test_blockspec_catches_unclamped_map():
+    # the PR 7 bug: tbl[bi, ti] for ALL T entries walks table poison
+    findings = blockspecs.check_audit(
+        _toy_audit(lambda bi, ti, tbl, p: (tbl[bi][ti], 0, 0, 0)))
+    assert any(f.code == "out-of-bounds" for f in findings)
+
+
+def test_blockspec_accepts_clamped_map():
+    findings = blockspecs.check_audit(
+        _toy_audit(lambda bi, ti, tbl, p:
+                   (tbl[bi][min(ti, p[bi] // 4)], 0, 0, 0)))
+    assert findings == []
+
+
+def test_blockspec_catches_arity_mismatch():
+    findings = blockspecs.check_audit(
+        _toy_audit(lambda bi, ti, tbl, p: (0, 0)))
+    assert [f.code for f in findings] == ["arity"]
+
+
+def test_production_index_maps_in_bounds():
+    result = blockspecs.run(REPO)
+    assert [f for f in result.findings if not f.suppressed] == []
+    assert result.report["audits"] >= 10
+
+
+def test_every_pallas_wrapper_registered():
+    import ast
+    from repro.kernels import registry
+    names = set()
+    for path in (REPO / "src/repro/kernels").glob("*.py"):
+        for name in blockspecs._pallas_wrappers(ast.parse(path.read_text())):
+            if not name.startswith("_"):
+                names.add(name)
+    assert names <= set(registry.AUDITED_KERNELS)
+    audited = {a.kernel for a in registry.default_audits()}
+    assert set(registry.AUDITED_KERNELS) <= audited
+
+
+# ---------------------------------------------------------------------------
+# program pass (compiles the tick programs once; shared via module fixture)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def program_result():
+    from repro.analysis import programs
+    return programs.run(REPO)
+
+
+@pytest.mark.slow
+def test_one_sync_contract(program_result):
+    assert program_result.findings == [], \
+        [f.render() for f in program_result.findings]
+    for kind in ("token", "chunk", "horizon", "mixed", "admit"):
+        rep = program_result.report[kind]
+        assert rep["jaxpr_callbacks"] == 0
+        assert rep["hlo_host_ops"] == 0
+    for fn in ("dispatch_horizon", "dispatch_mixed"):
+        assert program_result.report[fn]["fetch_sites"] == 1
+
+
+@pytest.mark.slow
+def test_debug_print_would_be_caught():
+    """A jax.debug.print inside a program is exactly what the jaxpr audit
+    exists to flag — prove the detector sees the callback primitive."""
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis import programs
+
+    def leaky(x):
+        jax.debug.print("x={x}", x=x)
+        return x * 2
+
+    prims = programs._collect_primitives(
+        jax.make_jaxpr(leaky)(jnp.ones(3)).jaxpr, set())
+    assert prims & programs.CALLBACK_PRIMS
+
+
+# ---------------------------------------------------------------------------
+# CLI / baseline plumbing
+# ---------------------------------------------------------------------------
+
+def test_cli_green_on_repo():
+    assert main(["--check", "--skip", "programs"]) == 0
+
+
+def test_cli_red_on_seeded_fixture(tmp_path, capsys):
+    (tmp_path / "bad.py").write_text(SYNC_BAD)
+    rc = main(["--check", "--root", str(tmp_path),
+               "--skip", "programs", "--skip", "blockspecs"])
+    assert rc == 1
+    assert "new finding" in capsys.readouterr().out
+
+
+def test_cli_update_baseline_roundtrip(tmp_path):
+    (tmp_path / "bad.py").write_text(SYNC_BAD)
+    base = tmp_path / "base.json"
+    assert main(["--update-baseline", "--root", str(tmp_path),
+                 "--baseline", str(base),
+                 "--skip", "programs", "--skip", "blockspecs"]) == 0
+    data = json.loads(base.read_text())
+    assert data["findings"]
+    # baselined findings no longer fail the check
+    assert main(["--check", "--root", str(tmp_path),
+                 "--baseline", str(base),
+                 "--skip", "programs", "--skip", "blockspecs"]) == 0
+
+
+def test_finding_keys_stable_under_line_moves():
+    f1 = common.Finding("sync", "asarray", "a.py", 10, "f", "m")
+    f2 = common.Finding("sync", "asarray", "a.py", 99, "f", "m")
+    common.assign_occurrences([f1])
+    common.assign_occurrences([f2])
+    assert f1.key == f2.key
+
+
+# ---------------------------------------------------------------------------
+# metrics.Series (satellite: batched host transfer for recorded scalars)
+# ---------------------------------------------------------------------------
+
+def test_series_host_only():
+    from repro.serving.metrics import Series
+    s = Series()
+    s.append(1.0)
+    s.append(2.5)
+    assert list(s) == [1.0, 2.5]
+    assert len(s) == 2 and bool(s)
+
+
+def test_series_defers_device_values_in_order():
+    import jax.numpy as jnp
+    from repro.serving.metrics import Series
+    s = Series()
+    s.append(1.0)
+    s.append(jnp.float32(2.5))      # deferred — no sync yet
+    s.append(3.0)                   # must stay AFTER the pending value
+    assert len(s) == 3              # length known without flushing
+    assert list(s) == [1.0, 2.5, 3.0]
+
+
+def test_series_percentile_interop():
+    from repro.serving.metrics import Series, percentile
+    s = Series()
+    for v in (4.0, 1.0, 3.0, 2.0):
+        s.append(v)
+    assert percentile(s, 50) == pytest.approx(2.5)

@@ -14,8 +14,8 @@ except ImportError:        # hypothesis is dev-only: skip just those tests
 
 from repro.core import bestofk, marginal, routing
 from repro.core.difficulty import (apply_lora, init_lora_probe,
-                                   lora_probe_loss, mlp_probe_apply,
-                                   probe_predict, train_mlp_probe)
+                                   lora_probe_loss, probe_predict,
+                                   train_mlp_probe)
 
 
 @given(st.floats(0.0, 1.0), st.integers(1, 50))

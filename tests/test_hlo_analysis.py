@@ -1,7 +1,6 @@
 """HLO analyzer: FLOP counting with loop multipliers, on a controlled jit."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch.hlo_analysis import analyze, parse_hlo
 

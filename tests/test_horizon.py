@@ -18,7 +18,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serving import (ContinuousBatchingRuntime, PagedKVPool,
-                           RequestState, ServingEngine)
+                           ServingEngine)
 
 
 @pytest.fixture(scope="module")

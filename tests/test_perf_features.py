@@ -1,7 +1,6 @@
 """Tests for §Perf beyond-paper features: W8A16 quantization and the
 mixed-precision / value-sharded mLSTM."""
 import dataclasses
-import math
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +33,7 @@ def test_int8_model_forward_finite_and_close():
     cfg = dataclasses.replace(get_config("qwen2-0.5b").reduced(),
                               dtype="float32")
     cfg_q = dataclasses.replace(cfg, quant_int8=True)
-    m = build_model(cfg)
+    build_model(cfg)
     mq = build_model(cfg_q)
     params_q = mq.init(jax.random.PRNGKey(0))
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,

@@ -273,7 +273,7 @@ def test_stall_report_names_blockers(tiny):
     rt.prefill_queued()
     # simulate a wedged pool: every slot leaked
     rt.pool.alloc(), rt.pool.alloc()
-    with pytest.raises(RuntimeError, match=f"fan-out blocked for request "
+    with pytest.raises(RuntimeError, match="fan-out blocked for request "
                                            f"{rid}"):
         rt.drain()
 

@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 
 from repro.serving import (ContinuousBatchingRuntime, PriorityClassQueues,
-                           RequestState, Single, TrafficConfig)
+                           RequestState, TrafficConfig)
 from repro.serving.traffic import AsyncTokenStreamer, TrafficController
 
 
