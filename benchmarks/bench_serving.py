@@ -15,6 +15,11 @@ prompt blocks copy-on-write across fan-out.
 Capacity probe: at equal device KV memory (token capacity), short
 sequences let the paged pool sustain strictly more concurrent children
 than the slot pool's full-`max_len` rows — the slot pool queues first.
+A third arm re-runs the paged pool with the int8 quantized KV layout
+(`kv_quant="int8"`) at the same *byte* budget — `pool.kv_bytes()` is
+the ruler, since token capacity stops being one once a position's byte
+cost depends on the layout — and must sustain >= 1.8x the fp arm's
+concurrent children (the smoke gate; ~3.9x in practice for fp32 KV).
 
 Prefix-heavy probe: realistic adaptive-best-of-k traffic shares a task
 preamble / few-shot header across requests. The same greedy stream runs
@@ -140,8 +145,32 @@ def _capacity_probe(model, params, vocab, *, mem_tokens, max_len,
     """Equal device KV memory (mem_tokens of cache positions) for both
     pools; short requests (sp + max_new << max_len). Reports the peak
     concurrent-child count each backend sustains — the slot pool tops out
-    at mem_tokens/max_len full rows and queues the rest."""
+    at mem_tokens/max_len full rows and queues the rest — plus each arm's
+    actual store bytes (from the pool's own cache shapes/dtypes, so the
+    equal-memory claim is checkable, not asserted). A third arm re-runs
+    the paged pool with the int8 quantized KV layout at the fp arm's
+    byte budget and a 4x deeper backlog, so its sustained concurrency is
+    memory-limited like the fp arm's rather than request-limited."""
+    import os
+
+    # the probe IS the fp-vs-int8 A/B: each arm pins its layout via the
+    # ctor arg, so an ambient REPRO_KV_QUANT (the CI quant lane sets it)
+    # must not flip the fp arms — or crash the slot arm, which has no
+    # block granularity to quantize
+    env_quant = os.environ.pop("REPRO_KV_QUANT", None)
+    try:
+        return _capacity_arms(model, params, vocab, mem_tokens=mem_tokens,
+                              max_len=max_len, block_size=block_size, sp=sp,
+                              max_new=max_new, n_req=n_req, seed=seed)
+    finally:
+        if env_quant is not None:
+            os.environ["REPRO_KV_QUANT"] = env_quant
+
+
+def _capacity_arms(model, params, vocab, *, mem_tokens, max_len,
+                   block_size, sp, max_new, n_req, seed):
     from repro.serving import ContinuousBatchingRuntime
+    from repro.serving.paged_pool import kv_block_bytes
 
     rng = np.random.default_rng(seed)
     prompts = rng.integers(0, vocab, size=(n_req, sp)).astype(np.int32)
@@ -153,16 +182,38 @@ def _capacity_probe(model, params, vocab, *, mem_tokens, max_len,
     rt_s.submit_batch(prompts, budgets=[1] * n_req)
     rt_s.drain()
     out["slots"] = dict(peak_children=rt_s.metrics.peak_children,
-                        mem_rows=slot_rows)
+                        mem_rows=slot_rows,
+                        kv_bytes=slot_rows * kv_block_bytes(model, max_len))
     rt_p = ContinuousBatchingRuntime(
         model, params, n_slots=n_req, max_len=max_len, max_new=max_new,
         temperature=0.0, seed=0, pool="paged", block_size=block_size,
         n_blocks=mem_tokens // block_size + 1, prefill_slots=n_req)
     rt_p.submit_batch(prompts, budgets=[1] * n_req)
     rt_p.drain()
+    byte_budget = rt_p.pool.kv_bytes()
     out["paged"] = dict(peak_children=rt_p.metrics.peak_children,
                         peak_blocks=rt_p.metrics.peak_blocks,
-                        n_blocks=mem_tokens // block_size)
+                        n_blocks=mem_tokens // block_size,
+                        kv_bytes=byte_budget)
+    # int8 arm: same store bytes (null block inside the budget, like the
+    # fp arm's), block count derived from the quantized layout's own
+    # per-block cost — never a hardcoded compression ratio
+    n_req_q = 4 * n_req
+    prompts_q = rng.integers(0, vocab, size=(n_req_q, sp)).astype(np.int32)
+    rt_q = ContinuousBatchingRuntime(
+        model, params, n_slots=n_req_q, max_len=max_len, max_new=max_new,
+        temperature=0.0, seed=0, pool="paged", block_size=block_size,
+        n_blocks=byte_budget // kv_block_bytes(model, block_size, "int8"),
+        prefill_slots=n_req_q, kv_quant="int8")
+    assert rt_q.pool.kv_bytes() <= byte_budget, (rt_q.pool.kv_bytes(),
+                                                 byte_budget)
+    rt_q.submit_batch(prompts_q, budgets=[1] * n_req_q)
+    rt_q.drain()
+    out["int8"] = dict(peak_children=rt_q.metrics.peak_children,
+                       peak_blocks=rt_q.metrics.peak_blocks,
+                       kv_bytes=rt_q.pool.kv_bytes(),
+                       ratio_vs_fp=rt_q.metrics.peak_children
+                       / max(out["paged"]["peak_children"], 1))
     return out
 
 
@@ -592,7 +643,8 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
         n_slots: int = 8, mean_gap: float = 0.05, seed: int = 0,
         smoke: bool = False, prefix_only: bool = False,
         routing_only: bool = False, gauntlet_only: bool = False,
-        mixed_only: bool = False, horizon: int = 8) -> None:
+        mixed_only: bool = False, capacity_only: bool = False,
+        horizon: int = 8) -> None:
     import jax
 
     from repro.configs import get_config
@@ -606,6 +658,39 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
                               dtype="float32", n_layers=2)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
+
+    if capacity_only:
+        # the standalone equal-memory capacity gate (CI runs this in the
+        # quantized-KV lane; the probe pins each arm's layout itself)
+        max_len = width + max_new + 1
+        cap = _capacity_probe(
+            model, params, cfg.vocab_size,
+            mem_tokens=(2 if smoke else 4) * 2 * max_len,
+            max_len=2 * max_len, block_size=4, sp=max(2, width // 3),
+            max_new=max_new, n_req=(6 if smoke else 12))
+        emit("serving/capacity/int8", float(cap["int8"]["peak_children"]),
+             f"{cap['int8']['ratio_vs_fp']:.2f}x fp at equal bytes")
+        save_result("bench_serving_capacity", cap)
+        # merge into the CI artifact (the main smoke run writes the rest)
+        merge_result("BENCH_serving", {
+            "capacity_fp_children": cap["paged"]["peak_children"],
+            "capacity_quant_children": cap["int8"]["peak_children"],
+            "capacity_quant_ratio": cap["int8"]["ratio_vs_fp"],
+            "capacity_kv_bytes": cap["paged"]["kv_bytes"]})
+        print(f"# capacity at equal memory: paged "
+              f"{cap['paged']['peak_children']} vs slot "
+              f"{cap['slots']['peak_children']} children; int8 KV at "
+              f"equal bytes ({cap['int8']['kv_bytes']} <= "
+              f"{cap['paged']['kv_bytes']}): "
+              f"{cap['int8']['peak_children']} children = "
+              f"{cap['int8']['ratio_vs_fp']:.2f}x fp")
+        if smoke:
+            assert (cap["paged"]["peak_children"]
+                    > cap["slots"]["peak_children"]), cap
+            assert cap["int8"]["kv_bytes"] <= cap["paged"]["kv_bytes"], cap
+            assert cap["int8"]["ratio_vs_fp"] >= 1.8, cap
+            print("# capacity smoke OK")
+        return
 
     if routing_only:
         # the standalone routing gate: weak-only vs routed vs strong-only
@@ -778,6 +863,8 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
          f"{cap['slots']['peak_children']} children")
     emit("serving/capacity/paged", float(cap["paged"]["peak_children"]),
          f"{cap['paged']['peak_children']} children")
+    emit("serving/capacity/int8", float(cap["int8"]["peak_children"]),
+         f"{cap['int8']['ratio_vs_fp']:.2f}x fp at equal bytes")
     emit("serving/prefix_heavy/hit_tokens", float(pf["hit_tokens"]),
          f"{pf['reduction']*100:.0f}% prefill reduction")
     emit("serving/horizon/speedup", float(hz["speedup"]),
@@ -822,6 +909,10 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
         mixed_fallback_fraction=mx["fused"]["fallback_fraction"],
         mixed_overlap_tokens=mx["fused"]["overlap_tokens"],
         mixed_bitwise_equal=mx["bitwise_equal"],
+        capacity_fp_children=cap["paged"]["peak_children"],
+        capacity_quant_children=cap["int8"]["peak_children"],
+        capacity_quant_ratio=cap["int8"]["ratio_vs_fp"],
+        capacity_kv_bytes=cap["paged"]["kv_bytes"],
         stream_tokens_per_sec=paged["tokens_per_sec"],
         stream_latency_p50_s=paged["latency_p50_s"],
         speedup_vs_batch=speedup, smoke=smoke,
@@ -832,6 +923,9 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
           f"paged vs slots: {parity:.2f}x; capacity at equal memory: "
           f"paged {cap['paged']['peak_children']} vs slot "
           f"{cap['slots']['peak_children']} concurrent children; "
+          f"int8 KV at equal bytes ({cap['int8']['kv_bytes']} <= "
+          f"{cap['paged']['kv_bytes']}): {cap['int8']['peak_children']} "
+          f"children = {cap['int8']['ratio_vs_fp']:.2f}x fp; "
           f"prefix-heavy: {pf['reduction']*100:.0f}% fewer prefill tokens")
     print(f"# horizon H={horizon}: {hz['speedup']:.2f}x tokens/sec on the "
           "decode-heavy probe, syncs/token "
@@ -875,6 +969,12 @@ def run(n_requests: int = 40, width: int = 12, max_new: int = 8,
         assert paged["decode_tokens"] == slots["decode_tokens"]
         assert (cap["paged"]["peak_children"]
                 > cap["slots"]["peak_children"]), cap
+        # int8 KV acceptance: at the fp arm's exact byte budget the
+        # quantized layout must sustain >= 1.8x its concurrency (the
+        # fp32 store compresses ~3.9x; 1.8 leaves headroom for scale
+        # overhead and block-granularity loss at other configs)
+        assert cap["int8"]["kv_bytes"] <= cap["paged"]["kv_bytes"], cap
+        assert cap["int8"]["ratio_vs_fp"] >= 1.8, cap
         assert pf["bitwise_equal"], "prefix-cache hit path diverged"
         assert pf["reduction"] >= 0.30, pf
         # routing acceptance: adaptive dominates the random baseline at
@@ -907,6 +1007,10 @@ if __name__ == "__main__":
                     help="run only the fused mixed-tick probe (continuous "
                          "prefill/decode interference vs the pre-refactor "
                          "per-token fallback)")
+    ap.add_argument("--capacity", action="store_true",
+                    help="run only the equal-memory capacity probe "
+                         "(slots vs paged fp vs paged int8 KV at the "
+                         "same byte budget)")
     ap.add_argument("--horizon", type=int, default=8,
                     help="horizon-fused decode width for the decode-heavy "
                          "probe (1 disables fusion)")
@@ -916,4 +1020,5 @@ if __name__ == "__main__":
     args = ap.parse_args()
     run(smoke=args.smoke, prefix_only=args.prefix_heavy,
         routing_only=args.routing, gauntlet_only=args.gauntlet,
-        mixed_only=args.mixed, horizon=args.horizon, seed=args.seed)
+        mixed_only=args.mixed, capacity_only=args.capacity,
+        horizon=args.horizon, seed=args.seed)

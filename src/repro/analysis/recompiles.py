@@ -23,11 +23,12 @@ history shows being violated once each:
   ``cache_info``).
 
 The pass also enumerates the static-arg key space reachable from
-``plan.py``'s TickPlan — kind x pow2 horizon width x model — via
-``plan.compile_cardinality`` and emits the worst-case compile-count
-table per config, asserting the bound
-``n_models * (2 + 2 * log2(horizon)) + 1 + n_models`` the pow2
-quantization exists to guarantee.
+``plan.py``'s TickPlan — kind x pow2 horizon width x model x cache
+layout — via ``plan.compile_cardinality`` and emits the worst-case
+compile-count table per config, asserting the bound
+``n_models * kva * (2 + 2 * log2(horizon)) + 1 + n_models * kva``
+(kva = 2 when the process exercises both the fp and int8-quantized
+cache layouts, else 1) the pow2 quantization exists to guarantee.
 """
 from __future__ import annotations
 
@@ -44,8 +45,12 @@ CATEGORY = "recompile"          # allow(recompile)
 
 SUBDIRS = ("src/repro/serving", "src/repro/kernels", "src/repro/models")
 
-#: worst-case configs for the compile-count table
-TABLE_CONFIGS = ((1, 1), (8, 1), (8, 2), (16, 2))   # (horizon, n_models)
+#: worst-case configs for the compile-count table:
+#: (horizon, n_models, kv_quant) — kv_quant=True means the process
+#: exercises BOTH cache layouts (fp and int8+scales, e.g. an A/B
+#: capacity probe), doubling every cache-carrying builder's key space
+TABLE_CONFIGS = ((1, 1, False), (8, 1, False), (8, 2, False),
+                 (8, 2, True), (16, 2, True))
 
 
 def _dotted(node: ast.AST) -> Optional[str]:
@@ -219,11 +224,13 @@ def compile_table() -> dict:
     each must satisfy."""
     from repro.serving import plan
     rows = {}
-    for horizon, n_models in TABLE_CONFIGS:
-        counts = plan.compile_cardinality(horizon, n_models=n_models)
-        bound = (n_models * (2 + 2 * int(math.log2(max(horizon, 1))))
-                 + 1 + n_models)
-        rows[f"H={horizon},models={n_models}"] = {
+    for horizon, n_models, kv_quant in TABLE_CONFIGS:
+        counts = plan.compile_cardinality(horizon, n_models=n_models,
+                                          kv_quant=kv_quant)
+        kva = 2 if kv_quant else 1
+        bound = (n_models * kva * (2 + 2 * int(math.log2(max(horizon, 1))))
+                 + 1 + n_models * kva)
+        rows[f"H={horizon},models={n_models},quant={kv_quant}"] = {
             **counts, "bound": bound, "ok": counts["total"] <= bound}
     return rows
 

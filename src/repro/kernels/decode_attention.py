@@ -90,6 +90,25 @@ def chunk_kv_index_map(block_size: int, chunk: int):
     return kv_map
 
 
+def paged_scale_index_map(block_size: int):
+    """Scale-store gather map for the int8 quantized decode kernel: the
+    per-(block, kv-head) scale tile (1, 1, KVp) travels with the same
+    clamped physical block id as its K/V tile. Module-level so the static
+    auditor evaluates it over the full grid like the K/V maps."""
+    def scale_map(bi, ti, tbl, p):
+        return (tbl[bi, jnp.minimum(ti, p[bi] // block_size)], 0, 0)
+    return scale_map
+
+
+def chunk_scale_index_map(block_size: int, chunk: int):
+    """Quantized chunk variant of `paged_scale_index_map`, clamped to the
+    last block any query row of the chunk can see."""
+    def scale_map(bi, ti, tbl, p):
+        return (tbl[bi, jnp.minimum(ti, (p[bi] + chunk - 1) // block_size)],
+                0, 0)
+    return scale_map
+
+
 def _dec_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
                 *, block_k: int, groups: int, sm_scale: float, seq_k: int):
     ki = pl.program_id(1)
@@ -364,3 +383,207 @@ def paged_chunk_attention(q: jnp.ndarray, k_blocks: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((b, C, H, hd), q.dtype),
         interpret=interpret,
     )(tables.astype(jnp.int32), pos.astype(jnp.int32), q, k_blocks, v_blocks)
+
+
+# ----------------------------------------------------------------------------
+# int8 quantized paged kernels: dequant fused into the online-softmax loop.
+#
+# Deliberate duplicates of `_paged_kernel` / `_chunk_kernel` (not a shared
+# parameterized body): the fp kernels back token-bitwise reproducibility
+# gates, so the quant path must not perturb their traced graphs. Each K/V
+# tile is dequantized in VMEM right after the DMA — `int8 tile * scale`
+# with the (1, 1, KVp) scale tile gathered through the same clamped block
+# id — so no fp cache is ever materialized in HBM and the bytes streamed
+# per step drop ~4x on the bandwidth-bound configs.
+# ----------------------------------------------------------------------------
+
+def _paged_quant_kernel(tables_ref, pos_ref, q_ref, k_ref, ks_ref, v_ref,
+                        vs_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                        block_b: int, groups: int, sm_scale: float):
+    bi = pl.program_id(0)
+    ti = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[bi]
+    k_start = ti * block_b          # logical position of this block's row 0
+
+    @pl.when(k_start <= pos)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                      # (H, hd)
+        # fused dequant: int8 tile * per-(block, kv-head) scale
+        k = k_ref[0].astype(jnp.float32) * ks_ref[0, 0][None, :, None]
+        v = v_ref[0].astype(jnp.float32) * vs_ref[0, 0][None, :, None]
+        H, hd = q.shape
+        KV = k.shape[1]
+        qg = q.reshape(KV, groups, hd)
+        s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                      # (KV, g, B)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        sf = s.reshape(H, -1)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sf, axis=1))
+        p = jnp.exp(sf - m_new[:, None]).reshape(KV, groups, -1)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p.reshape(H, -1), axis=1)
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((0,), (1,))),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv.reshape(H, -1)
+        m_scr[...] = m_new
+
+    @pl.when(ti == nt - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _chunk_quant_kernel(tables_ref, pos_ref, q_ref, k_ref, ks_ref, v_ref,
+                        vs_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                        block_b: int, groups: int, chunk: int,
+                        sm_scale: float):
+    bi = pl.program_id(0)
+    ti = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[bi]               # chunk start position
+    k_start = ti * block_b
+
+    @pl.when(k_start <= pos + chunk - 1)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                      # (C, H, hd)
+        k = k_ref[0].astype(jnp.float32) * ks_ref[0, 0][None, :, None]
+        v = v_ref[0].astype(jnp.float32) * vs_ref[0, 0][None, :, None]
+        C, H, hd = q.shape
+        KV = k.shape[1]
+        qg = q.reshape(C, KV, groups, hd).transpose(1, 0, 2, 3)
+        qg = qg.reshape(KV, C * groups, hd)
+        s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                      # (KV, C*g, B)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        qpos = pos + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) // groups
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        sf = s.reshape(C * H, -1)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sf, axis=1))
+        p = jnp.exp(sf - m_new[:, None]).reshape(KV, C * groups, -1)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p.reshape(C * H, -1),
+                                                  axis=1)
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((0,), (1,))),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv.reshape(C * H, -1)
+        m_scr[...] = m_new
+
+    @pl.when(ti == nt - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o = acc_scr[...] / l[:, None]                         # (C*H, hd)
+        hd = o.shape[-1]
+        o = o.reshape(-1, chunk, groups, hd).transpose(1, 0, 2, 3)
+        o_ref[0] = o.reshape(chunk, -1, hd).astype(o_ref.dtype)
+
+
+def paged_decode_attention_quant(q: jnp.ndarray, k_blocks: jnp.ndarray,
+                                 k_scales: jnp.ndarray,
+                                 v_blocks: jnp.ndarray,
+                                 v_scales: jnp.ndarray,
+                                 tables: jnp.ndarray, pos: jnp.ndarray, *,
+                                 interpret: bool = True) -> jnp.ndarray:
+    """Flash decoding over an int8 quantized paged KV store.
+
+    q (b, H, hd); k_blocks, v_blocks (n_blocks, B, KV, hd) int8;
+    k_scales, v_scales (n_blocks, 1, KV) fp32 per-(block, kv-head) scales;
+    tables (b, T); pos (b,). Returns (b, H, hd). Identical math to
+    `paged_decode_attention` after the in-VMEM dequant of each tile.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    b, H, hd = q.shape
+    B, KV = k_blocks.shape[1], k_blocks.shape[2]
+    T = tables.shape[1]
+    g = H // KV
+    kernel = functools.partial(_paged_quant_kernel, block_b=B, groups=g,
+                               sm_scale=1.0 / math.sqrt(hd))
+    kv_map = paged_kv_index_map(B)
+    scale_map = paged_scale_index_map(B)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # tables, pos
+        grid=(b, T),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), paged_q_index_map),
+            pl.BlockSpec((1, B, KV, hd), kv_map),
+            pl.BlockSpec((1, 1, KV), scale_map),
+            pl.BlockSpec((1, B, KV, hd), kv_map),
+            pl.BlockSpec((1, 1, KV), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), paged_q_index_map),
+        scratch_shapes=[
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, H, hd), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), pos.astype(jnp.int32), q,
+      k_blocks, k_scales, v_blocks, v_scales)
+
+
+def paged_chunk_attention_quant(q: jnp.ndarray, k_blocks: jnp.ndarray,
+                                k_scales: jnp.ndarray,
+                                v_blocks: jnp.ndarray,
+                                v_scales: jnp.ndarray,
+                                tables: jnp.ndarray, pos: jnp.ndarray, *,
+                                interpret: bool = True) -> jnp.ndarray:
+    """Varlen chunked-prefill flash attention over an int8 quantized paged
+    KV store; quantized twin of `paged_chunk_attention` (same causality and
+    scratch layout, dequant fused per tile)."""
+    from jax.experimental.pallas import tpu as pltpu
+    b, C, H, hd = q.shape
+    B, KV = k_blocks.shape[1], k_blocks.shape[2]
+    T = tables.shape[1]
+    g = H // KV
+    kernel = functools.partial(_chunk_quant_kernel, block_b=B, groups=g,
+                               chunk=C, sm_scale=1.0 / math.sqrt(hd))
+    kv_map = chunk_kv_index_map(B, C)
+    scale_map = chunk_scale_index_map(B, C)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # tables, pos
+        grid=(b, T),
+        in_specs=[
+            pl.BlockSpec((1, C, H, hd), paged_chunk_q_index_map),
+            pl.BlockSpec((1, B, KV, hd), kv_map),
+            pl.BlockSpec((1, 1, KV), scale_map),
+            pl.BlockSpec((1, B, KV, hd), kv_map),
+            pl.BlockSpec((1, 1, KV), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, C, H, hd), paged_chunk_q_index_map),
+        scratch_shapes=[
+            pltpu.VMEM((C * H,), jnp.float32),
+            pltpu.VMEM((C * H,), jnp.float32),
+            pltpu.VMEM((C * H, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, C, H, hd), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), pos.astype(jnp.int32), q,
+      k_blocks, k_scales, v_blocks, v_scales)

@@ -17,7 +17,13 @@ from repro.kernels import ref
 from repro.kernels.cross_entropy import cross_entropy as _ce
 from repro.kernels.decode_attention import decode_attention as _dec
 from repro.kernels.decode_attention import paged_chunk_attention as _pchunk
+from repro.kernels.decode_attention import (
+    paged_chunk_attention_quant as _pchunk_q,
+)
 from repro.kernels.decode_attention import paged_decode_attention as _pdec
+from repro.kernels.decode_attention import (
+    paged_decode_attention_quant as _pdec_q,
+)
 from repro.kernels.flash_attention import flash_attention as _fa
 from repro.kernels.ssm_scan import ssm_scan as _ssm
 
@@ -53,6 +59,22 @@ def paged_chunk_attention(q, k_blocks, v_blocks, tables, pos, *,
                          interpret=None):
     interpret = _interpret_default() if interpret is None else interpret
     return _pchunk(q, k_blocks, v_blocks, tables, pos, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_quant(q, k_blocks, k_scales, v_blocks, v_scales,
+                                 tables, pos, *, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _pdec_q(q, k_blocks, k_scales, v_blocks, v_scales, tables, pos,
+                   interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_chunk_attention_quant(q, k_blocks, k_scales, v_blocks, v_scales,
+                                tables, pos, *, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return _pchunk_q(q, k_blocks, k_scales, v_blocks, v_scales, tables, pos,
+                     interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "d_block", "interpret"))

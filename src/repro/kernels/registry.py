@@ -109,6 +109,45 @@ def default_audits() -> List[IndexMapAudit]:
                       scalar_args=(ctables, cpos)),
     ]
 
+    # --- quantized twins: same grids/tables, plus (block, 1, KVp) scale
+    # tiles gathered through the same clamped block id ---
+    audits += [
+        IndexMapAudit("paged_decode_attention_quant", "k/v (int8)",
+                      grid=(len(pos), T),
+                      index_map=_dec.paged_kv_index_map(B),
+                      extents=(POISON, 1, 1, 1),
+                      scalar_args=(tables, pos)),
+        IndexMapAudit("paged_decode_attention_quant", "k/v scales",
+                      grid=(len(pos), T),
+                      index_map=_dec.paged_scale_index_map(B),
+                      extents=(POISON, 1, 1),
+                      scalar_args=(tables, pos),
+                      notes="scale tile rides its block id; an unclamped "
+                            "map would DMA a poison scale row"),
+        IndexMapAudit("paged_decode_attention_quant", "q/out",
+                      grid=(len(pos), T),
+                      index_map=_dec.paged_q_index_map,
+                      extents=(len(pos), 1, 1),
+                      scalar_args=(tables, pos)),
+        IndexMapAudit("paged_chunk_attention_quant", "k/v (int8)",
+                      grid=(len(cpos), T),
+                      index_map=_dec.chunk_kv_index_map(B, C),
+                      extents=(POISON, 1, 1, 1),
+                      scalar_args=(ctables, cpos)),
+        IndexMapAudit("paged_chunk_attention_quant", "k/v scales",
+                      grid=(len(cpos), T),
+                      index_map=_dec.chunk_scale_index_map(B, C),
+                      extents=(POISON, 1, 1),
+                      scalar_args=(ctables, cpos),
+                      notes="chunk gather bound (pos + C - 1) // B applies "
+                            "to the scale store too"),
+        IndexMapAudit("paged_chunk_attention_quant", "q/out",
+                      grid=(len(cpos), T),
+                      index_map=_dec.paged_chunk_q_index_map,
+                      extents=(len(cpos), 1, 1, 1),
+                      scalar_args=(ctables, cpos)),
+    ]
+
     # --- decode_attention (dense): grid (b, n_kv_blocks) ---
     b, nk = 2, 4
     audits += [
@@ -162,5 +201,6 @@ def default_audits() -> List[IndexMapAudit]:
 #: audit is itself a finding.
 AUDITED_KERNELS = (
     "decode_attention", "paged_decode_attention", "paged_chunk_attention",
+    "paged_decode_attention_quant", "paged_chunk_attention_quant",
     "flash_attention", "ssm_scan", "cross_entropy",
 )

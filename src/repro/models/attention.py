@@ -245,7 +245,22 @@ def attention_forward(p, x: jnp.ndarray, dims: AttnDims, *,
 # Decode (single new token, seq-sharded KV cache)
 # ----------------------------------------------------------------------------
 
-def init_kv_cache(batch: int, cache_len: int, dims: AttnDims, dtype) -> dict:
+def init_kv_cache(batch: int, cache_len: int, dims: AttnDims, dtype,
+                  kv_quant: Optional[str] = None) -> dict:
+    if kv_quant == "int8":
+        # int8 block stores + per-(block, kv-head) fp32 scales. The scale
+        # leaf's middle axis is a singleton stand-in for the seq axis: its
+        # spec carries "kv_seq" so the paged pool flags it as paged and the
+        # pool's block-granular COW copy moves a block's scale together
+        # with its block id (see serving/paged_pool.py).
+        shape = (batch, cache_len, dims.kv_padded, dims.head_dim)
+        return {
+            "k_q8": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros((batch, 1, dims.kv_padded), jnp.float32),
+            "v_q8": jnp.zeros(shape, jnp.int8),
+            "v_scale": jnp.zeros((batch, 1, dims.kv_padded), jnp.float32),
+        }
+    assert kv_quant is None, f"unknown kv_quant mode: {kv_quant!r}"
     return {
         "k": jnp.zeros((batch, cache_len, dims.kv_padded, dims.head_dim), dtype),
         "v": jnp.zeros((batch, cache_len, dims.kv_padded, dims.head_dim), dtype),
@@ -324,9 +339,120 @@ def paged_gather(blocks: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
     return flat[idx]
 
 
-def kv_cache_specs() -> dict:
+def kv_cache_specs(kv_quant: Optional[str] = None) -> dict:
+    if kv_quant == "int8":
+        # "kv_seq" on the scale leaves' singleton axis makes the paged pool
+        # flag them paged, so block-granular COW/radix machinery carries a
+        # block's scale with its block id untouched.
+        return {"k_q8": ("batch", "kv_seq", None, None),
+                "k_scale": ("batch", "kv_seq", None),
+                "v_q8": ("batch", "kv_seq", None, None),
+                "v_scale": ("batch", "kv_seq", None)}
+    assert kv_quant is None, f"unknown kv_quant mode: {kv_quant!r}"
     return {"k": ("batch", "kv_seq", None, None),
             "v": ("batch", "kv_seq", None, None)}
+
+
+# ----------------------------------------------------------------------------
+# Quantized paged KV: int8 block stores, per-(block, kv-head) fp32 scales.
+#
+# Writes requantize the whole target block around the inserted rows: gather
+# the block(s), dequantize with the current scale, insert, recompute a fresh
+# symmetric amax/127 scale per (block, kv-head), requantize, scatter blocks
+# and scales back together. Existing rows requantize exactly under an
+# unchanged scale (round(q * s / s) == q, and the amax row dequantizes to
+# 127*s exactly, so the recomputed scale is bit-stable); only a write that
+# RAISES the block amax re-rounds older rows under the new scale, so error
+# is bounded by one half-step per amax growth — at most B half-steps per
+# block, not one per rewrite. Zero blocks keep scale 0, so dequantization
+# of never-written (null / padding) blocks is exactly zero.
+# ----------------------------------------------------------------------------
+
+def _quantize_block(deq: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """deq (..., B, KVp, hd) fp32 -> (int8 of same shape, scales (..., KVp))
+    under per-(..., kv-head) symmetric amax/127 scales."""
+    amax = jnp.max(jnp.abs(deq), axis=(-3, -1))                 # (..., KVp)
+    sc = amax / 127.0
+    denom = jnp.where(sc > 0, sc, 1.0)
+    q8 = jnp.clip(jnp.round(deq / denom[..., None, :, None]), -127, 127)
+    return q8.astype(jnp.int8), sc
+
+
+def paged_write_quant(blocks: jnp.ndarray, scales: jnp.ndarray,
+                      new: jnp.ndarray, tables: jnp.ndarray,
+                      pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantized `paged_write`: one new row per sequence, whole-block requant.
+
+    blocks (nb, B, KVp, hd) int8; scales (nb, 1, KVp) fp32; new (b, KVp, hd);
+    tables (b, T); pos (b,). Ownership rules are identical to `paged_write`:
+    the target block is exclusively owned (COW boundary block), retired rows
+    alias the reserved null block whose contents are never read.
+    """
+    B = blocks.shape[1]
+    T = tables.shape[1]
+    lb = jnp.clip(pos // B, 0, T - 1)
+    bidx = jnp.take_along_axis(tables, lb[:, None], axis=1)[:, 0]   # (b,)
+    deq = blocks[bidx].astype(jnp.float32) * scales[bidx][..., None]
+    sel = jnp.arange(B)[None, :] == (pos % B)[:, None]              # (b, B)
+    deq = jnp.where(sel[:, :, None, None],
+                    new.astype(jnp.float32)[:, None], deq)
+    q8, sc = _quantize_block(deq)
+    return blocks.at[bidx].set(q8), scales.at[bidx].set(sc[:, None, :])
+
+
+def paged_write_chunk_quant(blocks: jnp.ndarray, scales: jnp.ndarray,
+                            new: jnp.ndarray, tables: jnp.ndarray,
+                            pos: jnp.ndarray, valid: jnp.ndarray
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantized `paged_write_chunk`: whole-window requant.
+
+    new (b, C, KVp, hd); the window is the NT = ceil(C/B) + 1 logical blocks
+    from pos // B, enough to hold any alignment of C rows. Window entries
+    past the table (or unallocated, i.e. table value 0) resolve to the
+    reserved null block: no valid row ever lands there (prefill allocates
+    ahead of the write), its scale stays 0 and its contents are never read,
+    so colliding null scatters are harmless exactly as in
+    `paged_write_chunk`. Real gathered blocks at or above pos // B are
+    exclusively owned (radix-published prefixes end on block boundaries
+    below the write range), so real scatter indices stay unique across
+    sequences, and gathered-but-untouched blocks requantize to themselves.
+    """
+    B = blocks.shape[1]
+    b, C = new.shape[0], new.shape[1]
+    T = tables.shape[1]
+    NT = -(-C // B) + 1
+    lb0 = pos // B
+    oj = lb0[:, None] + jnp.arange(NT)[None, :]                     # (b, NT)
+    bidx = jnp.take_along_axis(tables, jnp.clip(oj, 0, T - 1), axis=1)
+    bidx = jnp.where(oj < T, bidx, 0)                               # null blk
+    deq = blocks[bidx].astype(jnp.float32) * scales[bidx][..., None]
+    c = lb0[:, None] * B + jnp.arange(NT * B)[None, :] - pos[:, None]
+    ok = (c >= 0) & (c < valid[:, None])                            # (b, NT*B)
+    rows = jnp.take_along_axis(new.astype(jnp.float32),
+                               jnp.clip(c, 0, C - 1)[:, :, None, None],
+                               axis=1)                              # (b,NT*B,KVp,hd)
+    deq = deq.reshape((b, NT * B) + deq.shape[3:])
+    deq = jnp.where(ok[:, :, None, None], rows, deq)
+    deq = deq.reshape((b, NT, B) + deq.shape[2:])
+    q8, sc = _quantize_block(deq)
+    blocks = blocks.at[bidx.reshape(-1)].set(
+        q8.reshape((b * NT,) + q8.shape[2:]))
+    scales = scales.at[bidx.reshape(-1)].set(
+        sc.reshape(b * NT, 1, sc.shape[-1]))
+    return blocks, scales
+
+
+def paged_gather_dequant(blocks: jnp.ndarray, scales: jnp.ndarray,
+                         tables: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Explicit-dequant XLA fallback view: gather int8 blocks and their
+    scales into a dense (b, T*B, KVp, hd) cache in `dtype`. Padding table
+    entries alias the null block (scale 0 -> exact zeros), masked by the
+    `<= pos` validity rule downstream like the fp gather path."""
+    B = blocks.shape[1]
+    q = paged_gather(blocks, tables)                    # (b, T*B, KVp, hd)
+    s = paged_gather(scales, tables)                    # (b, T,   KVp)
+    s = jnp.repeat(s, B, axis=1)                        # (b, T*B, KVp)
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
 
 
 def _write_slot(buf: jnp.ndarray, new: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
@@ -399,6 +525,23 @@ def attention_decode(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
         k = nn.apply_rope(k, cos, sin)
     if block_tables is not None:
         assert window == 0, "paged KV does not support the sliding-window ring"
+        if "k_scale" in cache:                          # int8 quantized store
+            ck, ks = paged_write_quant(cache["k_q8"], cache["k_scale"],
+                                       k[:, 0], block_tables, pos)
+            cv, vs = paged_write_quant(cache["v_q8"], cache["v_scale"],
+                                       v[:, 0], block_tables, pos)
+            if use_pallas:
+                from repro.kernels import ops
+                o = ops.paged_decode_attention_quant(
+                    q[:, 0], ck, ks, cv, vs, block_tables, pos)  # (b,Hp,hd)
+                o = o.reshape(b, 1, dims.heads_padded * dims.head_dim)
+            else:
+                o = _grouped_decode_scores(
+                    q, paged_gather_dequant(ck, ks, block_tables, x.dtype),
+                    paged_gather_dequant(cv, vs, block_tables, x.dtype),
+                    pos[:, None], dims, x.dtype)
+            return nn.linear(p["wo"], o), {"k_q8": ck, "k_scale": ks,
+                                           "v_q8": cv, "v_scale": vs}
         ck = paged_write(cache["k"], k[:, 0], block_tables, pos)
         cv = paged_write(cache["v"], v[:, 0], block_tables, pos)
         if use_pallas:
@@ -467,6 +610,23 @@ def attention_decode_chunk(p, x: jnp.ndarray, cache: dict, pos: jnp.ndarray,
         cos, sin = nn.rope_cos_sin(positions, dims.head_dim, rope_theta)
         q = nn.apply_rope(q, cos, sin)
         k = nn.apply_rope(k, cos, sin)
+    if "k_scale" in cache:                              # int8 quantized store
+        ck, ks = paged_write_chunk_quant(cache["k_q8"], cache["k_scale"],
+                                         k, block_tables, pos, valid)
+        cv, vs = paged_write_chunk_quant(cache["v_q8"], cache["v_scale"],
+                                         v, block_tables, pos, valid)
+        if use_pallas:
+            from repro.kernels import ops
+            o = ops.paged_chunk_attention_quant(q, ck, ks, cv, vs,
+                                                block_tables, pos)
+            o = o.reshape(b, C, dims.heads_padded * dims.head_dim)
+        else:
+            o = _grouped_decode_scores(
+                q, paged_gather_dequant(ck, ks, block_tables, x.dtype),
+                paged_gather_dequant(cv, vs, block_tables, x.dtype),
+                positions, dims, x.dtype)
+        return nn.linear(p["wo"], o), {"k_q8": ck, "k_scale": ks,
+                                       "v_q8": cv, "v_scale": vs}
     ck = paged_write_chunk(cache["k"], k, block_tables, pos, valid)
     cv = paged_write_chunk(cache["v"], v, block_tables, pos, valid)
     if use_pallas:

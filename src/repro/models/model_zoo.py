@@ -85,12 +85,13 @@ class Model:
         return loss
 
     # ------------------------------------------------------------- decode
-    def init_cache(self, batch: int, seq_len: int):
+    def init_cache(self, batch: int, seq_len: int, kv_quant=None):
         enc_len = self.cfg.encoder.seq_len if self.cfg.is_encdec else 0
-        return self.lm.init_cache(batch, seq_len, encoder_len=enc_len)
+        return self.lm.init_cache(batch, seq_len, encoder_len=enc_len,
+                                  kv_quant=kv_quant)
 
-    def cache_specs(self):
-        return self.lm.cache_specs()
+    def cache_specs(self, kv_quant=None):
+        return self.lm.cache_specs(kv_quant=kv_quant)
 
     def decode_step(self, params, token, cache, pos, block_tables=None):
         return self.lm.decode_step(params["lm"], token, cache, pos,

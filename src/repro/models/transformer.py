@@ -317,12 +317,12 @@ class TransformerLM:
         return seq_len
 
     def _layer_cache(self, desc: LayerDesc, batch: int, cache_len: int,
-                     encoder_len: int):
+                     encoder_len: int, kv_quant=None):
         cfg = self.cfg
         c: Dict[str, Any] = {}
         if desc.mixer == "attn":
             c["kv"] = attn.init_kv_cache(batch, cache_len, self.dims,
-                                         self.dtype)
+                                         self.dtype, kv_quant=kv_quant)
         elif desc.mixer == "mla":
             c["kv"] = attn.init_mla_cache(batch, cache_len, cfg, self.dtype)
         elif desc.mixer == "mamba":
@@ -341,10 +341,10 @@ class TransformerLM:
             }
         return c
 
-    def _layer_cache_specs(self, desc: LayerDesc):
+    def _layer_cache_specs(self, desc: LayerDesc, kv_quant=None):
         c: Dict[str, Any] = {}
         if desc.mixer == "attn":
-            c["kv"] = attn.kv_cache_specs()
+            c["kv"] = attn.kv_cache_specs(kv_quant)
         elif desc.mixer == "mla":
             c["kv"] = attn.mla_cache_specs()
         elif desc.mixer == "mamba":
@@ -358,20 +358,22 @@ class TransformerLM:
                              "v": ("batch", None, "kv_heads", None)}
         return c
 
-    def init_cache(self, batch: int, seq_len: int, encoder_len: int = 0):
+    def init_cache(self, batch: int, seq_len: int, encoder_len: int = 0,
+                   kv_quant=None):
         cache_len = self.effective_cache_len(seq_len)
         out = {}
         for i, desc in enumerate(self.pattern):
-            piece = self._layer_cache(desc, batch, cache_len, encoder_len)
+            piece = self._layer_cache(desc, batch, cache_len, encoder_len,
+                                      kv_quant=kv_quant)
             out[f"pos{i}"] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (self.n_repeat,) + a.shape),
                 piece)
         return out
 
-    def cache_specs(self):
+    def cache_specs(self, kv_quant=None):
         out = {}
         for i, desc in enumerate(self.pattern):
-            cs = self._layer_cache_specs(desc)
+            cs = self._layer_cache_specs(desc, kv_quant=kv_quant)
             out[f"pos{i}"] = jax.tree.map(
                 lambda t: (None,) + tuple(t), cs,
                 is_leaf=lambda t: isinstance(t, tuple))

@@ -97,6 +97,23 @@ class ModelMetrics:
     device_dispatches: int = 0
     host_syncs: int = 0
     children: int = 0               # children admitted on this model
+    # KV memory gauges, registered by the runtime from the pool's own
+    # cache shapes/dtypes (register_kv_store): bytes one physical block
+    # pins in this model's store, the block size, and the latest
+    # blocks-in-use reading (record_blocks fans it out to every model —
+    # a block id indexes every registered store)
+    kv_block_bytes: int = 0
+    kv_block_size: int = 0
+    kv_resident_blocks: int = 0
+
+    @property
+    def kv_bytes_per_token(self) -> float:
+        return (self.kv_block_bytes / self.kv_block_size
+                if self.kv_block_size else 0.0)
+
+    @property
+    def hbm_kv_resident_bytes(self) -> int:
+        return self.kv_resident_blocks * self.kv_block_bytes
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -106,6 +123,8 @@ class ModelMetrics:
             "device_dispatches": self.device_dispatches,
             "host_syncs": self.host_syncs,
             "children": self.children,
+            "kv_bytes_per_token": self.kv_bytes_per_token,
+            "hbm_kv_resident_bytes": self.hbm_kv_resident_bytes,
         }
 
 
@@ -197,8 +216,29 @@ class ServingMetrics:
         m.decode_tokens += int(n)
         m.children += int(n)
 
+    def register_kv_store(self, model_id: str, block_bytes: int,
+                          block_size: int) -> None:
+        """Register a model's paged-store byte cost (from the pool's own
+        cache shapes/dtypes, never a hardcoded itemsize) so the KV memory
+        gauges can be attributed per model."""
+        m = self.model(model_id)
+        m.kv_block_bytes = int(block_bytes)
+        m.kv_block_size = int(block_size)
+
+    def register_kv_store_from(self, pool) -> None:
+        """Register every model the pool hosts (idempotent; the runtime
+        calls this at pool construction and again per add_model)."""
+        for mid in pool.model_ids:
+            self.register_kv_store(mid, pool.kv_block_bytes_for(mid),
+                                   pool.block_size)
+
     def record_blocks(self, in_use: int) -> None:
         self.peak_blocks = max(self.peak_blocks, int(in_use))
+        # the block ledger is shared: `in_use` blocks are resident in
+        # every registered model's physical store
+        for m in self.per_model.values():
+            if m.kv_block_bytes:
+                m.kv_resident_blocks = int(in_use)
 
     def record_live(self, n_children: int) -> None:
         """Total concurrent in-flight children across every model this
@@ -362,6 +402,10 @@ class ServingMetrics:
             "eos_saved_tokens": self.eos_saved_tokens,
             "peak_children": self.peak_children,
             "peak_blocks": self.peak_blocks,
+            "kv_bytes_per_token": sum(
+                m.kv_bytes_per_token for m in self.per_model.values()),
+            "hbm_kv_resident_bytes": sum(
+                m.hbm_kv_resident_bytes for m in self.per_model.values()),
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "prefix_hits": self.prefix_hits,
             "prefix_reordered": self.prefix_reordered,

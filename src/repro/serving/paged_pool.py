@@ -37,6 +37,7 @@ any single request that could never fit at all.)
 from __future__ import annotations
 
 import functools
+import os
 from typing import Any, Dict, List, NamedTuple, Optional
 
 import jax
@@ -97,19 +98,57 @@ def _pool_programs(treedef, flag_leaves) -> PoolPrograms:
         write_state=jax.jit(_write_state, donate_argnums=(0,)))
 
 
-def pool_programs_for(model) -> PoolPrograms:
+def pool_programs_for(model, kv_quant: Optional[str] = None) -> PoolPrograms:
     """The shared jitted cache-IO programs for `model`'s cache structure
     (hash key: the flag pytree's treedef + leaf values, both hashable)."""
-    leaves, treedef = jax.tree.flatten(_paged_leaf_flags(model))
+    leaves, treedef = jax.tree.flatten(_paged_leaf_flags(model, kv_quant))
     return _pool_programs(treedef, tuple(bool(v) for v in leaves))
 
 
-def _paged_leaf_flags(model) -> Any:
+def _paged_leaf_flags(model, kv_quant: Optional[str] = None) -> Any:
     """Pytree of bools matching the cache structure: True where the leaf
-    has a ``kv_seq`` axis (pageable), False for per-sequence state."""
-    specs = model.cache_specs()
+    has a ``kv_seq`` axis (pageable), False for per-sequence state. Under
+    ``kv_quant`` the int8 stores AND their per-block scale leaves carry
+    ``kv_seq``, so block-granular COW/copy moves scales with their
+    blocks."""
+    specs = model.cache_specs(kv_quant=kv_quant)
     return jax.tree.map(lambda s: "kv_seq" in s, specs,
                         is_leaf=lambda t: isinstance(t, tuple))
+
+
+def kv_block_bytes(model, block_size: int,
+                   kv_quant: Optional[str] = None) -> int:
+    """Device bytes of paged store per physical block for `model` — every
+    layer's K/V (plus scale leaves under quantization) for `block_size`
+    positions, n_repeat included. Computed from the cache structure's own
+    shapes/dtypes so equal-memory comparisons (the capacity probe) never
+    hardcode an itemsize."""
+    flags = _paged_leaf_flags(model, kv_quant)
+    shapes = jax.eval_shape(
+        lambda: model.init_cache(1, block_size, kv_quant=kv_quant))
+    return sum(int(np.prod(s.shape)) * s.dtype.itemsize
+               for f, s in zip(jax.tree.leaves(flags), jax.tree.leaves(shapes))
+               if f)
+
+
+def resolve_kv_quant(kv_quant: Optional[str],
+                     pool_kind: str) -> Optional[str]:
+    """Resolve the runtime's opt-in KV quantization mode: an explicit
+    argument wins, else the ``REPRO_KV_QUANT`` env var engages it.
+    Quantized KV is a paged-pool *layout* (int8 block stores + per-block
+    scale stores), so any other pool kind — including a sliding-window
+    config's silent fallback to the slot pool — rejects it rather than
+    silently serving fp."""
+    if kv_quant is None:
+        kv_quant = os.environ.get("REPRO_KV_QUANT") or None
+    if kv_quant not in (None, "int8"):
+        raise ValueError(f"unknown kv_quant mode: {kv_quant!r}")
+    if kv_quant is not None and pool_kind != "paged":
+        raise ValueError(
+            "kv_quant is a paged-pool layout (int8 blocks + per-block "
+            "scales); the slot pool (or a sliding-window fallback to it) "
+            "has no block granularity to attach scales to")
+    return kv_quant
 
 
 def supports_paging(model, max_len: int) -> bool:
@@ -146,8 +185,12 @@ class PagedKVPool:
     """
 
     def __init__(self, model, n_slots: int, max_len: int, *,
-                 block_size: int = 16, n_blocks: Optional[int] = None):
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 kv_quant: Optional[str] = None):
+        assert kv_quant in (None, "int8"), \
+            f"unknown kv_quant mode: {kv_quant!r}"
         self.model = model
+        self.kv_quant = kv_quant
         self.n_slots = int(n_slots)
         self.max_len = int(max_len)
         self.block_size = int(block_size)
@@ -179,7 +222,7 @@ class PagedKVPool:
                 "paged KV needs a non-wrapping cache: max_len "
                 f"{self.max_len} exceeds sliding window "
                 f"{model.cfg.sliding_window}")
-        flags = _paged_leaf_flags(model)
+        flags = _paged_leaf_flags(model, self.kv_quant)
         # build under jit: XLA dead-code-eliminates the unselected half of
         # each init_cache call, so state leaves are never materialized at
         # batch=n_blocks (nor KV leaves at batch=n_slots) — without this,
@@ -187,10 +230,11 @@ class PagedKVPool:
         # could OOM transiently during construction
         self.caches[model_id] = jax.jit(lambda: jax.tree.map(
             lambda f, p, s: p if f else s, flags,
-            model.init_cache(self.n_blocks, self.block_size),
-            model.init_cache(self.n_slots, 1)))()
+            model.init_cache(self.n_blocks, self.block_size,
+                             kv_quant=self.kv_quant),
+            model.init_cache(self.n_slots, 1, kv_quant=self.kv_quant)))()
         self._models[model_id] = model
-        self._progs[model_id] = pool_programs_for(model)
+        self._progs[model_id] = pool_programs_for(model, self.kv_quant)
         has_state = any(not f for f in jax.tree.leaves(flags))
         self._state_flags[model_id] = has_state
         # pristine state rows (batch 1) for resetting a reused slot before
@@ -199,7 +243,7 @@ class PagedKVPool:
         if has_state:
             self._init_states[model_id] = jax.jit(lambda: jax.tree.map(
                 lambda f, x: jnp.zeros((0,), x.dtype) if f else x,
-                flags, model.init_cache(1, 1)))()
+                flags, model.init_cache(1, 1, kv_quant=self.kv_quant)))()
         else:
             self._init_states[model_id] = None
 
@@ -211,7 +255,7 @@ class PagedKVPool:
         if self._has_state:
             raise ValueError("multi-model pools require stateless stacks: "
                              "the default model carries per-slot state")
-        flags = _paged_leaf_flags(model)
+        flags = _paged_leaf_flags(model, self.kv_quant)
         if any(not f for f in jax.tree.leaves(flags)):
             raise ValueError(
                 f"model {model_id!r} carries recurrent state; only "
@@ -264,6 +308,19 @@ class PagedKVPool:
 
     def blocks_for(self, n_tokens: int) -> int:
         return cdiv(n_tokens, self.block_size)
+
+    def kv_block_bytes_for(self, model_id: str = "default") -> int:
+        """Device bytes one physical block pins in `model_id`'s store."""
+        return kv_block_bytes(self._models[model_id], self.block_size,
+                              self.kv_quant)
+
+    def kv_bytes(self, model_id: Optional[str] = None) -> int:
+        """Total device bytes of the paged block store(s): n_blocks ×
+        per-block bytes, summed over registered models unless one is
+        named. The honest equal-memory denominator for capacity
+        comparisons across cache dtypes."""
+        ids = [model_id] if model_id is not None else self.model_ids
+        return self.n_blocks * sum(self.kv_block_bytes_for(m) for m in ids)
 
     # -------------------------------------------------------- reservations
     def can_reserve(self, k: int) -> bool:

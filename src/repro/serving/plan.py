@@ -89,26 +89,35 @@ def horizon_widths(horizon: int) -> Tuple[int, ...]:
 
 def compile_cardinality(horizon: int, *, n_models: int = 1,
                         chunked: bool = True,
-                        fuse_prefill: bool = True) -> Dict[str, int]:
+                        fuse_prefill: bool = True,
+                        kv_quant: bool = False) -> Dict[str, int]:
     """Worst-case compile counts per builder kind for one runtime
     config — the key space reachable from :func:`plan_tick`'s TickPlan:
-    kind x pow2 horizon width x model. Widths > 1 are the scan
-    programs (horizon / mixed); width 1 falls back to the token
+    kind x pow2 horizon width x model x cache layout. Widths > 1 are the
+    scan programs (horizon / mixed); width 1 falls back to the token
     program, so the scan kinds each contribute len(widths) - 1 entries.
-    `admit` (sampling the first token of an admitted prompt) is
-    model-independent; the per-model cache plumbing programs
-    (paged_pool's gather/scatter jits) key on the cache *structure*, at
-    most one treedef per model. The total is the number the recompile
-    auditor bounds and the table the CLI prints."""
+    `admit` (sampling the first token of an admitted prompt) touches no
+    cache and is model- and layout-independent; the per-model cache
+    plumbing programs (paged_pool's gather/scatter jits) key on the
+    cache *structure*, at most one treedef per model per layout.
+    `kv_quant=True` means the config space includes BOTH cache layouts
+    (fp and int8+scales — e.g. an A/B capacity probe in one process):
+    every cache-carrying kind doubles, because the quantized cache is a
+    different pytree and a different traced program. A runtime instance
+    only ever uses one layout, but the auditor bounds the process-wide
+    worst case. The total is the number the recompile auditor bounds
+    and the table the CLI prints."""
     widths = horizon_widths(horizon)
     scan_widths = len([w for w in widths if w > 1])
+    kva = 2 if kv_quant else 1      # fp + int8 cache layouts
     per_kind = {
-        "token": n_models,
-        "chunk": n_models if chunked else 0,
-        "horizon": n_models * scan_widths,
-        "mixed": n_models * scan_widths if (chunked and fuse_prefill) else 0,
+        "token": n_models * kva,
+        "chunk": (n_models if chunked else 0) * kva,
+        "horizon": n_models * scan_widths * kva,
+        "mixed": (n_models * scan_widths * kva
+                  if (chunked and fuse_prefill) else 0),
         "admit": 1,
-        "pool": n_models,
+        "pool": n_models * kva,
     }
     per_kind["total"] = sum(per_kind.values())
     return per_kind

@@ -51,7 +51,8 @@ from repro.serving import tick_programs
 from repro.serving.engine import prefill
 from repro.serving.kv_pool import SlotKVPool
 from repro.serving.metrics import ServingMetrics
-from repro.serving.paged_pool import PagedKVPool, cdiv, supports_paging
+from repro.serving.paged_pool import (PagedKVPool, cdiv, resolve_kv_quant,
+                                      supports_paging)
 from repro.serving.plan import plan_tick
 from repro.serving.procedure import BestOfK, DecodeProcedure
 from repro.serving.radix_cache import RadixCache
@@ -100,10 +101,12 @@ class ContinuousBatchingRuntime:
                  horizon: int = 8,
                  fuse_prefill: bool = True,
                  admission_lookahead: int = 4,
-                 traffic: Optional[TrafficConfig] = None):
+                 traffic: Optional[TrafficConfig] = None,
+                 kv_quant: Optional[str] = None):
         assert pool in ("paged", "slots")
         if pool == "paged" and not supports_paging(model, max_len):
             pool = "slots"          # sliding-window wrap: paged is inexact
+        self.kv_quant = kv_quant = resolve_kv_quant(kv_quant, pool)
         self.pool_kind = pool
         self.model, self.params = model, params
         # model registry: the constructor model is "default"; routing
@@ -118,9 +121,8 @@ class ContinuousBatchingRuntime:
         # admission control: at most this many *stash groups* (device-
         # resident prefill caches / prompt-block tables) may be live at
         # once, bounding memory under a deep backlog. Requests parked on
-        # an un-called set_budget() are excluded — they are the caller's
-        # memory, and counting them starved new arrivals (spurious
-        # drain() stalls).
+        # an un-called set_budget() are excluded — the caller's memory,
+        # and counting them starved new arrivals (spurious drain stalls).
         if prefill_window is None:
             prefill_window = 2 * n_slots
         assert prefill_window >= 1
@@ -134,9 +136,8 @@ class ContinuousBatchingRuntime:
         self.slots: List[Optional[ChildSeq]] = [None] * n_slots
         self.retire = Retirement(self)      # host-side retirement layer
         # streaming emit hooks: fn(request, child) fired whenever a
-        # child's token list grows (admission, token/horizon/mixed
-        # retirement) — AsyncTokenStreamer subscribes so clients see
-        # per-token progress even while internal drain loops run
+        # child's token list grows — AsyncTokenStreamer subscribes so
+        # clients see per-token progress while internal drain loops run
         self._emit_hooks: List[Callable] = []
         # traffic subsystem: priority scheduling + preemption + SLO-aware
         # degradation (serving/traffic/). The scheduler replaces the FIFO
@@ -164,11 +165,12 @@ class ContinuousBatchingRuntime:
                 n_blocks = ((n_slots + prefill_window)
                             * cdiv(max_len, block_size) + 1)
             self.pool = PagedKVPool(model, n_slots, max_len,
-                                    block_size=block_size, n_blocks=n_blocks)
-            # chunked prefill may use the whole pool: fan-out admission
-            # runs first each tick, so decode children always reclaim
-            # freed slots before new prompts do; lower this to bound
-            # prompt tokens per tick (prefill work) explicitly
+                                    block_size=block_size, n_blocks=n_blocks,
+                                    kv_quant=kv_quant)
+            self.metrics.register_kv_store_from(self.pool)
+            # chunked prefill may use the whole pool (fan-out admission
+            # runs first each tick, so decode children reclaim freed
+            # slots before new prompts); lower to bound prefill per tick
             if prefill_slots is None:
                 prefill_slots = n_slots
             self.prefill_slots = int(prefill_slots)
@@ -179,9 +181,8 @@ class ContinuousBatchingRuntime:
             self._prefill_blocked = False   # admission starved (traffic)
             # multi-token chunked prefill: up to `prefill_chunk` prompt
             # tokens per prefilling slot per tick under one compiled
-            # varlen program. Recurrent-state stacks advance state one
-            # token per step, so they stay on the per-token interleave
-            # (chunk 1 == the PR-2 path, also selectable explicitly).
+            # varlen program. Recurrent-state stacks advance one token
+            # per step, so stay per-token (chunk 1 == the PR-2 path).
             if not self.model.supports_chunked_prefill:
                 prefill_chunk = 1
             elif prefill_chunk is None:
@@ -189,19 +190,17 @@ class ContinuousBatchingRuntime:
             self.prefill_chunk = max(1, int(prefill_chunk))
             # radix prefix cache: cross-request dedup of full prompt
             # blocks, one tree per registry model (a prefix's KV is
-            # model-specific) on the shared block ledger. Sound only when
-            # skipping prefix tokens skips no recurrent-state updates —
-            # i.e. stateless stacks.
+            # model-specific) on the shared block ledger. Sound only for
+            # stateless stacks (skipped tokens must skip no state).
             self._prefix_cache = (bool(prefix_cache)
                                   and not self.pool._has_state)
             if self._prefix_cache:
                 self._radices["default"] = RadixCache(self.pool)
             # horizon-fused decode: up to `horizon` decode steps per
-            # compiled dispatch (one host sync per horizon instead of
-            # one per token); the planner (serving/plan.py) picks the
-            # per-dispatch width and whether prefill rows ride along.
-            # Recurrent-state pools stay on the per-token tick;
-            # horizon=1 disables fusion entirely.
+            # compiled dispatch (one host sync per horizon, not per
+            # token); the planner (serving/plan.py) picks the width and
+            # whether prefill rows ride along. Recurrent-state pools
+            # stay per-token; horizon=1 disables fusion.
             self.horizon = max(1, int(horizon))
             if self.pool._has_state:
                 self.horizon = 1
@@ -232,6 +231,7 @@ class ContinuousBatchingRuntime:
         self.pool.add_model(model_id, model)     # checks statelessness
         self.models[model_id] = model
         self.model_params[model_id] = params
+        self.metrics.register_kv_store_from(self.pool)
         if self._prefix_cache:
             self._radices[model_id] = RadixCache(self.pool)
 

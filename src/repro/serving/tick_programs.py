@@ -109,8 +109,14 @@ def sample_first(logits, row, key, temperature, *, temperature_zero: bool):
 
 
 # ------------------------------------------------- paged program builders
+#
+# Cache-carrying builders key on `kv_quant` explicitly: the quantized
+# cache is a different pytree (int8 stores + scale leaves), hence a
+# different traced program, and the explicit static-arg key keeps the
+# compile-cardinality accounting (`plan.compile_cardinality(kv_quant=)`)
+# aligned with the lru_cache key space the recompile auditor bounds.
 @functools.lru_cache(maxsize=None)
-def token_program(model: Model, temperature_zero: bool):
+def token_program(model: Model, temperature_zero: bool, kv_quant=None):
     """One paged-pool tick: decode every slot's current token at its
     position through the block tables, then sample each slot's next token.
 
@@ -147,7 +153,7 @@ def token_program(model: Model, temperature_zero: bool):
 
 
 @functools.lru_cache(maxsize=None)
-def chunk_program(model: Model):
+def chunk_program(model: Model, kv_quant=None):
     """One varlen chunked-prefill program: every prefilling slot advances
     by up to C prompt tokens (its own `valid` count) in a single compiled
     step. Shapes are static — (prefill_slots, prefill_chunk) — so mixed
@@ -198,7 +204,7 @@ def admit_program(temperature_zero: bool):
 
 @functools.lru_cache(maxsize=None)
 def horizon_program(model: Model, H: int, temperature_zero: bool,
-                    eos_id: Optional[int]):
+                    eos_id: Optional[int], kv_quant=None):
     """H decode steps fused into one compiled `lax.scan` program — the
     horizon tick. Per scan step this is exactly the token program's
     decode-then-sample sequence (greedy tokens are bitwise identical),
@@ -254,7 +260,7 @@ def horizon_program(model: Model, H: int, temperature_zero: bool,
 
 @functools.lru_cache(maxsize=None)
 def mixed_program(model: Model, H: int, temperature_zero: bool,
-                  eos_id: Optional[int]):
+                  eos_id: Optional[int], kv_quant=None):
     """The fused mixed tick: one `lax.scan` horizon carrying prefill rows
     alongside decode rows, so chunked prefill and H-step decode run in
     ONE dispatch with one host sync — an arriving request no longer
@@ -350,7 +356,8 @@ def dispatch_token(rt, pp):
         tables[s] = r.table
     advance = np.zeros((rt.n_slots,), bool)
     advance[list(pp.decode_slots)] = True
-    run = token_program(rt.models[pp.model_id], rt.temperature == 0.0)
+    run = token_program(rt.models[pp.model_id], rt.temperature == 0.0,
+                        rt.kv_quant)
     sampled, logits, hidden, cache, rt.keys = run(
         rt.model_params[pp.model_id], pool.caches[pp.model_id],
         jnp.asarray(pool.dense_tables(tables)),
@@ -400,7 +407,7 @@ def dispatch_chunk(rt, pp):
         valid[i] = L
         tables[i, :len(r.table)] = r.table
         take[s] = L
-    run = chunk_program(rt.models[pp.model_id])
+    run = chunk_program(rt.models[pp.model_id], rt.kv_quant)
     logits, hidden, cache = run(
         rt.model_params[pp.model_id], pool.caches[pp.model_id],
         jnp.asarray(tables), jnp.asarray(toks), jnp.asarray(pos),
@@ -432,7 +439,7 @@ def dispatch_horizon(rt, pp):
         c.reserved -= pool.preallocate(c.table, int(rt._pos[s]) + H)
         tables[s] = c.table
     run = horizon_program(rt.models[pp.model_id], H,
-                          rt.temperature == 0.0, rt.eos_id)
+                          rt.temperature == 0.0, rt.eos_id, rt.kv_quant)
     emits, cache, rt.keys = run(
         rt.model_params[pp.model_id], pool.caches[pp.model_id],
         jnp.asarray(pool.dense_tables(tables)),
@@ -487,7 +494,7 @@ def dispatch_mixed(rt, pp):
         fed[:len(feed), s] = feed
         consumed[s] = min(H, left)
     run = mixed_program(rt.models[pp.model_id], H,
-                        rt.temperature == 0.0, rt.eos_id)
+                        rt.temperature == 0.0, rt.eos_id, rt.kv_quant)
     emits, cache, rt.keys, probe_lg, probe_hid = run(
         rt.model_params[pp.model_id], pool.caches[pp.model_id],
         jnp.asarray(pool.dense_tables(tables)),

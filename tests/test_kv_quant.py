@@ -1,0 +1,273 @@
+"""Int8 quantized paged KV (`kv_quant="int8"`): write-path round-trip
+error bounds, dequant-fused Pallas kernels vs the explicit-dequant XLA
+reference, greedy e2e quality parity vs the fp cache on the weak/strong
+fixture pair, radix hit-vs-cold consistency under quant, and churn with
+ledger balance plus scale-store conservation."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.models import attention
+from repro.serving import ContinuousBatchingRuntime, RequestState
+
+
+# ---------------------------------------------------------------------------
+# write-path round-trip: per-(block, kv-head) error bound
+# ---------------------------------------------------------------------------
+
+def _dequant(blocks, scales, tables):
+    return (np.asarray(blocks)[np.asarray(tables)].astype(np.float32)
+            * np.asarray(scales)[np.asarray(tables)][..., None])
+
+
+def _roundtrip_bound(got, want):
+    """|err| <= B * amax / 254 per (block, kv-head). One symmetric round
+    costs half a step (amax/254). Requant-on-write re-rounds existing
+    rows exactly when the block's scale is unchanged (round(q*s/s) == q,
+    and the amax row dequantizes to 127*s exactly, so the recomputed
+    scale is bit-stable) — error only grows when a new row RAISES the
+    block amax, re-rounding older rows once under the new scale. A block
+    holds B rows, so at most B such growth events: B half-steps total,
+    not one per rewrite."""
+    B = want.shape[-3]
+    amax = np.abs(want).max(axis=(-3, -1), keepdims=True)   # (..,1,KVp,1)
+    err = np.abs(got - want)
+    assert (err <= B * amax / 254.0 * (1 + 1e-5) + 1e-7).all(), err.max()
+
+
+def test_token_write_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    b, T, B, KV, hd = 3, 4, 4, 2, 6
+    nb = 1 + b * T
+    blocks = jnp.zeros((nb, B, KV, hd), jnp.int8)
+    scales = jnp.zeros((nb, 1, KV), jnp.float32)
+    tables = jnp.asarray(np.arange(1, nb).reshape(b, T), jnp.int32)
+    ref = rng.normal(size=(b, T * B, KV, hd)).astype(np.float32)
+    ref *= rng.uniform(0.1, 10.0, size=(b, 1, KV, 1))       # mixed head mag
+    for p in range(T * B):
+        blocks, scales = attention.paged_write_quant(
+            blocks, scales, jnp.asarray(ref[:, p]), tables,
+            jnp.full((b,), p, jnp.int32))
+    got = _dequant(blocks, scales, tables).reshape(b, T * B, KV, hd)
+    _roundtrip_bound(got.reshape(b, T, B, KV, hd),
+                     ref.reshape(b, T, B, KV, hd))
+    # never-written blocks (the null block) dequantize to exact zeros
+    assert np.asarray(scales)[0].max() == 0.0
+
+
+def test_chunk_write_roundtrip_error_bounded_any_alignment():
+    rng = np.random.default_rng(1)
+    b, T, B, KV, hd, C = 2, 5, 4, 2, 5, 6            # C deliberately != kB
+    nb = 1 + b * T
+    blocks = jnp.zeros((nb, B, KV, hd), jnp.int8)
+    scales = jnp.zeros((nb, 1, KV), jnp.float32)
+    tables = jnp.asarray(np.arange(1, nb).reshape(b, T), jnp.int32)
+    total = T * B
+    ref = rng.normal(size=(b, total, KV, hd)).astype(np.float32)
+    written = np.zeros(b, int)
+    while written.min() < total:
+        valid = np.minimum(rng.integers(1, C + 1, size=b),
+                           total - written)
+        valid = np.maximum(valid, 0)
+        new = np.zeros((b, C, KV, hd), np.float32)
+        for i in range(b):
+            new[i, :valid[i]] = ref[i, written[i]:written[i] + valid[i]]
+        blocks, scales = attention.paged_write_chunk_quant(
+            blocks, scales, jnp.asarray(new), tables,
+            jnp.asarray(written, jnp.int32), jnp.asarray(valid, jnp.int32))
+        written += valid
+    got = _dequant(blocks, scales, tables).reshape(b, T, B, KV, hd)
+    _roundtrip_bound(got, ref.reshape(b, T, B, KV, hd))
+    # out-of-table window slots scatter only requantized-zero content
+    # into the null block: its scale must still be exactly zero
+    assert np.asarray(scales)[0].max() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fused kernels vs the explicit-dequant XLA reference
+# ---------------------------------------------------------------------------
+
+def _random_store(rng, nb, B, KV, hd):
+    q8 = rng.integers(-127, 128, size=(nb, B, KV, hd)).astype(np.int8)
+    sc = rng.uniform(0.01, 0.2, size=(nb, 1, KV)).astype(np.float32)
+    return jnp.asarray(q8), jnp.asarray(sc)
+
+
+def _ref_attention(q, ck, cv, qpos):
+    """Dense grouped attention over dequantized (b, S, KV, hd) views with
+    `k <= qpos` validity; q (b, Q, H, hd), qpos (b, Q)."""
+    b, Q, H, hd = q.shape
+    KV = ck.shape[2]
+    g = H // KV
+    qg = np.asarray(q).reshape(b, Q, KV, g, hd)
+    s = np.einsum("bqkgd,bskd->bqkgs", qg, np.asarray(ck)) / math.sqrt(hd)
+    S = ck.shape[1]
+    valid = np.arange(S)[None, None, :] <= np.asarray(qpos)[:, :, None]
+    s = np.where(valid[:, :, None, None, :], s, -1e30)
+    w = np.exp(s - s.max(-1, keepdims=True))
+    w = w / w.sum(-1, keepdims=True)
+    o = np.einsum("bqkgs,bskd->bqkgd", w, np.asarray(cv))
+    return o.reshape(b, Q, H, hd)
+
+
+def test_fused_decode_kernel_matches_explicit_dequant():
+    rng = np.random.default_rng(2)
+    b, T, B, KV, g, hd, nb = 3, 4, 4, 2, 2, 8, 11
+    H = KV * g
+    kb, ks = _random_store(rng, nb, B, KV, hd)
+    vb, vs = _random_store(rng, nb, B, KV, hd)
+    tables = jnp.asarray(rng.integers(1, nb, size=(b, T)), jnp.int32)
+    pos = jnp.asarray([3, 7, 14], jnp.int32)
+    q = jnp.asarray(rng.normal(size=(b, H, hd)), jnp.float32)
+
+    out = ops.paged_decode_attention_quant(q, kb, ks, vb, vs, tables, pos,
+                                           interpret=True)
+    ck = attention.paged_gather_dequant(kb, ks, tables, jnp.float32)
+    cv = attention.paged_gather_dequant(vb, vs, tables, jnp.float32)
+    ref = _ref_attention(q[:, None], ck, cv, np.asarray(pos)[:, None])[:, 0]
+    np.testing.assert_allclose(np.asarray(out), ref, atol=2e-5)
+
+
+def test_fused_chunk_kernel_matches_explicit_dequant():
+    rng = np.random.default_rng(3)
+    b, T, B, KV, g, hd, nb, C = 2, 4, 4, 2, 2, 8, 9, 5
+    H = KV * g
+    kb, ks = _random_store(rng, nb, B, KV, hd)
+    vb, vs = _random_store(rng, nb, B, KV, hd)
+    tables = jnp.asarray(rng.integers(1, nb, size=(b, T)), jnp.int32)
+    pos = jnp.asarray([2, 9], jnp.int32)                  # chunk starts
+    q = jnp.asarray(rng.normal(size=(b, C, H, hd)), jnp.float32)
+
+    out = ops.paged_chunk_attention_quant(q, kb, ks, vb, vs, tables, pos,
+                                          interpret=True)
+    ck = attention.paged_gather_dequant(kb, ks, tables, jnp.float32)
+    cv = attention.paged_gather_dequant(vb, vs, tables, jnp.float32)
+    qpos = np.asarray(pos)[:, None] + np.arange(C)[None, :]
+    ref = _ref_attention(q, ck, cv, qpos)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# e2e: greedy quality parity, radix consistency, churn conservation
+# ---------------------------------------------------------------------------
+
+def _greedy_tokens(model, params, prompts, *, kv_quant, max_new=8,
+                   **kw):
+    rt = ContinuousBatchingRuntime(
+        model, params, n_slots=4, max_len=48, max_new=max_new,
+        temperature=0.0, seed=0, pool="paged", block_size=4,
+        kv_quant=kv_quant, **kw)
+    ids = [rt.submit(p, budget=1) for p in prompts]
+    rt.drain()
+    rt.assert_ledger_balanced()
+    return [list(rt.result(i).response) for i in ids]
+
+
+@pytest.mark.parametrize("which", ["weak", "strong"])
+def test_greedy_quality_parity_fp_vs_int8(tiny, strong, which):
+    """Int8 KV must not change greedy behavior on the fixture pair beyond
+    the accuracy policy: a near-tie argmax may flip under the ~amax/254
+    per-entry cache error, and greedy feedback then conditions every
+    later token on the changed prefix — so the honest unit is the child,
+    not the token. On the weak fixture no tie is close enough: every
+    child must match the fp stream within one token. The strong fixture
+    (params x3 amplifies the perturbation) may lose at most one child of
+    the four to a single flip-then-cascade; the rest stay exact. Both
+    runs are fully deterministic (fixed seeds), so these are equalities
+    in practice, not tolerances."""
+    cfg, model, params = tiny if which == "weak" else strong
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+               for L in (5, 7, 9, 11)]
+    fp = _greedy_tokens(model, params, prompts, kv_quant=None)
+    q8 = _greedy_tokens(model, params, prompts, kv_quant="int8")
+    assert all(len(a) == len(b) for a, b in zip(fp, q8))
+    if which == "weak":
+        for a, b in zip(fp, q8):
+            assert sum(x != y for x, y in zip(a, b)) <= 1, (a, b)
+    else:
+        assert sum(a == b for a, b in zip(fp, q8)) >= len(prompts) - 1, \
+            (fp, q8)
+
+
+def test_radix_hit_vs_cold_consistent_under_quant(tiny):
+    """Prefix-cache hits replay *quantized* blocks written by an earlier
+    request; the hit path must be token-identical to a cold quant run
+    (block scales travel with the shared block ids, so a hit dequantizes
+    exactly what the cold path would recompute-and-requantize)."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(5)
+    pre = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    prompts = [np.concatenate(
+        [pre, rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32)])
+        for _ in range(3)]
+
+    def run(prefix_cache):
+        rt = ContinuousBatchingRuntime(
+            model, params, n_slots=4, max_len=20, max_new=4,
+            temperature=0.0, seed=0, pool="paged", block_size=4,
+            prefill_slots=1, prefix_cache=prefix_cache, kv_quant="int8")
+        ids = [rt.submit(p, budget=2) for p in prompts]
+        rt.drain()
+        return rt, ids
+
+    hot, ids_h = run(True)
+    cold, ids_c = run(False)
+    for ih, ic in zip(ids_h, ids_c):
+        for ch, cc in zip(hot.result(ih).children, cold.result(ic).children):
+            np.testing.assert_array_equal(ch.tokens, cc.tokens)
+    assert hot.metrics.prefix_hits == 2
+    assert hot.metrics.prefix_hit_tokens == 16
+    hot.assert_ledger_balanced()
+
+
+def _scale_leaves(pool):
+    """(q8_store, scale_store) pairs from the pool's cache pytree: an
+    int8 leaf (n_repeat, nb, B, KVp, hd) is a block store, its scale
+    sibling the fp32 (n_repeat, nb, 1, KVp) leaf. Pairing by dtype and
+    the singleton row axis is enough — the layers share one structure."""
+    import jax
+    leaves = jax.tree_util.tree_leaves(pool.cache)
+    q8 = [x for x in leaves if x.dtype == jnp.int8]
+    sc = [x for x in leaves if x.dtype == jnp.float32
+          and x.ndim == 4 and x.shape[2] == 1]
+    assert q8 and len(q8) == len(sc)
+    return list(zip(q8, sc))
+
+
+def test_quant_churn_ledger_balanced_and_scales_conserved(tiny):
+    """Randomized submit/EOS/b_i=0 churn on the quantized pool: the block
+    ledger must balance at every step and at drain exactly as in fp mode,
+    and the scale store must stay structurally conserved — one finite
+    non-negative scale row per physical block, per store."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(11)
+    lengths = rng.integers(4, 12, size=6)
+    budgets = [2, 0, 3, 1, 2, 1]
+    prompts = [rng.integers(1, cfg.vocab_size, (int(L),)).astype(np.int32)
+               for L in lengths]
+    rt = ContinuousBatchingRuntime(
+        model, params, n_slots=2, max_len=16, max_new=4, temperature=0.0,
+        seed=0, pool="paged", block_size=4, prefill_chunk=4, eos_id=7,
+        kv_quant="int8")
+    ids = [rt.submit(p, budget=b) for p, b in zip(prompts, budgets)]
+    steps = 0
+    while rt.pending():
+        rt.step()
+        steps += 1
+        pool = rt.pool
+        pool.check_conservation()
+        assert (pool.available_blocks + pool._reserved
+                + pool.blocks_in_use == pool.n_blocks - 1)
+        assert steps < 10_000
+    rt.drain()
+    for rid in ids:
+        assert rt.result(rid).state == RequestState.DONE
+    rt.assert_ledger_balanced()
+    for q8, sc in _scale_leaves(rt.pool):
+        assert q8.shape[:2] == sc.shape[:2]         # one scale row / block
+        s = np.asarray(sc)
+        assert np.isfinite(s).all() and (s >= 0).all()
