@@ -1,6 +1,6 @@
 """Static hot-path auditor for the serving runtime.
 
-Three passes over the repo, none of which execute the serving stack,
+Six passes over the repo, none of which execute the serving stack,
 each turning a bug class the git history paid for once into a
 machine-checked invariant:
 
@@ -23,7 +23,27 @@ machine-checked invariant:
 * :mod:`repro.analysis.programs` — the dynamic complement (still no
   serving stack): lowers the tick programs for a tiny model and proves
   the one-sync-per-horizon contract on the jaxpr and optimized HLO.
+  Honours ``REPRO_KV_QUANT`` so CI audits the quantized cache layout
+  too.
+* :mod:`repro.analysis.ownership` — interprocedural typestate pass
+  over the paged-KV ledger protocol: every ``alloc_block``/``incref``
+  ref must reach exactly one owner on **every** path including
+  exception edges; double-release, unmatched ``reserve`` and raw
+  ``decref`` loops that bypass ``release_table``'s dedup are flagged.
+  ``# analysis: allow(ownership)`` on protocol-internal lines.
+* :mod:`repro.analysis.donation` — buffer-donation/aliasing audit of
+  the jitted tick programs: jitted cache/keys parameters must be
+  donated (or carry ``allow(donation)`` for deliberate read-only
+  uses), and donated call-site operands must never be read again
+  before being rebound.
+
+Shared AST call-graph plumbing (plus the HLO parser the ``programs``
+pass uses) lives in :mod:`repro.analysis.callgraph`.
 
 CLI: ``python -m repro.analysis --check`` (see ``__main__.py``).
+``--check`` also fails on *stale* suppressions — dead inline
+``allow(...)`` comments and baseline entries whose finding is fixed —
+so the suppression surface can only shrink; ``--prune-baseline``
+rewrites the baseline accordingly.
 """
 from repro.analysis.common import Finding  # noqa: F401  (public API)

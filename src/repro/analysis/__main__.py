@@ -3,16 +3,29 @@
     python -m repro.analysis --check
     python -m repro.analysis --check --baseline experiments/analysis_baseline.json
     python -m repro.analysis --update-baseline
+    python -m repro.analysis --prune-baseline
 
-Exit status: 0 when every finding is suppressed or baselined, 1 when
-new findings exist (CI gates on this), 2 on bad usage.
+Exit status: 0 when every finding is suppressed or baselined AND the
+suppression machinery itself is clean, 1 on new findings *or* stale
+suppressions (CI gates on this), 2 on bad usage.
 
-``--root`` points the file-scanning passes (syncs, recompiles) at a
-different tree — used by the tests to run them over seeded-violation
-fixtures; the repo-bound passes (blockspecs, programs) skip themselves
-when the root is not this repo. ``--skip PASS`` disables a pass by
-name (``programs`` is the only one that compiles anything; the other
-three are pure AST/eval and run in milliseconds).
+Suppression hygiene (checked under ``--check``): an inline
+``# analysis: allow(<category>)`` comment that no longer suppresses
+anything, or a baseline entry whose finding has been fixed, is itself
+a failure — dead suppressions are how the *next* real finding at that
+line/key sails through unreviewed. ``--prune-baseline`` rewrites the
+baseline keeping only entries that still match a finding (entries
+owned by skipped passes are preserved); stale ``allow`` comments must
+be removed by hand (they carry justification prose worth reading
+before deletion).
+
+``--root`` points the file-scanning passes (syncs, recompiles,
+ownership, donation) at a different tree — used by the tests to run
+them over seeded-violation fixtures; the repo-bound passes
+(blockspecs, programs) skip themselves when the root is not this
+repo. ``--skip PASS`` disables a pass by name (``programs`` is the
+only one that compiles anything; the others are pure AST/eval and run
+in milliseconds).
 """
 from __future__ import annotations
 
@@ -22,29 +35,63 @@ import sys
 from pathlib import Path
 from typing import Dict, List
 
-from repro.analysis import blockspecs, common, programs, recompiles, syncs
+from repro.analysis import (blockspecs, common, donation, ownership,
+                            programs, recompiles, syncs)
 
 PASSES = {
     "syncs": syncs.run,
     "recompiles": recompiles.run,
     "blockspecs": blockspecs.run,
     "programs": programs.run,
+    "ownership": ownership.run,
+    "donation": donation.run,
 }
+
+
+def stale_allows(root: Path,
+                 results: List[common.PassResult]) -> List[str]:
+    """Inline ``allow(<cat>)`` comments in scanned files that suppress
+    nothing — each is a latent hole where a future finding of that
+    category would vanish without review."""
+    out: List[str] = []
+    for r in results:
+        cat = r.report.get("suppress_category")
+        scanned = r.report.get("scanned")
+        if not cat or not scanned:
+            continue
+        live = {(f.path, f.line) for f in r.findings if f.suppressed}
+        for relpath in scanned:
+            path = root / relpath
+            if not path.exists():
+                continue
+            sups = common.line_suppressions(path.read_text())
+            for line_no in sorted(sups):
+                if cat in sups[line_no] and \
+                        (relpath, line_no) not in live:
+                    out.append(
+                        f"{relpath}:{line_no}: stale `# analysis: "
+                        f"allow({cat})` — no {r.pass_id} finding is "
+                        "suppressed here; remove the comment")
+    return out
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="static hot-path auditor (host syncs, compile-cache "
-                    "cardinality, BlockSpec bounds, one-sync contract)")
+                    "cardinality, BlockSpec bounds, one-sync contract, "
+                    "block ownership, buffer donation)")
     ap.add_argument("--check", action="store_true",
                     help="run all passes; exit non-zero on new findings "
-                         "(default action)")
+                         "or stale suppressions (default action)")
     ap.add_argument("--baseline", type=Path,
                     default=Path("experiments/analysis_baseline.json"),
                     help="accepted-findings file (repo-relative)")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline from current findings")
+    ap.add_argument("--prune-baseline", action="store_true",
+                    help="drop baseline entries whose finding is fixed "
+                         "(entries of skipped passes are kept)")
     ap.add_argument("--root", type=Path, default=None,
                     help="tree to scan (default: this repo)")
     ap.add_argument("--skip", action="append", default=[],
@@ -72,10 +119,21 @@ def main(argv=None) -> int:
         return 0
 
     baseline = common.load_baseline(baseline_path)
+    current = {f.key for f in findings if not f.suppressed}
+    ran = {r.pass_id for r in results}
     new = [f for f in findings
            if not f.suppressed and f.key not in baseline]
-    stale = sorted(set(baseline)
-                   - {f.key for f in findings if not f.suppressed})
+    # an entry is stale only when its pass actually ran this invocation
+    # and produced no matching finding — skipped passes prove nothing
+    stale = sorted(k for k in baseline
+                   if k.split(":", 1)[0] in ran and k not in current)
+
+    if args.prune_baseline:
+        kept = {k: v for k, v in baseline.items() if k not in stale}
+        common.write_baseline_entries(baseline_path, kept)
+        print(f"baseline: pruned {len(stale)} stale entr"
+              f"{'y' if len(stale) == 1 else 'ies'}, kept {len(kept)}")
+        return 0
 
     n_suppressed = sum(f.suppressed for f in findings)
     n_baselined = len(findings) - n_suppressed - len(new)
@@ -108,21 +166,29 @@ def main(argv=None) -> int:
         if table:
             print(json.dumps({"compile_table": table}, indent=1))
 
+    failed = False
+    dead_allows = stale_allows(root, results)
+    if dead_allows:
+        failed = True
+        print(f"\n{len(dead_allows)} stale inline suppression(s):")
+        for msg in dead_allows:
+            print(f"  {msg}")
     if stale:
-        print(f"note: {len(stale)} stale baseline entr"
+        failed = True
+        print(f"\n{len(stale)} stale baseline entr"
               f"{'y' if len(stale) == 1 else 'ies'} (fixed findings); "
-              "refresh with --update-baseline:")
+              "drop with --prune-baseline:")
         for k in stale:
             print(f"  - {k}")
     if new:
+        failed = True
         print(f"\n{len(new)} new finding(s):")
         for f in sorted(new, key=lambda f: (f.path, f.line)):
             print(f"  {f.render()}")
         print("\nfix the finding, add `# analysis: allow(<category>)` "
               "on the line if it is accounted, or accept it with "
               "--update-baseline.")
-        return 1
-    return 0
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

@@ -87,7 +87,11 @@ def load_baseline(path: Path) -> Dict[str, str]:
 
 
 def write_baseline(path: Path, findings: Iterable[Finding]) -> None:
-    entries = {f.key: f.message for f in findings if not f.suppressed}
+    write_baseline_entries(
+        path, {f.key: f.message for f in findings if not f.suppressed})
+
+
+def write_baseline_entries(path: Path, entries: Dict[str, str]) -> None:
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text(json.dumps(
         {"version": 1,

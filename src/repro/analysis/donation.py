@@ -1,0 +1,346 @@
+"""Buffer-donation / aliasing audit for the jitted tick programs.
+
+Donation is the reason a tick costs one cache write instead of one
+cache copy: every cache-carrying program donates its cache (and keys)
+operand so XLA aliases the output buffer over the input. That contract
+has two failure modes, both silent on the CPU test backend (which
+ignores donation) and both catastrophic on a real accelerator:
+
+* a builder that *forgets* to donate: every tick copies the whole KV
+  cache — the multi-GB buffer the paged pool exists to never copy;
+* a dispatcher that *reads* a donated operand after the call: the
+  buffer was aliased away, the read returns garbage (XLA raises on
+  some backends, silently serves freed memory on others).
+
+So this pass checks, purely on the AST:
+
+* ``donation-missing`` — a jitted function (decorator or
+  ``jax.jit(f, ...)`` call form) with a parameter named ``cache`` or
+  ``keys`` whose position is not in ``donate_argnums``. Read-only uses
+  (`read_state`, the engine's reusable prefill cache) carry
+  ``# analysis: allow(donation)`` on the line.
+* ``donated-read`` — at a call site of a known donating runner (a
+  ``*_program`` builder closure, the module-jitted helpers, the pool's
+  ``_progs`` members), a donated argument expression is read again
+  after the dispatch and before being rebound.
+* ``donated-no-rebind`` — a donated persistent operand (attribute /
+  subscript expression: ``pool.caches[mid]``, ``rt.keys``) is never
+  rebound after the call — the caller keeps a reference to a dead
+  buffer.
+
+Expression matching is textual (``ast.unparse``), which is exactly as
+strong as the runtime's own discipline: dispatchers donate
+``pool.caches[pp.model_id]`` and must rebind the same spelling on the
+next line.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import dotted, walk_functions
+from repro.analysis.common import (Finding, PassResult, apply_suppressions,
+                                   assign_occurrences, iter_sources, rel)
+
+PASS_ID = "donation"
+CATEGORY = "donation"           # allow(donation)
+
+SUBDIRS = ("src/repro/serving",)
+
+#: parameter names that carry the big per-model device buffers the
+#: donation contract exists for
+DONATABLE_PARAMS = ("cache", "keys")
+
+#: builder suffix: `token_program(model, ...)` returns a jitted closure
+BUILDER_SUFFIX = "_program"
+
+
+@dataclass
+class JitDef:
+    """One jitted callable: its positional params and donated indices."""
+    name: str
+    qualname: str
+    relpath: str
+    line: int
+    params: List[str]
+    donated: Set[int]
+
+
+@dataclass
+class Registry:
+    """Donating runners visible at call sites, across all scanned
+    modules: by definition name, by builder name (the nested jitted
+    closure's donations), and by `_pool_programs`-style keyword name
+    (matched only on `._progs` attribute chains)."""
+    defs: Dict[str, Set[int]] = field(default_factory=dict)
+    builders: Dict[str, Set[int]] = field(default_factory=dict)
+    progs: Dict[str, Set[int]] = field(default_factory=dict)
+
+
+def _is_jit_name(name: Optional[str]) -> bool:
+    return bool(name) and (name == "jit" or name.endswith(".jit"))
+
+
+def _donate_argnums(call: ast.Call) -> Set[int]:
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, (ast.Tuple, ast.List)):
+            return {e.value for e in v.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, int)}
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return {v.value}
+    return set()
+
+
+def _decorator_jit(fn: ast.AST) -> Optional[Set[int]]:
+    """Donated indices if `fn` is decorated with jax.jit (directly or
+    through functools.partial); None if not jitted."""
+    for dec in getattr(fn, "decorator_list", []):
+        if isinstance(dec, ast.Call):
+            name = dotted(dec.func)
+            if _is_jit_name(name):
+                return _donate_argnums(dec)
+            if name and name.endswith("partial") and dec.args and \
+                    _is_jit_name(dotted(dec.args[0])):
+                return _donate_argnums(dec)
+        elif _is_jit_name(dotted(dec)):
+            return set()
+    return None
+
+
+def _positional_params(fn: ast.AST) -> List[str]:
+    a = fn.args
+    return [p.arg for p in (a.posonlyargs + a.args)]
+
+
+def collect_jitted(tree: ast.Module, relpath: str,
+                   registry: Registry) -> List[JitDef]:
+    """All jitted callables in one module, filling `registry` with the
+    donating ones (callable by name at other call sites)."""
+    out: List[JitDef] = []
+    by_name = {pf.name: pf for pf in walk_functions(tree, relpath)}
+    for pf in walk_functions(tree, relpath):
+        donated = _decorator_jit(pf.node)
+        if donated is None:
+            continue
+        jd = JitDef(pf.name, pf.qualname, relpath, pf.node.lineno,
+                    _positional_params(pf.node), donated)
+        out.append(jd)
+        if donated:
+            registry.defs[pf.name] = donated
+            # `X_program`'s nested jitted closure: donations apply at
+            # `run = X_program(...); run(...)` call sites
+            head = pf.qualname.split(".")[0]
+            if head.endswith(BUILDER_SUFFIX):
+                registry.builders[head] = donated
+    # call-form jits: jax.jit(_copy_block, donate_argnums=(0,)),
+    # including as keyword values (`PoolPrograms(copy_block=...)`)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or not _is_jit_name(
+                dotted(node.func)):
+            continue
+        if not node.args or not isinstance(node.args[0], ast.Name):
+            continue        # jax.jit(lambda: ...) etc: nothing to check
+        target = by_name.get(node.args[0].id)
+        if target is None:
+            continue
+        donated = _donate_argnums(node)
+        jd = JitDef(target.name, target.qualname, relpath, node.lineno,
+                    _positional_params(target.node), donated)
+        out.append(jd)
+        if donated:
+            registry.defs[target.name] = donated
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if isinstance(kw.value, ast.Call) and kw.arg and \
+                        _is_jit_name(dotted(kw.value.func)):
+                    donated = _donate_argnums(kw.value)
+                    if donated:
+                        registry.progs[kw.arg] = donated
+    return out
+
+
+def _missing_donation_findings(jits: List[JitDef]) -> List[Finding]:
+    seen: Set[Tuple[str, str]] = set()
+    out: List[Finding] = []
+    for jd in jits:
+        for i, p in enumerate(jd.params):
+            if p in DONATABLE_PARAMS and i not in jd.donated and \
+                    (jd.qualname, p) not in seen:
+                seen.add((jd.qualname, p))
+                out.append(Finding(
+                    PASS_ID, "donation-missing", jd.relpath, jd.line,
+                    jd.qualname,
+                    f"jitted `{jd.name}` takes `{p}` (arg {i}) without "
+                    "donating it — every call copies the buffer instead "
+                    "of aliasing in place; add it to donate_argnums, or "
+                    "mark a deliberate read-only use with "
+                    "`# analysis: allow(donation)`"))
+    return out
+
+
+class _CallSiteAuditor:
+    """Post-dispatch use checks for one function: donated argument
+    expressions must be rebound before any further read."""
+
+    def __init__(self, fn: ast.AST, qualname: str, relpath: str,
+                 registry: Registry):
+        self.fn = fn
+        self.qualname = qualname
+        self.relpath = relpath
+        self.registry = registry
+        self.findings: List[Finding] = []
+
+    # each statement that can rebind: (lineno, {target texts})
+    def _rebind_sites(self) -> List[Tuple[int, Set[str]]]:
+        out = []
+        for node in ast.walk(self.fn):
+            texts: Set[str] = set()
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    elts = t.elts if isinstance(
+                        t, (ast.Tuple, ast.List)) else [t]
+                    texts |= {ast.unparse(e) for e in elts}
+            elif isinstance(node, ast.AugAssign):
+                texts = {ast.unparse(node.target)}
+            if texts:
+                out.append((node.lineno, texts))
+        return out
+
+    def _donating_positions(self, call: ast.Call,
+                            builder_locals: Dict[str, Set[str]]) \
+            -> Optional[Set[int]]:
+        func = call.func
+        if isinstance(func, ast.Name) and func.id in builder_locals:
+            return self.registry.builders.get(
+                next(iter(builder_locals[func.id])))
+        if isinstance(func, ast.Call):      # X_program(...)(args)
+            inner = dotted(func.func)
+            leaf = (inner or "").rsplit(".", 1)[-1]
+            return self.registry.builders.get(leaf)
+        name = dotted(func)
+        if name is None:
+            return None
+        leaf = name.rsplit(".", 1)[-1]
+        if leaf in self.registry.defs:
+            return self.registry.defs[leaf]
+        if isinstance(func, ast.Attribute) and \
+                leaf in self.registry.progs and \
+                "_progs" in ast.unparse(func.value):
+            return self.registry.progs[leaf]
+        return None
+
+    def run(self) -> List[Finding]:
+        # local `run = token_program(...)` binds
+        builder_locals: Dict[str, Set[str]] = {}
+        for node in ast.walk(self.fn):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call):
+                name = dotted(node.value.func) or ""
+                leaf = name.rsplit(".", 1)[-1]
+                if leaf in self.registry.builders:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            builder_locals[t.id] = {leaf}
+        rebinds = self._rebind_sites()
+
+        # enclosing SIMPLE statement of each donating call (for target
+        # texts and end lineno) — compound statements (the function
+        # itself, If/For/Try bodies) would claim the call too and span
+        # the wrong line range
+        simple = (ast.Assign, ast.AugAssign, ast.AnnAssign, ast.Expr,
+                  ast.Return, ast.Raise, ast.Assert)
+        stmts = [n for n in ast.walk(self.fn) if isinstance(n, simple)]
+        for stmt in stmts:
+            own_targets: Set[str] = set()
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    elts = t.elts if isinstance(
+                        t, (ast.Tuple, ast.List)) else [t]
+                    own_targets |= {ast.unparse(e) for e in elts}
+            for call in ast.walk(stmt):
+                if not isinstance(call, ast.Call):
+                    continue
+                positions = self._donating_positions(call, builder_locals)
+                if not positions:
+                    continue
+                self._check_call(stmt, call, positions, own_targets,
+                                 rebinds)
+        return self.findings
+
+    def _check_call(self, stmt: ast.stmt, call: ast.Call,
+                    positions: Set[int], own_targets: Set[str],
+                    rebinds: List[Tuple[int, Set[str]]]) -> None:
+        end = getattr(stmt, "end_lineno", stmt.lineno)
+        for i in sorted(positions):
+            if i >= len(call.args):
+                continue
+            arg = call.args[i]
+            if not isinstance(arg, (ast.Name, ast.Attribute,
+                                    ast.Subscript)):
+                continue        # a temporary: nothing aliases it
+            text = ast.unparse(arg)
+            if text in own_targets:
+                continue        # rebound by the call's own unpacking
+            rebind = min((ln for ln, ts in rebinds
+                          if text in ts and ln >= end), default=None)
+            for node in ast.walk(self.fn):
+                if isinstance(node, (ast.Name, ast.Attribute,
+                                     ast.Subscript)) and \
+                        isinstance(getattr(node, "ctx", None), ast.Load) \
+                        and node.lineno > end and \
+                        (rebind is None or node.lineno < rebind) and \
+                        ast.unparse(node) == text:
+                    self.findings.append(Finding(
+                        PASS_ID, "donated-read", self.relpath,
+                        node.lineno, self.qualname,
+                        f"`{text}` was donated to "
+                        f"`{ast.unparse(call.func)}` (line {call.lineno})"
+                        " and read here before being rebound — the "
+                        "buffer is aliased away; read the program's "
+                        "RESULT instead"))
+                    break       # one finding per donated operand
+            if rebind is None and any(ch in text for ch in ".["):
+                self.findings.append(Finding(
+                    PASS_ID, "donated-no-rebind", self.relpath,
+                    call.lineno, self.qualname,
+                    f"`{text}` is donated to "
+                    f"`{ast.unparse(call.func)}` but never rebound in "
+                    "this function — the caller keeps a reference to a "
+                    "dead buffer; assign the program's result back"))
+
+
+def audit_source(text: str, relpath: str,
+                 registry: Registry) -> List[Finding]:
+    tree = ast.parse(text)
+    findings = _missing_donation_findings(
+        collect_jitted(tree, relpath, Registry()))
+    for pf in walk_functions(tree, relpath):
+        findings += _CallSiteAuditor(pf.node, pf.qualname, relpath,
+                                     registry).run()
+    findings = apply_suppressions(findings, text, CATEGORY)
+    return assign_occurrences(findings)
+
+
+def run(root: Path) -> PassResult:
+    result = PassResult(PASS_ID)
+    files = iter_sources(root, SUBDIRS)
+    parsed: List[Tuple[str, ast.Module, str]] = []
+    registry = Registry()
+    for path in files:
+        text = path.read_text()
+        tree = ast.parse(text)
+        parsed.append((rel(path, root), tree, text))
+        collect_jitted(tree, rel(path, root), registry)
+    for relpath, _, text in parsed:
+        result.findings += audit_source(text, relpath, registry)
+    result.report["scanned"] = [r for r, _, _ in parsed]
+    result.report["suppress_category"] = CATEGORY
+    result.report["jitted"] = len(registry.defs) + len(registry.progs)
+    return result

@@ -1,0 +1,708 @@
+"""Block-ownership typestate pass for the paged-KV ledger.
+
+Every correctness incident in this runtime's history was a block-
+ownership bug caught *dynamically* — the double-decref in
+``release_table``, the chunk->mixed prefill-handoff bug, the
+stash-window leak. This pass makes the ledger protocol a *static*
+regression class: an AST-level abstract interpreter runs over the
+serving modules and checks every function against the
+:class:`~repro.serving.paged_pool.PagedKVPool` typestate machine.
+
+**States** a tracked binding moves through::
+
+    owned      holds ledger refs (alloc_block / match / incref result)
+    moved      transferred to exactly one owner (table attr, append
+               into an owner table, returned to the caller)
+    released   explicitly freed (decref / release_table / unmatch)
+    reg        alias of an owner container (`c.table = t = []` — appends
+               into `t` are registration, not accumulation)
+    empty      fresh local list, owns nothing yet
+    borrowed   alias of an owner-held value (`t = c.table`) — releasing
+               it spends the owner's ref
+    param      caller-owned argument (releasing it makes this function a
+               consumer in its summary)
+
+**Owners** are the request table / child table (``.table`` attribute
+assignment, appends into owner-aliased tables), the radix tree
+(``publish`` keeps its own ref), the caller (``return``), or an
+explicit release.
+
+**Rules** (finding codes):
+
+* ``leak`` — an owned binding or incref obligation reaches a function
+  exit without an owner on some path.
+* ``leak-on-raise`` — an owned binding is live across a may-raise
+  protocol call before registration (the exception edge between
+  acquisition and registration), outside any try.
+* ``double-release`` — a second ``decref``/``release_table``/``unmatch``
+  is reachable on one binding (including release-after-transfer).
+* ``decref-loop`` — a raw ``for blk in table: pool.decref(blk)`` loop
+  bypasses ``release_table``'s seen-set dedup (a table that holds the
+  same block twice — COW boundary + shared prefix — double-frees).
+* ``unmatched-reserve`` — ``reserve`` opens a reservation that some
+  path neither ``unreserve``s, claims (``alloc_block``/``preallocate``
+  with ``from_reservation=True``), nor transfers to an owner's
+  ``.reserved`` field.
+
+Interprocedural: per-function summaries (returns-owned / consumed
+params / may-raise) are iterated to a fixpoint over the name-keyed
+call graph from :mod:`repro.analysis.callgraph`, seeded with the pool
+protocol. Summaries key on *leaf* call names — the protocol names are
+collision-free within the scanned modules (checked when they were
+chosen; `.match`/`.clear` collisions were grepped out).
+
+Escape hatches are the standard ones: ``# analysis: allow(ownership)``
+on the acquisition line for accounted patterns (the radix tree's own
+refs), the committed baseline for accepted findings.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from repro.analysis.callgraph import (build_py_call_graph, dotted,
+                                      walk_functions)
+from repro.analysis.common import (Finding, PassResult, apply_suppressions,
+                                   assign_occurrences, rel)
+
+PASS_ID = "ownership"
+CATEGORY = "ownership"          # allow(ownership)
+
+#: scan targets relative to the repo root (files or directories); when
+#: none exist (fixture trees in tests) every .py under root is scanned
+MODULES = (
+    "src/repro/serving/runtime.py",
+    "src/repro/serving/retire.py",
+    "src/repro/serving/plan.py",
+    "src/repro/serving/tick_programs.py",
+    "src/repro/serving/radix_cache.py",
+    "src/repro/serving/procedure.py",
+    "src/repro/serving/traffic",
+)
+
+#: attribute whose assignment registers a table/block with an owner
+OWNER_ATTRS = {"table"}
+
+#: parameter names treated as block tables for the decref-loop rule
+TABLE_PARAMS = {"table", "tables", "blocks"}
+
+
+@dataclass(frozen=True)
+class Summary:
+    """Ledger-relevant facts about one callable, keyed by leaf name."""
+    returns_owned: bool = False
+    consumes: FrozenSet[int] = frozenset()      # positional args released
+    acquires_into: FrozenSet[int] = frozenset()  # args extended with blocks
+    increfs: bool = False                       # arg0 gains an obligation
+    reserves: bool = False
+    unreserves: bool = False
+    claims: bool = False                        # closes one reservation
+    may_raise: bool = False
+
+    def merged(self, other: "Summary") -> "Summary":
+        return Summary(
+            returns_owned=self.returns_owned or other.returns_owned,
+            consumes=self.consumes | other.consumes,
+            acquires_into=self.acquires_into | other.acquires_into,
+            increfs=self.increfs or other.increfs,
+            reserves=self.reserves or other.reserves,
+            unreserves=self.unreserves or other.unreserves,
+            claims=self.claims or other.claims,
+            may_raise=self.may_raise or other.may_raise)
+
+
+#: the PagedKVPool / RadixCache protocol, by leaf method name. Every
+#: entry is may_raise: the ledger asserts on bad ids, double frees and
+#: reservation overdraft, and the device calls can fail — these are
+#: exactly the exception edges the leak-on-raise rule walks.
+PROTOCOL: Dict[str, Summary] = {
+    "alloc_block":    Summary(returns_owned=True, claims=True,
+                              may_raise=True),
+    "preallocate":    Summary(acquires_into=frozenset({0}), claims=True,
+                              may_raise=True),
+    "incref":         Summary(increfs=True, may_raise=True),
+    "decref":         Summary(consumes=frozenset({0}), may_raise=True),
+    "release_table":  Summary(consumes=frozenset({0}), may_raise=True),
+    "unmatch":        Summary(consumes=frozenset({0}), may_raise=True),
+    "match":          Summary(returns_owned=True, may_raise=True),
+    "publish":        Summary(may_raise=True),
+    "evict":          Summary(may_raise=True),
+    "copy_block":     Summary(may_raise=True),
+    "reserve":        Summary(reserves=True, may_raise=True),
+    "unreserve":      Summary(unreserves=True, may_raise=True),
+    "alloc_slot":     Summary(may_raise=True),
+    "release_slot":   Summary(may_raise=True),
+    "reset_slot_state":   Summary(may_raise=True),
+    "restore_slot_state": Summary(may_raise=True),
+    "release_request":    Summary(may_raise=True),
+}
+
+_OWNED = "owned"
+_MOVED = "moved"
+_RELEASED = "released"
+_REG = "reg"
+_EMPTY = "empty"
+_BORROWED = "borrowed"
+_PARAM = "param"
+
+#: states a release transitions cleanly out of
+_RELEASABLE = {_OWNED, _BORROWED, _EMPTY, _PARAM}
+
+
+@dataclass
+class Env:
+    """Abstract state at one program point. `vars` maps a local name to
+    the set of states it may be in (sets join path unions); `obligations`
+    are increfs of non-name expressions awaiting a textual discharge;
+    `reserves` is the set of possible open-reservation stacks (tuples of
+    reserve line numbers)."""
+    vars: Dict[str, Set[str]] = field(default_factory=dict)
+    acq: Dict[str, int] = field(default_factory=dict)
+    obligations: Dict[str, int] = field(default_factory=dict)
+    reserves: Set[Tuple[int, ...]] = field(
+        default_factory=lambda: {()})
+    terminated: bool = False
+
+    def copy(self) -> "Env":
+        return Env({k: set(v) for k, v in self.vars.items()},
+                   dict(self.acq), dict(self.obligations),
+                   set(self.reserves), self.terminated)
+
+    def join(self, other: "Env") -> "Env":
+        """Path union of two non-terminated states (a terminated branch
+        contributes nothing)."""
+        if other.terminated:
+            return self
+        if self.terminated:
+            return other
+        out = self.copy()
+        for k, v in other.vars.items():
+            out.vars.setdefault(k, set()).update(v)
+        for k, ln in other.acq.items():
+            out.acq.setdefault(k, ln)
+        for k, ln in other.obligations.items():
+            out.obligations.setdefault(k, ln)
+        out.reserves |= other.reserves
+        return out
+
+
+@dataclass
+class Facts:
+    """Summary-relevant observations from one interpretation."""
+    returns_owned: bool = False
+    consumed_params: Set[int] = field(default_factory=set)
+    may_raise: bool = False
+
+
+def _unparse(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:       # pragma: no cover - malformed nodes
+        return ""
+
+
+def _arg_names(call: ast.Call) -> Set[str]:
+    out: Set[str] = set()
+    for a in list(call.args) + [kw.value for kw in call.keywords]:
+        for n in ast.walk(a):
+            if isinstance(n, ast.Name):
+                out.add(n.id)
+    return out
+
+
+def _kwarg_false(call: ast.Call, name: str) -> bool:
+    for kw in call.keywords:
+        if kw.arg == name and isinstance(kw.value, ast.Constant):
+            return kw.value.value is False
+    return False
+
+
+class _OwnershipAuditor:
+    """Abstract interpretation of one function body against the ledger
+    typestate machine. Loop bodies run twice so loop-carried state
+    converges; branch joins are path unions; findings dedupe on
+    (code, line, detail)."""
+
+    def __init__(self, fn: ast.AST, qualname: str, relpath: str,
+                 summaries: Dict[str, Summary], record: bool):
+        self.fn = fn
+        self.qualname = qualname
+        self.relpath = relpath
+        self.summaries = summaries
+        self.record = record
+        self.in_try = 0
+        self.facts = Facts()
+        self.found: Dict[Tuple[str, int, str], str] = {}
+        self.hazard_seen: Set[str] = set()
+        args = fn.args
+        names = [a.arg for a in (args.posonlyargs + args.args)]
+        if names and names[0] in ("self", "cls"):
+            names = names[1:]
+        self.param_index = {n: i for i, n in enumerate(names)}
+
+    # --------------------------------------------------------- findings
+    def _flag(self, code: str, line: int, detail: str, msg: str) -> None:
+        if self.record:
+            self.found.setdefault((code, line, detail), msg)
+
+    def findings(self) -> List[Finding]:
+        return [Finding(PASS_ID, code, self.relpath, line, self.qualname,
+                        msg)
+                for (code, line, _), msg in sorted(self.found.items(),
+                                                   key=lambda kv: kv[0][1])]
+
+    # ------------------------------------------------------------ calls
+    def _summary_for(self, call: ast.Call) -> Optional[Summary]:
+        name = dotted(call.func)
+        if name is None:
+            return None
+        return self.summaries.get(name.rsplit(".", 1)[-1])
+
+    def _apply_call(self, call: ast.Call, env: Env) -> None:
+        s = self._summary_for(call)
+        if s is None:
+            return
+        line = call.lineno
+        if s.may_raise and self.in_try == 0:
+            self._raise_hazard(call, env, line)
+        for i in sorted(s.consumes):
+            if i < len(call.args):
+                self._consume(call.args[i], env, line)
+        if s.increfs and call.args:
+            a = call.args[0]
+            if isinstance(a, ast.Name):
+                env.vars[a.id] = {_OWNED}
+                env.acq[a.id] = line
+            else:
+                env.obligations.setdefault(_unparse(a), line)
+        if s.acquires_into and call.args:
+            a = call.args[0]
+            if isinstance(a, ast.Name):
+                st = env.vars.get(a.id, set())
+                if _EMPTY in st or _OWNED in st:
+                    st.discard(_EMPTY)
+                    st.add(_OWNED)
+                    env.vars[a.id] = st
+                    env.acq.setdefault(a.id, line)
+        if s.reserves:
+            env.reserves = {st + (line,) for st in env.reserves}
+        if s.unreserves or (s.claims and not
+                            _kwarg_false(call, "from_reservation")):
+            env.reserves = {st[:-1] if st else st for st in env.reserves}
+        if s.may_raise:
+            self.facts.may_raise = True
+
+    def _raise_hazard(self, call: ast.Call, env: Env, line: int) -> None:
+        """An owned binding live across a may-raise protocol call: the
+        exception edge loses the refs before any owner sees them.
+        Bindings named in the call's own arguments are exempt (the call
+        is part of their handling), as is anything under a try."""
+        args = _arg_names(call)
+        call_text = _unparse(call)
+        for var, st in env.vars.items():
+            if _OWNED in st and var not in args and \
+                    var not in self.hazard_seen:
+                self.hazard_seen.add(var)
+                self._flag(
+                    "leak-on-raise", env.acq.get(var, line), var,
+                    f"`{var}` holds block refs with no owner when "
+                    f"`{_unparse(call.func)}` (line {line}) raises — "
+                    "register it (owner table / return / release) before "
+                    "the call, or wrap the window in try/finally")
+        for text, oline in env.obligations.items():
+            if text not in call_text and text not in self.hazard_seen:
+                self.hazard_seen.add(text)
+                self._flag(
+                    "leak-on-raise", oline, text,
+                    f"incref of `{text}` has no owner when "
+                    f"`{_unparse(call.func)}` (line {line}) raises")
+
+    def _consume(self, node: ast.AST, env: Env, line: int) -> None:
+        if isinstance(node, ast.Name):
+            st = env.vars.get(node.id)
+            if st is None:
+                return
+            if _RELEASED in st:
+                self._flag(
+                    "double-release", line, node.id,
+                    f"`{node.id}` is released twice on some path — the "
+                    "second decref/release_table double-frees its blocks")
+            elif _MOVED in st:
+                self._flag(
+                    "double-release", line, node.id,
+                    f"`{node.id}` is released after its ownership was "
+                    "transferred — owner and release both free it")
+            if _PARAM in st:
+                idx = self.param_index.get(node.id)
+                if idx is not None:
+                    self.facts.consumed_params.add(idx)
+            env.vars[node.id] = {_RELEASED}
+        elif isinstance(node, (ast.List, ast.Tuple)):
+            for e in node.elts:
+                self._consume(e, env, line)
+        else:
+            env.obligations.pop(_unparse(node), None)
+
+    # ------------------------------------------------------- statements
+    def _calls_in_expr(self, node: ast.AST, env: Env) -> None:
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call):
+                self._apply_call(n, env)
+
+    def _is_owned_value(self, node: ast.AST, env: Env) -> bool:
+        if isinstance(node, ast.Name):
+            return _OWNED in env.vars.get(node.id, set())
+        if isinstance(node, ast.Call):
+            s = self._summary_for(node)
+            return bool(s and s.returns_owned)
+        return False
+
+    def _handle_append(self, call: ast.Call, env: Env) -> bool:
+        """`X.append(y)` / `X.extend(y)`: registration when X is (an
+        alias of) an owner table, accumulation when X is a fresh local."""
+        if not (isinstance(call.func, ast.Attribute)
+                and call.func.attr in ("append", "extend")
+                and len(call.args) == 1):
+            return False
+        target, arg = call.func.value, call.args[0]
+        arg_owned = self._is_owned_value(arg, env)
+        arg_text = _unparse(arg)
+        discharged = env.obligations.pop(arg_text, None)
+        if isinstance(arg, ast.Name) and arg_owned:
+            env.vars[arg.id] = {_MOVED}
+        if isinstance(target, ast.Name):
+            st = env.vars.get(target.id, set())
+            if (arg_owned or discharged is not None) and \
+                    not st & {_REG, _PARAM, _BORROWED}:
+                st.discard(_EMPTY)
+                st.add(_OWNED)
+                env.vars[target.id] = st
+                env.acq.setdefault(
+                    target.id,
+                    discharged if discharged is not None else call.lineno)
+        return True
+
+    def _assign_value_state(self, value: ast.AST,
+                            env: Env) -> Optional[Set[str]]:
+        """State for a Name target bound to `value`; None = untracked."""
+        if isinstance(value, ast.Call):
+            s = self._summary_for(value)
+            if s and s.returns_owned:
+                return {_OWNED}
+            return None
+        if isinstance(value, (ast.List, ast.Tuple)) and not value.elts:
+            return {_EMPTY}
+        if isinstance(value, ast.Name):
+            st = env.vars.get(value.id)
+            return set(st) if st is not None else None
+        if isinstance(value, ast.Attribute) and value.attr in OWNER_ATTRS:
+            return {_BORROWED}
+        if isinstance(value, ast.IfExp):
+            a = self._assign_value_state(value.body, env)
+            b = self._assign_value_state(value.orelse, env)
+            if a or b:
+                return (a or set()) | (b or set())
+        return None
+
+    def _do_assign(self, targets: List[ast.AST], value: ast.AST,
+                   env: Env, line: int) -> None:
+        names = [t for t in targets if isinstance(t, ast.Name)]
+        sinks = [t for t in targets if not isinstance(t, ast.Name)]
+        # registration sinks: owner-attr / subscript targets take over
+        if sinks:
+            if isinstance(value, ast.Name) and \
+                    _OWNED in env.vars.get(value.id, set()):
+                env.vars[value.id] = {_MOVED}
+            elif isinstance(value, (ast.List, ast.Tuple)):
+                for e in value.elts:
+                    if isinstance(e, ast.Name) and \
+                            _OWNED in env.vars.get(e.id, set()):
+                        env.vars[e.id] = {_MOVED}
+            env.obligations.pop(_unparse(value), None)
+            # `.reserved = ...` transfers open reservations to an owner
+            if any(isinstance(t, ast.Attribute) and t.attr == "reserved"
+                   for t in sinks):
+                env.reserves = {()}
+        for t in names:
+            if sinks:
+                # `c.table = t = []`: t aliases the owner's container
+                env.vars[t.id] = {_REG}
+                env.acq.pop(t.id, None)
+                continue
+            st = self._assign_value_state(value, env)
+            if st is None:
+                env.vars.pop(t.id, None)
+                env.acq.pop(t.id, None)
+            else:
+                env.vars[t.id] = st
+                if _OWNED in st:
+                    env.acq[t.id] = line
+                else:
+                    env.acq.pop(t.id, None)
+        for t in targets:
+            if isinstance(t, (ast.Tuple, ast.List)):
+                for e in t.elts:
+                    if isinstance(e, ast.Name):
+                        env.vars.pop(e.id, None)
+
+    def _check_exit(self, env: Env, line: int) -> None:
+        for var, st in env.vars.items():
+            if _OWNED in st:
+                self._flag(
+                    "leak", env.acq.get(var, line), var,
+                    f"`{var}` can reach a function exit still owning "
+                    "block refs — no owner table, return, or release on "
+                    "this path")
+        for text, oline in env.obligations.items():
+            self._flag(
+                "leak", oline, text,
+                f"incref of `{text}` reaches a function exit without an "
+                "owner")
+        seen: Set[int] = set()
+        for stack in env.reserves:
+            for ln in stack:
+                if ln not in seen:
+                    seen.add(ln)
+                    self._flag(
+                        "unmatched-reserve", ln, str(ln),
+                        "reservation opened here is neither unreserved, "
+                        "claimed by alloc_block/preallocate, nor "
+                        "transferred to an owner's `.reserved` on every "
+                        "path")
+
+    def _check_decref_loop(self, stmt: ast.For, env: Env) -> None:
+        it = stmt.iter
+        table_typed = False
+        if isinstance(it, ast.Name):
+            st = env.vars.get(it.id, set())
+            table_typed = bool(st & {_OWNED, _EMPTY, _BORROWED, _REG}) or \
+                (it.id in self.param_index and it.id in TABLE_PARAMS)
+        elif isinstance(it, ast.Attribute):
+            table_typed = it.attr in OWNER_ATTRS
+        if not table_typed or not isinstance(stmt.target, ast.Name):
+            return
+        loopvar = stmt.target.id
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Call):
+                name = dotted(n.func) or ""
+                if name.rsplit(".", 1)[-1] == "decref" and n.args and \
+                        isinstance(n.args[0], ast.Name) and \
+                        n.args[0].id == loopvar:
+                    self._flag(
+                        "decref-loop", stmt.lineno, loopvar,
+                        "raw decref loop over a block table bypasses "
+                        "release_table's dedup — a table holding the "
+                        "same block twice (COW boundary, shared prefix) "
+                        "double-frees it")
+
+    def _exec_block(self, stmts: List[ast.stmt], env: Env) -> None:
+        for stmt in stmts:
+            if env.terminated:
+                break
+            self._exec_stmt(stmt, env)
+
+    def _exec_stmt(self, stmt: ast.stmt, env: Env) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        if isinstance(stmt, ast.Expr):
+            if isinstance(stmt.value, ast.Call):
+                call = stmt.value
+                # evaluate nested protocol calls (e.g. the alloc inside
+                # `t.append(pool.alloc_block())`) before the append
+                for n in ast.walk(call):
+                    if isinstance(n, ast.Call) and n is not call:
+                        self._apply_call(n, env)
+                if not self._handle_append(call, env):
+                    self._apply_call(call, env)
+            else:
+                self._calls_in_expr(stmt.value, env)
+        elif isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = stmt.value
+            if value is not None:
+                self._calls_in_expr(value, env)
+            if isinstance(stmt, ast.Assign):
+                targets = stmt.targets
+            else:
+                targets = [stmt.target]
+            if isinstance(stmt, ast.AugAssign):
+                if isinstance(stmt.target, ast.Attribute) and \
+                        stmt.target.attr == "reserved":
+                    env.reserves = {()}
+            elif value is not None:
+                self._do_assign(targets, value, env, stmt.lineno)
+        elif isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self._calls_in_expr(stmt.value, env)
+                v = stmt.value
+                if self._is_owned_value(v, env):
+                    self.facts.returns_owned = True
+                    if isinstance(v, ast.Name):
+                        env.vars[v.id] = {_MOVED}
+                elif isinstance(v, (ast.List, ast.Tuple)):
+                    for e in v.elts:
+                        if isinstance(e, ast.Name) and \
+                                _OWNED in env.vars.get(e.id, set()):
+                            env.vars[e.id] = {_MOVED}
+                            self.facts.returns_owned = True
+                env.obligations.pop(_unparse(stmt.value), None)
+            self._check_exit(env, stmt.lineno)
+            env.terminated = True
+        elif isinstance(stmt, ast.Raise):
+            self.facts.may_raise = True
+            if self.in_try == 0:
+                for var, st in env.vars.items():
+                    if _OWNED in st and var not in self.hazard_seen:
+                        self.hazard_seen.add(var)
+                        self._flag(
+                            "leak-on-raise", env.acq.get(var, stmt.lineno),
+                            var,
+                            f"`{var}` holds block refs with no owner on "
+                            f"the raise at line {stmt.lineno}")
+            env.terminated = True
+        elif isinstance(stmt, ast.If):
+            self._calls_in_expr(stmt.test, env)
+            b = env.copy()
+            self._exec_block(stmt.body, b)
+            o = env.copy()
+            self._exec_block(stmt.orelse, o)
+            joined = b.join(o)
+            env.vars, env.acq = joined.vars, joined.acq
+            env.obligations, env.reserves = \
+                joined.obligations, joined.reserves
+            env.terminated = joined.terminated
+        elif isinstance(stmt, (ast.For, ast.While)):
+            if isinstance(stmt, ast.For):
+                self._calls_in_expr(stmt.iter, env)
+                self._check_decref_loop(stmt, env)
+                if isinstance(stmt.target, ast.Name):
+                    env.vars.pop(stmt.target.id, None)
+            else:
+                self._calls_in_expr(stmt.test, env)
+            pre = env.copy()
+            for _ in range(2):      # converge loop-carried state
+                self._exec_block(stmt.body, env)
+                env.terminated = False
+            self._exec_block(stmt.orelse, env)
+            joined = env.join(pre)
+            env.vars, env.acq = joined.vars, joined.acq
+            env.obligations, env.reserves = \
+                joined.obligations, joined.reserves
+            env.terminated = False
+        elif isinstance(stmt, ast.Try):
+            pre = env.copy()
+            self.in_try += 1
+            self._exec_block(stmt.body, env)
+            self.in_try -= 1
+            merged = env.join(pre)
+            for h in stmt.handlers:
+                he = merged.copy()
+                he.terminated = False
+                self._exec_block(h.body, he)
+                merged = merged.join(he)
+            env.vars, env.acq = merged.vars, merged.acq
+            env.obligations, env.reserves = \
+                merged.obligations, merged.reserves
+            env.terminated = merged.terminated
+            self._exec_block(stmt.finalbody, env)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._calls_in_expr(item.context_expr, env)
+            self._exec_block(stmt.body, env)
+        elif isinstance(stmt, (ast.Assert, ast.Delete)):
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self._calls_in_expr(child, env)
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self._calls_in_expr(child, env)
+                elif isinstance(child, ast.stmt):
+                    self._exec_stmt(child, env)
+
+    def run(self) -> "_OwnershipAuditor":
+        env = Env()
+        for name in self.param_index:
+            env.vars[name] = {_PARAM}
+        self._exec_block(self.fn.body, env)
+        if not env.terminated:
+            end = getattr(self.fn, "end_lineno", self.fn.lineno)
+            self._check_exit(env, end)
+        return self
+
+
+# --------------------------------------------------------------- driver
+
+def _scan_files(root: Path) -> List[Path]:
+    files: List[Path] = []
+    for entry in MODULES:
+        p = root / entry
+        if p.is_dir():
+            files += sorted(p.rglob("*.py"))
+        elif p.is_file():
+            files.append(p)
+    if not files:
+        files = sorted(root.rglob("*.py"))
+    return files
+
+
+def derive_summaries(
+        modules: List[Tuple[str, ast.Module]]) -> Dict[str, Summary]:
+    """Fixpoint of per-function summaries over the call graph, seeded
+    with the pool protocol. A round re-interprets only functions whose
+    callee summaries changed in the previous round."""
+    graph = build_py_call_graph(modules)
+    summaries = dict(PROTOCOL)
+    dirty: Optional[Set[str]] = None        # changed names; None = all
+    for _ in range(6):
+        changed: Set[str] = set()
+        for pf in graph.all_funcs():
+            if dirty is not None and not (
+                    graph.calls[f"{pf.relpath}:{pf.qualname}"] & dirty):
+                continue
+            aud = _OwnershipAuditor(pf.node, pf.qualname, pf.relpath,
+                                    summaries, record=False).run()
+            derived = Summary(
+                returns_owned=aud.facts.returns_owned,
+                consumes=frozenset(aud.facts.consumed_params),
+                may_raise=aud.facts.may_raise)
+            cur = summaries.get(pf.name, Summary())
+            new = cur.merged(derived)
+            if new != cur:
+                summaries[pf.name] = new
+                changed.add(pf.name)
+        if not changed:
+            break
+        dirty = changed
+    return summaries
+
+
+def audit_source(text: str, relpath: str,
+                 summaries: Dict[str, Summary]) -> List[Finding]:
+    tree = ast.parse(text)
+    findings: List[Finding] = []
+    for pf in walk_functions(tree, relpath):
+        findings += _OwnershipAuditor(pf.node, pf.qualname, relpath,
+                                      summaries, record=True).run() \
+            .findings()
+    findings = apply_suppressions(findings, text, CATEGORY)
+    return assign_occurrences(findings)
+
+
+def run(root: Path) -> PassResult:
+    result = PassResult(PASS_ID)
+    files = _scan_files(root)
+    modules: List[Tuple[str, ast.Module, str]] = []
+    for path in files:
+        text = path.read_text()
+        modules.append((rel(path, root), ast.parse(text), text))
+    summaries = derive_summaries([(r, t) for r, t, _ in modules])
+    for relpath, _, text in modules:
+        result.findings += audit_source(text, relpath, summaries)
+    result.report["scanned"] = [r for r, _, _ in modules]
+    result.report["suppress_category"] = CATEGORY
+    result.report["functions"] = sum(
+        1 for _, tree, _ in modules for _f in walk_functions(tree, ""))
+    return result

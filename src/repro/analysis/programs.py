@@ -31,6 +31,7 @@ Together: exactly one host fetch per horizon/mixed tick, statically.
 """
 from __future__ import annotations
 
+import os
 import warnings
 from pathlib import Path
 from typing import Dict, List, Tuple
@@ -66,6 +67,14 @@ def _collect_primitives(jaxpr, out: set) -> set:
     return out
 
 
+def _kv_quant():
+    """Cache layout under audit: the quant CI lane sets
+    ``REPRO_KV_QUANT=int8`` so the int8 store + scale-leaf programs (a
+    different pytree, hence a different traced program) get the same
+    zero-host-contact proof as the fp layout."""
+    return os.environ.get("REPRO_KV_QUANT") or None
+
+
 def _abstract_operands(model, params):
     """ShapeDtypeStructs for every tick-program operand family, plus the
     paged cache structure WITHOUT materializing it (eval_shape)."""
@@ -74,11 +83,12 @@ def _abstract_operands(model, params):
     from repro.serving.paged_pool import _paged_leaf_flags
 
     n_blocks, B = _N * 4 + 1, 4
-    flags = _paged_leaf_flags(model)
+    kvq = _kv_quant()
+    flags = _paged_leaf_flags(model, kvq)
     cache = jax.eval_shape(lambda: jax.tree.map(
         lambda f, p, s: p if f else s, flags,
-        model.init_cache(n_blocks, B),
-        model.init_cache(_N, 1)))
+        model.init_cache(n_blocks, B, kv_quant=kvq),
+        model.init_cache(_N, 1, kv_quant=kvq)))
     sds = jax.ShapeDtypeStruct
     key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
     return dict(
@@ -125,11 +135,12 @@ def _program_operands(model, params) -> Dict[str, Tuple]:
 def _builders(model):
     from repro.serving import tick_programs as tp
     tz, eos = True, 2
+    kvq = _kv_quant()
     return {
-        "token": tp.token_program(model, tz),
-        "chunk": tp.chunk_program(model),
-        "horizon": tp.horizon_program(model, AUDIT_H, tz, eos),
-        "mixed": tp.mixed_program(model, AUDIT_H, tz, eos),
+        "token": tp.token_program(model, tz, kvq),
+        "chunk": tp.chunk_program(model, kvq),
+        "horizon": tp.horizon_program(model, AUDIT_H, tz, eos, kvq),
+        "mixed": tp.mixed_program(model, AUDIT_H, tz, eos, kvq),
         "admit": tp.admit_program(tz),
     }
 
@@ -138,7 +149,7 @@ def audit_tick_programs() -> PassResult:
     """Trace + compile every tick program for a tiny fixtures model and
     prove the zero-hidden-host-contact contract."""
     import jax
-    from repro.launch.hlo_analysis import find_host_ops
+    from repro.analysis.callgraph import find_host_ops
     from repro.models.fixtures import tiny_lm
 
     result = PassResult(PASS_ID)

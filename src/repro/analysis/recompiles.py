@@ -237,10 +237,13 @@ def compile_table() -> dict:
 
 def run(root: Path) -> PassResult:
     result = PassResult(PASS_ID)
-    for path in iter_sources(root, SUBDIRS):
+    files = iter_sources(root, SUBDIRS)
+    for path in files:
         text = path.read_text()
         findings = _audit_module(ast.parse(text), rel(path, root))
         result.findings += apply_suppressions(findings, text, CATEGORY)
+    result.report["scanned"] = [rel(p, root) for p in files]
+    result.report["suppress_category"] = CATEGORY
     in_repo = (root / "src/repro/serving/tick_programs.py").exists()
     if in_repo:
         result.findings += _audit_registry()

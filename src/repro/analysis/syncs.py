@@ -328,8 +328,11 @@ def count_fetch_sites(text: str, func_name: str) -> int:
 
 def run(root: Path) -> PassResult:
     result = PassResult(PASS_ID)
-    for path in iter_sources(root, SUBDIRS):
+    files = iter_sources(root, SUBDIRS)
+    for path in files:
         findings = audit_source(path.read_text(), rel(path, root))
         result.findings += findings
-    result.report["files"] = len(iter_sources(root, SUBDIRS))
+    result.report["files"] = len(files)
+    result.report["scanned"] = [rel(p, root) for p in files]
+    result.report["suppress_category"] = CATEGORY
     return result

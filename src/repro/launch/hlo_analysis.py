@@ -16,123 +16,25 @@ re-derives per-device cost from the HLO text with proper loop accounting:
     (reduce-scatter + all-gather phases on a ring)
 
 These are per-PARTITION numbers (the module is already SPMD-partitioned).
+
+The parse + call-graph layer lives in :mod:`repro.analysis.callgraph`
+(the static auditor shares it); this module re-exports it for
+back-compat and keeps the cost model.
 """
 from __future__ import annotations
 
 import re
-from collections import defaultdict
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
-DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
-               "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
-               "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
-               "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+# Re-exported for back-compat: the parse/call-graph layer moved to
+# repro.analysis.callgraph so the analysis package has no launch dep.
+from repro.analysis.callgraph import (  # noqa: F401
+    DTYPE_BYTES, HOST_TRANSFER_OPS, CallGraph, Computation, Op,
+    _HOST_CALLBACK_RE, _SHAPE_RE, _one_shape_bytes, _parse_trip_count,
+    build_call_graph, find_host_ops, parse_hlo, shape_info)
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
-
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-
-
-def shape_info(s: str) -> Tuple[int, List[int]]:
-    """'bf16[2,3]{1,0}' -> (bytes, dims). Tuples: sum of element bytes."""
-    if s.startswith("("):
-        total = 0
-        for m in _SHAPE_RE.finditer(s):
-            total += _one_shape_bytes(m.group(1), m.group(2))
-        return total, []
-    m = _SHAPE_RE.match(s)
-    if not m:
-        return 0, []
-    dt, dims_s = m.groups()
-    dims = [int(d) for d in dims_s.split(",") if d]
-    return _one_shape_bytes(dt, dims_s), dims
-
-
-def _one_shape_bytes(dt: str, dims_s) -> int:
-    if isinstance(dims_s, str):
-        dims = [int(d) for d in dims_s.split(",") if d]
-    else:
-        dims = dims_s
-    n = 1
-    for d in dims:
-        n *= d
-    return n * DTYPE_BYTES.get(dt, 0)
-
-
-@dataclass
-class Op:
-    name: str
-    opcode: str
-    result_shape: str
-    operands: List[str]
-    attrs: str
-    is_root: bool = False
-
-    @property
-    def result_bytes(self) -> int:
-        return shape_info(self.result_shape)[0]
-
-
-@dataclass
-class Computation:
-    name: str
-    is_entry: bool = False
-    params: Dict[str, str] = field(default_factory=dict)   # name -> shape
-    ops: List[Op] = field(default_factory=list)
-    shapes: Dict[str, str] = field(default_factory=dict)   # symbol table
-
-
-_HEADER_RE = re.compile(
-    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*{\s*$")
-_OP_RE = re.compile(
-    r"^\s+(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
-    r"([\w\-]+)\((.*)$")
-_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)")
-
-
-def parse_hlo(text: str) -> Dict[str, Computation]:
-    comps: Dict[str, Computation] = {}
-    cur: Optional[Computation] = None
-    for line in text.splitlines():
-        if cur is None:
-            m = _HEADER_RE.match(line)
-            if m:
-                is_entry, name, params, _ = m.groups()
-                cur = Computation(name=name, is_entry=bool(is_entry))
-                for pm in _PARAM_RE.finditer(params):
-                    cur.params[pm.group(1)] = pm.group(2)
-                    cur.shapes[pm.group(1)] = pm.group(2)
-                comps[name] = cur
-            continue
-        if line.startswith("}"):
-            cur = None
-            continue
-        m = _OP_RE.match(line)
-        if not m:
-            continue
-        root_kw, name, shape, opcode, rest = m.groups()
-        # operands: %names before attrs; attrs after final ')'
-        depth, i = 1, 0
-        while i < len(rest) and depth:
-            if rest[i] == "(":
-                depth += 1
-            elif rest[i] == ")":
-                depth -= 1
-            i += 1
-        arg_str, attrs = rest[: i - 1], rest[i:]
-        operands = re.findall(r"%([\w\.\-]+)", arg_str)
-        op = Op(name=name, opcode=opcode, result_shape=shape,
-                operands=operands, attrs=attrs, is_root=bool(root_kw))
-        cur.ops.append(op)
-        cur.shapes[name] = shape
-    return comps
-
-
-def _parse_trip_count(attrs: str) -> int:
-    m = re.search(r'known_trip_count[":{\s]+n[":\s]+"?(\d+)', attrs)
-    return int(m.group(1)) if m else 1
 
 
 def _dot_flops(op: Op, comp: Computation) -> int:
@@ -247,104 +149,6 @@ _FUSIBLE_OPS = {"add", "subtract", "multiply", "divide", "maximum",
                 "reduce-precision", "is-finite", "atan2", "cosine", "sine",
                 "tan", "erf", "real", "imag", "stochastic-convert",
                 "bitcast-convert", "copy", "concatenate"}
-
-
-@dataclass
-class CallGraph:
-    """Loop-aware call graph of one HLO module: BFS `order` from the
-    entry computation, per-computation trip-count `mult`ipliers, and a
-    `fusion_ctx` flag marking computations only reachable through fusion
-    bodies (their ops are register/VMEM traffic, not HBM). This used to
-    be inlined in :func:`analyze`; it is the reusable half — the static
-    hot-path auditor (`repro.analysis`) walks the same graph to look for
-    host-transfer ops in compiled tick programs."""
-    comps: Dict[str, Computation]
-    entry: Optional[Computation]
-    order: List[str]
-    mult: Dict[str, float]
-    fusion_ctx: Dict[str, bool]
-
-    def reachable(self):
-        """Reachable computations in BFS order (skips dangling refs)."""
-        for cname in self.order:
-            comp = self.comps.get(cname)
-            if comp is not None:
-                yield comp
-
-
-def build_call_graph(comps: Dict[str, Computation]) -> CallGraph:
-    """Accumulate loop multipliers by BFS over calls= / to_apply= /
-    body= / condition= edges, scaling by `known_trip_count`."""
-    entry = next((c for c in comps.values() if c.is_entry), None)
-    mult: Dict[str, float] = defaultdict(float)
-    fusion_ctx: Dict[str, bool] = defaultdict(bool)   # inside a fusion body?
-    if entry is None:
-        return CallGraph(comps, None, [], mult, fusion_ctx)
-    mult[entry.name] = 1.0
-    order = [entry.name]
-    seen = {entry.name}
-    i = 0
-    while i < len(order):
-        cname = order[i]
-        i += 1
-        comp = comps.get(cname)
-        if comp is None:
-            continue
-        for op in comp.ops:
-            callees: List[Tuple[str, float, bool]] = []
-            if op.opcode == "while":
-                trip = _parse_trip_count(op.attrs)
-                for kw in ("body", "condition"):
-                    m = re.search(kw + r"=%?([\w\.\-]+)", op.attrs)
-                    if m:
-                        callees.append((m.group(1), float(trip), False))
-            elif op.opcode == "fusion":
-                m = re.search(r"calls=%?([\w\.\-]+)", op.attrs)
-                if m:
-                    callees.append((m.group(1), 1.0, True))
-            else:
-                for kw in ("calls", "to_apply", "body", "condition",
-                           "true_computation", "false_computation"):
-                    m = re.search(kw + r"=%?([\w\.\-]+)", op.attrs)
-                    if m:
-                        callees.append((m.group(1), 1.0,
-                                        fusion_ctx[cname]))
-            for callee, k, fus in callees:
-                mult[callee] += mult[cname] * k
-                fusion_ctx[callee] = fusion_ctx[callee] or fus or \
-                    (op.opcode == "fusion")
-                if callee not in seen:
-                    seen.add(callee)
-                    order.append(callee)
-    return CallGraph(comps, entry, order, mult, fusion_ctx)
-
-
-# HLO opcodes that move data between device and host (or between
-# devices) outside the normal result buffer: any of these inside a tick
-# program would be a hidden round-trip the dispatcher cannot account.
-HOST_TRANSFER_OPS = ("outfeed", "infeed", "send", "recv",
-                     "send-done", "recv-done")
-# custom-call targets that re-enter Python on the host mid-program
-# (io_callback / pure_callback / jax.debug lower to these)
-_HOST_CALLBACK_RE = re.compile(r"callback|host", re.IGNORECASE)
-
-
-def find_host_ops(text: str) -> List[Tuple[str, str, str]]:
-    """Scan every computation reachable from the entry for ops that
-    talk to the host: (computation, opcode, op name) triples. Used by
-    the one-sync-per-horizon audit — a compiled tick program must have
-    ZERO of these (its only host contact is the dispatcher's single
-    fetch of the result buffer)."""
-    graph = build_call_graph(parse_hlo(text))
-    out: List[Tuple[str, str, str]] = []
-    for comp in graph.reachable():
-        for op in comp.ops:
-            if op.opcode in HOST_TRANSFER_OPS:
-                out.append((comp.name, op.opcode, op.name))
-            elif op.opcode == "custom-call" and \
-                    _HOST_CALLBACK_RE.search(op.attrs):
-                out.append((comp.name, op.opcode, op.name))
-    return out
 
 
 def analyze(text: str) -> Dict:

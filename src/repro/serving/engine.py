@@ -45,9 +45,11 @@ def prefill(model: Model, params, prompts: jnp.ndarray, cache_len: int):
     return all_logits[-1], all_hidden[-1], cache
 
 
+# the prefilled cache is deliberately NOT donated: best-of-k reuses the
+# same prefill across all k continuations, so the caller must keep it
 @functools.partial(jax.jit,
                    static_argnames=("model", "max_new", "temperature_zero"))
-def generate_from_cache(model: Model, params, cache, first_logits,
+def generate_from_cache(model: Model, params, cache, first_logits,  # analysis: allow(donation)
                         start_pos: jnp.ndarray, key, *, max_new: int,
                         temperature: float = 1.0,
                         temperature_zero: bool = False):

@@ -36,7 +36,7 @@ def _copy_row(dst, src, src_row, slot):
 
 
 @jax.jit
-def _read_row(cache, slot):
+def _read_row(cache, slot):   # analysis: allow(donation)  (pure read)
     return jax.tree.map(
         lambda x: jax.lax.dynamic_index_in_dim(x, slot, axis=1,
                                                keepdims=True), cache)

@@ -94,7 +94,8 @@ def _pool_programs(treedef, flag_leaves) -> PoolPrograms:
 
     return PoolPrograms(
         copy_block=jax.jit(_copy_block, donate_argnums=(0,)),
-        read_state=jax.jit(_read_state),
+        # read_state is a pure gather: the caller keeps the cache
+        read_state=jax.jit(_read_state),       # analysis: allow(donation)
         write_state=jax.jit(_write_state, donate_argnums=(0,)))
 
 

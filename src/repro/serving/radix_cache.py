@@ -107,7 +107,10 @@ class RadixCache:
             if node is None:
                 break
             node.last_used = now
-            self.pool.incref(node.block)
+            # refs accumulate in `out` until the caller installs them in
+            # a request table; an assert here means the tree itself is
+            # corrupt, at which point no unwind can help
+            self.pool.incref(node.block)    # analysis: allow(ownership)
             out.append(node.block)
             children = node.children
         return out
@@ -131,7 +134,10 @@ class RadixCache:
         """Return refs taken by :meth:`match` when the caller cannot use
         (all of) them — e.g. a fully-matched prompt must still recompute
         its final token, or admission failed after the match."""
-        for blk in blocks:
+        # a raw decref loop is correct HERE (and only here): match takes
+        # exactly one ref per matched node, nodes are distinct, so there
+        # is nothing for release_table's dedup to dedup
+        for blk in blocks:                  # analysis: allow(ownership)
             self.pool.decref(blk)
 
     # ------------------------------------------------------------ publish
@@ -151,7 +157,10 @@ class RadixCache:
             node = children.get(key)
             if node is None:
                 node = RadixNode(key, table[i], parent, now)
-                self.pool.incref(table[i])          # the tree's own ref
+                # the tree's own ref: owned by the node created above,
+                # returned by _remove/clear — an owner kind the static
+                # pass does not model
+                self.pool.incref(table[i])  # analysis: allow(ownership)
                 children[key] = node
                 self.held_blocks += 1
                 created += 1

@@ -54,15 +54,20 @@ class Retirement:
         on their model. An empty plan with no children is the paper's
         b_i = 0: release everything and answer with the default."""
         rt = self.rt
+        # validate the WHOLE plan before mutating anything: a KeyError
+        # raised mid-loop would leave earlier groups' children spawned
+        # but never admitted (pending entries with no fanout slot), a
+        # corrupt half-applied plan the drain loop hangs on
+        for g in groups:
+            if g.model_id not in rt.models:
+                raise KeyError("plan names unregistered model "
+                               f"{g.model_id!r}")
         was_pending = bool(r.pending)   # already in the fanout deque
         spawned = 0
         for g in groups:
             if r.stash is not None and g.model_id == r.model_id:
                 spawned += self._spawn_group(r, g)
             else:
-                if g.model_id not in rt.models:
-                    raise KeyError("plan names unregistered model "
-                                   f"{g.model_id!r}")
                 r.pending_phases.append(g)
         if spawned:
             r.state = RequestState.DECODE
@@ -110,7 +115,15 @@ class Retirement:
         freely)."""
         if (not r.pending_phases or r.pending or r.stash is not None
                 or r.state in (RequestState.QUEUED,
-                               RequestState.PREFILLING)):
+                               RequestState.PREFILLING)
+                or any(c.slot is not None for c in r.children)):
+            # the live-children guard: an escalation landing while a
+            # sibling still decodes must NOT re-enter QUEUED yet — the
+            # phase prefill would run concurrently with the sibling's
+            # decode, and admission's `r.table = matched` adoption plus
+            # the preemption teardown both assume a QUEUED request has
+            # no slotted children. The phase starts when the last
+            # sibling retires (retire_child re-calls this).
             return
         r.model_id = r.pending_phases[0].model_id
         r.state = RequestState.QUEUED
@@ -331,6 +344,10 @@ class Retirement:
             self.apply_groups(r, list(more))
         if r.all_children_done():
             self.finalize(r)
+        else:
+            # this retirement may have been the last live sibling
+            # holding a queued escalation phase back
+            self.maybe_start_next_phase(r)
 
     def finalize(self, r: Request) -> None:
         rt = self.rt
@@ -368,6 +385,13 @@ class Retirement:
         pool = rt.pool
         free_before = pool.available_blocks
         live = [c for c in r.children if c.slot is not None]
+        # a raise inside the fanout admission window (copy_block device
+        # failure, ledger assert) leaves a child popped from r.pending
+        # with its table filled but no slot yet: it holds real block
+        # refs, so tear it down and re-queue it like any evicted child
+        # — skipping it here is a permanent leak AND a lost child
+        orphans = [c for c in r.children
+                   if c.slot is None and c.table is not None]
         model = live[0].model_id if live else r.model_id
         radix = rt._radix_of(model)
         table = r.table if r.table is not None else (
@@ -390,6 +414,13 @@ class Retirement:
             c.reserved = 0
             c.tokens = []
             c.eos = False
+        for c in orphans:
+            pool.release_table(c.table)
+            c.table = None
+            pool.unreserve(c.reserved)
+            c.reserved = 0
+            c.tokens = []
+            c.eos = False
         try:
             rt.fanout.remove(r)         # mid-fanout victim (rare)
         except ValueError:
@@ -397,7 +428,7 @@ class Retirement:
         # evicted children rejoin any never-slotted ones in index order so
         # re-admission replays the original fan-out sequence
         merged = {c.index: c for c in r.pending}
-        merged.update({c.index: c for c in live})
+        merged.update({c.index: c for c in live + orphans})
         r.pending = [merged[i] for i in sorted(merged)]
         rt._drop_stash(r)
         rt._release_prompt_table(r)

@@ -585,18 +585,19 @@ class ContinuousBatchingRuntime:
                     self.pool.reserve(owned)
                 c.reserved = owned
                 full = r.prompt_len // B
-                table = []
+                # registered BEFORE it fills: a raise mid-window then
+                # leaves the refs owner-accounted for the teardown paths
+                c.table = table = []
                 for t in range(full):           # shared, read-only forever
                     self.pool.incref(r.table[t])
                     table.append(r.table[t])
                 if r.prompt_len % B:            # COW the boundary block
                     blk = self.pool.alloc_block()
                     c.reserved -= 1
+                    table.append(blk)
                     self.pool.copy_block(r.table[full], blk,
                                          model_id=c.model_id)
                     copies[c.model_id] = copies.get(c.model_id, 0) + 1
-                    table.append(blk)
-                c.table = table
                 self.pool.restore_slot_state(r.stash.state, slot,
                                              model_id=c.model_id)
                 c.slot = slot
@@ -690,6 +691,9 @@ class ContinuousBatchingRuntime:
                 while len(matched) * B > sp - 1:
                     radix.unmatch([matched.pop()])
             m = len(matched)
+            # adopted by the owner NOW: a raise below (eviction,
+            # overdraft) then leaves the matched refs owned, not orphaned
+            r.table = matched
             need = self.pool.blocks_for(sp) - m
             # plan-deferrable requests (BestOfK with no budget and no
             # budget_fn — parked until set_budget) take no child
@@ -715,8 +719,7 @@ class ContinuousBatchingRuntime:
             else:
                 child_need = self._child_owned_blocks(r)
             if not self._can_reserve_or_evict(need + child_need):
-                if matched:
-                    radix.unmatch(matched)
+                self._release_prompt_table(r)   # returns the matched refs
                 self._prefill_blocked = True    # preemption-addressable
                 break
             self.queue.popleft()
@@ -727,9 +730,6 @@ class ContinuousBatchingRuntime:
             r.reserved = child_need
             slot = self.pool.alloc_slot()
             self.pool.reset_slot_state(slot)    # purge previous occupant
-            # matched blocks head the table; growth allocates the rest as
-            # prefill crosses block boundaries (reservation-backed)
-            r.table = matched
             r.prefix_len = m * B
             if m:
                 self.metrics.record_prefix_hit(m * B)

@@ -1,0 +1,472 @@
+"""Ownership/donation static passes: seeded violations per rule (AST
+reconstructions of the PR 3 double-decref, the PR 2 stash-window leak,
+and the prefill-handoff leak-on-raise), clean-repo green runs,
+allow/baseline round-trips, stale-suppression failures, CLI exit codes —
+plus runtime regression tests for the exception-safety fixes the
+ownership audit surfaced in ``runtime.py``/``retire.py``."""
+import json
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import common, donation, ownership
+from repro.analysis.__main__ import main
+from repro.serving import (ChildGroup, ContinuousBatchingRuntime,
+                           DecodeProcedure, Plan, RequestState)
+
+
+def _codes(result, suppressed=False):
+    return {f.code for f in result.findings if f.suppressed == suppressed}
+
+
+# ---------------------------------------------------------------------------
+# ownership pass: one seeded violation per rule
+# ---------------------------------------------------------------------------
+
+STASH_LEAK = textwrap.dedent("""\
+    def stash_window(self):
+        blk = self.pool.alloc_block()
+        if self.window_full:
+            return None
+        self.table.append(blk)
+    """)
+
+
+def test_ownership_flags_stash_window_leak(tmp_path):
+    """PR 2 reconstruction: the allocated boundary block escapes on the
+    early-return path with no owner."""
+    (tmp_path / "bad.py").write_text(STASH_LEAK)
+    result = ownership.run(tmp_path)
+    assert "leak" in _codes(result)
+    (f,) = [f for f in result.findings if f.code == "leak"]
+    assert f.line == 2              # reported at the acquisition line
+
+
+LEAK_ON_RAISE = textwrap.dedent("""\
+    def admit(self, r):
+        matched = self.radix.match(r.prompt)
+        self.pool.reserve(2)
+        r.table = matched
+        r.reserved = 2
+    """)
+
+
+def test_ownership_flags_leak_on_raise(tmp_path):
+    """Prefill-handoff reconstruction: the matched (caller-increfed)
+    blocks are live across reserve(), whose raise orphans them."""
+    (tmp_path / "bad.py").write_text(LEAK_ON_RAISE)
+    result = ownership.run(tmp_path)
+    assert "leak-on-raise" in _codes(result)
+    (f,) = [f for f in result.findings if f.code == "leak-on-raise"]
+    assert f.line == 2              # the match() acquisition
+
+
+def test_ownership_try_suppresses_leak_on_raise(tmp_path):
+    """The same shape inside try/except is exception-handled: no
+    finding."""
+    (tmp_path / "ok.py").write_text(textwrap.dedent("""\
+        def admit(self, r):
+            matched = self.radix.match(r.prompt)
+            try:
+                self.pool.reserve(2)
+            except RuntimeError:
+                self.radix.unmatch(matched)
+                raise
+            r.table = matched
+            r.reserved = 2
+        """))
+    result = ownership.run(tmp_path)
+    assert "leak-on-raise" not in _codes(result)
+
+
+DOUBLE_DECREF = textwrap.dedent("""\
+    def retire_child(self, c):
+        t = c.table
+        self.pool.release_table(t)
+        self.pool.unreserve(c.reserved)
+        self.pool.release_table(t)
+    """)
+
+
+def test_ownership_flags_double_release(tmp_path):
+    """PR 3 reconstruction: two release_table calls reachable on one
+    binding."""
+    (tmp_path / "bad.py").write_text(DOUBLE_DECREF)
+    result = ownership.run(tmp_path)
+    assert "double-release" in _codes(result)
+
+
+DECREF_LOOP = textwrap.dedent("""\
+    def free_all(self, c):
+        for blk in c.table:
+            self.pool.decref(blk)
+        c.table = None
+    """)
+
+
+def test_ownership_flags_raw_decref_loop(tmp_path):
+    """The PR 3 substrate: a raw decref loop bypasses release_table's
+    shared-block dedup."""
+    (tmp_path / "bad.py").write_text(DECREF_LOOP)
+    result = ownership.run(tmp_path)
+    assert "decref-loop" in _codes(result)
+
+
+UNMATCHED_RESERVE = textwrap.dedent("""\
+    def grow(self, n):
+        self.pool.reserve(n)
+        if n > 4:
+            return False
+        blk = self.pool.alloc_block()
+        self.table.append(blk)
+        return True
+    """)
+
+
+def test_ownership_flags_unmatched_reserve(tmp_path):
+    (tmp_path / "bad.py").write_text(UNMATCHED_RESERVE)
+    result = ownership.run(tmp_path)
+    assert "unmatched-reserve" in _codes(result)
+
+
+def test_ownership_allow_comment_suppresses(tmp_path):
+    (tmp_path / "ok.py").write_text(textwrap.dedent("""\
+        def free_all(self, c):
+            for blk in c.table:        # analysis: allow(ownership)
+                self.pool.decref(blk)
+            c.table = None
+        """))
+    result = ownership.run(tmp_path)
+    assert "decref-loop" not in _codes(result)
+    assert "decref-loop" in _codes(result, suppressed=True)
+
+
+# ---------------------------------------------------------------------------
+# donation pass: seeded misuse per rule
+# ---------------------------------------------------------------------------
+
+DONATION_MISSING = textwrap.dedent("""\
+    import functools
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("n",))
+    def bad_step(params, cache, tok, n):
+        return cache
+    """)
+
+DONATION_DISPATCH = textwrap.dedent("""\
+    import functools
+    import jax
+
+    @functools.lru_cache(maxsize=None)
+    def tick_program(model):
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def run(params, cache, tok):
+            return cache
+        return run
+
+    def dispatch(rt, pool, pp):
+        run = tick_program(rt.model)
+        out = run(rt.params, pool.caches[pp.model_id], rt.tok)
+        stale = pool.caches[pp.model_id].sum()
+        pool.caches[pp.model_id] = out
+        return stale
+    """)
+
+DONATION_NO_REBIND = textwrap.dedent("""\
+    import functools
+    import jax
+
+    @functools.lru_cache(maxsize=None)
+    def tick_program(model):
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def run(params, cache, tok):
+            return cache
+        return run
+
+    def dispatch(rt, pool, pp):
+        run = tick_program(rt.model)
+        out = run(rt.params, pool.caches[pp.model_id], rt.tok)
+        return out
+    """)
+
+
+def test_donation_flags_undonated_cache_param(tmp_path):
+    (tmp_path / "bad.py").write_text(DONATION_MISSING)
+    result = donation.run(tmp_path)
+    assert "donation-missing" in _codes(result)
+
+
+def test_donation_flags_read_after_dispatch(tmp_path):
+    (tmp_path / "bad.py").write_text(DONATION_DISPATCH)
+    result = donation.run(tmp_path)
+    assert "donated-read" in _codes(result)
+    (f,) = [f for f in result.findings if f.code == "donated-read"]
+    assert f.line == 14             # the stale read, before the rebind
+
+
+def test_donation_flags_missing_rebind(tmp_path):
+    (tmp_path / "bad.py").write_text(DONATION_NO_REBIND)
+    result = donation.run(tmp_path)
+    assert "donated-no-rebind" in _codes(result)
+
+
+def test_donation_rebound_dispatch_is_clean(tmp_path):
+    """The production shape — donate, then rebind the same expression —
+    is clean (the DISPATCH fixture minus the stale read)."""
+    clean = DONATION_DISPATCH.replace(
+        "    stale = pool.caches[pp.model_id].sum()\n", "").replace(
+        "    return stale\n", "    return out\n")
+    assert "stale" not in clean
+    (tmp_path / "ok.py").write_text(clean)
+    result = donation.run(tmp_path)
+    assert not _codes(result)
+
+
+# ---------------------------------------------------------------------------
+# clean repo, CLI exit codes, baseline round-trips, stale suppressions
+# ---------------------------------------------------------------------------
+
+def test_ownership_pass_clean_on_repo():
+    result = ownership.run(common.repo_root())
+    assert not _codes(result)
+    # the protocol-internal radix allows are live, not stale
+    assert _codes(result, suppressed=True)
+
+
+def test_donation_pass_clean_on_repo():
+    result = donation.run(common.repo_root())
+    assert not _codes(result)
+    assert "donation-missing" in _codes(result, suppressed=True)
+
+
+FAST = ["--skip", "programs", "--skip", "blockspecs"]
+
+
+@pytest.mark.parametrize("src,code", [
+    (STASH_LEAK, "leak"),
+    (DOUBLE_DECREF, "double-release"),
+    (DECREF_LOOP, "decref-loop"),
+    (UNMATCHED_RESERVE, "unmatched-reserve"),
+    (LEAK_ON_RAISE, "leak-on-raise"),
+    (DONATION_MISSING, "donation-missing"),
+    (DONATION_DISPATCH, "donated-read"),
+])
+def test_cli_red_on_each_seeded_class(tmp_path, capsys, src, code):
+    (tmp_path / "bad.py").write_text(src)
+    rc = main(["--check", "--root", str(tmp_path)] + FAST)
+    assert rc == 1
+    assert code in capsys.readouterr().out
+
+
+def test_cli_baseline_roundtrip_ownership(tmp_path):
+    (tmp_path / "bad.py").write_text(STASH_LEAK)
+    base = tmp_path / "base.json"
+    assert main(["--update-baseline", "--root", str(tmp_path),
+                 "--baseline", str(base)] + FAST) == 0
+    keys = json.loads(base.read_text())["findings"]
+    assert any(k.startswith("ownership:leak:") for k in keys)
+    assert main(["--check", "--root", str(tmp_path),
+                 "--baseline", str(base)] + FAST) == 0
+
+
+def test_cli_fails_on_stale_allow(tmp_path, capsys):
+    (tmp_path / "ok.py").write_text(
+        "def f(self):\n"
+        "    x = 1              # analysis: allow(ownership)\n"
+        "    return x\n")
+    rc = main(["--check", "--root", str(tmp_path)] + FAST)
+    assert rc == 1
+    assert "stale" in capsys.readouterr().out
+
+
+def test_cli_fails_on_stale_baseline_and_prunes(tmp_path, capsys):
+    (tmp_path / "ok.py").write_text("def f():\n    return 1\n")
+    base = tmp_path / "base.json"
+    common.write_baseline_entries(base, {
+        "ownership:leak:gone.py:f:0": "a fixed finding",
+        "program:hlo-host-op:x.py:f:0": "owned by a skipped pass"})
+    rc = main(["--check", "--root", str(tmp_path),
+               "--baseline", str(base)] + FAST)
+    assert rc == 1
+    assert "stale baseline" in capsys.readouterr().out
+    assert main(["--prune-baseline", "--root", str(tmp_path),
+                 "--baseline", str(base)] + FAST) == 0
+    kept = json.loads(base.read_text())["findings"]
+    # the fixed entry is gone; the skipped pass's entry is preserved
+    assert list(kept) == ["program:hlo-host-op:x.py:f:0"]
+    assert main(["--check", "--root", str(tmp_path),
+                 "--baseline", str(base)] + FAST) == 0
+
+
+def test_cli_green_on_repo_fast_passes():
+    assert main(["--check"] + FAST) == 0
+
+
+# ---------------------------------------------------------------------------
+# runtime regression tests for the fixes the ownership audit surfaced
+# ---------------------------------------------------------------------------
+
+class _PlanWithBadModel(DecodeProcedure):
+    """One valid group plus one naming an unregistered model."""
+
+    def plan(self, request, probe_hidden, runtime):
+        return Plan([ChildGroup("default", 1),
+                     ChildGroup("no-such-model", 1)])
+
+
+def test_apply_groups_rejects_bad_plan_atomically(tiny):
+    """A plan naming an unregistered model must fail BEFORE any group is
+    applied: the old code spawned the valid group first, leaving
+    children with no admission path for the drain loop to hang on."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(0)
+    p = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=16,
+                                   max_new=2, temperature=0.0, seed=0,
+                                   pool="paged", block_size=4)
+    rid = rt.submit(p, procedure=_PlanWithBadModel())
+    with pytest.raises(KeyError, match="no-such-model"):
+        rt.drain()
+    r = rt.requests[rid]
+    assert r.children == []          # nothing half-applied
+    assert not r.pending and not r.pending_phases
+    assert len(rt.fanout) == 0
+
+
+def test_fanout_copy_block_raise_keeps_ledger_balanced(tiny):
+    """A device failure in the COW boundary copy mid-fanout must not
+    orphan the refs already taken for that child: with the child's
+    table registered up front, the ledger still balances and the
+    preemption teardown recovers the half-admitted child."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(1)
+    p = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)  # 6 % 4 != 0
+
+    def run(break_at):
+        rt = ContinuousBatchingRuntime(model, params, n_slots=3,
+                                       max_len=16, max_new=3,
+                                       temperature=0.0, seed=0,
+                                       pool="paged", block_size=4)
+        orig = rt.pool.copy_block
+        calls = {"n": 0}
+
+        def flaky(*a, **kw):
+            calls["n"] += 1
+            if calls["n"] == break_at:
+                raise RuntimeError("injected device failure")
+            return orig(*a, **kw)
+
+        rt.pool.copy_block = flaky
+        rid = rt.submit(p, budget=2)
+        with pytest.raises(RuntimeError, match="injected"):
+            rt.drain()
+        # every ref taken before the raise is owner-accounted
+        rt.assert_ledger_balanced()
+        r = rt.requests[rid]
+        # recovery: evict the casualty; the half-admitted child is torn
+        # down (table freed) and re-queued with its siblings
+        rt.retire.preempt_request(r)
+        rt.assert_ledger_balanced()
+        assert all(c.table is None and c.slot is None
+                   for c in r.children)
+        assert len(r.pending) == len(r.children)
+        rt.pool.copy_block = orig
+        rt.drain()
+        rt.assert_ledger_balanced()
+        res = rt.result(rid)
+        assert res.state == RequestState.DONE
+        return [c.tokens for c in res.children]
+
+    undisturbed = ContinuousBatchingRuntime(
+        model, params, n_slots=3, max_len=16, max_new=3,
+        temperature=0.0, seed=0, pool="paged", block_size=4)
+    rid = undisturbed.submit(p, budget=2)
+    undisturbed.drain()
+    want = [c.tokens for c in undisturbed.result(rid).children]
+    # break_at=2: first child fully admitted, second mid-window
+    assert run(break_at=2) == want
+
+
+def test_admission_reserve_raise_keeps_matched_refs_owned(tiny):
+    """A raise in admission AFTER the radix match (reservation, slot
+    churn) must leave the matched refs owner-accounted in r.table — the
+    old code kept them in a local, orphaning them on the exception
+    edge."""
+    cfg, model, params = tiny
+    rng = np.random.default_rng(2)
+    p = rng.integers(0, cfg.vocab_size, (9,)).astype(np.int32)  # 2 blocks+1
+    rt = ContinuousBatchingRuntime(model, params, n_slots=2, max_len=16,
+                                   max_new=2, temperature=0.0, seed=0,
+                                   pool="paged", block_size=4,
+                                   prefill_slots=1)
+    first = rt.submit(p, budget=1)
+    rt.drain()                       # publishes the full prompt blocks
+    assert rt.result(first).state == RequestState.DONE
+
+    orig = rt.pool.reserve
+
+    def broken(n):
+        raise RuntimeError("injected reservation failure")
+
+    rt.pool.reserve = broken
+    rid = rt.submit(p, budget=1)
+    with pytest.raises(RuntimeError, match="injected"):
+        rt.drain()
+    r = rt.requests[rid]
+    assert r.table                   # matched refs adopted by the owner
+    rt.assert_ledger_balanced()      # ...so the ledger still balances
+    # recovery: release through the owner and re-admit
+    rt.pool.reserve = orig
+    rt._release_prompt_table(r)
+    rt.assert_ledger_balanced()
+    rt.queue.append(r)
+    rt.drain()
+    np.testing.assert_array_equal(rt.result(rid).response,
+                                  rt.result(first).response)
+
+
+class _EscalateAcrossModels(DecodeProcedure):
+    """Two weak children with staggered lifetimes; the first retirement
+    escalates to the strong model while the sibling still decodes."""
+
+    def plan(self, request, probe_hidden, runtime):
+        return Plan([ChildGroup("default", 1, 1),
+                     ChildGroup("default", 1, 3)])
+
+    def on_child_done(self, request, child, runtime):
+        if not request.proc.get("escalated"):
+            request.proc["escalated"] = True
+            return [ChildGroup("strong", 1, 2)]
+        return None
+
+
+def test_escalation_waits_for_live_siblings(tiny, strong):
+    """The QUEUED re-entry guard: an escalation phase must not start its
+    prefill while a sibling child still occupies a slot — the request
+    stays DECODE until the last sibling retires, then phases through
+    QUEUED, and the ledger balances throughout."""
+    cfg, model, params = tiny
+    _, s_model, s_params = strong
+    rng = np.random.default_rng(3)
+    p = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    rt = ContinuousBatchingRuntime(model, params, n_slots=3, max_len=16,
+                                   max_new=3, temperature=0.0, seed=0,
+                                   pool="paged", block_size=4)
+    rt.register_model("strong", s_model, s_params)
+    rid = rt.submit(p, procedure=_EscalateAcrossModels())
+    r = rt.requests[rid]
+    for _ in range(200):
+        if not rt.step():
+            break
+        if any(c.slot is not None for c in r.children):
+            assert r.state is not RequestState.QUEUED
+        rt.assert_ledger_balanced()
+    res = rt.result(rid)
+    assert res.state == RequestState.DONE
+    assert [c.model_id for c in res.children] == ["default", "default",
+                                                  "strong"]
+    assert all(c.done() for c in res.children)
+    rt.assert_ledger_balanced()
